@@ -1,0 +1,121 @@
+//! END-TO-END VALIDATION DRIVER (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Proves all layers compose on a real small workload: the build-time-
+//! trained SynLlama family (L2 JAX models over the L1 Pallas attention
+//! kernel, AOT-compiled to PJRT executables) served by the L3 rust
+//! coordinator with continuous batching across all three task suites,
+//! reporting latency/throughput/acceptance per engine — and asserting
+//! the lossless property (speculative outputs == AR+ outputs) on every
+//! request.
+//!
+//!     cargo run --release --example end_to_end
+
+use std::path::Path;
+
+use anyhow::Result;
+use pard::coordinator::batcher::serve_trace;
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind};
+use pard::substrate::workload::{build_trace, Arrival};
+use pard::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let target = "target-l";
+    let max_new = 48;
+    println!("== PARD end-to-end driver ==");
+    println!("target {target} ({} params), draft {} ({} params)\n",
+             rt.model(target)?.n_params(),
+             rt.manifest.main_pard,
+             rt.model(&rt.manifest.main_pard)?.n_params());
+
+    // ---- 1. lossless check on every task --------------------------------
+    let mut checked = 0usize;
+    for task in ["code", "gsm", "math"] {
+        let prompts: Vec<Vec<i32>> = rt
+            .prompts(task)?
+            .take(6)
+            .into_iter()
+            .map(|p| p.prompt)
+            .collect();
+        let mk = |kind: EngineKind| EngineConfig {
+            kind,
+            target: target.into(),
+            draft: match kind {
+                EngineKind::Pard => Some(rt.manifest.main_pard.clone()),
+                _ => None,
+            },
+            batch: 1,
+            k: 8,
+            max_new,
+            shared_mask: true,
+        };
+        let mut base = build_engine(&rt, &mk(EngineKind::ArPlus))?;
+        base.warmup()?;
+        let ref_out = generate(base.as_mut(), &prompts, max_new)?;
+        let mut pard = build_engine(&rt, &mk(EngineKind::Pard))?;
+        pard.warmup()?;
+        let pard_out = generate(pard.as_mut(), &prompts, max_new)?;
+        anyhow::ensure!(ref_out == pard_out,
+                        "LOSSLESS VIOLATION on task {task}");
+        checked += prompts.len();
+        let (bm, pm) = (base.metrics().clone(), pard.metrics().clone());
+        println!("[{task:<4}] lossless ✓ ({} prompts)  AR+ {:.1} tok/s → \
+                  PARD {:.1} tok/s ({:.2}x, {:.2} tok/iter, 1-α {:.2})",
+                 prompts.len(), bm.tps(), pm.tps(), pm.tps() / bm.tps(),
+                 pm.tokens_per_iter(), pm.k_alpha(1));
+    }
+    println!("\nlossless property held on {checked} requests\n");
+
+    // ---- 2. batched online serving --------------------------------------
+    println!("== continuous batching, mixed workload, Poisson λ=8/s ==");
+    let mut prompts = Vec::new();
+    for task in ["code", "gsm", "math"] {
+        prompts.extend(rt.prompts(task)?.take(8));
+    }
+    let trace = build_trace(&prompts, 24, Arrival::Poisson { rate: 8.0 },
+                            max_new, 11);
+    for kind in [EngineKind::ArPlus, EngineKind::Vsd, EngineKind::Pard] {
+        let cfg = EngineConfig {
+            kind,
+            target: target.into(),
+            draft: match kind {
+                EngineKind::Pard => Some(rt.manifest.main_pard.clone()),
+                EngineKind::Vsd => Some("draft-s".into()),
+                _ => None,
+            },
+            batch: 4,
+            k: 8,
+            max_new,
+            shared_mask: true,
+        };
+        let mut engine = build_engine(&rt, &cfg)?;
+        engine.warmup()?;
+        let stats = serve_trace(engine.as_mut(), &trace)?;
+        println!("{:<5} {:>3} reqs  {:>7.1} tok/s  latency p50 {:.3}s \
+                  p95 {:.3}s  occupancy {:.2}",
+                 kind.label(), stats.completed, stats.throughput_tps,
+                 stats.latency_p50_s, stats.latency_p95_s,
+                 stats.mean_occupancy);
+    }
+
+    // ---- 3. sample output ------------------------------------------------
+    let cfg = EngineConfig {
+        kind: EngineKind::Pard,
+        target: target.into(),
+        draft: Some(rt.manifest.main_pard.clone()),
+        batch: 1,
+        k: 8,
+        max_new,
+        shared_mask: true,
+    };
+    let mut engine = build_engine(&rt, &cfg)?;
+    engine.warmup()?;
+    let p = rt.prompts("gsm")?.take(1);
+    let out = generate(engine.as_mut(), &[p[0].prompt.clone()], max_new)?;
+    println!("\nsample ({}):", p[0].task);
+    println!("  Q: {}", rt.tokenizer.detok(&p[0].prompt));
+    println!("  A: {}", rt.tokenizer.detok(&out[0]));
+    println!("\nend_to_end OK");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT artifacts, accelerate `target-l` with the
+//! PARD-adapted draft, and print generated text + throughput.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::path::Path;
+
+use anyhow::Result;
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind};
+use pard::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+
+    // PARD: target-independent — the same adapted draft serves the whole
+    // family; swap `target` for any of draft-s/target-m/target-l/target-xl.
+    let cfg = EngineConfig {
+        kind: EngineKind::Pard,
+        target: "target-l".into(),
+        draft: Some(rt.manifest.main_pard.clone()),
+        batch: 1,
+        k: 8,
+        max_new: 48,
+        shared_mask: true,
+    };
+    let mut engine = build_engine(&rt, &cfg)?;
+    engine.warmup()?; // compile executables outside the timed region
+
+    let prompts: Vec<Vec<i32>> = rt
+        .prompts("code")?
+        .take(4)
+        .into_iter()
+        .map(|p| p.prompt)
+        .collect();
+
+    let outputs = generate(engine.as_mut(), &prompts, cfg.max_new)?;
+
+    for (p, o) in prompts.iter().zip(&outputs) {
+        println!("prompt: {}", rt.tokenizer.detok(p));
+        println!("  gen:  {}\n", rt.tokenizer.detok(o));
+    }
+    let m = engine.metrics();
+    println!("PARD: {:.1} tok/s  ({:.2} tokens/iteration, 1-α={:.2})",
+             m.tps(), m.tokens_per_iter(), m.k_alpha(1));
+    Ok(())
+}

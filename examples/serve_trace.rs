@@ -1,0 +1,58 @@
+//! Online serving demo: Poisson arrivals into the continuous batcher
+//! (the vLLM-analogue path behind Tables 3/4), comparing PARD against
+//! the AR baseline under the same trace.
+//!
+//!     cargo run --release --example serve_trace [rate] [n]
+
+use std::path::Path;
+
+use anyhow::Result;
+use pard::coordinator::batcher::serve_trace;
+use pard::coordinator::engines::{build_engine, EngineConfig, EngineKind};
+use pard::substrate::workload::{build_trace, Arrival};
+use pard::Runtime;
+
+fn main() -> Result<()> {
+    let rate: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6.0);
+    let n: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let prompts = rt.prompts("gsm")?.prompts;
+    let trace = build_trace(&prompts, n, Arrival::Poisson { rate }, 48, 7);
+    println!("trace: {n} requests, Poisson λ={rate}/s, batch slots = 4\n");
+
+    for kind in [EngineKind::ArPlus, EngineKind::Pard] {
+        let cfg = EngineConfig {
+            kind,
+            target: "target-l".into(),
+            draft: match kind {
+                EngineKind::Pard => Some(rt.manifest.main_pard.clone()),
+                _ => None,
+            },
+            batch: 4,
+            k: 8,
+            max_new: 48,
+            shared_mask: true,
+        };
+        let mut engine = build_engine(&rt, &cfg)?;
+        engine.warmup()?;
+        let stats = serve_trace(engine.as_mut(), &trace)?;
+        println!(
+            "{:<5} completed={:<3} throughput={:>7.1} tok/s  \
+             latency p50={:.3}s p95={:.3}s  occupancy={:.2}",
+            kind.label(),
+            stats.completed,
+            stats.throughput_tps,
+            stats.latency_p50_s,
+            stats.latency_p95_s,
+            stats.mean_occupancy
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,266 @@
+"""AOT export: lower every serving entry point to HLO text + manifest.
+
+Python's last act: after training, each model is lowered per (batch, T)
+bucket to **HLO text** (xla_extension 0.5.1 rejects jax>=0.5 serialized
+protos — 64-bit instruction ids; the text parser reassigns ids, see
+/opt/xla-example/README.md).  Weights stay in ``.npz`` checkpoints (keys
+p000… in tree-flatten order — the exact HLO parameter order) and
+``manifest.json`` tells the rust runtime what exists.
+
+Two executables per (model, b, t) keep the KV cache device-resident
+(PJRT returns tuples as a single opaque buffer, so anything returned in a
+tuple must round-trip through the host — the cache must therefore never
+be a tuple member):
+
+* ``fwd``   (params…, tokens, pos, cache[2,L,B,S,H,D]) ->
+            tuple(logits, k_new[L,B,T,H,D], v_new[, hidden]) — reads the
+            cache buffer in place; only small outputs cross to the host.
+* ``commit`` (cache, k_new, v_new, pos) -> cache'  — single-array output
+            (lowered with return_tuple=False), so the updated cache stays
+            a plain device buffer.  Speculative rewind = rust redirects
+            rejected columns to the reserved garbage slot S_max-1.
+
+The rust coordinator composes prefill / decode / verify / PARD-parallel-
+draft purely by choosing (tokens, pos_ids) layouts and a T bucket — see
+DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model
+from .train import common
+from .train.pard import VARIANTS, MAIN_VARIANT
+
+# T buckets: 1 = decode / AR+VSD draft step; 2..32 = verify (K+1) and PARD
+# parallel draft (2K) for K_infer in 1..16; 32 = prefill (prompts are <32).
+# 10 and 12 exist purely for §Perf: K=8 verify needs T=9 and the typical
+# PARD draft call needs 10-12 — on a compute-bound CPU backend, padding
+# those up to 16 wastes ~40% of the dominant verify FLOPs.
+T_FULL = (1, 2, 4, 8, 10, 12, 16, 24, 32, 48, 64)
+T_BATCH = (1, 10, 12, 16, 32)
+BATCHES = (2, 4, 8, 16)
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
+    return comp.as_hlo_text()
+
+
+def spec_like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def cache_spec(n_layers: int, b: int, s_max: int, h: int, dh: int):
+    return jax.ShapeDtypeStruct((2, n_layers, b, s_max, h, dh), jnp.float32)
+
+
+def kv_new_spec(n_layers: int, b: int, t: int, h: int, dh: int):
+    return jax.ShapeDtypeStruct((n_layers, b, t, h, dh), jnp.float32)
+
+
+def _gather_new(ck2, pos):
+    """[L,B,S,H,D] cache, [B,T] pos -> [L,B,T,H,D] this call's K or V."""
+    bidx = jnp.arange(pos.shape[0])[:, None]
+    return ck2[:, bidx, pos]
+
+
+def lower_fwd(params, cfg: model.ModelConfig, b: int, t: int,
+              hidden: bool) -> str:
+    def f(p, tokens, pos, cache):
+        out = model.extend(p, cfg, tokens, pos, cache[0], cache[1],
+                           return_hidden=hidden)
+        logits, ck2, cv2 = out[0], out[1], out[2]
+        k_new = _gather_new(ck2, pos)
+        v_new = _gather_new(cv2, pos)
+        if hidden:
+            return logits, k_new, v_new, out[3]
+        return logits, k_new, v_new
+
+    tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    cache = cache_spec(cfg.n_layers, b, cfg.s_max, cfg.n_heads, cfg.d_head)
+    lowered = jax.jit(f).lower(spec_like(params), tok, tok, cache)
+    return to_hlo_text(lowered, return_tuple=True)
+
+
+def lower_commit(n_layers: int, b: int, t: int, s_max: int, h: int,
+                 dh: int) -> str:
+    def g(cache, k_new, v_new, pos):
+        bidx = jnp.arange(b)[:, None]
+        ck = cache[0].at[:, bidx, pos].set(k_new)
+        cv = cache[1].at[:, bidx, pos].set(v_new)
+        return jnp.stack([ck, cv])
+
+    cache = cache_spec(n_layers, b, s_max, h, dh)
+    kv = kv_new_spec(n_layers, b, t, h, dh)
+    pos = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    lowered = jax.jit(g).lower(cache, kv, kv, pos)
+    return to_hlo_text(lowered, return_tuple=False)
+
+
+def lower_eagle_fwd(head, ecfg: model.EagleConfig, b: int, t: int) -> str:
+    def f(p, hid, tokens, pos, cache):
+        logits, ck2, cv2, hh = model.eagle_extend(p, ecfg, hid, tokens,
+                                                  pos, cache[0], cache[1])
+        return logits, _gather_new(ck2, pos), _gather_new(cv2, pos), hh
+
+    tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    hid = jax.ShapeDtypeStruct((b, t, ecfg.d_model), jnp.float32)
+    cache = cache_spec(1, b, ecfg.s_max, ecfg.n_heads, ecfg.d_head)
+    lowered = jax.jit(f).lower(spec_like(head), hid, tok, tok, cache)
+    return to_hlo_text(lowered, return_tuple=True)
+
+
+def _write(path: str, text_fn) -> None:
+    if not os.path.exists(path):
+        with open(path, "w") as f:
+            f.write(text_fn())
+    print(f"  {os.path.basename(path)}", flush=True)
+
+
+def export_commits(out: str, arch_name: str, n_layers: int, s_max: int,
+                   h: int, dh: int, grid, manifest: dict) -> None:
+    """Commit executables are weight-independent: one set per architecture,
+    shared by every variant (pard-* reuse draft-s commits)."""
+    entries = []
+    for b, t in grid:
+        fname = f"hlo/commit_{arch_name}__b{b}_t{t}.hlo.txt"
+        _write(f"{out}/{fname}",
+               lambda b=b, t=t: lower_commit(n_layers, b, t, s_max, h, dh))
+        entries.append({"b": b, "t": t, "file": fname})
+    manifest["commits"][arch_name] = entries
+
+
+def export_model(out: str, name: str, cfg: model.ModelConfig, params,
+                 grid, hidden: bool, base: str, manifest: dict) -> None:
+    entries = []
+    suffix = "_h" if hidden else ""
+    for b, t in grid:
+        fname = f"hlo/{name}{suffix}__b{b}_t{t}.hlo.txt"
+        _write(f"{out}/{fname}",
+               lambda b=b, t=t: lower_fwd(params, cfg, b, t, hidden))
+        entries.append({"b": b, "t": t, "file": fname})
+    manifest["models"][f"{name}{suffix}"] = {
+        "kind": "lm", "hidden": hidden, "arch": base,
+        "weights": f"ckpt/{name}.npz",
+        "config": cfg.to_dict(), "entries": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--eval-prompts", type=int, default=96)
+    ap.add_argument("--eval-seed", type=int, default=1234)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--skip-batch", action="store_true",
+                    help="only export b=1 entries (fast dev builds)")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(f"{out}/hlo", exist_ok=True)
+
+    manifest = {
+        "vocab_size": corpus.VOCAB_SIZE,
+        "bos": corpus.BOS, "eos": corpus.EOS, "pad": corpus.PAD,
+        "mask": corpus.MASK, "distinct_masks": corpus.DISTINCT_MASKS,
+        "models": {}, "commits": {}, "prompts": {}, "pard_variants": {},
+        "main_pard": MAIN_VARIANT,
+    }
+
+    b1_grid = [(1, t) for t in T_FULL]
+    batch_grid = [] if args.skip_batch else [
+        (b, t) for b in BATCHES for t in T_BATCH]
+
+    # --- family members (AR models: targets + the VSD draft) -------------
+    for name, cfg in model.FAMILY.items():
+        ck = f"{out}/ckpt/{name}.npz"
+        if not os.path.exists(ck):
+            raise SystemExit(f"missing checkpoint {ck}; run pretrain first")
+        params = common.load_ckpt(
+            ck, model.init_params(jax.random.PRNGKey(0), cfg))
+        grid = list(b1_grid)
+        if name in ("draft-s", "target-l"):
+            grid += batch_grid
+        print(f"[aot] {name}", flush=True)
+        export_model(out, name, cfg, params, grid, hidden=False,
+                     base=name, manifest=manifest)
+        export_commits(out, name, cfg.n_layers, cfg.s_max, cfg.n_heads,
+                       cfg.d_head, grid, manifest)
+        if name == "target-l":  # hidden variant for the EAGLE baseline
+            print(f"[aot] {name} (hidden)", flush=True)
+            export_model(out, name, cfg, params, grid, hidden=True,
+                         base=name, manifest=manifest)
+
+    # --- PARD-adapted drafts (main + any trained ablation variants) ------
+    dcfg = model.FAMILY["draft-s"]
+    template = model.init_params(jax.random.PRNGKey(0), dcfg)
+    for vname, spec in VARIANTS.items():
+        ck = f"{out}/ckpt/{vname}.npz"
+        if not os.path.exists(ck):
+            if vname == MAIN_VARIANT:
+                raise SystemExit(f"missing {ck}; run pard training first")
+            continue  # ablation variant not trained in this build
+        params = common.load_ckpt(ck, template)
+        grid = list(b1_grid)
+        if vname == MAIN_VARIANT:
+            grid += batch_grid
+        print(f"[aot] {vname}", flush=True)
+        export_model(out, vname, dcfg, params, grid, hidden=False,
+                     base="draft-s", manifest=manifest)
+        manifest["pard_variants"][vname] = {
+            "k_train": spec.k, "r": spec.r, "r_min": spec.r_min,
+            "shared_mask": spec.shared}
+
+    # --- EAGLE head (target-dependent baseline) ---------------------------
+    tcfg = model.FAMILY["target-l"]
+    ecfg = model.eagle_config_for(tcfg)
+    eck = f"{out}/ckpt/{ecfg.name}.npz"
+    if os.path.exists(eck):
+        head = common.load_ckpt(
+            eck, model.eagle_init(jax.random.PRNGKey(7), ecfg))
+        grid = [(1, t) for t in (1, 32)] + (
+            [] if args.skip_batch else [(b, t) for b in BATCHES
+                                        for t in (1, 32)])
+        print(f"[aot] {ecfg.name}", flush=True)
+        entries = []
+        for b, t in grid:
+            fname = f"hlo/{ecfg.name}__b{b}_t{t}.hlo.txt"
+            _write(f"{out}/{fname}",
+                   lambda b=b, t=t: lower_eagle_fwd(head, ecfg, b, t))
+            entries.append({"b": b, "t": t, "file": fname})
+        manifest["models"][ecfg.name] = {
+            "kind": "eagle", "hidden": True, "arch": ecfg.name,
+            "weights": f"ckpt/{ecfg.name}.npz",
+            "config": ecfg.to_dict(), "entries": entries,
+        }
+        export_commits(out, ecfg.name, 1, ecfg.s_max, ecfg.n_heads,
+                       ecfg.d_head, grid, manifest)
+
+    # --- vocab + held-out eval prompts ------------------------------------
+    corpus.dump_vocab(f"{out}/vocab.json")
+    for i, task in enumerate(corpus.TASKS):
+        data = corpus.build_eval_prompts(task, args.eval_prompts,
+                                         seed=args.eval_seed + i,
+                                         seq_len=args.seq_len)
+        fname = f"prompts_{task}.json"
+        corpus.dump_prompts(data, f"{out}/{fname}")
+        manifest["prompts"][task] = fname
+
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out}/manifest.json "
+          f"({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

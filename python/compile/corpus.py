@@ -1,0 +1,260 @@
+"""Synthetic corpus + tokenizer substrate.
+
+The paper trains draft models on Magpie / Evol-CodeAlpaca / OpenR1-Math and
+evaluates on HumanEval / GSM8K / MATH500.  We have no real corpora or
+checkpoints (repro band 0/5), so we substitute seeded grammar generators
+that produce three task distributions with the properties that matter for
+speculative decoding: structured, learnable token streams whose
+predictability differs per task (code > gsm > math), so the draft/target
+agreement rate — the quantity PARD exploits — is realistic and
+task-dependent.  See DESIGN.md §3.
+
+Token ids are emitted directly (no text round trip); ``vocab.json`` is
+exported for the rust side so prompts/outputs can be detokenized for
+debugging and examples.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (fixed, shared by every model in the family)
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 512
+
+BOS, EOS, PAD, MASK = 0, 1, 2, 3
+# Distinct mask ids for the "shared vs distinct mask id" ablation (§4.3).
+DISTINCT_MASKS = list(range(4, 12))  # m_0..m_7
+
+_SPECIAL = {0: "<bos>", 1: "<eos>", 2: "<pad>", 3: "<mask>"}
+for _i, _m in enumerate(DISTINCT_MASKS):
+    _SPECIAL[_m] = f"<mask{_i}>"
+
+_next = 12
+_id_of: dict[str, int] = {}
+_tok_of: dict[int, str] = dict(_SPECIAL)
+
+
+def _intern(words: list[str]) -> list[int]:
+    global _next
+    out = []
+    for w in words:
+        if w not in _id_of:
+            _id_of[w] = _next
+            _tok_of[_next] = w
+            _next += 1
+        out.append(_id_of[w])
+    return out
+
+
+DIGITS = _intern([str(d) for d in range(10)])
+OPS = _intern(["+", "-", "*", "/", "%", "==", "<", ">", "="])
+PUNCT = _intern(["(", ")", "[", "]", ":", ",", ".", "->", "\n", "  "])
+KEYWORDS = _intern(
+    ["def", "return", "if", "else", "for", "in", "while", "range",
+     "len", "not", "and", "or", "print", "pass", "lambda", "assert"]
+)
+IDENTS = _intern([f"v{i}" for i in range(24)] + [f"fn{i}" for i in range(8)])
+GSM_WORDS = _intern(
+    ["alice", "bob", "carol", "dave", "has", "buys", "sells", "gives",
+     "apples", "books", "coins", "cards", "each", "day", "week", "then",
+     "total", "how", "many", "left", "answer", "is", "so", "now",
+     "gets", "loses", "more", "fewer", "twice", "half", "per", "after",
+     "first", "second", "third", "spends", "earns", "shares", "keeps",
+     "boxes", "bags", "friends", "times", "and", "the", "of", "with"]
+)
+MATH_SYMS = _intern(
+    ["x", "y", "z", "a", "b", "c", "^", "sqrt", "frac", "sum", "=>",
+     "therefore", "let", "solve", "factor", "expand", "substitute",
+     "roots", "where", "implies", "qed", "{", "}", "|", "pm", "neq",
+     "leq", "geq", "int", "d", "prime", "mod", "gcd", "lcm"]
+)
+
+assert _next <= VOCAB_SIZE, f"vocab overflow: {_next}"
+
+TASKS = ("code", "gsm", "math")
+
+
+def detok(ids) -> str:
+    return " ".join(_tok_of.get(int(i), f"<{int(i)}>") for i in ids)
+
+
+def dump_vocab(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "vocab_size": VOCAB_SIZE,
+                "bos": BOS, "eos": EOS, "pad": PAD, "mask": MASK,
+                "distinct_masks": DISTINCT_MASKS,
+                "tokens": {str(k): v for k, v in _tok_of.items()},
+            },
+            f, indent=1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Grammar generators.  Each returns (ids, prompt_len): `ids` includes BOS and
+# EOS; `prompt_len` is where the eval prompt ends (everything before it is
+# the "question", everything after is what serving must generate).
+# ---------------------------------------------------------------------------
+
+
+def _num(rng: np.random.Generator, lo=0, hi=99) -> list[int]:
+    n = int(rng.integers(lo, hi + 1))
+    return [DIGITS[int(c)] for c in str(n)]
+
+
+def gen_code(rng: np.random.Generator, max_len: int) -> tuple[list[int], int]:
+    """HumanEval-like: a function signature then a highly structured body.
+
+    The body is largely determined by the signature (same identifiers
+    reappear, fixed statement templates), giving the high-predictability
+    regime where the paper reports its biggest PARD wins.
+    """
+    D, O, P, K, I = DIGITS, OPS, PUNCT, KEYWORDS, IDENTS
+    lp, rp, lb, rb, colon, comma, dot, arrow, nl, ind = P
+    fn = I[24 + int(rng.integers(0, 8))]
+    a, b, c = (I[int(rng.integers(0, 24))] for _ in range(3))
+    ids = [BOS, K[0], fn, lp, a, comma, b, rp, colon, nl]
+    prompt_len = len(ids)
+    body_kind = int(rng.integers(0, 4))
+    if body_kind == 0:  # return a OP b
+        op = O[int(rng.integers(0, 5))]
+        ids += [ind, K[1], a, op, b, nl]
+    elif body_kind == 1:  # if a < b: return a else: return b
+        ids += [ind, K[2], a, O[6], b, colon, nl,
+                ind, ind, K[1], a, nl,
+                ind, K[3], colon, nl,
+                ind, ind, K[1], b, nl]
+    elif body_kind == 2:  # for c in range(a): b = b + c ; return b
+        ids += [ind, K[4], c, K[5], K[7], lp, a, rp, colon, nl,
+                ind, ind, b, O[8], b, O[0], c, nl,
+                ind, K[1], b, nl]
+    else:  # while a > 0: a = a - 1 ; return b
+        one = D[1]
+        zero = D[0]
+        ids += [ind, K[6], a, O[7], zero, colon, nl,
+                ind, ind, a, O[8], a, O[1], one, nl,
+                ind, K[1], b, nl]
+    ids.append(EOS)
+    return ids[:max_len], min(prompt_len, max_len - 1)
+
+
+def gen_gsm(rng: np.random.Generator, max_len: int) -> tuple[list[int], int]:
+    """GSM8K-like word problem followed by an arithmetic chain answer."""
+    W = GSM_WORDS
+    (alice, bob, carol, dave, has, buys, sells, gives, apples, books, coins,
+     cards, each, day, week, then, total, how, many, left, answer, is_, so,
+     now, gets, loses, more, fewer, twice, half, per, after, first, second,
+     third, spends, earns, shares, keeps, boxes, bags, friends, times, and_,
+     the, of, with_) = W
+    who = [alice, bob, carol, dave][int(rng.integers(0, 4))]
+    item = [apples, books, coins, cards][int(rng.integers(0, 4))]
+    n1 = int(rng.integers(2, 50))
+    n2 = int(rng.integers(1, n1))
+    verb2, sign = [(buys, +1), (sells, -1), (gives, -1), (gets, +1)][
+        int(rng.integers(0, 4))
+    ]
+    n3 = n1 + sign * n2
+    dd = lambda n: [DIGITS[int(ch)] for ch in str(n)]
+    ids = [BOS, who, has, *dd(n1), item, then, verb2, *dd(n2), more,
+           how, many, item, now]
+    prompt_len = len(ids)
+    op = OPS[0] if sign > 0 else OPS[1]
+    ids += [answer, is_, *dd(n1), op, *dd(n2), OPS[8], *dd(n3), so,
+            who, has, *dd(n3), item, EOS]
+    return ids[:max_len], min(prompt_len, max_len - 1)
+
+
+def gen_math(rng: np.random.Generator, max_len: int) -> tuple[list[int], int]:
+    """MATH500-like symbolic derivation: solve x^2 - s x + p = 0 by factoring.
+
+    Less template-determined than the code task (root values inject
+    entropy mid-sequence), giving a lower acceptance-rate regime.
+    """
+    M, O, P = MATH_SYMS, OPS, PUNCT
+    x = M[0]
+    caret, arrow, solve, factor, roots = M[6], M[10], M[13], M[14], M[17]
+    r1 = int(rng.integers(1, 10))
+    r2 = int(rng.integers(1, 10))
+    s, p = r1 + r2, r1 * r2
+    dd = lambda n: [DIGITS[int(ch)] for ch in str(n)]
+    two = DIGITS[2]
+    zero = DIGITS[0]
+    ids = [BOS, solve, x, caret, two, O[1], *dd(s), x, O[0], *dd(p),
+           O[8], zero]
+    prompt_len = len(ids)
+    lp, rp = P[0], P[1]
+    ids += [arrow, factor, lp, x, O[1], *dd(r1), rp, lp, x, O[1], *dd(r2),
+            rp, O[8], zero,
+            arrow, roots, x, O[8], *dd(r1), M[24], x, O[8], *dd(r2),
+            M[20], EOS]
+    return ids[:max_len], min(prompt_len, max_len - 1)
+
+
+_GEN = {"code": gen_code, "gsm": gen_gsm, "math": gen_math}
+
+
+# ---------------------------------------------------------------------------
+# Batched dataset assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Corpus:
+    """Fixed-shape token matrix with per-row prompt/valid lengths."""
+
+    tokens: np.ndarray  # [n, seq_len] int32, PAD-filled
+    prompt_len: np.ndarray  # [n] int32
+    valid_len: np.ndarray  # [n] int32
+    task: list = field(default_factory=list)
+
+
+def build_corpus(
+    n: int,
+    seq_len: int,
+    seed: int,
+    tasks: tuple[str, ...] = TASKS,
+    mix: tuple[float, ...] | None = None,
+) -> Corpus:
+    rng = np.random.default_rng(seed)
+    mix = mix or tuple(1.0 / len(tasks) for _ in tasks)
+    probs = np.asarray(mix) / np.sum(mix)
+    toks = np.full((n, seq_len), PAD, dtype=np.int32)
+    plen = np.zeros(n, dtype=np.int32)
+    vlen = np.zeros(n, dtype=np.int32)
+    names = []
+    for i in range(n):
+        t = tasks[int(rng.choice(len(tasks), p=probs))]
+        ids, pl = _GEN[t](rng, seq_len)
+        toks[i, : len(ids)] = ids
+        plen[i] = pl
+        vlen[i] = len(ids)
+        names.append(t)
+    return Corpus(toks, plen, vlen, names)
+
+
+def build_eval_prompts(task: str, n: int, seed: int, seq_len: int) -> Corpus:
+    """Held-out prompts for one task (HumanEval/GSM8K/MATH500 stand-ins)."""
+    return build_corpus(n, seq_len, seed=seed, tasks=(task,))
+
+
+def dump_prompts(corpus: Corpus, path: str) -> None:
+    rows = []
+    for i in range(corpus.tokens.shape[0]):
+        v = int(corpus.valid_len[i])
+        p = int(corpus.prompt_len[i])
+        rows.append(
+            {
+                "task": corpus.task[i],
+                "prompt": [int(x) for x in corpus.tokens[i, :p]],
+                "reference": [int(x) for x in corpus.tokens[i, p:v]],
+            }
+        )
+    with open(path, "w") as f:
+        json.dump(rows, f)

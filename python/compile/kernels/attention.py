@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: cached causal flash-attention for the serving path.
+
+This is the decode/verify/PARD-draft hot spot.  One kernel serves all three
+phases: queries are T new tokens (T=1 decode, T=K+1 verify, T≈2K PARD
+draft) attending a fixed-capacity KV cache ``[B, S, H, D]`` into which the
+new tokens' K/V have already been written.  Masking is positional:
+slot ``s`` is attendable by query ``t`` iff ``s <= q_pos[b, t]`` — the
+L3 coordinator guarantees every slot ``<= q_pos`` holds live data (see
+DESIGN.md §7), so no separate validity mask is needed.
+
+Hardware adaptation (paper targets A100 HBM↔SM; we express the TPU
+analogue): the KV cache streams through VMEM in ``block_kv``-row tiles
+consumed by an online-softmax accumulator (flash-attention v2 structure),
+so HBM traffic is one pass over the cache *regardless of K* — the kernel-
+level mirror of the paper's Table 6 claim that PARD draft bandwidth is
+constant in K.  ``q·kᵀ`` and ``p·v`` are MXU-shaped matmuls.
+
+``interpret=True`` always: real-TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot execute.  Correctness is pinned to ``ref.py`` via
+pytest + hypothesis sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_KV = 64
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, qpos_ref, o_ref, *, block_kv: int,
+                 s_max: int, scale: float):
+    """One (batch, head) tile: flash-attention over the KV cache.
+
+    Refs (VMEM blocks):
+      q_ref    [1, T, 1, D]   queries for this (b, h)
+      k_ref    [1, S, 1, D]   full cache column for this (b, h)
+      v_ref    [1, S, 1, D]
+      qpos_ref [1, T]         absolute position of each query token
+      o_ref    [1, T, 1, D]
+    """
+    q = q_ref[0, :, 0, :]  # [T, D]
+    qpos = qpos_ref[0, :]  # [T]
+    t, d = q.shape
+
+    m0 = jnp.full((t,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((t,), dtype=jnp.float32)
+    acc0 = jnp.zeros((t, d), dtype=jnp.float32)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = pl.load(k_ref, (0, pl.dslice(i * block_kv, block_kv), 0,
+                            slice(None)))  # [BK, D]
+        v = pl.load(v_ref, (0, pl.dslice(i * block_kv, block_kv), 0,
+                            slice(None)))
+        s = jnp.dot(q, k.T) * scale  # [T, BK] — MXU-shaped
+        slot = i * block_kv + jnp.arange(block_kv)
+        s = jnp.where(slot[None, :] <= qpos[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    n_blocks = s_max // block_kv
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    # Every real query can attend at least its own slot, so l > 0; parked
+    # pad queries may hit garbage but their outputs are discarded by L3.
+    o_ref[0, :, 0, :] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def cached_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     q_pos: jax.Array,
+                     block_kv: int = DEFAULT_BLOCK_KV) -> jax.Array:
+    """Flash-attention of new-token queries against the KV cache.
+
+    Args:
+      q:       [B, T, H, D] new-token queries (RoPE already applied).
+      k_cache: [B, S, H, D] cache with this step's K already scattered in.
+      v_cache: [B, S, H, D]
+      q_pos:   [B, T] int32 absolute position of each query.
+      block_kv: KV tile rows streamed through VMEM per online-softmax step.
+
+    Returns: [B, T, H, D] attention outputs.
+    """
+    b, t, h, d = q.shape
+    s = k_cache.shape[1]
+    if s % block_kv != 0:
+        raise ValueError(f"S={s} must be a multiple of block_kv={block_kv}")
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_attn_kernel, block_kv=block_kv, s_max=s,
+                             scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, t, 1, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, t), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, 1, d), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, q_pos)
+
+
+def vmem_footprint_bytes(t: int, s: int, d: int, block_kv: int) -> dict:
+    """Static VMEM budget of one grid step — the L1 profiling surface.
+
+    interpret=True gives no hardware timing, so optimization is structural:
+    keep the working set inside ~16 MiB VMEM and the matmul tiles
+    MXU-shaped.  Recorded per block-shape candidate in EXPERIMENTS.md §Perf.
+    """
+    f32 = 4
+    q_bytes = t * d * f32
+    kv_tile = 2 * block_kv * d * f32
+    acc = t * d * f32 + 2 * t * f32
+    scores = t * block_kv * f32
+    total = q_bytes + kv_tile + acc + scores
+    return {
+        "q": q_bytes, "kv_tile": kv_tile, "acc": acc, "scores": scores,
+        "total": total,
+        "hbm_reads": 2 * s * d * f32,  # one pass over the cache, K-independent
+        "mxu_macs": t * s * d * 2,
+    }

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package has a reference here with identical
+signature semantics; pytest + hypothesis assert allclose across shape,
+length, and position sweeps (python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cached_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, q_pos: jax.Array) -> jax.Array:
+    """Dense-mask attention over the full cache.
+
+    q [B, T, H, D]; k_cache/v_cache [B, S, H, D]; q_pos [B, T] int32.
+    Slot s attendable by query t iff s <= q_pos[b, t].
+    """
+    b, t, h, d = q.shape
+    s = k_cache.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k_cache) * scale  # [B,H,T,S]
+    slot = jnp.arange(s)
+    mask = slot[None, None, None, :] <= q_pos[:, None, :, None]  # [B,1,T,S]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p, v_cache)
+
+
+def swiglu_ref(x: jax.Array, w1: jax.Array, w2: jax.Array,
+               w3: jax.Array) -> jax.Array:
+    """x [T, D], w1/w3 [D, F], w2 [F, D]."""
+    g = x @ w1
+    return ((g * jax.nn.sigmoid(g)) * (x @ w3)) @ w2

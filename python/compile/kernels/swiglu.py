@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: fused SwiGLU MLP for the serving path.
+
+Computes ``(silu(x @ w1) * (x @ w3)) @ w2`` in one kernel so the two gate
+projections and the elementwise silu/multiply never round-trip through HBM.
+Tiled over the FFN dimension: each grid step loads one ``block_ff`` column
+panel of w1/w3 and the matching row panel of w2 into VMEM, accumulating the
+down-projection online — the same stream-through-VMEM schedule as the
+attention kernel.  interpret=True on CPU (see attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_FF = 128
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One FFN column-panel step; accumulates into o_ref across the grid.
+
+    Refs: x [T, D]; w1/w3 panel [D, BF]; w2 panel [BF, D]; o [T, D].
+    Grid dim 0 walks the FFN panels sequentially, so read-modify-write on
+    o_ref is safe (Pallas grids execute in order).
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]
+    g = jnp.dot(x, w1_ref[...])
+    u = jnp.dot(x, w3_ref[...])
+    h = (g * jax.nn.sigmoid(g)) * u  # silu(g) * u
+    part = jnp.dot(h, w2_ref[...])
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("block_ff",))
+def swiglu(x: jax.Array, w1: jax.Array, w2: jax.Array, w3: jax.Array,
+           block_ff: int = DEFAULT_BLOCK_FF) -> jax.Array:
+    """Fused SwiGLU: x [T, D], w1/w3 [D, F], w2 [F, D] -> [T, D]."""
+    t, d = x.shape
+    f = w1.shape[1]
+    if f % block_ff != 0:
+        raise ValueError(f"F={f} must be a multiple of block_ff={block_ff}")
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(f // block_ff,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, block_ff), lambda i: (0, i)),
+            pl.BlockSpec((d, block_ff), lambda i: (0, i)),
+            pl.BlockSpec((block_ff, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, w1, w3, w2)

@@ -1,0 +1,323 @@
+"""L2: the SynLlama model family — LLaMA-architecture decoders in JAX.
+
+Two forward paths share one parameter pytree:
+
+* ``extend`` — the **serving** path that is AOT-lowered to HLO and executed
+  from rust.  It is a single generic entry point: write T new tokens' K/V
+  into the fixed-capacity KV cache at caller-supplied positions, run the
+  L1 Pallas cached-attention kernel, and return logits (+ optionally the
+  final hidden state for the EAGLE baseline).  Prefill, decode, verify and
+  PARD parallel-draft are all ``extend`` with different (tokens, pos_ids)
+  layouts composed by the rust coordinator — see DESIGN.md §7.
+
+* ``train_forward`` — the **training** path (pure jnp, dense attention
+  mask) used by pretrain / PARD-adaptation / EAGLE-head training.  The
+  PARD mask-token subtask structure (paper Fig. 4/5) is expressed entirely
+  through the explicit ``attn_mask`` and ``pos_ids`` built by
+  ``train/pard.py``, so the model code is identical for AR and PARD
+  training.
+
+Weights are float32; the lm head is tied to the embedding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import cached_attention
+from .kernels.ref import cached_attention_ref
+from . import corpus
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = corpus.VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    s_max: int = 256  # KV-cache capacity (max position + headroom)
+    rope_theta: float = 10000.0
+
+    def to_dict(self):
+        return asdict(self)
+
+    @property
+    def n_params(self) -> int:
+        attn = 4 * self.d_model * self.n_heads * self.d_head
+        mlp = 3 * self.d_model * self.d_ff
+        norms = 2 * self.d_model
+        per_layer = attn + mlp + norms
+        return (self.vocab * self.d_model + self.n_layers * per_layer
+                + self.d_model)
+
+
+# The synthetic family (paper: LLaMA3.2-1B draft vs 1B/3B/8B/… targets).
+# Size ratios draft:target span ~1:5 … ~1:23, bracketing the paper's
+# 0.5B:7B and 1B:8B regimes.
+FAMILY = {
+    "draft-s": ModelConfig("draft-s", d_model=128, n_layers=2, n_heads=4,
+                           d_head=32, d_ff=256),
+    "target-m": ModelConfig("target-m", d_model=192, n_layers=4, n_heads=6,
+                            d_head=32, d_ff=512),
+    "target-l": ModelConfig("target-l", d_model=256, n_layers=6, n_heads=8,
+                            d_head=32, d_ff=704),
+    "target-xl": ModelConfig("target-xl", d_model=320, n_layers=8, n_heads=10,
+                             d_head=32, d_ff=896),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    def dense(key, shape, scale=None):
+        scale = scale if scale is not None else (shape[0] ** -0.5)
+        return jax.random.normal(key, shape, jnp.float32) * scale
+
+    keys = jax.random.split(rng, 2 + cfg.n_layers)
+    d, h, dh, f = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff
+    layers = []
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[2 + li], 7)
+        layers.append({
+            "wq": dense(k[0], (d, h * dh)),
+            "wk": dense(k[1], (d, h * dh)),
+            "wv": dense(k[2], (d, h * dh)),
+            "wo": dense(k[3], (h * dh, d)),
+            "w1": dense(k[4], (d, f)),
+            "w2": dense(k[5], (f, d)),
+            "w3": dense(k[6], (d, f)),
+            "ln_attn": jnp.ones((d,), jnp.float32),
+            "ln_mlp": jnp.ones((d,), jnp.float32),
+        })
+    return {
+        "embed": dense(keys[0], (cfg.vocab, d), scale=0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": layers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x [B, T, H, D], pos [B, T] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # [B, T, half]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B, T, 1, half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _swiglu(x, lyr):
+    g = x @ lyr["w1"]
+    return ((g * jax.nn.sigmoid(g)) * (x @ lyr["w3"])) @ lyr["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Serving path (AOT-exported): extend the cache by T tokens
+# ---------------------------------------------------------------------------
+
+
+def extend(params: dict, cfg: ModelConfig, tokens: jax.Array,
+           pos_ids: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+           return_hidden: bool = False, use_pallas: bool = True):
+    """The single serving entry point.
+
+    Args:
+      tokens:  [B, T] int32 new tokens (reals / MASKs / parked pads — the
+               rust coordinator decides the layout).
+      pos_ids: [B, T] int32 absolute positions; K/V are scattered into the
+               cache at these slots before attention.
+      cache_k/cache_v: [L, B, S, H, D] fixed-capacity caches.
+
+    Returns (logits [B, T, V], cache_k', cache_v'[, hidden [B, T, D]]).
+    """
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["embed"][tokens]  # [B, T, D]
+    attn = cached_attention if use_pallas else cached_attention_ref
+    bidx = jnp.arange(b)[:, None]  # [B, 1] broadcasts with pos_ids [B, T]
+    for li, lyr in enumerate(params["layers"]):
+        xn = rmsnorm(x, lyr["ln_attn"])
+        q = (xn @ lyr["wq"]).reshape(b, t, h, dh)
+        k = (xn @ lyr["wk"]).reshape(b, t, h, dh)
+        v = (xn @ lyr["wv"]).reshape(b, t, h, dh)
+        q = rope(q, pos_ids, cfg.rope_theta)
+        k = rope(k, pos_ids, cfg.rope_theta)
+        cache_k = cache_k.at[li, bidx, pos_ids].set(k)
+        cache_v = cache_v.at[li, bidx, pos_ids].set(v)
+        o = attn(q, cache_k[li], cache_v[li], pos_ids)  # [B, T, H, D]
+        x = x + o.reshape(b, t, h * dh) @ lyr["wo"]
+        x = x + _swiglu(rmsnorm(x, lyr["ln_mlp"]), lyr)
+    hidden = rmsnorm(x, params["ln_f"])
+    logits = hidden @ params["embed"].T
+    if return_hidden:
+        return logits, cache_k, cache_v, hidden
+    return logits, cache_k, cache_v
+
+
+def empty_cache(cfg: ModelConfig, batch: int):
+    shape = (cfg.n_layers, batch, cfg.s_max, cfg.n_heads, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Training path (build-time only): dense-mask attention, no cache
+# ---------------------------------------------------------------------------
+
+
+def train_forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  pos_ids: jax.Array | None = None,
+                  attn_mask: jax.Array | None = None,
+                  return_hidden: bool = False):
+    """Full-sequence forward.  attn_mask [B, N, N] bool (True = attend);
+    defaults to causal.  pos_ids defaults to arange — PARD training passes
+    the subtask layout from Alg. 1 instead.
+    """
+    b, n = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    if pos_ids is None:
+        pos_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    if attn_mask is None:
+        attn_mask = jnp.tril(jnp.ones((n, n), bool))[None]
+    mask = attn_mask[:, None]  # [B, 1, N, N]
+    x = params["embed"][tokens]
+    scale = 1.0 / (dh ** 0.5)
+    for lyr in params["layers"]:
+        xn = rmsnorm(x, lyr["ln_attn"])
+        q = rope((xn @ lyr["wq"]).reshape(b, n, h, dh), pos_ids,
+                 cfg.rope_theta)
+        k = rope((xn @ lyr["wk"]).reshape(b, n, h, dh), pos_ids,
+                 cfg.rope_theta)
+        v = (xn @ lyr["wv"]).reshape(b, n, h, dh)
+        s = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+        s = jnp.where(mask, s, -1e30)
+        o = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(s, -1), v)
+        x = x + o.reshape(b, n, h * dh) @ lyr["wo"]
+        x = x + _swiglu(rmsnorm(x, lyr["ln_mlp"]), lyr)
+    hidden = rmsnorm(x, params["ln_f"])
+    logits = hidden @ params["embed"].T
+    return (logits, hidden) if return_hidden else logits
+
+
+# ---------------------------------------------------------------------------
+# EAGLE-style head (target-dependent baseline, paper §1 / Tables 3,5,6)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EagleConfig:
+    """One decoder layer fed by [target hidden ; token embedding]."""
+    name: str
+    target: str          # which family member it is coupled to
+    d_model: int         # == target's d_model
+    n_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int = corpus.VOCAB_SIZE
+    s_max: int = 256
+    rope_theta: float = 10000.0
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def eagle_config_for(target_cfg: ModelConfig) -> EagleConfig:
+    return EagleConfig(
+        name=f"eagle-{target_cfg.name}", target=target_cfg.name,
+        d_model=target_cfg.d_model, n_heads=target_cfg.n_heads,
+        d_head=target_cfg.d_head, d_ff=target_cfg.d_ff,
+        s_max=target_cfg.s_max, rope_theta=target_cfg.rope_theta)
+
+
+def eagle_init(rng: jax.Array, cfg: EagleConfig) -> dict:
+    base = ModelConfig("eagle", d_model=cfg.d_model, n_layers=1,
+                       n_heads=cfg.n_heads, d_head=cfg.d_head, d_ff=cfg.d_ff)
+    p = init_params(rng, base)
+    k = jax.random.split(rng, 2)[1]
+    d = cfg.d_model
+    p["fuse"] = jax.random.normal(k, (2 * d, d), jnp.float32) * (2 * d) ** -0.5
+    return p
+
+
+def eagle_extend(params: dict, cfg: EagleConfig, hidden: jax.Array,
+                 tokens: jax.Array, pos_ids: jax.Array, cache_k: jax.Array,
+                 cache_v: jax.Array, use_pallas: bool = True):
+    """EAGLE draft step: fuse target hidden + token embedding, one layer.
+
+    hidden [B, T, D] is the target model's hidden state at the token's
+    position (or the head's own previous output for chained drafting —
+    EAGLE's feature-level autoregression).  Caches are [1, B, S, H, D].
+    Returns (logits, cache_k', cache_v', head_hidden).
+    """
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    emb = params["embed"][tokens]
+    x = jnp.concatenate([hidden, emb], -1) @ params["fuse"]  # [B, T, D]
+    lyr = params["layers"][0]
+    attn = cached_attention if use_pallas else cached_attention_ref
+    bidx = jnp.arange(b)[:, None]
+    xn = rmsnorm(x, lyr["ln_attn"])
+    q = rope((xn @ lyr["wq"]).reshape(b, t, h, dh), pos_ids, cfg.rope_theta)
+    k = rope((xn @ lyr["wk"]).reshape(b, t, h, dh), pos_ids, cfg.rope_theta)
+    v = (xn @ lyr["wv"]).reshape(b, t, h, dh)
+    cache_k = cache_k.at[0, bidx, pos_ids].set(k)
+    cache_v = cache_v.at[0, bidx, pos_ids].set(v)
+    o = attn(q, cache_k[0], cache_v[0], pos_ids)
+    x = x + o.reshape(b, t, h * dh) @ lyr["wo"]
+    x = x + _swiglu(rmsnorm(x, lyr["ln_mlp"]), lyr)
+    head_hidden = rmsnorm(x, params["ln_f"])
+    logits = head_hidden @ params["embed"].T
+    return logits, cache_k, cache_v, head_hidden
+
+
+def eagle_train_forward(params: dict, cfg: EagleConfig, hidden: jax.Array,
+                        tokens: jax.Array, return_hidden: bool = False):
+    """Training forward (EAGLE pairing): the head input at step t is
+    ``[h_{t-1} ; embed(x_t)]`` — the target feature of the *previous*
+    position fused with the current token — predicting ``x_{t+1}``.
+    This matches what serving has available: a freshly committed token is
+    always paired with the hidden row that predicted it.  ``h_{-1}`` is
+    zeros.  With ``return_hidden`` the head's own feature outputs are
+    returned for EAGLE's feature-regression loss (train them toward
+    ``h_t`` so chained drafting stays in-distribution).
+    """
+    b, n = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    shifted = jnp.concatenate(
+        [jnp.zeros_like(hidden[:, :1]), hidden[:, :-1]], axis=1)
+    emb = params["embed"][tokens]
+    x = jnp.concatenate([shifted, emb], -1) @ params["fuse"]
+    lyr = params["layers"][0]
+    xn = rmsnorm(x, lyr["ln_attn"])
+    q = rope((xn @ lyr["wq"]).reshape(b, n, h, dh), pos, cfg.rope_theta)
+    k = rope((xn @ lyr["wk"]).reshape(b, n, h, dh), pos, cfg.rope_theta)
+    v = (xn @ lyr["wv"]).reshape(b, n, h, dh)
+    s = jnp.einsum("bthd,bshd->bhts", q, k) * (dh ** -0.5)
+    s = jnp.where(jnp.tril(jnp.ones((n, n), bool))[None, None], s, -1e30)
+    o = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(s, -1), v)
+    x = x + o.reshape(b, n, h * dh) @ lyr["wo"]
+    x = x + _swiglu(rmsnorm(x, lyr["ln_mlp"]), lyr)
+    head_hidden = rmsnorm(x, params["ln_f"])
+    logits = head_hidden @ params["embed"].T
+    return (logits, head_hidden) if return_hidden else logits

@@ -1,0 +1,122 @@
+"""Shared training utilities: Adam, masked CE, checkpoints (build-time only).
+
+Checkpoints are ``.npz`` files whose keys ``p000, p001, …`` follow the
+``jax.tree_util.tree_flatten`` order of the parameter pytree — the same
+order in which AOT-lowered HLO entry points expect their weight
+parameters, so the rust runtime can stream the file straight into PJRT
+buffers (``PjRtBuffer::read_npz``) with no name mapping.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints
+# ---------------------------------------------------------------------------
+
+
+def flat_leaves(params) -> list[jax.Array]:
+    return jax.tree_util.tree_flatten(params)[0]
+
+
+def save_ckpt(path: str, params) -> int:
+    leaves = flat_leaves(params)
+    np.savez(path, **{f"p{i:03d}": np.asarray(l) for i, l in enumerate(leaves)})
+    return len(leaves)
+
+
+def load_ckpt(path: str, template):
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    with np.load(path) as z:
+        loaded = [jnp.asarray(z[f"p{i:03d}"]) for i in range(len(leaves))]
+    for have, want in zip(loaded, leaves):
+        assert have.shape == want.shape, (have.shape, want.shape)
+    return jax.tree_util.tree_unflatten(treedef, loaded)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (hand-rolled Adam; optax is not in the image)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": zeros, "t": jnp.zeros((), jnp.int32)}
+
+
+@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def adam_update(params, grads, state, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1 = 1 - b1 ** tf
+    bc2 = 1 - b2 ** tf
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def masked_ce(logits: jax.Array, labels: jax.Array,
+              weights: jax.Array | None = None) -> jax.Array:
+    """Cross entropy; ``labels == -1`` positions are ignored.
+
+    ``weights`` (same shape as labels) implements the paper's Eq. 8
+    per-subtask normalization for PARD training; defaults to a plain mean.
+    """
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    if weights is None:
+        weights = valid.astype(jnp.float32)
+        weights = weights / jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.sum(nll * weights)
+
+
+def token_accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    valid = labels >= 0
+    hit = (jnp.argmax(logits, -1) == labels) & valid
+    return jnp.sum(hit) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def cosine_lr(base: float, step: int, total: int, warmup: int = 20) -> float:
+    if step < warmup:
+        return base * (step + 1) / warmup
+    frac = (step - warmup) / max(total - warmup, 1)
+    return float(base * 0.5 * (1 + np.cos(np.pi * min(frac, 1.0))))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def dump_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)

@@ -1,0 +1,125 @@
+"""Stage 3: EAGLE-style target-dependent baseline head (build time).
+
+The paper compares PARD against EAGLE (Fig. 1a, Tables 3/5/6).  EAGLE's
+defining properties are (a) the draft head consumes the *target model's*
+hidden features, making it target-dependent, and (b) drafting is
+autoregressive at the feature level, so draft bandwidth grows linearly
+with k.  We reproduce both with a one-decoder-layer head over
+``[target_hidden ; token_embedding]`` trained by teacher forcing against
+the next token, the target frozen.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import corpus, model
+from . import common
+from .pretrain import ar_labels
+
+
+def make_step(tcfg: model.ModelConfig, ecfg: model.EagleConfig,
+              feat_weight: float = 0.5):
+    def loss_fn(head, hidden, toks, labels):
+        logits, hh = model.eagle_train_forward(head, ecfg, hidden, toks,
+                                               return_hidden=True)
+        ce = common.masked_ce(logits, labels)
+        # EAGLE feature regression: the head's own feature at step t must
+        # approximate the target's h_t, so chained (self-fed) drafting
+        # stays in-distribution.
+        valid = (labels >= 0).astype(jnp.float32)[..., None]
+        feat = jnp.sum(jnp.square(hh - hidden) * valid) / (
+            jnp.maximum(jnp.sum(valid), 1.0) * hidden.shape[-1])
+        return ce + feat_weight * feat
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def step(head, opt, hidden, toks, labels, lr):
+        loss, grads = grad_fn(head, hidden, toks, labels)
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.99, 1e-8
+        mm = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    opt["m"], grads)
+        vv = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    opt["v"], grads)
+        tf = t.astype(jnp.float32)
+        head = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** tf))
+            / (jnp.sqrt(v_ / (1 - b2 ** tf)) + eps),
+            head, mm, vv)
+        return head, {"m": mm, "v": vv, "t": t}, loss
+
+    return step
+
+
+def train_eagle(target_params, tcfg: model.ModelConfig,
+                data: corpus.Corpus, steps: int, batch: int, seed: int,
+                base_lr: float = 1e-3, log_every: int = 50):
+    ecfg = model.eagle_config_for(tcfg)
+    head = model.eagle_init(jax.random.PRNGKey(seed + 7), ecfg)
+    opt = common.adam_init(head)
+    step = make_step(tcfg, ecfg)
+
+    @jax.jit
+    def target_hidden(toks):
+        _, hidden = model.train_forward(target_params, tcfg, toks,
+                                        return_hidden=True)
+        return hidden
+
+    rng = np.random.default_rng(seed + 7)
+    labels_all = ar_labels(data.tokens, data.valid_len)
+    n = data.tokens.shape[0]
+    losses = []
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        toks = jnp.asarray(data.tokens[idx])
+        hidden = target_hidden(toks)
+        labels = jnp.asarray(labels_all[idx])
+        lr = common.cosine_lr(base_lr, s, steps)
+        head, opt, loss = step(head, opt, hidden, toks, labels,
+                               jnp.float32(lr))
+        losses.append(float(loss))
+        if s % log_every == 0 or s == steps - 1:
+            print(f"[eagle-{tcfg.name}] step {s:4d} loss "
+                  f"{float(loss):.4f}", flush=True)
+    return head, ecfg, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--corpus-size", type=int, default=4096)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--target", default="target-l")
+    args = ap.parse_args()
+
+    tcfg = model.FAMILY[args.target]
+    target = common.load_ckpt(
+        f"{args.out}/ckpt/{args.target}.npz",
+        model.init_params(jax.random.PRNGKey(0), tcfg))
+    data = corpus.build_corpus(args.corpus_size, args.seq_len,
+                               seed=args.seed)
+    with common.Timer() as t:
+        head, ecfg, losses = train_eagle(target, tcfg, data, args.steps,
+                                         args.batch, args.seed)
+    os.makedirs(f"{args.out}/ckpt", exist_ok=True)
+    n_arrays = common.save_ckpt(f"{args.out}/ckpt/{ecfg.name}.npz", head)
+    common.dump_json(
+        f"{args.out}/metrics/{ecfg.name}.json",
+        {"head": ecfg.name, "target": args.target, "steps": args.steps,
+         "final_loss": losses[-1], "wall_s": t.seconds,
+         "n_arrays": n_arrays, "loss_curve": losses[::10]})
+    print(f"[{ecfg.name}] done {t.seconds:.1f}s loss={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

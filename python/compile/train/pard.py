@@ -1,0 +1,286 @@
+"""Stage 2: PARD adaptation — mask-token training with Conditional Drop.
+
+Implements the paper's §3.2 exactly:
+
+* **Mask-token subtasks** (Fig. 4): the training sequence is expanded with
+  appended MASK tokens.  Subtask k (k = 2..K) predicts the k-th next token:
+  a mask token standing at position ``a+k-1`` (anchored at real prefix
+  ending at ``a``) attends the reals ``0..a`` plus the *same anchor's*
+  earlier masks, and is labelled ``x[a+k]`` — the exact attention pattern
+  parallel drafting produces at inference (Eq. 7), so train == serve.
+  Subtask 1 is the ordinary AR loss on the real tokens.
+
+* **Conditional Drop (COD, Alg. 1 / Fig. 5)**: subtask k retains
+  ``N·max(r^{k-1}, r_min)`` anchors.  Retention is *chain-nested*: an
+  anchor retained at depth k is retained at every depth < k, so every
+  kept mask query still sees its complete preceding mask KV — the
+  paper's "preceding KV cache is complete" constraint.  Dropped chains
+  simply never materialize; the expanded sequence is the compacted form
+  of Fig. 5 (right).
+
+* **Eq. 8 weighting**: the loss averages per subtask, then across
+  subtasks (``weights`` below).
+
+* **Shared vs distinct mask ids** (§4.3 ablation): ``shared=True`` uses a
+  single <mask> id at every offset (the paper's winning strategy, and the
+  source of the K_infer > K_train extrapolation capability);
+  ``shared=False`` uses <mask0>..<mask7>.
+
+``VARIANTS`` enumerates the main artifact plus the ablation grid for
+Fig. 6a (r, r_min sweep) and Fig. 6b (K_train sweep).
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import corpus, model
+from . import common
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: data processing
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PardSpec:
+    k: int = 8            # K_train: mask offsets trained
+    r: float = 0.7        # retention decay
+    r_min: float = 0.2    # retention floor
+    shared: bool = True   # shared mask id strategy
+
+    def retained(self, n: int, sub_k: int) -> int:
+        """N_k' = N * max(r^{k-1}, r_min)   (paper Eq. 11; k is 1-based)."""
+        return int(math.ceil(n * max(self.r ** (sub_k - 1), self.r_min)))
+
+    def expanded_len(self, n: int) -> int:
+        return n + sum(self.retained(n, k) for k in range(2, self.k + 1))
+
+    def full_tokens(self, n: int) -> int:
+        """Token count without COD (K*N) — the Fig. 6a baseline cost."""
+        return self.k * n
+
+
+def anchor_depths(n: int, spec: PardSpec, rng: np.random.Generator
+                  ) -> np.ndarray:
+    """Per-anchor chain depth (1 = AR only).  Nested by construction:
+    the first N_k anchors of a random permutation get depth >= k, and
+    N_k is non-increasing in k, so depth-k retention implies depth k-1.
+    """
+    perm = rng.permutation(n)
+    rank = np.empty(n, dtype=np.int64)
+    rank[perm] = np.arange(n)
+    depth = np.ones(n, dtype=np.int64)
+    for k in range(2, spec.k + 1):
+        depth[rank < spec.retained(n, k)] = k
+    return depth
+
+
+def build_pard_batch(tokens: np.ndarray, valid_len: np.ndarray,
+                     spec: PardSpec, rng: np.random.Generator) -> dict:
+    """Expand a [B, N] batch into the COD-compacted PARD training batch.
+
+    Returns fixed-shape arrays (shape depends only on (N, spec)):
+      tokens   [B, M]       reals then per-anchor mask chains
+      pos_ids  [B, M]       mask tau(k, anchor a) sits at position a+k-1
+      attn     [B, M, M]    bool, True = attend
+      labels   [B, M]       -1 where no loss
+      weights  [B, M]       Eq. 8: 1/(K_eff * |subtask k|) at each query
+    """
+    b, n = tokens.shape
+    m = spec.expanded_len(n)
+    mask_id_of = (lambda k: corpus.MASK) if spec.shared else (
+        lambda k: corpus.DISTINCT_MASKS[k - 2])
+
+    out_tok = np.full((b, m), corpus.PAD, dtype=np.int32)
+    out_pos = np.zeros((b, m), dtype=np.int32)
+    out_lab = np.full((b, m), -1, dtype=np.int32)
+    out_sub = np.zeros((b, m), dtype=np.int32)  # subtask id per query
+    attn = np.zeros((b, m, m), dtype=bool)
+    causal = np.tril(np.ones((n, n), dtype=bool))
+
+    for i in range(b):
+        v = int(valid_len[i])
+        out_tok[i, :n] = tokens[i]
+        out_pos[i, :n] = np.arange(n)
+        out_lab[i, : n - 1] = tokens[i, 1:]
+        out_lab[i, max(v - 1, 0):n] = -1
+        out_sub[i, :n][out_lab[i, :n] >= 0] = 1
+        attn[i, :n, :n] = causal
+
+        depth = anchor_depths(n, spec, rng)
+        cur = n
+        for a in range(n):
+            d = int(depth[a])
+            if d < 2:
+                continue
+            chain_start = cur
+            for k in range(2, d + 1):
+                s = cur
+                cur += 1
+                out_tok[i, s] = mask_id_of(k)
+                out_pos[i, s] = a + k - 1
+                lab_idx = a + k
+                if lab_idx < v:
+                    out_lab[i, s] = tokens[i, lab_idx]
+                    out_sub[i, s] = k
+                # Attend the real prefix 0..a and this anchor's own chain.
+                attn[i, s, : a + 1] = True
+                attn[i, s, chain_start: s + 1] = True
+        assert cur == m, (cur, m)
+
+    # Eq. 8: average within each subtask, then across subtasks.
+    weights = np.zeros((b, m), dtype=np.float32)
+    counts = np.zeros((b, spec.k + 1), dtype=np.int64)
+    for k in range(1, spec.k + 1):
+        counts[:, k] = (out_sub == k).sum(axis=1)
+    k_eff = (counts[:, 1:] > 0).sum(axis=1)  # subtasks with any valid query
+    for i in range(b):
+        total = b  # mean over batch
+        for k in range(1, spec.k + 1):
+            c = counts[i, k]
+            if c > 0:
+                sel = out_sub[i] == k
+                weights[i, sel] = 1.0 / (c * k_eff[i] * total)
+
+    return {"tokens": out_tok, "pos_ids": out_pos, "attn": attn,
+            "labels": out_lab, "weights": weights,
+            "n_train_tokens": int(b * m)}
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def make_step(cfg: model.ModelConfig):
+    def loss_fn(params, batch):
+        logits = model.train_forward(params, cfg, batch["tokens"],
+                                     pos_ids=batch["pos_ids"],
+                                     attn_mask=batch["attn"])
+        return common.masked_ce(logits, batch["labels"], batch["weights"])
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def step(params, opt, batch, lr):
+        loss, grads = grad_fn(params, batch)
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.99, 1e-8
+        mm = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    opt["m"], grads)
+        vv = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    opt["v"], grads)
+        tf = t.astype(jnp.float32)
+        params = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** tf))
+            / (jnp.sqrt(v_ / (1 - b2 ** tf)) + eps),
+            params, mm, vv)
+        return params, {"m": mm, "v": vv, "t": t}, loss
+
+    return step
+
+
+def adapt(base_params, cfg: model.ModelConfig, data: corpus.Corpus,
+          spec: PardSpec, steps: int, batch: int, seed: int,
+          base_lr: float = 1e-3, log_every: int = 50, tag: str = "pard"):
+    """Adapt an AR draft into a PARD parallel draft (paper §3.2)."""
+    rng = np.random.default_rng(seed + 1)
+    params = base_params
+    opt = common.adam_init(params)
+    step = make_step(cfg)
+    n_rows = data.tokens.shape[0]
+    losses, total_tokens = [], 0
+    for s in range(steps):
+        idx = rng.integers(0, n_rows, size=batch)
+        raw = build_pard_batch(data.tokens[idx], data.valid_len[idx],
+                               spec, rng)
+        total_tokens += raw.pop("n_train_tokens")
+        jb = {k: jnp.asarray(v) for k, v in raw.items()}
+        lr = common.cosine_lr(base_lr, s, steps)
+        params, opt, loss = step(params, opt, jb, jnp.float32(lr))
+        losses.append(float(loss))
+        if s % log_every == 0 or s == steps - 1:
+            print(f"[{tag}] step {s:4d} loss {float(loss):.4f}", flush=True)
+    return params, losses, total_tokens
+
+
+# ---------------------------------------------------------------------------
+# Variant registry — main artifact + ablation grid (Fig. 6a / 6b / §4.3)
+# ---------------------------------------------------------------------------
+
+MAIN_VARIANT = "pard-main"
+
+VARIANTS: dict[str, PardSpec] = {
+    # Paper's production setting: K=8, r=0.7, r_min=0.2, shared mask id.
+    MAIN_VARIANT: PardSpec(k=8, r=0.7, r_min=0.2, shared=True),
+    # Fig. 6a: retention sweep (PARD_r_rmin naming as in the paper).
+    "pard-r1.0": PardSpec(k=8, r=1.0, r_min=1.0, shared=True),  # no drop
+    "pard-r0.5-m0.2": PardSpec(k=8, r=0.5, r_min=0.2, shared=True),
+    "pard-r0.5-m0.0": PardSpec(k=8, r=0.5, r_min=0.0, shared=True),
+    "pard-r0.3-m0.2": PardSpec(k=8, r=0.3, r_min=0.2, shared=True),
+    # Fig. 6b: K_train sweep.
+    "pard-k2": PardSpec(k=2, r=0.7, r_min=0.2, shared=True),
+    "pard-k4": PardSpec(k=4, r=0.7, r_min=0.2, shared=True),
+    # §4.3: distinct mask ids.
+    "pard-distinct": PardSpec(k=8, r=0.7, r_min=0.2, shared=False),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--corpus-size", type=int, default=4096)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--draft", default="draft-s")
+    ap.add_argument("--variants", default=MAIN_VARIANT,
+                    help="comma list, 'all', or 'ablation'")
+    args = ap.parse_args()
+
+    cfg = model.FAMILY[args.draft]
+    base = common.load_ckpt(f"{args.out}/ckpt/{args.draft}.npz",
+                            model.init_params(jax.random.PRNGKey(0), cfg))
+    data = corpus.build_corpus(args.corpus_size, args.seq_len,
+                               seed=args.seed)
+    if args.variants == "all":
+        names = list(VARIANTS)
+    elif args.variants == "ablation":
+        names = [v for v in VARIANTS if v != MAIN_VARIANT]
+    else:
+        names = args.variants.split(",")
+
+    os.makedirs(f"{args.out}/ckpt", exist_ok=True)
+    os.makedirs(f"{args.out}/metrics", exist_ok=True)
+    for name in names:
+        spec = VARIANTS[name]
+        # Ablation variants get a shorter budget (paper: 93K-subset, 1 ep).
+        steps = args.steps if name == MAIN_VARIANT else max(args.steps // 2, 1)
+        with common.Timer() as t:
+            params, losses, toks = adapt(base, cfg, data, spec, steps,
+                                         args.batch, args.seed, tag=name)
+        n_arrays = common.save_ckpt(f"{args.out}/ckpt/{name}.npz", params)
+        full = spec.full_tokens(args.seq_len) * args.batch * steps
+        common.dump_json(
+            f"{args.out}/metrics/{name}.json",
+            {"variant": name, "spec": spec.__dict__, "steps": steps,
+             "final_loss": losses[-1], "wall_s": t.seconds,
+             "train_tokens": toks, "train_tokens_full_k": full,
+             "cod_token_ratio": toks / max(full, 1),
+             "n_arrays": n_arrays, "loss_curve": losses[::10]})
+        print(f"[{name}] done {t.seconds:.1f}s loss={losses[-1]:.4f} "
+              f"COD token ratio {toks / max(full, 1):.3f}")
+
+
+if __name__ == "__main__":
+    main()

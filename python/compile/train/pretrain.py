@@ -1,0 +1,120 @@
+"""Stage 1: AR-pretrain every member of the SynLlama family (build time).
+
+The paper starts from released checkpoints (LLaMA3.2-1B, Qwen2.5-0.5B, …);
+we have none (repro band 0/5), so the family is pretrained from scratch on
+the shared synthetic corpus.  What matters downstream is that draft and
+targets share a data distribution — that is what produces the high
+draft/target agreement regime vanilla SD and PARD both exploit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import corpus, model
+from . import common
+
+
+def ar_labels(tokens: np.ndarray, valid_len: np.ndarray) -> np.ndarray:
+    """Next-token labels; -1 beyond the valid region."""
+    n, s = tokens.shape
+    labels = np.full_like(tokens, -1)
+    labels[:, :-1] = tokens[:, 1:]
+    idx = np.arange(s)[None, :]
+    labels[idx >= (valid_len[:, None] - 1)] = -1
+    return labels
+
+
+def make_step_lr(cfg: model.ModelConfig):
+    """Train step with a traced learning rate (cosine schedule)."""
+
+    def loss_fn(params, toks, labels):
+        logits = model.train_forward(params, cfg, toks)
+        return common.masked_ce(logits, labels)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def step(params, opt, toks, labels, lr):
+        loss, grads = grad_fn(params, toks, labels)
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.99, 1e-8
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                   opt["m"], grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                   opt["v"], grads)
+        tf = t.astype(jnp.float32)
+        params = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** tf))
+            / (jnp.sqrt(v_ / (1 - b2 ** tf)) + eps),
+            params, m, v)
+        return params, {"m": m, "v": v, "t": t}, loss
+
+    return step
+
+
+def pretrain_one(name: str, cfg: model.ModelConfig, data: corpus.Corpus,
+                 steps: int, batch: int, seed: int, base_lr: float = 3e-3,
+                 log_every: int = 50, params=None):
+    rng = np.random.default_rng(seed)
+    if params is None:
+        params = model.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = common.adam_init(params)
+    step = make_step_lr(cfg)
+    n = data.tokens.shape[0]
+    labels_all = ar_labels(data.tokens, data.valid_len)
+    losses = []
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        toks = jnp.asarray(data.tokens[idx])
+        labels = jnp.asarray(labels_all[idx])
+        lr = common.cosine_lr(base_lr, s, steps)
+        params, opt, loss = step(params, opt, toks, labels,
+                                 jnp.float32(lr))
+        losses.append(float(loss))
+        if s % log_every == 0 or s == steps - 1:
+            print(f"[pretrain {name}] step {s:4d} loss {float(loss):.4f}",
+                  flush=True)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=350)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--corpus-size", type=int, default=4096)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--models", default="all",
+                    help="comma list or 'all'")
+    args = ap.parse_args()
+
+    os.makedirs(f"{args.out}/ckpt", exist_ok=True)
+    os.makedirs(f"{args.out}/metrics", exist_ok=True)
+    data = corpus.build_corpus(args.corpus_size, args.seq_len,
+                               seed=args.seed)
+    names = (list(model.FAMILY) if args.models == "all"
+             else args.models.split(","))
+    for name in names:
+        cfg = model.FAMILY[name]
+        with common.Timer() as t:
+            params, losses = pretrain_one(name, cfg, data, args.steps,
+                                          args.batch, args.seed)
+        n_arrays = common.save_ckpt(f"{args.out}/ckpt/{name}.npz", params)
+        common.dump_json(
+            f"{args.out}/metrics/pretrain_{name}.json",
+            {"model": name, "params": cfg.n_params, "steps": args.steps,
+             "final_loss": losses[-1], "wall_s": t.seconds,
+             "n_arrays": n_arrays, "loss_curve": losses[::10]})
+        print(f"[pretrain {name}] done in {t.seconds:.1f}s "
+              f"final_loss={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

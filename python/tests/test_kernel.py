@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal for the serving stack: every HLO artifact the
+rust coordinator executes contains these kernels, so allclose-vs-ref here
+(plus the hypothesis shape/position sweeps) is what certifies the numeric
+path end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (cached_attention,
+                                       vmem_footprint_bytes)
+from compile.kernels.ref import cached_attention_ref, swiglu_ref
+from compile.kernels.swiglu import swiglu
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def assert_close(a, b, atol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# cached_attention
+# ---------------------------------------------------------------------------
+
+
+class TestCachedAttention:
+    def test_decode_shape(self):
+        rng = np.random.default_rng(0)
+        q = rand(rng, 1, 1, 4, 32)
+        kc, vc = rand(rng, 1, 128, 4, 32), rand(rng, 1, 128, 4, 32)
+        qpos = jnp.array([[17]], jnp.int32)
+        out = cached_attention(q, kc, vc, qpos)
+        assert out.shape == (1, 1, 4, 32)
+        assert_close(out, cached_attention_ref(q, kc, vc, qpos))
+
+    def test_verify_window(self):
+        """T=K+1 verify-phase queries at consecutive positions."""
+        rng = np.random.default_rng(1)
+        q = rand(rng, 2, 9, 4, 32)
+        kc, vc = rand(rng, 2, 128, 4, 32), rand(rng, 2, 128, 4, 32)
+        qpos = jnp.stack([jnp.arange(40, 49), jnp.arange(3, 12)]
+                         ).astype(jnp.int32)
+        assert_close(cached_attention(q, kc, vc, qpos),
+                     cached_attention_ref(q, kc, vc, qpos))
+
+    def test_position_zero_attends_only_slot_zero(self):
+        """A query at position 0 must see exactly cache slot 0."""
+        rng = np.random.default_rng(2)
+        q = rand(rng, 1, 1, 2, 16)
+        kc, vc = rand(rng, 1, 64, 2, 16), rand(rng, 1, 64, 2, 16)
+        qpos = jnp.zeros((1, 1), jnp.int32)
+        out = cached_attention(q, kc, vc, qpos)
+        # softmax over one slot = that slot's value exactly
+        assert_close(out[0, 0], vc[0, 0], atol=1e-6)
+
+    def test_last_slot(self):
+        rng = np.random.default_rng(3)
+        s = 128
+        q = rand(rng, 1, 2, 2, 16)
+        kc, vc = rand(rng, 1, s, 2, 16), rand(rng, 1, s, 2, 16)
+        qpos = jnp.array([[s - 2, s - 1]], jnp.int32)
+        assert_close(cached_attention(q, kc, vc, qpos),
+                     cached_attention_ref(q, kc, vc, qpos))
+
+    def test_mask_independence(self):
+        """Slots beyond q_pos must not influence the output (garbage-proof:
+        the L3 cache holds stale speculative entries there)."""
+        rng = np.random.default_rng(4)
+        q = rand(rng, 1, 3, 4, 32)
+        kc, vc = rand(rng, 1, 128, 4, 32), rand(rng, 1, 128, 4, 32)
+        qpos = jnp.array([[10, 11, 12]], jnp.int32)
+        out1 = cached_attention(q, kc, vc, qpos)
+        # trash everything after slot 12
+        kc2 = kc.at[:, 13:].set(1e4)
+        vc2 = vc.at[:, 13:].set(-1e4)
+        out2 = cached_attention(q, kc2, vc2, qpos)
+        assert_close(out1, out2, atol=1e-6)
+
+    def test_nonuniform_positions_per_row(self):
+        """PARD-draft layout: reals then masks, arbitrary positions."""
+        rng = np.random.default_rng(5)
+        q = rand(rng, 2, 16, 4, 32)
+        kc, vc = rand(rng, 2, 256, 4, 32), rand(rng, 2, 256, 4, 32)
+        qpos = jnp.asarray(rng.integers(0, 256, size=(2, 16)), jnp.int32)
+        assert_close(cached_attention(q, kc, vc, qpos),
+                     cached_attention_ref(q, kc, vc, qpos))
+
+    @pytest.mark.parametrize("block_kv", [32, 64, 128])
+    def test_block_shapes_equivalent(self, block_kv):
+        """The perf-tunable tile size must not change numerics."""
+        rng = np.random.default_rng(6)
+        q = rand(rng, 1, 4, 2, 16)
+        kc, vc = rand(rng, 1, 128, 2, 16), rand(rng, 1, 128, 2, 16)
+        qpos = jnp.array([[5, 6, 7, 8]], jnp.int32)
+        assert_close(cached_attention(q, kc, vc, qpos, block_kv=block_kv),
+                     cached_attention_ref(q, kc, vc, qpos))
+
+    def test_bad_block_size_raises(self):
+        rng = np.random.default_rng(7)
+        q = rand(rng, 1, 1, 2, 16)
+        kc, vc = rand(rng, 1, 100, 2, 16), rand(rng, 1, 100, 2, 16)
+        with pytest.raises(ValueError):
+            cached_attention(q, kc, vc, jnp.zeros((1, 1), jnp.int32))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        t=st.integers(1, 12),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([8, 16, 32]),
+        s=st.sampled_from([64, 128, 192]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_hypothesis_sweep(self, b, t, h, d, s, seed):
+        """Property: kernel == oracle across the serving shape space."""
+        rng = np.random.default_rng(seed)
+        q = rand(rng, b, t, h, d)
+        kc, vc = rand(rng, b, s, h, d), rand(rng, b, s, h, d)
+        qpos = jnp.asarray(rng.integers(0, s, size=(b, t)), jnp.int32)
+        assert_close(cached_attention(q, kc, vc, qpos),
+                     cached_attention_ref(q, kc, vc, qpos))
+
+
+# ---------------------------------------------------------------------------
+# swiglu
+# ---------------------------------------------------------------------------
+
+
+class TestSwiglu:
+    def test_basic(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 4, 64) * 0.5
+        w1, w3 = rand(rng, 64, 256) * 0.1, rand(rng, 64, 256) * 0.1
+        w2 = rand(rng, 256, 64) * 0.1
+        assert_close(swiglu(x, w1, w2, w3), swiglu_ref(x, w1, w2, w3),
+                     atol=1e-5)
+
+    @pytest.mark.parametrize("block_ff", [64, 128, 256])
+    def test_block_sweep(self, block_ff):
+        rng = np.random.default_rng(1)
+        x = rand(rng, 2, 32) * 0.5
+        w1, w3 = rand(rng, 32, 256) * 0.1, rand(rng, 32, 256) * 0.1
+        w2 = rand(rng, 256, 32) * 0.1
+        assert_close(swiglu(x, w1, w2, w3, block_ff=block_ff),
+                     swiglu_ref(x, w1, w2, w3), atol=1e-5)
+
+    def test_bad_block_raises(self):
+        rng = np.random.default_rng(2)
+        x = rand(rng, 2, 32)
+        w1 = rand(rng, 32, 100)
+        with pytest.raises(ValueError):
+            swiglu(x, w1, rand(rng, 100, 32), rand(rng, 32, 100))
+
+    @settings(max_examples=15, deadline=None)
+    @given(t=st.integers(1, 16), d=st.sampled_from([16, 32, 64]),
+           f=st.sampled_from([128, 256]), seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_sweep(self, t, d, f, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, t, d) * 0.5
+        w1, w3 = rand(rng, d, f) * 0.1, rand(rng, d, f) * 0.1
+        w2 = rand(rng, f, d) * 0.1
+        assert_close(swiglu(x, w1, w2, w3), swiglu_ref(x, w1, w2, w3),
+                     atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# VMEM model (the L1 profiling surface)
+# ---------------------------------------------------------------------------
+
+
+class TestVmemModel:
+    def test_fits_vmem(self):
+        """The default serving shapes must fit a 16 MiB VMEM budget."""
+        for t in (1, 16, 32):
+            fp = vmem_footprint_bytes(t=t, s=256, d=32, block_kv=64)
+            assert fp["total"] < 16 * 2 ** 20
+
+    def test_hbm_reads_k_independent(self):
+        """Table 6 analogue: one cache pass regardless of draft K."""
+        a = vmem_footprint_bytes(t=2, s=256, d=32, block_kv=64)
+        b = vmem_footprint_bytes(t=16, s=256, d=32, block_kv=64)
+        assert a["hbm_reads"] == b["hbm_reads"]

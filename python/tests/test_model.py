@@ -1,0 +1,219 @@
+"""L2 correctness: the serving path (`extend`) against the training path.
+
+The serving==training equivalence is what makes "train == serve" claims
+real: incremental cached `extend` calls must reproduce the full-sequence
+`train_forward` logits, and the PARD mask layout at inference must match
+the attention pattern PARD training teaches (paper Fig. 3/4).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+
+
+CFG = model.ModelConfig("tiny", d_model=64, n_layers=2, n_heads=2,
+                        d_head=32, d_ff=128, s_max=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def toks_of(rng, n):
+    return jnp.asarray(rng.integers(12, corpus.VOCAB_SIZE, size=(1, n)),
+                       jnp.int32)
+
+
+class TestExtendVsTrainForward:
+    def test_prefill_matches_full_forward(self, params):
+        rng = np.random.default_rng(0)
+        toks = toks_of(rng, 12)
+        full = model.train_forward(params, CFG, toks)
+        ck, cv = model.empty_cache(CFG, 1)
+        pos = jnp.arange(12, dtype=jnp.int32)[None]
+        logits, _, _ = model.extend(params, CFG, toks, pos, ck, cv)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(logits),
+                                   atol=3e-5, rtol=1e-4)
+
+    def test_incremental_decode_matches(self, params):
+        """prefill 8 then decode 4 one-at-a-time == full forward on 12."""
+        rng = np.random.default_rng(1)
+        toks = toks_of(rng, 12)
+        full = model.train_forward(params, CFG, toks)
+        ck, cv = model.empty_cache(CFG, 1)
+        pos = jnp.arange(8, dtype=jnp.int32)[None]
+        logits, ck, cv = model.extend(params, CFG, toks[:, :8], pos, ck, cv)
+        np.testing.assert_allclose(np.asarray(full[:, :8]),
+                                   np.asarray(logits), atol=3e-5, rtol=1e-4)
+        for i in range(8, 12):
+            pos = jnp.array([[i]], jnp.int32)
+            step, ck, cv = model.extend(params, CFG, toks[:, i:i + 1],
+                                        pos, ck, cv)
+            np.testing.assert_allclose(np.asarray(full[:, i]),
+                                       np.asarray(step[:, 0]),
+                                       atol=5e-5, rtol=1e-4)
+
+    def test_verify_window_matches(self, params):
+        """prefill 6 + one verify call over 6 tokens == full forward."""
+        rng = np.random.default_rng(2)
+        toks = toks_of(rng, 12)
+        full = model.train_forward(params, CFG, toks)
+        ck, cv = model.empty_cache(CFG, 1)
+        pos = jnp.arange(6, dtype=jnp.int32)[None]
+        _, ck, cv = model.extend(params, CFG, toks[:, :6], pos, ck, cv)
+        pos2 = jnp.arange(6, 12, dtype=jnp.int32)[None]
+        logits, ck, cv = model.extend(params, CFG, toks[:, 6:], pos2, ck, cv)
+        np.testing.assert_allclose(np.asarray(full[:, 6:]),
+                                   np.asarray(logits), atol=5e-5, rtol=1e-4)
+
+    def test_rewind_semantics(self, params):
+        """Speculative rewind: stale entries past cur_len are overwritten
+        by the next extend, so a rejected-then-rewritten cache gives
+        identical logits to a never-polluted one."""
+        rng = np.random.default_rng(3)
+        toks = toks_of(rng, 10)
+        ck, cv = model.empty_cache(CFG, 1)
+        pos = jnp.arange(6, dtype=jnp.int32)[None]
+        _, ck, cv = model.extend(params, CFG, toks[:, :6], pos, ck, cv)
+        # speculative junk at positions 6..9 (rejected draft)
+        junk = jnp.asarray(rng.integers(12, 500, size=(1, 4)), jnp.int32)
+        pos_j = jnp.arange(6, 10, dtype=jnp.int32)[None]
+        _, ck_j, cv_j = model.extend(params, CFG, junk, pos_j, ck, cv)
+        # rewind == just reuse positions: overwrite with the real tokens
+        pos_r = jnp.arange(6, 10, dtype=jnp.int32)[None]
+        l_clean, _, _ = model.extend(params, CFG, toks[:, 6:], pos_r, ck, cv)
+        l_rewind, _, _ = model.extend(params, CFG, toks[:, 6:], pos_r,
+                                      ck_j, cv_j)
+        np.testing.assert_allclose(np.asarray(l_clean),
+                                   np.asarray(l_rewind), atol=1e-5)
+
+    def test_parked_pads_do_not_perturb(self, params):
+        """Pad tokens parked past the live window must not change real
+        logits — the L3 bucket-padding contract (DESIGN.md §7)."""
+        rng = np.random.default_rng(4)
+        toks = toks_of(rng, 6)
+        ck, cv = model.empty_cache(CFG, 1)
+        pos = jnp.arange(6, dtype=jnp.int32)[None]
+        base, _, _ = model.extend(params, CFG, toks, pos, ck, cv)
+        # same call padded to T=16 with pads parked at position 30
+        padded = jnp.concatenate(
+            [toks, jnp.full((1, 10), corpus.PAD, jnp.int32)], axis=1)
+        pos_p = jnp.concatenate(
+            [pos, jnp.full((1, 10), 30, jnp.int32)], axis=1)
+        lp, _, _ = model.extend(params, CFG, padded, pos_p, ck, cv)
+        np.testing.assert_allclose(np.asarray(base),
+                                   np.asarray(lp[:, :6]), atol=1e-5)
+
+    def test_pallas_vs_ref_path(self, params):
+        rng = np.random.default_rng(5)
+        toks = toks_of(rng, 8)
+        ck, cv = model.empty_cache(CFG, 1)
+        pos = jnp.arange(8, dtype=jnp.int32)[None]
+        a, _, _ = model.extend(params, CFG, toks, pos, ck, cv,
+                               use_pallas=True)
+        b, _, _ = model.extend(params, CFG, toks, pos, ck, cv,
+                               use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                                   rtol=1e-4)
+
+
+class TestPardLayoutSemantics:
+    """The inference-side PARD layout: [reals, <mask>*(K-1)] in one pass."""
+
+    def test_mask_queries_predict_future_offsets(self, params):
+        """Mask at position p yields a distribution over x_{p+1}; shapes
+        and layout must round-trip regardless of mask count."""
+        rng = np.random.default_rng(6)
+        prefix = toks_of(rng, 5)
+        ck, cv = model.empty_cache(CFG, 1)
+        pos = jnp.arange(5, dtype=jnp.int32)[None]
+        _, ck, cv = model.extend(params, CFG, prefix, pos, ck, cv)
+        k = 4
+        last = prefix[:, -1:]  # re-feed pattern uses committed reals
+        draft_toks = jnp.concatenate(
+            [toks_of(rng, 1),
+             jnp.full((1, k - 1), corpus.MASK, jnp.int32)], axis=1)
+        draft_pos = jnp.arange(5, 5 + k, dtype=jnp.int32)[None]
+        logits, ck, cv = model.extend(params, CFG, draft_toks, draft_pos,
+                                      ck, cv)
+        assert logits.shape == (1, k, corpus.VOCAB_SIZE)
+
+    def test_mask_kv_never_visible_after_overwrite(self, params):
+        """After rust re-feeds accepted reals over mask slots, logits match
+        a trajectory that never wrote masks at all."""
+        rng = np.random.default_rng(7)
+        seq = toks_of(rng, 10)
+        # trajectory A: clean prefill 8
+        ck_a, cv_a = model.empty_cache(CFG, 1)
+        pos8 = jnp.arange(8, dtype=jnp.int32)[None]
+        _, ck_a, cv_a = model.extend(params, CFG, seq[:, :8], pos8,
+                                     ck_a, cv_a)
+        # trajectory B: prefill 5, pard-draft writes masks at 5..7,
+        # then reals 5..7 re-fed (accepted)
+        ck_b, cv_b = model.empty_cache(CFG, 1)
+        pos5 = jnp.arange(5, dtype=jnp.int32)[None]
+        _, ck_b, cv_b = model.extend(params, CFG, seq[:, :5], pos5,
+                                     ck_b, cv_b)
+        masks = jnp.full((1, 3), corpus.MASK, jnp.int32)
+        mpos = jnp.arange(5, 8, dtype=jnp.int32)[None]
+        _, ck_b, cv_b = model.extend(params, CFG, masks, mpos, ck_b, cv_b)
+        _, ck_b, cv_b = model.extend(params, CFG, seq[:, 5:8], mpos,
+                                     ck_b, cv_b)
+        # both caches now produce identical decode logits at position 8
+        step = seq[:, 8:9]
+        p8 = jnp.array([[8]], jnp.int32)
+        la, _, _ = model.extend(params, CFG, step, p8, ck_a, cv_a)
+        lb, _, _ = model.extend(params, CFG, step, p8, ck_b, cv_b)
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-5)
+
+
+class TestEagleHead:
+    def test_shapes_and_chaining(self):
+        ecfg = model.eagle_config_for(CFG)
+        head = model.eagle_init(jax.random.PRNGKey(1), ecfg)
+        rng = np.random.default_rng(8)
+        b, t = 1, 4
+        hidden = jnp.asarray(rng.normal(size=(b, t, CFG.d_model)),
+                             jnp.float32)
+        toks = toks_of(rng, t)
+        pos = jnp.arange(t, dtype=jnp.int32)[None]
+        shape = (1, b, ecfg.s_max, ecfg.n_heads, ecfg.d_head)
+        ck = jnp.zeros(shape, jnp.float32)
+        cv = jnp.zeros(shape, jnp.float32)
+        logits, ck, cv, hh = model.eagle_extend(head, ecfg, hidden, toks,
+                                                pos, ck, cv)
+        assert logits.shape == (b, t, corpus.VOCAB_SIZE)
+        assert hh.shape == (b, t, CFG.d_model)
+        # chained draft step re-consumes the head hidden
+        l2, ck, cv, _ = model.eagle_extend(
+            head, ecfg, hh[:, -1:], toks[:, -1:],
+            jnp.array([[t]], jnp.int32), ck, cv)
+        assert l2.shape == (b, 1, corpus.VOCAB_SIZE)
+
+    def test_train_forward_shape(self):
+        ecfg = model.eagle_config_for(CFG)
+        head = model.eagle_init(jax.random.PRNGKey(1), ecfg)
+        rng = np.random.default_rng(9)
+        hidden = jnp.asarray(rng.normal(size=(2, 6, CFG.d_model)),
+                             jnp.float32)
+        toks = jnp.asarray(rng.integers(12, 500, size=(2, 6)), jnp.int32)
+        logits = model.eagle_train_forward(head, ecfg, hidden, toks)
+        assert logits.shape == (2, 6, corpus.VOCAB_SIZE)
+
+
+class TestConfigs:
+    def test_family_param_counts_monotone(self):
+        sizes = [model.FAMILY[n].n_params for n in
+                 ("draft-s", "target-m", "target-l", "target-xl")]
+        assert sizes == sorted(sizes)
+        # draft:target ratios bracket the paper's 0.5B:7B .. 1B:8B regimes
+        assert sizes[-1] / sizes[0] > 10
+
+    def test_s_max_divisible_by_block(self):
+        for cfg in model.FAMILY.values():
+            assert cfg.s_max % 64 == 0

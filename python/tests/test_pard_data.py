@@ -1,0 +1,180 @@
+"""Algorithm 1 (COD data processing) invariants — paper §3.2.2.
+
+Property-based checks that the expanded training batch obeys the paper's
+constraints: Eq. 9/10/11 retention counts, chain-nested retention (the
+"preceding KV cache is complete" rule), the Fig. 4 attention pattern, and
+Eq. 8 loss weighting.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+from compile.train.pard import (PardSpec, anchor_depths, build_pard_batch,
+                                VARIANTS, MAIN_VARIANT)
+
+
+def make_data(b, n, seed):
+    return corpus.build_corpus(b, n, seed=seed)
+
+
+class TestRetention:
+    def test_eq9_counts(self):
+        spec = PardSpec(k=8, r=0.5, r_min=0.0)
+        n = 64
+        for k in range(1, 9):
+            assert spec.retained(n, k) == math.ceil(n * 0.5 ** (k - 1))
+
+    def test_eq11_floor(self):
+        spec = PardSpec(k=8, r=0.5, r_min=0.2)
+        n = 100
+        assert spec.retained(n, 8) == 20  # floor kicks in
+
+    def test_eq10_bound(self):
+        """N_COD < N / (1 - r) when r_min = 0 (paper Eq. 10)."""
+        spec = PardSpec(k=8, r=0.5, r_min=0.0)
+        n = 128
+        total = sum(spec.retained(n, k) for k in range(1, 9))
+        assert total < n / (1 - 0.5) + spec.k  # ceil slack
+
+    def test_cod_token_ratio_near_3x(self):
+        """Paper: r=0.7, r_min=0.2 gives ~3x training-token reduction."""
+        spec = VARIANTS[MAIN_VARIANT]
+        n = 64
+        ratio = spec.full_tokens(n) / spec.expanded_len(n)
+        assert 2.0 < ratio < 3.2
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(8, 128), k=st.integers(2, 8),
+           r=st.floats(0.2, 1.0), r_min=st.floats(0.0, 0.5),
+           seed=st.integers(0, 2 ** 16))
+    def test_depths_match_retention(self, n, k, r, r_min, seed):
+        spec = PardSpec(k=k, r=r, r_min=r_min)
+        rng = np.random.default_rng(seed)
+        depth = anchor_depths(n, spec, rng)
+        for sub_k in range(2, k + 1):
+            assert int((depth >= sub_k).sum()) == spec.retained(n, sub_k)
+
+
+class TestBatchInvariants:
+    @pytest.fixture(scope="class")
+    def batch(self):
+        spec = VARIANTS[MAIN_VARIANT]
+        data = make_data(4, 64, seed=3)
+        rng = np.random.default_rng(3)
+        return (build_pard_batch(data.tokens, data.valid_len, spec, rng),
+                spec, data)
+
+    def test_shapes_fixed(self, batch):
+        b, spec, data = batch
+        m = spec.expanded_len(64)
+        assert b["tokens"].shape == (4, m)
+        assert b["attn"].shape == (4, m, m)
+
+    def test_mask_tokens_are_masks(self, batch):
+        b, spec, data = batch
+        n = 64
+        ext = b["tokens"][:, n:]
+        assert set(np.unique(ext)) <= {corpus.MASK}
+
+    def test_chain_positions_consecutive(self, batch):
+        """tau(k, a) sits at position a+k-1: within one anchor's chain the
+        positions are consecutive and start one past an existing real."""
+        b, spec, data = batch
+        n = 64
+        for i in range(4):
+            pos = b["pos_ids"][i, n:]
+            att = b["attn"][i, n:, :]
+            for j in range(len(pos)):
+                reals = att[j, :n]
+                a = int(reals.nonzero()[0].max())  # last real attended
+                chain = att[j, n:].nonzero()[0]
+                # chain slots (incl self) occupy positions a+1 .. pos[j]
+                chain_pos = sorted(int(pos[c]) for c in chain)
+                assert chain_pos == list(range(a + 1, int(pos[j]) + 1))
+
+    def test_kv_completeness(self, batch):
+        """Paper's COD constraint: every retained mask query attends a
+        complete prefix — all k-1 earlier chain members exist."""
+        b, spec, data = batch
+        n = 64
+        for i in range(4):
+            att = b["attn"][i]
+            pos = b["pos_ids"][i]
+            for j in range(n, att.shape[0]):
+                reals = att[j, :n].nonzero()[0]
+                a = int(reals.max())
+                k = int(pos[j]) - a + 1  # subtask index
+                n_chain = int(att[j, n:].sum())
+                assert n_chain == k - 1, (j, k, n_chain)
+                # and the real prefix is exactly 0..a
+                assert list(reals) == list(range(a + 1))
+
+    def test_labels_are_future_tokens(self, batch):
+        b, spec, data = batch
+        n = 64
+        for i in range(4):
+            v = int(data.valid_len[i])
+            pos = b["pos_ids"][i]
+            lab = b["labels"][i]
+            for j in range(n, len(lab)):
+                if lab[j] >= 0:
+                    # mask standing at position p predicts x_{p+1}
+                    assert lab[j] == data.tokens[i, int(pos[j]) + 1]
+                    assert int(pos[j]) + 1 < v
+
+    def test_weights_sum_to_one(self, batch):
+        b, _, _ = batch
+        assert abs(float(b["weights"].sum()) - 1.0) < 1e-5
+
+    def test_eq8_per_subtask_normalization(self, batch):
+        """Within one sample, each populated subtask carries equal total
+        weight (the per-subtask mean of Eq. 8)."""
+        b, spec, data = batch
+        n = 64
+        for i in range(4):
+            pos = b["pos_ids"][i]
+            att = b["attn"][i]
+            w = b["weights"][i]
+            lab = b["labels"][i]
+            per_k: dict[int, float] = {}
+            for j in range(len(w)):
+                if lab[j] < 0:
+                    continue
+                if j < n:
+                    k = 1
+                else:
+                    a = int(att[j, :n].nonzero()[0].max())
+                    k = int(pos[j]) - a + 1
+                per_k[k] = per_k.get(k, 0.0) + float(w[j])
+            totals = list(per_k.values())
+            assert max(totals) - min(totals) < 1e-5
+
+    def test_distinct_mask_variant(self):
+        spec = PardSpec(k=4, r=0.7, r_min=0.2, shared=False)
+        data = make_data(2, 32, seed=5)
+        rng = np.random.default_rng(5)
+        b = build_pard_batch(data.tokens, data.valid_len, spec, rng)
+        ext = b["tokens"][:, 32:]
+        used = set(np.unique(ext))
+        assert used <= set(corpus.DISTINCT_MASKS)
+        assert len(used) > 1  # multiple offsets materialized
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([16, 32, 64]), k=st.integers(2, 8),
+           seed=st.integers(0, 2 ** 12))
+    def test_no_future_leakage(self, n, k, seed):
+        """No query may attend any slot whose position exceeds its own —
+        the train==serve causality property."""
+        spec = PardSpec(k=k, r=0.6, r_min=0.1)
+        data = make_data(2, n, seed=seed)
+        rng = np.random.default_rng(seed)
+        b = build_pard_batch(data.tokens, data.valid_len, spec, rng)
+        pos = b["pos_ids"]
+        att = b["attn"]
+        for i in range(2):
+            q, s = np.nonzero(att[i])
+            assert (pos[i][s] <= pos[i][q]).all()

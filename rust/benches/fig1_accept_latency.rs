@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 1a (per-position acceptance by method) and
+//! Fig 1b (draft vs verify wall-clock, VSD vs PARD).
+use std::path::Path;
+use pard::report::{fig1a, fig1b, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    fig1a(&rt, RunScale::quick())?.print();
+    fig1b(&rt, RunScale::quick())?.print();
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Regenerates paper Fig 6a (COD retention sweep), Fig 6b (K_train ×
+//! K_infer), and the §4.3 mask-id ablation.  Needs `make ablation`.
+use std::path::Path;
+use pard::report::{fig6a, fig6b, mask_id_ablation, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let scale = RunScale::quick();
+    match fig6a(&rt, scale) {
+        Ok(t) => t.print(),
+        Err(e) => println!("fig6a skipped: {e}"),
+    }
+    match fig6b(&rt, scale) {
+        Ok(t) => t.print(),
+        Err(e) => println!("fig6b skipped: {e}"),
+    }
+    match mask_id_ablation(&rt, scale) {
+        Ok(t) => t.print(),
+        Err(e) => println!("mask ablation skipped: {e}"),
+    }
+    Ok(())
+}

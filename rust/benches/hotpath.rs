@@ -1,0 +1,84 @@
+//! Hot-path micro-benchmarks (the §Perf profiling surface): individual
+//! fwd/commit costs per phase, PARD draft vs VSD draft chain, verify.
+use std::path::Path;
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind};
+use pard::substrate::bench::Bencher;
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let b = Bencher::default();
+
+    // raw executable costs
+    let target = rt.model("target-l")?;
+    let draft = rt.model(&rt.manifest.main_pard)?;
+    let tcache = target.new_cache(1)?;
+    let dcache = draft.new_cache(1)?;
+    target.warmup(1, &[1, 10, 16, 32])?;
+    draft.warmup(1, &[1, 16])?;
+
+    let s = b.run("target-l fwd t=1 (AR+ step)", || {
+        target.fwd(1, 1, &[5], &[10], None, &tcache).unwrap()
+    });
+    s.print();
+    let s = b.run("target-l fwd t=16 (verify K=8, pre-§Perf bucket)", || {
+        target
+            .fwd(1, 16, &[5; 16], &(10..26).collect::<Vec<i32>>(), None,
+                 &tcache)
+            .unwrap()
+    });
+    s.print();
+    let s = b.run("target-l fwd t=10 (verify K=8, tightened bucket)", || {
+        target
+            .fwd(1, 10, &[5; 10], &(10..20).collect::<Vec<i32>>(), None,
+                 &tcache)
+            .unwrap()
+    });
+    s.print();
+    let s = b.run("pard draft fwd t=16 (ONE parallel pass)", || {
+        draft
+            .fwd(1, 16, &[5; 16], &(10..26).collect::<Vec<i32>>(), None,
+                 &dcache)
+            .unwrap()
+    });
+    s.print();
+    let s = b.run("draft fwd t=1 (one VSD chain step; VSD pays K of these)",
+                  || draft.fwd(1, 1, &[5], &[10], None, &dcache).unwrap());
+    s.print();
+    let out = target.fwd(1, 1, &[5], &[10], None, &tcache)?;
+    let mut c2 = target.new_cache(1)?;
+    let s = b.run("target-l commit t=1", || {
+        target.commit(1, 1, &out, &[10], &mut c2).unwrap()
+    });
+    s.print();
+
+    // end-to-end iteration costs
+    for kind in [EngineKind::ArPlus, EngineKind::Vsd, EngineKind::Pard] {
+        let cfg = EngineConfig {
+            kind,
+            target: "target-l".into(),
+            draft: match kind {
+                EngineKind::Pard => Some(rt.manifest.main_pard.clone()),
+                EngineKind::Vsd => Some("draft-s".into()),
+                _ => None,
+            },
+            batch: 1,
+            k: 8,
+            max_new: 32,
+            shared_mask: true,
+        };
+        let mut engine = build_engine(&rt, &cfg)?;
+        engine.warmup()?;
+        let prompts: Vec<Vec<i32>> = rt
+            .prompts("code")?
+            .take(2)
+            .into_iter()
+            .map(|p| p.prompt)
+            .collect();
+        let s = b.run(&format!("e2e {} 2 prompts x 32 tok", kind.label()),
+                      || generate(engine.as_mut(), &prompts, 32).unwrap());
+        s.print();
+    }
+    Ok(())
+}

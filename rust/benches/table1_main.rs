@@ -1,0 +1,18 @@
+//! Regenerates paper Table 1 (AR/AR+/VSD/PARD × tasks on the large
+//! targets) and reports per-engine end-to-end timing.
+use std::path::Path;
+use pard::report::{table1, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let scale = if std::env::var("PARD_FULL").is_ok() {
+        RunScale::full()
+    } else {
+        RunScale::quick()
+    };
+    let t0 = std::time::Instant::now();
+    table1(&rt, scale)?.print();
+    println!("\n[bench table1] wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table 2 / Fig 2 (target independence).
+use std::path::Path;
+use pard::report::{table2, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let scale = if std::env::var("PARD_FULL").is_ok() {
+        RunScale::full()
+    } else {
+        RunScale::quick()
+    };
+    let t0 = std::time::Instant::now();
+    table2(&rt, scale)?.print();
+    println!("\n[bench table2] wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

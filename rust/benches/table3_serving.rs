@@ -1,0 +1,12 @@
+//! Regenerates paper Table 3 (serving-engine comparison incl. EAGLE).
+use std::path::Path;
+use pard::report::{table3, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let t0 = std::time::Instant::now();
+    table3(&rt, RunScale::quick())?.print();
+    println!("\n[bench table3] wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

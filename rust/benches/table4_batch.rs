@@ -1,0 +1,13 @@
+//! Regenerates paper Table 4 (speedup vs batch size 1..16 — the
+//! memory-bound → compute-bound crossover).
+use std::path::Path;
+use pard::report::{table4, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let t0 = std::time::Instant::now();
+    table4(&rt, RunScale { n_prompts: 8, max_new: 32 })?.print();
+    println!("\n[bench table4] wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Table 5 (k-α acceptance rates, PARD vs EAGLE/VSD).
+use std::path::Path;
+use pard::report::{table5, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let t0 = std::time::Instant::now();
+    table5(&rt, RunScale::quick())?.print();
+    println!("\n[bench table5] wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

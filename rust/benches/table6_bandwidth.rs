@@ -1,0 +1,12 @@
+//! Regenerates paper Table 6 (draft-phase bandwidth: PARD flat in k,
+//! EAGLE linear) — cost-model at paper scale + measured pass counts.
+use std::path::Path;
+use pard::report::{table6, table6_measured, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    table6().print();
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    table6_measured(&rt, RunScale::quick())?.print();
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Table 7 (MI250X vs A100): measured acceptance ×
+//! roofline device cost model.
+use std::path::Path;
+use pard::report::{table7, RunScale};
+use pard::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    table7(&rt, RunScale::quick())?.print();
+    Ok(())
+}

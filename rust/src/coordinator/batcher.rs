@@ -1,0 +1,127 @@
+//! Continuous batcher: online serving over an arrival trace.
+//!
+//! The vLLM-style loop behind Tables 3/4: a fixed number of batch slots;
+//! arrived requests queue FCFS; finished slots are refilled between
+//! decode iterations (iteration-level scheduling).  Latency accounting
+//! is per request (arrival → completion).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engines::Engine;
+use crate::substrate::workload::Trace;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub completed: usize,
+    pub wall_s: f64,
+    pub generated: u64,
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    /// Aggregate generated tokens/s over the serving window.
+    pub throughput_tps: f64,
+    /// Mean live slots per decode iteration (batch efficiency).
+    pub mean_occupancy: f64,
+}
+
+struct InFlight {
+    request_idx: usize,
+    admitted_at: Instant,
+}
+
+/// Drive `engine` through `trace`.  Requests become admittable when
+/// their arrival offset has elapsed; slots refill between iterations.
+pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
+                   -> Result<ServeStats> {
+    let b = engine.batch();
+    let t0 = Instant::now();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut slots: Vec<Option<InFlight>> = (0..b).map(|_| None).collect();
+    let mut latencies: Vec<f64> = Vec::with_capacity(trace.requests.len());
+    let mut occupancy_sum = 0usize;
+    let mut iters = 0usize;
+
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        while next_arrival < trace.requests.len()
+            && trace.requests[next_arrival].arrival_s <= now
+        {
+            queue.push_back(next_arrival);
+            next_arrival += 1;
+        }
+
+        // Harvest finished slots, refill from the queue.
+        for slot in 0..b {
+            let finished = slots[slot]
+                .as_ref()
+                .map(|_| engine.seqs()[slot].done)
+                .unwrap_or(false);
+            if finished {
+                let f = slots[slot].take().unwrap();
+                // request latency = completion - arrival (queueing incl.)
+                let lat = t0.elapsed().as_secs_f64()
+                    - trace.requests[f.request_idx].arrival_s;
+                latencies.push(lat.max(
+                    f.admitted_at.elapsed().as_secs_f64()));
+            }
+            if slots[slot].is_none() {
+                if let Some(ri) = queue.pop_front() {
+                    let req = &trace.requests[ri];
+                    engine.admit(slot, &req.prompt, req.max_new)?;
+                    slots[slot] = Some(InFlight {
+                        request_idx: ri,
+                        admitted_at: Instant::now(),
+                    });
+                }
+            }
+        }
+
+        let live = slots.iter().filter(|s| s.is_some()).count();
+        if live == 0 {
+            if next_arrival >= trace.requests.len() && queue.is_empty() {
+                break;
+            }
+            // idle until the next arrival
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            continue;
+        }
+
+        occupancy_sum += live;
+        iters += 1;
+        engine.step()?;
+        engine.metrics_mut().iterations += 1;
+    }
+
+    // final harvest
+    for slot in 0..b {
+        if let Some(f) = slots[slot].take() {
+            latencies.push(f.admitted_at.elapsed().as_secs_f64());
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    engine.metrics_mut().wall_s += wall;
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = latencies.len();
+    let pct = |p: f64| -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            latencies[(p * (n - 1) as f64).round() as usize]
+        }
+    };
+    Ok(ServeStats {
+        completed: n,
+        wall_s: wall,
+        generated: engine.metrics().generated,
+        latency_mean_s: latencies.iter().sum::<f64>() / n.max(1) as f64,
+        latency_p50_s: pct(0.5),
+        latency_p95_s: pct(0.95),
+        throughput_tps: engine.metrics().generated as f64 / wall,
+        mean_occupancy: occupancy_sum as f64 / iters.max(1) as f64,
+    })
+}

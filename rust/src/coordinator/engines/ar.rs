@@ -1,0 +1,208 @@
+//! AR / AR+ baselines.
+//!
+//! * AR ("Transformers" row in Table 1): no KV reuse — every step re-feeds
+//!   the whole prefix through the smallest fitting T bucket and takes the
+//!   last logits row.  This reproduces the unoptimized-framework baseline
+//!   the paper measures (~0.5x of AR+).
+//! * AR+ ("Transformers+"): standard KV-cached decode — prefill once,
+//!   then T=1 steps with cache commits.  This is the 1.00x baseline every
+//!   speedup in the paper is measured against.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{CallBuf, Engine, EngineConfig, EngineKind, prefill_slot};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sampling::argmax;
+use crate::coordinator::sequence::Sequence;
+use crate::runtime::{KvCache, ModelRt, Runtime};
+
+pub struct ArEngine {
+    target: Rc<ModelRt>,
+    cache: KvCache,
+    seqs: Vec<Sequence>,
+    metrics: Metrics,
+    cfg: EngineConfig,
+    cached: bool,
+    pad: i32,
+    eos: i32,
+}
+
+impl ArEngine {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig, cached: bool)
+               -> Result<Self> {
+        let target = rt.model(&cfg.target)?;
+        let cache = target.new_cache(cfg.batch)?;
+        Ok(ArEngine {
+            target,
+            cache,
+            seqs: vec![Sequence::default(); cfg.batch],
+            metrics: Metrics::default(),
+            cfg: cfg.clone(),
+            cached,
+            pad: rt.manifest.pad,
+            eos: rt.manifest.eos,
+        })
+    }
+
+    fn step_cached(&mut self) -> Result<()> {
+        let b = self.cache.batch;
+        let garbage = self.cache.garbage_slot();
+        let mut buf = CallBuf::parked(b, 1, self.pad, garbage);
+        for (row, seq) in self.seqs.iter().enumerate() {
+            if seq.active && !seq.done {
+                buf.set(row, 0, seq.pending(), seq.target_len as i32, true);
+            }
+        }
+        let t0 = Instant::now();
+        let out =
+            self.target.fwd(b, 1, &buf.tokens, &buf.pos, None, &self.cache)?;
+        self.target.commit(b, 1, &out, &buf.cpos, &mut self.cache)?;
+        self.metrics.verify_s += t0.elapsed().as_secs_f64();
+        self.metrics.target_passes += 1;
+        let vocab = self.target.cfg().vocab;
+        for (row, seq) in self.seqs.iter_mut().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            let next = argmax(&out.logits[row * vocab..(row + 1) * vocab]);
+            let taken = seq.push_committed(&[next], self.eos);
+            self.metrics.generated += taken as u64;
+            seq.target_len = seq.stream.len() - 1;
+            self.cache.cur_len[row] = seq.target_len as u32;
+            if seq.done
+                || seq.target_len as u32 + 4 >= self.cache.max_live_pos()
+            {
+                seq.done = true;
+                seq.active = false;
+                self.metrics.requests += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn step_uncached(&mut self) -> Result<()> {
+        // Full-prefix recompute: one fwd over the longest active stream;
+        // nothing is ever committed, so the (zeroed) cache contributes
+        // nothing and attention sees only this call's in-flight KV.
+        let b = self.cache.batch;
+        let need = self
+            .seqs
+            .iter()
+            .filter(|s| s.active && !s.done)
+            .map(|s| s.stream.len())
+            .max()
+            .unwrap_or(1);
+        let t = self.target.pick_t(b, need)?;
+        let garbage = self.cache.garbage_slot();
+        let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        for (row, seq) in self.seqs.iter().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            for (i, &tok) in seq.stream.iter().enumerate() {
+                buf.set(row, i, tok, i as i32, false);
+            }
+        }
+        let t0 = Instant::now();
+        let out =
+            self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.cache)?;
+        self.metrics.verify_s += t0.elapsed().as_secs_f64();
+        self.metrics.target_passes += 1;
+        let vocab = self.target.cfg().vocab;
+        for (row, seq) in self.seqs.iter_mut().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            let last = seq.stream.len() - 1;
+            let next = argmax(
+                &out.logits
+                    [(row * t + last) * vocab..(row * t + last + 1) * vocab],
+            );
+            let taken = seq.push_committed(&[next], self.eos);
+            self.metrics.generated += taken as u64;
+            seq.target_len = seq.stream.len() - 1;
+            // stream must keep fitting the largest exported bucket
+            if seq.done || seq.stream.len() + 1 >= 64 {
+                seq.done = true;
+                seq.active = false;
+                self.metrics.requests += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Engine for ArEngine {
+    fn kind(&self) -> EngineKind {
+        if self.cached {
+            EngineKind::ArPlus
+        } else {
+            EngineKind::Ar
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
+             -> Result<()> {
+        self.cache.reset_row(slot);
+        let mut seq = Sequence::start(prompt, max_new);
+        if self.cached {
+            let (first, _) = prefill_slot(&self.target, &mut self.cache,
+                                          slot, prompt, self.pad,
+                                          &mut self.metrics)?;
+            seq.target_len = prompt.len();
+            // pending token joins the stream; its KV commits next step
+            seq.push_committed(&[first], self.eos);
+            self.metrics.generated += 1;
+            seq.target_len = seq.stream.len() - 1;
+            self.cache.cur_len[slot] = seq.target_len as u32;
+        } else {
+            // uncached AR computes the first token inside its first step;
+            // seed pending with the prompt's last token semantics by
+            // running one uncached step just for this row below.
+        }
+        self.seqs[slot] = seq;
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<()> {
+        if self.cached {
+            self.step_cached()
+        } else {
+            self.step_uncached()
+        }
+    }
+
+    fn seqs(&self) -> &[Sequence] {
+        &self.seqs
+    }
+
+    fn seqs_mut(&mut self) -> &mut [Sequence] {
+        &mut self.seqs
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        let b = self.cfg.batch;
+        if self.cached {
+            let pf = self.target.pick_t(b, super::PREFILL_T)?;
+            self.target.warmup(b, &[1, pf])?;
+        } else {
+            self.target.warmup_range(b, 1, 64)?;
+        }
+        Ok(())
+    }
+}

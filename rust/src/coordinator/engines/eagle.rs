@@ -1,0 +1,289 @@
+//! EAGLE-style baseline: target-dependent draft head chained on the
+//! target's hidden features.
+//!
+//! The head consumes `[target_hidden ; token_embedding]` (one decoder
+//! layer).  Drafting is autoregressive at the feature level: step j feeds
+//! the head its OWN hidden output from step j-1 (EAGLE's feature
+//! self-regression), so the draft phase still costs K passes — which is
+//! exactly the bandwidth profile Table 6 contrasts with PARD.
+//!
+//! Approximation noted in DESIGN.md §3: the pending (correction) token's
+//! true target hidden is not yet computed at draft time, so its catch-up
+//! pair uses the hidden of the row that *predicted* it.
+//!
+//! Verification runs on the `_h` variant of the target so every verify
+//! also yields the hidden rows the next iteration's catch-up needs.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{apply_verdict, verify_and_commit, CallBuf,
+            Engine, EngineConfig, EngineKind};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sampling::argmax;
+use crate::coordinator::sequence::Sequence;
+use crate::runtime::{KvCache, ModelRt, Runtime};
+
+pub struct EagleEngine {
+    /// `_h` variant: exports hidden rows at verify/prefill.
+    target: Rc<ModelRt>,
+    head: Rc<ModelRt>,
+    tcache: KvCache,
+    ecache: KvCache,
+    seqs: Vec<Sequence>,
+    metrics: Metrics,
+    cfg: EngineConfig,
+    pad: i32,
+    eos: i32,
+    d_model: usize,
+}
+
+impl EagleEngine {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig) -> Result<Self> {
+        // the hidden-exporting variant of the target
+        let tname = format!("{}_h", cfg.target);
+        let target = rt.model(&tname)?;
+        let head_name = cfg
+            .draft
+            .clone()
+            .unwrap_or_else(|| format!("eagle-{}", cfg.target));
+        let head = rt.model(&head_name)?;
+        anyhow::ensure!(head.cfg().d_model == target.cfg().d_model,
+                        "EAGLE head/target width mismatch");
+        let tcache = target.new_cache(cfg.batch)?;
+        let ecache = head.new_cache(cfg.batch)?;
+        Ok(EagleEngine {
+            d_model: target.cfg().d_model,
+            target,
+            head,
+            tcache,
+            ecache,
+            seqs: vec![Sequence::default(); cfg.batch],
+            metrics: Metrics::default(),
+            cfg: cfg.clone(),
+            pad: rt.manifest.pad,
+            eos: rt.manifest.eos,
+        })
+    }
+
+    /// Draft K candidates: one catch-up pass over the backlog pairs, then
+    /// K-1 feature-chained singles.
+    fn draft_candidates(&mut self) -> Result<Vec<Vec<i32>>> {
+        let b = self.ecache.batch;
+        let k = self.cfg.k;
+        let d = self.d_model;
+        let garbage = self.ecache.garbage_slot();
+        let vocab = self.head.cfg().vocab;
+        let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
+        // chained state per row: (token, pos, hidden)
+        let mut chain: Vec<Option<(i32, i32, Vec<f32>)>> = vec![None; b];
+
+        // (1) catch-up over backlog pairs.
+        let need = self
+            .seqs
+            .iter()
+            .filter(|s| s.active && !s.done)
+            .map(|s| s.eagle_backlog.len())
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let t = self.head.pick_t(b, need)?;
+        let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        let mut hidden_in = vec![0f32; b * t * d];
+        for (row, seq) in self.seqs.iter().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            for (i, (tok, p, h)) in seq.eagle_backlog.iter().enumerate() {
+                buf.set(row, i, *tok, *p, true);
+                hidden_in[(row * t + i) * d..(row * t + i + 1) * d]
+                    .copy_from_slice(h);
+            }
+        }
+        let t0 = Instant::now();
+        let out = self.head.fwd(b, t, &buf.tokens, &buf.pos,
+                                Some(&hidden_in), &self.ecache)?;
+        self.head.commit(b, t, &out, &buf.cpos, &mut self.ecache)?;
+        self.metrics.draft_passes += 1;
+        let head_hidden = out
+            .hidden
+            .as_ref()
+            .expect("eagle head exports hidden");
+        for (row, seq) in self.seqs.iter_mut().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            let fed = seq.eagle_backlog.len();
+            let i = fed - 1;
+            let lg = &out.logits
+                [(row * t + i) * vocab..(row * t + i + 1) * vocab];
+            let c0 = argmax(lg);
+            cands[row].push(c0);
+            let h = head_hidden[(row * t + i) * d..(row * t + i + 1) * d]
+                .to_vec();
+            let last_pos = seq.eagle_backlog[fed - 1].1;
+            chain[row] = Some((c0, last_pos + 1, h));
+            seq.eagle_backlog.clear();
+        }
+
+        // (2) feature-chained singles.
+        for _j in 1..k {
+            let mut buf = CallBuf::parked(b, 1, self.pad, garbage);
+            let mut hidden_in = vec![0f32; b * d];
+            for (row, seq) in self.seqs.iter().enumerate() {
+                if !seq.active || seq.done {
+                    continue;
+                }
+                if let Some((tok, p, h)) = &chain[row] {
+                    buf.set(row, 0, *tok, *p, true);
+                    hidden_in[row * d..(row + 1) * d].copy_from_slice(h);
+                }
+            }
+            let out = self.head.fwd(b, 1, &buf.tokens, &buf.pos,
+                                    Some(&hidden_in), &self.ecache)?;
+            self.head.commit(b, 1, &out, &buf.cpos, &mut self.ecache)?;
+            self.metrics.draft_passes += 1;
+            let hh = out.hidden.as_ref().unwrap();
+            for (row, seq) in self.seqs.iter().enumerate() {
+                if !seq.active || seq.done {
+                    continue;
+                }
+                let _ = seq;
+                let c =
+                    argmax(&out.logits[row * vocab..(row + 1) * vocab]);
+                cands[row].push(c);
+                let (_, p, _) = chain[row].as_ref().unwrap();
+                let np = *p + 1;
+                chain[row] =
+                    Some((c, np, hh[row * d..(row + 1) * d].to_vec()));
+            }
+        }
+        self.metrics.draft_s += t0.elapsed().as_secs_f64();
+        Ok(cands)
+    }
+}
+
+impl Engine for EagleEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Eagle
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
+             -> Result<()> {
+        self.tcache.reset_row(slot);
+        self.ecache.reset_row(slot);
+        let mut seq = Sequence::start(prompt, max_new);
+        // target prefill with hidden export
+        let b = self.tcache.batch;
+        let t = self.target.pick_t(b, prompt.len())?;
+        let garbage = self.tcache.garbage_slot();
+        let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        for (i, &tok) in prompt.iter().enumerate() {
+            buf.set(slot, i, tok, i as i32, true);
+        }
+        let t0 = Instant::now();
+        let out =
+            self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.tcache)?;
+        self.target.commit(b, t, &out, &buf.cpos, &mut self.tcache)?;
+        self.metrics.prefill_s += t0.elapsed().as_secs_f64();
+        self.metrics.target_passes += 1;
+        self.tcache.cur_len[slot] = prompt.len() as u32;
+        let vocab = self.target.cfg().vocab;
+        let d = self.d_model;
+        let hidden = out.hidden.as_ref().expect("_h target exports hidden");
+        let last = prompt.len() - 1;
+        let first = argmax(&out.logits
+            [(slot * t + last) * vocab..(slot * t + last + 1) * vocab]);
+        // head backlog under the (h_{t-1}, x_t) pairing: prompt token
+        // x_q pairs with the hidden at q-1 (zeros for q=0, as trained),
+        // plus the pending first token with the last prompt hidden.
+        let mut backlog = Vec::with_capacity(prompt.len() + 1);
+        for (i, &tok) in prompt.iter().enumerate() {
+            let h = if i == 0 {
+                vec![0f32; d]
+            } else {
+                hidden[(slot * t + i - 1) * d..(slot * t + i) * d].to_vec()
+            };
+            backlog.push((tok, i as i32, h));
+        }
+        let h_last = hidden
+            [(slot * t + last) * d..(slot * t + last + 1) * d]
+            .to_vec();
+        backlog.push((first, prompt.len() as i32, h_last));
+        seq.push_committed(&[first], self.eos);
+        self.metrics.generated += 1;
+        seq.target_len = seq.stream.len() - 1;
+        self.tcache.cur_len[slot] = seq.target_len as u32;
+        seq.eagle_backlog = backlog;
+        self.seqs[slot] = seq;
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let cands = self.draft_candidates()?;
+        let verdicts = verify_and_commit(&self.target, &mut self.tcache,
+                                         &self.seqs, &cands, self.cfg.k,
+                                         self.pad, &mut self.metrics)?;
+        for (row, v) in verdicts.iter().enumerate() {
+            let Some(v) = v else { continue };
+            let seq = &mut self.seqs[row];
+            let pre_len = seq.stream.len(); // before commit
+            apply_verdict(seq, &mut self.tcache, row, v, self.eos,
+                          &mut self.metrics);
+            if seq.done {
+                continue;
+            }
+            // Rebuild the head backlog from the verify's hidden rows:
+            // committed token i sat in verify column i+... column 0 was
+            // the old pending (already in head cache via catch-up), so
+            // fresh tokens start at column 1.
+            let rows = v.hidden_rows.as_ref().expect("_h verify hidden");
+            let mut backlog = Vec::new();
+            let taken = seq.stream.len() - pre_len;
+            for i in 0..taken {
+                let tok = seq.stream[pre_len + i];
+                let p = (pre_len + i) as i32;
+                // EAGLE pairing: token at position q pairs with the
+                // hidden of position q-1 (the row that predicted it) —
+                // the same (h_{t-1}, x_t) pairing the head trains on.
+                let hrow = i;
+                backlog.push((tok, p, rows[hrow].clone()));
+            }
+            seq.eagle_backlog = backlog;
+        }
+        Ok(())
+    }
+
+    fn seqs(&self) -> &[Sequence] {
+        &self.seqs
+    }
+
+    fn seqs_mut(&mut self) -> &mut [Sequence] {
+        &mut self.seqs
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        let b = self.cfg.batch;
+        let pf_t = self.target.pick_t(b, super::PREFILL_T)?;
+        let ver_t = self.target.pick_t(b, self.cfg.k + 1)?;
+        self.target.warmup(b, &[pf_t, ver_t])?;
+        // backlog catch-up: the head only exports T in {1, 32}
+        let bk_t = self.head.pick_t(b, super::PREFILL_T)?;
+        self.head.warmup(b, &[1, bk_t])?;
+        Ok(())
+    }
+}

@@ -1,0 +1,354 @@
+//! Decode engines — the five generation strategies the paper compares.
+//!
+//! * [`ar`]:      AR  — uncached full-recompute baseline ("Transformers")
+//!                AR+ — KV-cached autoregression ("Transformers+")
+//! * [`vsd`]:     vanilla speculative decoding (K sequential draft passes)
+//! * [`pard`]:    PARD — one parallel draft pass with shared MASK tokens
+//! * [`eagle`]:   EAGLE-style target-dependent feature-chained draft
+//!
+//! All engines are *slot-oriented*: `admit` prefills a prompt into a
+//! batch row, `step` advances every active row by one decode iteration.
+//! The continuous batcher (`coordinator::batcher`) refills finished slots
+//! between steps; closed-batch evaluation just admits B prompts and steps
+//! until idle.
+//!
+//! Per-row work inside a fixed-batch executable is expressed purely
+//! through (tokens, pos, commit_pos) layouts: parked rows write to the
+//! reserved garbage slot and their outputs are ignored (DESIGN.md §7).
+
+pub mod ar;
+pub mod eagle;
+pub mod pard;
+pub mod vsd;
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sampling::argmax;
+use crate::coordinator::sequence::Sequence;
+use crate::runtime::{KvCache, ModelRt, Runtime};
+
+/// Shared inference-time configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub kind: EngineKind,
+    pub target: String,
+    /// Draft model (VSD: an AR family member; PARD: an adapted variant;
+    /// EAGLE: the head).  None for AR/AR+.
+    pub draft: Option<String>,
+    pub batch: usize,
+    /// K_infer: candidates drafted per iteration.
+    pub k: usize,
+    pub max_new: usize,
+    /// Shared-mask strategy (paper §4.3): true = single <mask> id
+    /// (enables K_infer > K_train extrapolation).
+    pub shared_mask: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Ar,
+    ArPlus,
+    Vsd,
+    Pard,
+    Eagle,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ar" => EngineKind::Ar,
+            "ar+" | "arplus" => EngineKind::ArPlus,
+            "vsd" => EngineKind::Vsd,
+            "pard" => EngineKind::Pard,
+            "eagle" => EngineKind::Eagle,
+            _ => anyhow::bail!("unknown engine `{s}` \
+                                (ar|ar+|vsd|pard|eagle)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Ar => "AR",
+            EngineKind::ArPlus => "AR+",
+            EngineKind::Vsd => "VSD",
+            EngineKind::Pard => "PARD",
+            EngineKind::Eagle => "EAGLE",
+        }
+    }
+}
+
+/// One fwd call's (tokens, positions, commit positions) layout.
+pub struct CallBuf {
+    pub b: usize,
+    pub t: usize,
+    pub tokens: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub cpos: Vec<i32>,
+}
+
+impl CallBuf {
+    /// Fully parked: every cell is a PAD query at the garbage slot with a
+    /// garbage commit — harmless by the slot contract.
+    pub fn parked(b: usize, t: usize, pad: i32, garbage: i32) -> Self {
+        CallBuf {
+            b,
+            t,
+            tokens: vec![pad; b * t],
+            pos: vec![garbage; b * t],
+            cpos: vec![garbage; b * t],
+        }
+    }
+
+    /// Place `tok` for `row` at column `i`, position `p`; commit the KV
+    /// to `p` iff `commit` (else it goes to the garbage slot).
+    pub fn set(&mut self, row: usize, i: usize, tok: i32, p: i32,
+               commit: bool) {
+        debug_assert!(i < self.t);
+        let idx = row * self.t + i;
+        self.tokens[idx] = tok;
+        self.pos[idx] = p;
+        if commit {
+            self.cpos[idx] = p;
+        }
+    }
+}
+
+/// The engine interface driven by evaluators and the batcher.
+pub trait Engine {
+    fn kind(&self) -> EngineKind;
+    fn batch(&self) -> usize;
+    /// Prefill `prompt` into batch row `slot` (resets the slot).
+    fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
+             -> Result<()>;
+    /// One decode iteration over all active slots.
+    fn step(&mut self) -> Result<()>;
+    fn seqs(&self) -> &[Sequence];
+    fn seqs_mut(&mut self) -> &mut [Sequence];
+    fn metrics(&self) -> &Metrics;
+    fn metrics_mut(&mut self) -> &mut Metrics;
+    /// Pre-compile the executables `step` will need so JIT never lands in
+    /// the measured loop.
+    fn warmup(&mut self) -> Result<()>;
+
+    fn any_active(&self) -> bool {
+        self.seqs().iter().any(|s| s.active && !s.done)
+    }
+}
+
+pub fn build_engine(rt: &Runtime, cfg: &EngineConfig)
+                    -> Result<Box<dyn Engine>> {
+    anyhow::ensure!(cfg.k >= 1 && cfg.k <= 16, "k must be in 1..=16");
+    match cfg.kind {
+        EngineKind::Ar => Ok(Box::new(ar::ArEngine::new(rt, cfg, false)?)),
+        EngineKind::ArPlus => {
+            Ok(Box::new(ar::ArEngine::new(rt, cfg, true)?))
+        }
+        EngineKind::Vsd => Ok(Box::new(vsd::VsdEngine::new(rt, cfg)?)),
+        EngineKind::Pard => Ok(Box::new(pard::PardEngine::new(rt, cfg)?)),
+        EngineKind::Eagle => {
+            Ok(Box::new(eagle::EagleEngine::new(rt, cfg)?))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared building blocks
+// ---------------------------------------------------------------------------
+
+/// Prefill one slot of a (possibly multi-row) cache: feeds the prompt,
+/// commits its KV, and returns (first generated token, last-row hidden if
+/// the model exports it).
+/// Fixed prefill bucket: prompts are < 32 tokens by construction, so one
+/// stable executable serves every prefill (no mid-run JIT).
+pub const PREFILL_T: usize = 32;
+
+pub fn prefill_slot(model: &Rc<ModelRt>, cache: &mut KvCache, slot: usize,
+                    prompt: &[i32], pad: i32, metrics: &mut Metrics)
+                    -> Result<(i32, Option<Vec<f32>>)> {
+    let b = cache.batch;
+    let t = model.pick_t(b, prompt.len().max(PREFILL_T))?;
+    let garbage = cache.garbage_slot();
+    let mut buf = CallBuf::parked(b, t, pad, garbage);
+    for (i, &tok) in prompt.iter().enumerate() {
+        buf.set(slot, i, tok, i as i32, true);
+    }
+    let t0 = Instant::now();
+    let out = model.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
+    model.commit(b, t, &out, &buf.cpos, cache)?;
+    metrics.prefill_s += t0.elapsed().as_secs_f64();
+    metrics.target_passes += 1;
+    cache.cur_len[slot] = prompt.len() as u32;
+    let vocab = model.cfg().vocab;
+    let last = prompt.len() - 1;
+    let row = &out.logits
+        [(slot * t + last) * vocab..(slot * t + last + 1) * vocab];
+    let first = argmax(row);
+    let hidden = out.hidden.as_ref().map(|h| {
+        let d = model.cfg().d_model;
+        h[(slot * t + last) * d..(slot * t + last + 1) * d].to_vec()
+    });
+    Ok((first, hidden))
+}
+
+/// Pure greedy acceptance (chain decoding, temperature 0): `preds[j]` is
+/// the target argmax at verify row j (row 0 = the pending token's row).
+/// Returns (accepted_count, committed = accepted candidates + correction).
+///
+/// The lossless-decoding property (speculative output == plain AR output)
+/// reduces to this function — property-tested in tests/spec_equivalence.
+pub fn greedy_accept(cands: &[i32], preds: &[i32]) -> (usize, Vec<i32>) {
+    debug_assert!(preds.len() >= cands.len() + 1);
+    let mut accepted = 0usize;
+    let mut committed = Vec::with_capacity(cands.len() + 1);
+    for (j, &c) in cands.iter().enumerate() {
+        if c == preds[j] {
+            accepted += 1;
+            committed.push(c);
+        } else {
+            break;
+        }
+    }
+    committed.push(preds[accepted]);
+    (accepted, committed)
+}
+
+/// Outcome of one verify call for one row.
+pub struct RowVerdict {
+    pub accepted: usize,
+    /// accepted candidates ++ correction token.
+    pub committed: Vec<i32>,
+    /// Hidden rows for [pending, c_0..c_{K-1}] when the target exports
+    /// hidden states (EAGLE).
+    pub hidden_rows: Option<Vec<Vec<f32>>>,
+}
+
+/// Shared greedy verification: feed `[pending, c_0..c_{K-1}]` per active
+/// row, accept the longest matching prefix, commit pending + accepted
+/// KV, and return per-row verdicts.  (Chain decoding, temperature 0 —
+/// the paper's evaluation setting.)
+pub fn verify_and_commit(target: &Rc<ModelRt>, cache: &mut KvCache,
+                         seqs: &[Sequence], cands: &[Vec<i32>], k: usize,
+                         pad: i32, metrics: &mut Metrics)
+                         -> Result<Vec<Option<RowVerdict>>> {
+    let b = cache.batch;
+    let t = target.pick_t(b, k + 1)?;
+    let garbage = cache.garbage_slot();
+    let mut buf = CallBuf::parked(b, t, pad, garbage);
+    for (row, seq) in seqs.iter().enumerate() {
+        if !seq.active || seq.done {
+            continue;
+        }
+        let base = seq.target_len as i32;
+        buf.set(row, 0, seq.pending(), base, true);
+        for (j, &c) in cands[row].iter().enumerate() {
+            // tentative: commit decided after acceptance
+            buf.set(row, 1 + j, c, base + 1 + j as i32, false);
+        }
+    }
+    let t0 = Instant::now();
+    let out = target.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
+    metrics.target_passes += 1;
+
+    let vocab = target.cfg().vocab;
+    let d = target.cfg().d_model;
+    let mut verdicts: Vec<Option<RowVerdict>> = Vec::with_capacity(b);
+    for (row, seq) in seqs.iter().enumerate() {
+        if !seq.active || seq.done {
+            verdicts.push(None);
+            continue;
+        }
+        let base = seq.target_len as i32;
+        let logit_row = |i: usize| {
+            &out.logits[(row * t + i) * vocab..(row * t + i + 1) * vocab]
+        };
+        let preds: Vec<i32> =
+            (0..=cands[row].len()).map(|i| argmax(logit_row(i))).collect();
+        let (accepted, committed) = greedy_accept(&cands[row], &preds);
+        for j in 0..accepted {
+            // accepted candidate's KV is valid: commit it
+            buf.cpos[row * t + 1 + j] = base + 1 + j as i32;
+        }
+        let hidden_rows = out.hidden.as_ref().map(|h| {
+            (0..=k.min(t - 1))
+                .map(|i| {
+                    h[(row * t + i) * d..(row * t + i + 1) * d].to_vec()
+                })
+                .collect()
+        });
+        metrics.record_acceptance(cands[row].len(), accepted);
+        verdicts.push(Some(RowVerdict { accepted, committed, hidden_rows }));
+    }
+    target.commit(b, t, &out, &buf.cpos, cache)?;
+    metrics.verify_s += t0.elapsed().as_secs_f64();
+
+    Ok(verdicts)
+}
+
+/// Apply a verdict to the sequence + target cache bookkeeping.
+pub fn apply_verdict(seq: &mut Sequence, cache: &mut KvCache, row: usize,
+                     verdict: &RowVerdict, eos: i32,
+                     metrics: &mut Metrics) {
+    let taken = seq.push_committed(&verdict.committed, eos);
+    metrics.generated += taken as u64;
+    seq.target_len = seq.stream.len() - 1;
+    cache.cur_len[row] = seq.target_len as u32;
+    if seq.done {
+        seq.active = false;
+        metrics.requests += 1;
+        return;
+    }
+    // Cache headroom guard: stop rows that would overflow the window.
+    if seq.target_len as u32 + 2 * 16 + 2 >= cache.max_live_pos() {
+        seq.done = true;
+        seq.active = false;
+        metrics.requests += 1;
+    }
+}
+
+/// Closed-batch generation: admit up to `batch` prompts at a time, step
+/// until all prompts drain (slots are refilled as they finish — simple
+/// continuous batching).  Returns per-prompt generated tokens.
+pub fn generate(engine: &mut dyn Engine, prompts: &[Vec<i32>],
+                max_new: usize) -> Result<Vec<Vec<i32>>> {
+    let b = engine.batch();
+    let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    let mut next = 0usize;
+    let mut slot_owner: Vec<Option<usize>> = vec![None; b];
+    let t0 = Instant::now();
+    loop {
+        // refill idle slots
+        for slot in 0..b {
+            let idle = match slot_owner[slot] {
+                Some(o) => {
+                    let s = &engine.seqs()[slot];
+                    if s.done {
+                        outputs[o] = s.gen_tokens().to_vec();
+                        true
+                    } else {
+                        false
+                    }
+                }
+                None => true,
+            };
+            if idle {
+                slot_owner[slot] = None;
+                if next < prompts.len() {
+                    engine.admit(slot, &prompts[next], max_new)?;
+                    slot_owner[slot] = Some(next);
+                    next += 1;
+                }
+            }
+        }
+        if !engine.any_active() {
+            break;
+        }
+        engine.step()?;
+        engine.metrics_mut().iterations += 1;
+    }
+    engine.metrics_mut().wall_s += t0.elapsed().as_secs_f64();
+    Ok(outputs)
+}

@@ -1,0 +1,209 @@
+//! PARD — the paper's contribution (Eq. 4, Fig. 3 right).
+//!
+//! Per iteration the draft runs exactly ONE forward pass:
+//! `[catch-up reals…, <mask> × (K-1)]`.  The last real's logits row gives
+//! c_0 and mask row j gives c_{j+1} — K candidates from one pass, so the
+//! draft phase costs `T_D` instead of `K·T_D`.  Mask KVs are attended
+//! in-flight but never committed (their commit columns point at the
+//! garbage slot); the next iteration's catch-up reals overwrite the stale
+//! mask slots — the serve-side mirror of the paper's "draft model
+//! re-consumes accepted tokens".
+//!
+//! K_infer may exceed K_train: with the shared mask id the model
+//! extrapolates (paper §4.3 "extrapolation capability"); with distinct
+//! ids (ablation) offsets past K_train reuse the last trained id.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{apply_verdict, prefill_slot, verify_and_commit, CallBuf,
+            Engine, EngineConfig, EngineKind};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sampling::argmax;
+use crate::coordinator::sequence::Sequence;
+use crate::runtime::{KvCache, ModelRt, Runtime};
+
+pub struct PardEngine {
+    target: Rc<ModelRt>,
+    draft: Rc<ModelRt>,
+    tcache: KvCache,
+    dcache: KvCache,
+    seqs: Vec<Sequence>,
+    metrics: Metrics,
+    cfg: EngineConfig,
+    pad: i32,
+    eos: i32,
+    mask: i32,
+    distinct_masks: Vec<i32>,
+}
+
+impl PardEngine {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig) -> Result<Self> {
+        let target = rt.model(&cfg.target)?;
+        let draft_name = cfg.draft.clone().unwrap_or_else(|| {
+            rt.manifest.main_pard.clone()
+        });
+        let draft = rt.model(&draft_name)?;
+        let tcache = target.new_cache(cfg.batch)?;
+        let dcache = draft.new_cache(cfg.batch)?;
+        Ok(PardEngine {
+            target,
+            draft,
+            tcache,
+            dcache,
+            seqs: vec![Sequence::default(); cfg.batch],
+            metrics: Metrics::default(),
+            cfg: cfg.clone(),
+            pad: rt.manifest.pad,
+            eos: rt.manifest.eos,
+            mask: rt.manifest.mask,
+            distinct_masks: rt.manifest.distinct_masks.clone(),
+        })
+    }
+
+    fn mask_id(&self, offset: usize) -> i32 {
+        if self.cfg.shared_mask {
+            self.mask
+        } else {
+            // distinct-id ablation: offset j uses <mask_j>, clamped to
+            // the trained range
+            let j = offset.min(self.distinct_masks.len() - 1);
+            self.distinct_masks[j]
+        }
+    }
+
+    /// ONE parallel draft pass for all rows.
+    fn draft_candidates(&mut self) -> Result<Vec<Vec<i32>>> {
+        let b = self.dcache.batch;
+        let k = self.cfg.k;
+        let garbage = self.dcache.garbage_slot();
+        let vocab = self.draft.cfg().vocab;
+        let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
+
+        // T = reals (catch-up incl pending) + K-1 masks.
+        let need = self
+            .seqs
+            .iter()
+            .filter(|s| s.active && !s.done)
+            .map(|s| s.stream.len() - s.draft_len + k - 1)
+            .max()
+            .unwrap_or(k);
+        let t = self.draft.pick_t(b, need)?;
+        let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        for (row, seq) in self.seqs.iter().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            let reals = &seq.stream[seq.draft_len..];
+            for (i, &tok) in reals.iter().enumerate() {
+                // reals commit at their true positions
+                buf.set(row, i, tok, (seq.draft_len + i) as i32, true);
+            }
+            let base = seq.stream.len() as i32; // first mask position
+            for j in 0..k - 1 {
+                // masks attend in-flight, never commit
+                buf.set(row, reals.len() + j, self.mask_id(j),
+                        base + j as i32, false);
+            }
+        }
+        let t0 = Instant::now();
+        let out =
+            self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
+        self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
+        self.metrics.draft_s += t0.elapsed().as_secs_f64();
+        self.metrics.draft_passes += 1;
+
+        for (row, seq) in self.seqs.iter_mut().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            let fed = seq.stream.len() - seq.draft_len;
+            for j in 0..k {
+                // row fed-1 = last real (c_0); fed-1+j = mask j-1
+                let i = fed - 1 + j;
+                let lg =
+                    &out.logits[(row * t + i) * vocab..(row * t + i + 1) * vocab];
+                cands[row].push(argmax(lg));
+            }
+            seq.draft_len = seq.stream.len();
+            self.dcache.cur_len[row] = seq.draft_len as u32;
+        }
+        Ok(cands)
+    }
+}
+
+impl Engine for PardEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Pard
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
+             -> Result<()> {
+        self.tcache.reset_row(slot);
+        self.dcache.reset_row(slot);
+        let mut seq = Sequence::start(prompt, max_new);
+        let (first, _) = prefill_slot(&self.target, &mut self.tcache, slot,
+                                      prompt, self.pad, &mut self.metrics)?;
+        let mut dm = Metrics::default();
+        let _ = prefill_slot(&self.draft, &mut self.dcache, slot, prompt,
+                             self.pad, &mut dm)?;
+        self.metrics.prefill_s += dm.prefill_s;
+        seq.push_committed(&[first], self.eos);
+        self.metrics.generated += 1;
+        seq.target_len = seq.stream.len() - 1;
+        seq.draft_len = prompt.len();
+        self.tcache.cur_len[slot] = seq.target_len as u32;
+        self.dcache.cur_len[slot] = seq.draft_len as u32;
+        self.seqs[slot] = seq;
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let cands = self.draft_candidates()?;
+        let verdicts = verify_and_commit(&self.target, &mut self.tcache,
+                                         &self.seqs, &cands, self.cfg.k,
+                                         self.pad, &mut self.metrics)?;
+        for (row, v) in verdicts.iter().enumerate() {
+            if let Some(v) = v {
+                apply_verdict(&mut self.seqs[row], &mut self.tcache, row, v,
+                              self.eos, &mut self.metrics);
+            }
+        }
+        Ok(())
+    }
+
+    fn seqs(&self) -> &[Sequence] {
+        &self.seqs
+    }
+
+    fn seqs_mut(&mut self) -> &mut [Sequence] {
+        &mut self.seqs
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        let b = self.cfg.batch;
+        let k = self.cfg.k;
+        let pf_t = self.target.pick_t(b, super::PREFILL_T)?;
+        let ver_t = self.target.pick_t(b, k + 1)?;
+        self.target.warmup(b, &[pf_t, ver_t])?;
+        // parallel draft feeds (a+1) reals + K-1 masks, a in 0..=K
+        self.draft.warmup_range(b, k, 2 * k)?;
+        self.draft
+            .warmup(b, &[self.draft.pick_t(b, super::PREFILL_T)?])?;
+        Ok(())
+    }
+}

@@ -1,0 +1,202 @@
+//! Vanilla speculative decoding (paper's VSD baseline, Eq. 3).
+//!
+//! Per iteration: (1) a catch-up draft pass re-feeds the stream tokens
+//! the draft cache hasn't consumed (its last logits row yields c_0);
+//! (2) K-1 sequential T=1 draft passes chain the remaining candidates —
+//! the K-pass autoregressive drafting whose latency PARD collapses;
+//! (3) one shared verify pass on the target.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{apply_verdict, prefill_slot, verify_and_commit, CallBuf,
+            Engine, EngineConfig, EngineKind};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sampling::argmax;
+use crate::coordinator::sequence::Sequence;
+use crate::runtime::{KvCache, ModelRt, Runtime};
+
+pub struct VsdEngine {
+    target: Rc<ModelRt>,
+    draft: Rc<ModelRt>,
+    tcache: KvCache,
+    dcache: KvCache,
+    seqs: Vec<Sequence>,
+    metrics: Metrics,
+    cfg: EngineConfig,
+    pad: i32,
+    eos: i32,
+}
+
+impl VsdEngine {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig) -> Result<Self> {
+        let target = rt.model(&cfg.target)?;
+        let draft_name = cfg
+            .draft
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("VSD requires a draft model"))?;
+        let draft = rt.model(&draft_name)?;
+        let tcache = target.new_cache(cfg.batch)?;
+        let dcache = draft.new_cache(cfg.batch)?;
+        Ok(VsdEngine {
+            target,
+            draft,
+            tcache,
+            dcache,
+            seqs: vec![Sequence::default(); cfg.batch],
+            metrics: Metrics::default(),
+            cfg: cfg.clone(),
+            pad: rt.manifest.pad,
+            eos: rt.manifest.eos,
+        })
+    }
+
+    /// Draft K candidates for every active row: one catch-up pass plus
+    /// K-1 chained singles.  Returns per-row candidates.
+    fn draft_candidates(&mut self) -> Result<Vec<Vec<i32>>> {
+        let b = self.dcache.batch;
+        let k = self.cfg.k;
+        let garbage = self.dcache.garbage_slot();
+        let vocab = self.draft.cfg().vocab;
+        let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
+
+        // (1) catch-up: feed stream[draft_len..] (includes pending).
+        let need = self
+            .seqs
+            .iter()
+            .filter(|s| s.active && !s.done)
+            .map(|s| s.stream.len() - s.draft_len)
+            .max()
+            .unwrap_or(1);
+        let t = self.draft.pick_t(b, need)?;
+        let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        for (row, seq) in self.seqs.iter().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            for (i, &tok) in seq.stream[seq.draft_len..].iter().enumerate() {
+                buf.set(row, i, tok, (seq.draft_len + i) as i32, true);
+            }
+        }
+        let t0 = Instant::now();
+        let out =
+            self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
+        self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
+        self.metrics.draft_passes += 1;
+        for (row, seq) in self.seqs.iter_mut().enumerate() {
+            if !seq.active || seq.done {
+                continue;
+            }
+            let fed = seq.stream.len() - seq.draft_len;
+            let row_logits = &out.logits
+                [(row * t + fed - 1) * vocab..(row * t + fed) * vocab];
+            cands[row].push(argmax(row_logits));
+            seq.draft_len = seq.stream.len();
+            self.dcache.cur_len[row] = seq.draft_len as u32;
+        }
+
+        // (2) chain: K-1 sequential single-token draft passes.  The
+        // candidate KVs land past draft_len; they are tentative and get
+        // overwritten by the next catch-up (slot contract).
+        for j in 1..k {
+            let mut buf = CallBuf::parked(b, 1, self.pad, garbage);
+            for (row, seq) in self.seqs.iter().enumerate() {
+                if !seq.active || seq.done {
+                    continue;
+                }
+                let p = (seq.draft_len + j - 1) as i32;
+                buf.set(row, 0, cands[row][j - 1], p, true);
+            }
+            let out = self.draft.fwd(b, 1, &buf.tokens, &buf.pos, None,
+                                     &self.dcache)?;
+            self.draft.commit(b, 1, &out, &buf.cpos, &mut self.dcache)?;
+            self.metrics.draft_passes += 1;
+            for (row, seq) in self.seqs.iter().enumerate() {
+                if !seq.active || seq.done {
+                    continue;
+                }
+                let _ = seq;
+                cands[row]
+                    .push(argmax(&out.logits[row * vocab..(row + 1) * vocab]));
+            }
+        }
+        self.metrics.draft_s += t0.elapsed().as_secs_f64();
+        Ok(cands)
+    }
+}
+
+impl Engine for VsdEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Vsd
+    }
+
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
+             -> Result<()> {
+        self.tcache.reset_row(slot);
+        self.dcache.reset_row(slot);
+        let mut seq = Sequence::start(prompt, max_new);
+        let (first, _) = prefill_slot(&self.target, &mut self.tcache, slot,
+                                      prompt, self.pad, &mut self.metrics)?;
+        // draft prefill: its own cache over the same prompt
+        let mut dm = Metrics::default();
+        let _ = prefill_slot(&self.draft, &mut self.dcache, slot, prompt,
+                             self.pad, &mut dm)?;
+        self.metrics.prefill_s += dm.prefill_s;
+        seq.push_committed(&[first], self.eos);
+        self.metrics.generated += 1;
+        seq.target_len = seq.stream.len() - 1;
+        seq.draft_len = prompt.len();
+        self.tcache.cur_len[slot] = seq.target_len as u32;
+        self.dcache.cur_len[slot] = seq.draft_len as u32;
+        self.seqs[slot] = seq;
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let cands = self.draft_candidates()?;
+        let verdicts = verify_and_commit(&self.target, &mut self.tcache,
+                                         &self.seqs, &cands, self.cfg.k,
+                                         self.pad, &mut self.metrics)?;
+        for (row, v) in verdicts.iter().enumerate() {
+            if let Some(v) = v {
+                apply_verdict(&mut self.seqs[row], &mut self.tcache, row, v,
+                              self.eos, &mut self.metrics);
+            }
+        }
+        Ok(())
+    }
+
+    fn seqs(&self) -> &[Sequence] {
+        &self.seqs
+    }
+
+    fn seqs_mut(&mut self) -> &mut [Sequence] {
+        &mut self.seqs
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        let b = self.cfg.batch;
+        let pf_t = self.target.pick_t(b, super::PREFILL_T)?;
+        let ver_t = self.target.pick_t(b, self.cfg.k + 1)?;
+        self.target.warmup(b, &[pf_t, ver_t])?;
+        // catch-up feeds 1..=K+2 reals depending on last acceptance
+        self.draft.warmup_range(b, 1, self.cfg.k + 2)?;
+        self.draft
+            .warmup(b, &[self.draft.pick_t(b, super::PREFILL_T)?])?;
+        Ok(())
+    }
+}

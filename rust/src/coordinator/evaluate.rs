@@ -1,0 +1,72 @@
+//! Closed-loop evaluation harness: run an engine over a prompt set and
+//! report the paper's metrics.  Shared by examples/, benches/, and the
+//! CLI `eval`/`tables` subcommands.
+
+use anyhow::Result;
+
+use super::engines::{build_engine, generate, EngineConfig};
+use super::metrics::Metrics;
+use crate::substrate::prompts::Prompt;
+use crate::Runtime;
+
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub engine: String,
+    pub target: String,
+    pub draft: Option<String>,
+    pub task: String,
+    pub k: usize,
+    pub batch: usize,
+    pub metrics: Metrics,
+    /// Per-prompt generated token streams.
+    pub outputs: Vec<Vec<i32>>,
+}
+
+impl EvalResult {
+    pub fn tps(&self) -> f64 {
+        self.metrics.tps()
+    }
+}
+
+/// Run `cfg` over `prompts` (closed batch, greedy).  Warmup compiles are
+/// excluded from the measured wall clock.
+pub fn run_eval(rt: &Runtime, cfg: &EngineConfig, prompts: &[Prompt],
+                max_new: usize, task: &str) -> Result<EvalResult> {
+    let mut engine = build_engine(rt, cfg)?;
+    engine.warmup()?;
+    let prompt_ids: Vec<Vec<i32>> =
+        prompts.iter().map(|p| p.prompt.clone()).collect();
+    let outputs = generate(engine.as_mut(), &prompt_ids, max_new)?;
+    let mut metrics = engine.metrics().clone();
+    // Greedy-agreement with the grammar reference: speculative decoding
+    // must not change greedy outputs, and the grammar reference gives an
+    // absolute quality guard.
+    for (out, p) in outputs.iter().zip(prompts) {
+        let n = out.len().min(p.reference.len());
+        metrics.ref_total += n as u64;
+        metrics.ref_match += out[..n]
+            .iter()
+            .zip(&p.reference[..n])
+            .filter(|(a, b)| a == b)
+            .count() as u64;
+    }
+    Ok(EvalResult {
+        engine: cfg.kind.label().to_string(),
+        target: cfg.target.clone(),
+        draft: cfg.draft.clone(),
+        task: task.to_string(),
+        k: cfg.k,
+        batch: cfg.batch,
+        metrics,
+        outputs,
+    })
+}
+
+/// Speedup of `x` over baseline `base` by end-to-end TPS.
+pub fn speedup(x: &EvalResult, base: &EvalResult) -> f64 {
+    if base.tps() == 0.0 {
+        0.0
+    } else {
+        x.tps() / base.tps()
+    }
+}

@@ -1,0 +1,188 @@
+//! Serving metrics: per-phase wall clock, acceptance statistics, TPS.
+//!
+//! Everything the paper's tables report derives from these counters:
+//! TPS (Tables 1-4), k-α acceptance (Table 5, Fig. 1a), draft/verify
+//! time breakdown (Fig. 1b), tokens/iteration (device-model projections
+//! for Tables 6-7).
+
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Wall clock inside draft fwd+commit calls.
+    pub draft_s: f64,
+    /// Wall clock inside target verify fwd+commit calls.
+    pub verify_s: f64,
+    /// Wall clock inside prefill calls.
+    pub prefill_s: f64,
+    /// End-to-end generate() wall clock (includes coordinator overhead).
+    pub wall_s: f64,
+    /// Decode iterations executed.
+    pub iterations: u64,
+    /// Draft-model forward passes (K per iter for VSD/EAGLE, 1 for PARD).
+    pub draft_passes: u64,
+    /// Target-model forward passes.
+    pub target_passes: u64,
+    /// Generated (committed) tokens, prompt excluded.
+    pub generated: u64,
+    /// Completed sequences.
+    pub requests: u64,
+    /// accept_pos[j] = number of iterations in which draft position j
+    /// was accepted; offered_pos[j] = iterations where position j was
+    /// offered.  accept_pos[j]/offered_pos[j] is the per-position
+    /// acceptance rate (Fig. 1a); the mean over j < k is k-α (Table 5).
+    pub accept_pos: Vec<u64>,
+    pub offered_pos: Vec<u64>,
+    /// Histogram of accepted-prefix length per iteration.
+    pub accept_hist: Vec<u64>,
+    /// Greedy agreement of generated tokens with the grammar reference
+    /// (quality guard: speculative methods must not change outputs).
+    pub ref_match: u64,
+    pub ref_total: u64,
+}
+
+impl Metrics {
+    pub fn record_acceptance(&mut self, offered: usize, accepted: usize) {
+        if self.offered_pos.len() < offered {
+            self.offered_pos.resize(offered, 0);
+            self.accept_pos.resize(offered, 0);
+        }
+        for j in 0..offered {
+            self.offered_pos[j] += 1;
+            if j < accepted {
+                self.accept_pos[j] += 1;
+            }
+        }
+        if self.accept_hist.len() <= accepted {
+            self.accept_hist.resize(accepted + 1, 0);
+        }
+        self.accept_hist[accepted] += 1;
+    }
+
+    /// Mean acceptance rate over the first `k` draft positions — the
+    /// paper's k-α (Table 5).
+    pub fn k_alpha(&self, k: usize) -> f64 {
+        let mut num = 0u64;
+        let mut den = 0u64;
+        for j in 0..k.min(self.offered_pos.len()) {
+            num += self.accept_pos[j];
+            den += self.offered_pos[j];
+        }
+        if den == 0 {
+            0.0
+        } else {
+            num as f64 / den as f64
+        }
+    }
+
+    /// Acceptance rate of draft position j (Fig. 1a series).
+    pub fn pos_alpha(&self, j: usize) -> f64 {
+        if j >= self.offered_pos.len() || self.offered_pos[j] == 0 {
+            0.0
+        } else {
+            self.accept_pos[j] as f64 / self.offered_pos[j] as f64
+        }
+    }
+
+    /// Mean committed tokens per decode iteration (a + 1).
+    pub fn tokens_per_iter(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.generated as f64 / self.iterations as f64
+        }
+    }
+
+    /// Generated tokens per second of end-to-end wall clock.
+    pub fn tps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.generated as f64 / self.wall_s
+        }
+    }
+
+    pub fn ref_agreement(&self) -> f64 {
+        if self.ref_total == 0 {
+            0.0
+        } else {
+            self.ref_match as f64 / self.ref_total as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &Metrics) {
+        self.draft_s += o.draft_s;
+        self.verify_s += o.verify_s;
+        self.prefill_s += o.prefill_s;
+        self.wall_s += o.wall_s;
+        self.iterations += o.iterations;
+        self.draft_passes += o.draft_passes;
+        self.target_passes += o.target_passes;
+        self.generated += o.generated;
+        self.requests += o.requests;
+        self.ref_match += o.ref_match;
+        self.ref_total += o.ref_total;
+        if self.offered_pos.len() < o.offered_pos.len() {
+            self.offered_pos.resize(o.offered_pos.len(), 0);
+            self.accept_pos.resize(o.accept_pos.len(), 0);
+        }
+        for j in 0..o.offered_pos.len() {
+            self.offered_pos[j] += o.offered_pos[j];
+            self.accept_pos[j] += o.accept_pos[j];
+        }
+        if self.accept_hist.len() < o.accept_hist.len() {
+            self.accept_hist.resize(o.accept_hist.len(), 0);
+        }
+        for (i, c) in o.accept_hist.iter().enumerate() {
+            self.accept_hist[i] += c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acceptance_accounting() {
+        let mut m = Metrics::default();
+        m.record_acceptance(4, 2); // positions 0,1 accepted
+        m.record_acceptance(4, 4);
+        m.record_acceptance(4, 0);
+        assert_eq!(m.offered_pos, vec![3, 3, 3, 3]);
+        assert_eq!(m.accept_pos, vec![2, 2, 1, 1]);
+        assert!((m.pos_alpha(0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.k_alpha(4) - 6.0 / 12.0).abs() < 1e-12);
+        assert_eq!(m.accept_hist, vec![1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn tps_and_tpi() {
+        let mut m = Metrics::default();
+        m.generated = 100;
+        m.iterations = 25;
+        m.wall_s = 2.0;
+        assert!((m.tokens_per_iter() - 4.0).abs() < 1e-12);
+        assert!((m.tps() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Metrics::default();
+        a.record_acceptance(2, 1);
+        a.generated = 5;
+        let mut b = Metrics::default();
+        b.record_acceptance(4, 3);
+        b.generated = 7;
+        a.merge(&b);
+        assert_eq!(a.generated, 12);
+        assert_eq!(a.offered_pos, vec![2, 2, 1, 1]);
+        assert_eq!(a.accept_pos, vec![2, 1, 1, 0]);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.tps(), 0.0);
+        assert_eq!(m.k_alpha(4), 0.0);
+        assert_eq!(m.pos_alpha(9), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's serving-side system contribution:
+//! decode engines (AR/AR+/VSD/PARD/EAGLE), speculative acceptance, the
+//! KV-slot contract, continuous batching, routing, and metrics.
+
+pub mod batcher;
+pub mod engines;
+pub mod evaluate;
+pub mod metrics;
+pub mod router;
+pub mod sampling;
+pub mod sequence;
+
+pub use engines::{build_engine, generate, Engine, EngineConfig,
+                  EngineKind};
+pub use evaluate::{run_eval, speedup, EvalResult};
+pub use metrics::Metrics;
+pub use sequence::Sequence;

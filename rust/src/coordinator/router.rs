@@ -1,0 +1,91 @@
+//! Model routing: which draft accelerates which target.
+//!
+//! The paper's target-independence property (Table 2) means ONE draft
+//! serves the whole family; the router encodes that policy plus the
+//! target-dependent exception (EAGLE heads bind to a single target).
+
+use anyhow::Result;
+
+use super::engines::EngineKind;
+use crate::runtime::Manifest;
+
+/// Family targets in ascending size (Table 2 rows).  The draft itself is
+/// also a valid target (paper: L3.2-1B accelerated by its own PARD
+/// adaptation at 2.1x).
+pub const FAMILY_TARGETS: [&str; 4] =
+    ["draft-s", "target-m", "target-l", "target-xl"];
+
+/// Default draft for (engine, target) under the routing policy.
+pub fn default_draft(manifest: &Manifest, kind: EngineKind, target: &str)
+                     -> Result<Option<String>> {
+    Ok(match kind {
+        EngineKind::Ar | EngineKind::ArPlus => None,
+        // target-INDEPENDENT: same draft for every family member
+        EngineKind::Vsd => Some("draft-s".to_string()),
+        EngineKind::Pard => Some(manifest.main_pard.clone()),
+        // target-DEPENDENT: a head exists only for its training target
+        EngineKind::Eagle => {
+            let head = format!("eagle-{target}");
+            anyhow::ensure!(
+                manifest.models.contains_key(&head),
+                "no EAGLE head for target `{target}` — EAGLE is \
+                 target-dependent and must be trained per target \
+                 (that is the paper's point)"
+            );
+            Some(head)
+        }
+    })
+}
+
+/// Targets an engine can serve without further training.
+pub fn reachable_targets(manifest: &Manifest, kind: EngineKind)
+                         -> Vec<String> {
+    FAMILY_TARGETS
+        .iter()
+        .filter(|t| manifest.models.contains_key(**t))
+        .filter(|t| match kind {
+            EngineKind::Eagle => {
+                manifest.models.contains_key(&format!("eagle-{t}"))
+            }
+            _ => true,
+        })
+        .map(|t| t.to_string())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::Path;
+
+    fn manifest() -> Option<Manifest> {
+        let p = Path::new("artifacts");
+        Manifest::load(p).ok()
+    }
+
+    #[test]
+    fn pard_single_draft_for_all_targets() {
+        let Some(m) = manifest() else { return };
+        let drafts: Vec<_> = FAMILY_TARGETS
+            .iter()
+            .map(|t| default_draft(&m, EngineKind::Pard, t).unwrap())
+            .collect();
+        assert!(drafts.windows(2).all(|w| w[0] == w[1]),
+                "PARD must be target-independent");
+    }
+
+    #[test]
+    fn eagle_bound_to_trained_target() {
+        let Some(m) = manifest() else { return };
+        assert!(default_draft(&m, EngineKind::Eagle, "target-l").is_ok());
+        assert!(default_draft(&m, EngineKind::Eagle, "target-m").is_err());
+    }
+
+    #[test]
+    fn ar_needs_no_draft() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(default_draft(&m, EngineKind::Ar, "target-l").unwrap(),
+                   None);
+    }
+}

@@ -1,0 +1,157 @@
+//! Token selection: greedy argmax (the paper's evaluation setting,
+//! temperature 0) plus full speculative sampling (Leviathan et al. /
+//! Chen et al.) for the stochastic path, with the residual-distribution
+//! correction property-tested for distribution preservation.
+
+use crate::substrate::rng::Rng;
+
+/// Argmax over one logits row.
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Softmax with temperature into a probability vector.
+pub fn softmax(row: &[f32], temperature: f32) -> Vec<f32> {
+    let t = temperature.max(1e-6);
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut p: Vec<f32> = row.iter().map(|&x| ((x - m) / t).exp()).collect();
+    let s: f32 = p.iter().sum();
+    for x in &mut p {
+        *x /= s;
+    }
+    p
+}
+
+pub fn sample(p: &[f32], rng: &mut Rng) -> i32 {
+    let u = rng.f64() as f32;
+    let mut acc = 0.0f32;
+    for (i, &pi) in p.iter().enumerate() {
+        acc += pi;
+        if u < acc {
+            return i as i32;
+        }
+    }
+    (p.len() - 1) as i32
+}
+
+/// One speculative-sampling acceptance step (stochastic verification).
+///
+/// Given draft distribution `q`, target distribution `p`, and the drafted
+/// token `x`: accept with prob min(1, p[x]/q[x]); on rejection resample
+/// from the residual max(p-q, 0).  Returns (accepted, token) where
+/// `token` is `x` if accepted else the residual sample — the classic
+/// construction whose output provably follows `p` exactly.
+pub fn spec_accept(p: &[f32], q: &[f32], x: i32, rng: &mut Rng)
+                   -> (bool, i32) {
+    let xi = x as usize;
+    let ratio = if q[xi] <= 0.0 { 1.0 } else { (p[xi] / q[xi]).min(1.0) };
+    if (rng.f64() as f32) < ratio {
+        return (true, x);
+    }
+    let mut resid: Vec<f32> = p
+        .iter()
+        .zip(q.iter())
+        .map(|(&pi, &qi)| (pi - qi).max(0.0))
+        .collect();
+    let s: f32 = resid.iter().sum();
+    if s <= 0.0 {
+        // p == q pointwise; rejection can't actually occur, but guard.
+        return (false, sample(p, rng));
+    }
+    for r in &mut resid {
+        *r /= s;
+    }
+    (false, sample(&resid, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::Cases;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0); // first wins ties
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_low_temp_is_sharp() {
+        let p = softmax(&[1.0, 2.0, 3.0], 0.01);
+        assert!(p[2] > 0.999);
+    }
+
+    #[test]
+    fn sample_respects_distribution() {
+        let mut rng = Rng::new(11);
+        let p = [0.1f32, 0.6, 0.3];
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[sample(&p, &mut rng) as usize] += 1;
+        }
+        for i in 0..3 {
+            let f = counts[i] as f32 / 30_000.0;
+            assert!((f - p[i]).abs() < 0.02, "bin {i}: {f} vs {}", p[i]);
+        }
+    }
+
+    /// The headline property: speculative sampling must reproduce the
+    /// target distribution exactly, for ANY draft distribution.
+    #[test]
+    fn spec_sampling_preserves_target_distribution() {
+        Cases::new(8).check("spec-preserves-p", |rng| {
+            let n = 4 + rng.below(4);
+            let mut p: Vec<f32> =
+                (0..n).map(|_| rng.f64() as f32 + 0.01).collect();
+            let mut q: Vec<f32> =
+                (0..n).map(|_| rng.f64() as f32 + 0.01).collect();
+            let sp: f32 = p.iter().sum();
+            let sq: f32 = q.iter().sum();
+            p.iter_mut().for_each(|x| *x /= sp);
+            q.iter_mut().for_each(|x| *x /= sq);
+            let trials = 40_000;
+            let mut counts = vec![0usize; n];
+            for _ in 0..trials {
+                let x = sample(&q, rng);
+                let (_, tok) = spec_accept(&p, &q, x, rng);
+                counts[tok as usize] += 1;
+            }
+            for i in 0..n {
+                let f = counts[i] as f32 / trials as f32;
+                assert!(
+                    (f - p[i]).abs() < 0.025,
+                    "bin {i}: got {f}, want {}",
+                    p[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn spec_accept_identical_dists_always_accepts() {
+        let mut rng = Rng::new(5);
+        let p = [0.25f32, 0.25, 0.25, 0.25];
+        for _ in 0..200 {
+            let x = sample(&p, &mut rng);
+            let (acc, tok) = spec_accept(&p, &p, x, &mut rng);
+            assert!(acc);
+            assert_eq!(tok, x);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Per-slot sequence state shared by every decode engine.
+//!
+//! Invariants (DESIGN.md §7):
+//! * `stream` = prompt ++ generated tokens; its last token is always the
+//!   *pending* token — in the stream but with its KV not yet committed to
+//!   the target cache, so `target_len == stream.len() - 1` while active.
+//! * `draft_len <= stream.len() - 1`: how much of the stream the draft
+//!   model's cache has consumed; the gap is re-fed on the next draft call
+//!   (PARD's "re-feed accepted reals over stale mask slots").
+
+#[derive(Debug, Clone, Default)]
+pub struct Sequence {
+    pub prompt_len: usize,
+    pub stream: Vec<i32>,
+    /// Target-cache committed length (== stream.len()-1 while active).
+    pub target_len: usize,
+    /// Draft-cache committed length.
+    pub draft_len: usize,
+    /// Newly committed tokens from the last step (drained by callers).
+    pub fresh: Vec<i32>,
+    pub done: bool,
+    pub active: bool,
+    pub max_new: usize,
+    /// EAGLE: hidden state associated with the pending token (the
+    /// feature row that produced it).
+    pub pending_hidden: Option<Vec<f32>>,
+    /// EAGLE: (token, position, hidden) pairs not yet in the head cache.
+    pub eagle_backlog: Vec<(i32, i32, Vec<f32>)>,
+}
+
+impl Sequence {
+    pub fn start(prompt: &[i32], max_new: usize) -> Self {
+        Sequence {
+            prompt_len: prompt.len(),
+            stream: prompt.to_vec(),
+            target_len: 0,
+            draft_len: 0,
+            fresh: Vec::new(),
+            done: false,
+            active: true,
+            max_new,
+            pending_hidden: None,
+            eagle_backlog: Vec::new(),
+        }
+    }
+
+    pub fn generated(&self) -> usize {
+        self.stream.len() - self.prompt_len
+    }
+
+    /// The pending token (last of stream).
+    pub fn pending(&self) -> i32 {
+        *self.stream.last().expect("empty stream")
+    }
+
+    /// Commit `toks` to the stream; returns how many were actually taken
+    /// (EOS or the max_new budget can cut the tail).  Marks `done`
+    /// accordingly.
+    pub fn push_committed(&mut self, toks: &[i32], eos: i32) -> usize {
+        let mut taken = 0;
+        for &t in toks {
+            if self.done {
+                break;
+            }
+            self.stream.push(t);
+            self.fresh.push(t);
+            taken += 1;
+            if t == eos || self.generated() >= self.max_new {
+                self.done = true;
+            }
+        }
+        taken
+    }
+
+    pub fn gen_tokens(&self) -> &[i32] {
+        &self.stream[self.prompt_len..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_state() {
+        let s = Sequence::start(&[0, 10, 11], 8);
+        assert_eq!(s.prompt_len, 3);
+        assert_eq!(s.pending(), 11);
+        assert_eq!(s.generated(), 0);
+        assert!(!s.done);
+    }
+
+    #[test]
+    fn eos_stops() {
+        let mut s = Sequence::start(&[0, 10], 8);
+        let taken = s.push_committed(&[20, 1, 21], 1);
+        assert_eq!(taken, 2); // 21 dropped after EOS
+        assert!(s.done);
+        assert_eq!(s.gen_tokens(), &[20, 1]);
+    }
+
+    #[test]
+    fn max_new_stops() {
+        let mut s = Sequence::start(&[0], 2);
+        let taken = s.push_committed(&[5, 6, 7], 1);
+        assert_eq!(taken, 2);
+        assert!(s.done);
+        assert_eq!(s.generated(), 2);
+    }
+
+    #[test]
+    fn fresh_accumulates() {
+        let mut s = Sequence::start(&[0], 10);
+        s.push_committed(&[5], 1);
+        s.push_committed(&[6, 7], 1);
+        assert_eq!(s.fresh, vec![5, 6, 7]);
+    }
+}

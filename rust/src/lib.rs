@@ -1,0 +1,16 @@
+//! PARD: PARallel Draft speculative decoding — reproduction library.
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * L1 — Pallas cached-attention kernel (python, build time, AOT'd)
+//! * L2 — JAX SynLlama models (python, build time, AOT'd to HLO text)
+//! * L3 — this crate: the serving coordinator executing AOT artifacts
+//!   through the PJRT C API (`xla` crate) with python fully off the
+//!   request path.
+
+pub mod coordinator;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod substrate;
+
+pub use runtime::Runtime;

@@ -1,0 +1,223 @@
+//! `pard` CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is not vendored offline):
+//!   eval   --engine pard --target target-l [--task code] [--k 8]
+//!          [--batch 1] [--prompts N] [--max-new N] [--draft NAME]
+//!   serve  --engine pard --target target-l [--n N] [--rate R]
+//!   tables [--which 1,2,...] [--full]
+//!   fig    --which 1a|1b|2|6a|6b
+//!   info
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+use pard::coordinator::engines::{EngineConfig, EngineKind};
+use pard::coordinator::evaluate::run_eval;
+use pard::coordinator::router::default_draft;
+use pard::coordinator::batcher::serve_trace;
+use pard::report::{self, RunScale};
+use pard::substrate::workload::{build_trace, Arrival};
+use pard::Runtime;
+
+struct Args {
+    cmd: String,
+    opts: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut opts = std::collections::HashMap::new();
+    let mut key: Option<String> = None;
+    for a in it {
+        if let Some(k) = a.strip_prefix("--") {
+            if let Some(prev) = key.take() {
+                opts.insert(prev, "true".to_string());
+            }
+            key = Some(k.to_string());
+        } else if let Some(k) = key.take() {
+            opts.insert(k, a);
+        }
+    }
+    if let Some(prev) = key.take() {
+        opts.insert(prev, "true".to_string());
+    }
+    Args { cmd, opts }
+}
+
+impl Args {
+    fn get(&self, k: &str, default: &str) -> String {
+        self.opts.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, k: &str, default: usize) -> usize {
+        self.opts
+            .get(k)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn flag(&self, k: &str) -> bool {
+        self.opts.get(k).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
+    let kind = EngineKind::parse(&args.get("engine", "pard"))?;
+    let target = args.get("target", "target-l");
+    let draft = match args.opts.get("draft") {
+        Some(d) => Some(d.clone()),
+        None => default_draft(&rt.manifest, kind, &target)?,
+    };
+    Ok(EngineConfig {
+        kind,
+        target,
+        draft,
+        batch: args.usize("batch", 1),
+        k: args.usize("k", 8),
+        max_new: args.usize("max-new", 64),
+        shared_mask: !args.flag("distinct-mask"),
+    })
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::load(&artifacts_dir(args))?;
+    let cfg = engine_config(&rt, args)?;
+    let task = args.get("task", "code");
+    let n = args.usize("prompts", 16);
+    let prompts = rt.prompts(&task)?.take(n);
+    let r = run_eval(&rt, &cfg, &prompts, cfg.max_new, &task)?;
+    let m = &r.metrics;
+    println!("engine={} target={} draft={:?} task={} k={} batch={}",
+             r.engine, r.target, r.draft, r.task, r.k, r.batch);
+    println!("generated={} iterations={} tokens/iter={:.2}",
+             m.generated, m.iterations, m.tokens_per_iter());
+    println!("TPS={:.1}  draft={:.3}s verify={:.3}s prefill={:.3}s \
+              wall={:.3}s", m.tps(), m.draft_s, m.verify_s, m.prefill_s,
+             m.wall_s);
+    println!("1-α={:.3} 4-α={:.3} 8-α={:.3}  ref-agreement={:.3}",
+             m.k_alpha(1), m.k_alpha(4), m.k_alpha(8), m.ref_agreement());
+    if args.flag("show") {
+        for (i, out) in r.outputs.iter().take(3).enumerate() {
+            println!("[{i}] {}", rt.tokenizer.detok(out));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = Runtime::load(&artifacts_dir(args))?;
+    let cfg = engine_config(&rt, args)?;
+    let task = args.get("task", "code");
+    let n = args.usize("n", 32);
+    let prompts = rt.prompts(&task)?.prompts;
+    let arrival = match args.opts.get("rate") {
+        Some(r) => Arrival::Poisson { rate: r.parse()? },
+        None => Arrival::Closed,
+    };
+    let trace = build_trace(&prompts, n, arrival, cfg.max_new,
+                            args.usize("seed", 7) as u64);
+    let mut engine =
+        pard::coordinator::engines::build_engine(&rt, &cfg)?;
+    engine.warmup()?;
+    let stats = serve_trace(engine.as_mut(), &trace)?;
+    println!("engine={} batch={} completed={} wall={:.2}s",
+             cfg.kind.label(), cfg.batch, stats.completed, stats.wall_s);
+    println!("throughput={:.1} tok/s  occupancy={:.2}",
+             stats.throughput_tps, stats.mean_occupancy);
+    println!("latency mean={:.3}s p50={:.3}s p95={:.3}s",
+             stats.latency_mean_s, stats.latency_p50_s,
+             stats.latency_p95_s);
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let rt = Runtime::load(&artifacts_dir(args))?;
+    let scale = if args.flag("full") {
+        RunScale::full()
+    } else {
+        RunScale::quick()
+    };
+    let which = args.get("which", "1,2,3,4,5,6,7");
+    for w in which.split(',') {
+        match w.trim() {
+            "1" => report::table1(&rt, scale)?.print(),
+            "2" => report::table2(&rt, scale)?.print(),
+            "3" => report::table3(&rt, scale)?.print(),
+            "4" => report::table4(&rt, scale)?.print(),
+            "5" => report::table5(&rt, scale)?.print(),
+            "6" => {
+                report::table6().print();
+                report::table6_measured(&rt, scale)?.print();
+            }
+            "7" => report::table7(&rt, scale)?.print(),
+            other => eprintln!("unknown table `{other}`"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let rt = Runtime::load(&artifacts_dir(args))?;
+    let scale = if args.flag("full") {
+        RunScale::full()
+    } else {
+        RunScale::quick()
+    };
+    match args.get("which", "1a").as_str() {
+        "1a" => report::fig1a(&rt, scale)?.print(),
+        "1b" => report::fig1b(&rt, scale)?.print(),
+        "2" => report::table2(&rt, scale)?.print(), // same data as T2
+        "6a" => report::fig6a(&rt, scale)?.print(),
+        "6b" => report::fig6b(&rt, scale)?.print(),
+        "mask" => report::mask_id_ablation(&rt, scale)?.print(),
+        other => eprintln!("unknown figure `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::load(&artifacts_dir(args))?;
+    println!("artifacts: {}", rt.manifest.root.display());
+    println!("vocab: {}  mask id: {}", rt.manifest.vocab_size,
+             rt.manifest.mask);
+    println!("models:");
+    for (name, m) in &rt.manifest.models {
+        println!("  {name:<22} arch={:<16} layers={} d={} params≈{}",
+                 m.arch, m.cfg.n_layers, m.cfg.d_model,
+                 m.cfg.n_params(false));
+    }
+    println!("pard variants: {:?}",
+             rt.manifest.pard_variants.keys().collect::<Vec<_>>());
+    println!("prompt sets: {:?}",
+             rt.manifest.prompts.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    if !Path::new(&artifacts_dir(&args)).exists()
+        && args.cmd != "help"
+    {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    }
+    match args.cmd.as_str() {
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "tables" => cmd_tables(&args),
+        "fig" => cmd_fig(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!(
+                "pard — PARD speculative-decoding coordinator\n\
+                 usage: pard <eval|serve|tables|fig|info> [--opt val]…\n\
+                 see README.md"
+            );
+            Ok(())
+        }
+    }
+}

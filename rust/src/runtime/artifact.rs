@@ -1,0 +1,280 @@
+//! Artifact registry: parses `artifacts/manifest.json` (authored by
+//! `python/compile/aot.py`) into a typed view of every AOT-exported
+//! executable, checkpoint, and prompt set.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::substrate::json::Json;
+
+/// Architecture hyper-parameters shared by python and rust (mirrors
+/// `compile.model.ModelConfig` / `EagleConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub s_max: usize,
+}
+
+impl ModelCfg {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(ModelCfg {
+            name: v.str_req("name")?,
+            vocab: v.usize_req("vocab")?,
+            d_model: v.usize_req("d_model")?,
+            // EagleConfig has no n_layers field: the head is one layer.
+            n_layers: v.get("n_layers").and_then(|x| x.as_usize()).unwrap_or(1),
+            n_heads: v.usize_req("n_heads")?,
+            d_head: v.usize_req("d_head")?,
+            d_ff: v.usize_req("d_ff")?,
+            s_max: v.usize_req("s_max")?,
+        })
+    }
+
+    /// Parameter count (tied lm head; eagle heads add the fuse matrix).
+    pub fn n_params(&self, eagle: bool) -> usize {
+        let d = self.d_model;
+        let attn = 4 * d * self.n_heads * self.d_head;
+        let mlp = 3 * d * self.d_ff;
+        let per_layer = attn + mlp + 2 * d;
+        let base = self.vocab * d + self.n_layers * per_layer + d;
+        if eagle {
+            base + 2 * d * d
+        } else {
+            base
+        }
+    }
+}
+
+/// One exported (batch, T) HLO bucket.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub b: usize,
+    pub t: usize,
+    pub file: String,
+}
+
+fn buckets(v: &Json) -> Result<Vec<Bucket>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("entries not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(Bucket {
+                b: e.usize_req("b")?,
+                t: e.usize_req("t")?,
+                file: e.str_req("file")?,
+            })
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Standard LM: fwd(params…, tokens, pos, cache).
+    Lm,
+    /// EAGLE head: fwd(params…, hidden, tokens, pos, cache).
+    Eagle,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: ModelKind,
+    /// fwd returns a trailing hidden-state output.
+    pub hidden: bool,
+    /// Architecture name — keys the shared commit executables.
+    pub arch: String,
+    pub weights: String,
+    pub cfg: ModelCfg,
+    pub entries: Vec<Bucket>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PardVariantInfo {
+    pub k_train: usize,
+    pub r: f64,
+    pub r_min: f64,
+    pub shared_mask: bool,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab_size: usize,
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+    pub mask: i32,
+    pub distinct_masks: Vec<i32>,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub commits: BTreeMap<String, Vec<Bucket>>,
+    pub prompts: BTreeMap<String, String>,
+    pub pard_variants: BTreeMap<String, PardVariantInfo>,
+    pub main_pard: String,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Self> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj().unwrap() {
+            let kind = match m.str_req("kind")?.as_str() {
+                "eagle" => ModelKind::Eagle,
+                _ => ModelKind::Lm,
+            };
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    kind,
+                    hidden: m
+                        .get("hidden")
+                        .and_then(|x| x.as_bool())
+                        .unwrap_or(false),
+                    arch: m.str_req("arch")?,
+                    weights: m.str_req("weights")?,
+                    cfg: ModelCfg::from_json(m.req("config")?)?,
+                    entries: buckets(m.req("entries")?)?,
+                },
+            );
+        }
+
+        let mut commits = BTreeMap::new();
+        for (arch, c) in v.req("commits")?.as_obj().unwrap() {
+            commits.insert(arch.clone(), buckets(c)?);
+        }
+
+        let mut prompts = BTreeMap::new();
+        for (task, f) in v.req("prompts")?.as_obj().unwrap() {
+            prompts.insert(task.clone(), f.as_str().unwrap().to_string());
+        }
+
+        let mut pard_variants = BTreeMap::new();
+        if let Some(obj) = v.get("pard_variants").and_then(|x| x.as_obj()) {
+            for (name, p) in obj {
+                pard_variants.insert(
+                    name.clone(),
+                    PardVariantInfo {
+                        k_train: p.usize_req("k_train")?,
+                        r: p.f64_req("r")?,
+                        r_min: p.f64_req("r_min")?,
+                        shared_mask: p
+                            .req("shared_mask")?
+                            .as_bool()
+                            .unwrap_or(true),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            vocab_size: v.usize_req("vocab_size")?,
+            bos: v.usize_req("bos")? as i32,
+            eos: v.usize_req("eos")? as i32,
+            pad: v.usize_req("pad")? as i32,
+            mask: v.usize_req("mask")? as i32,
+            distinct_masks: v
+                .req("distinct_masks")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_i64().map(|i| i as i32))
+                .collect(),
+            models,
+            commits,
+            prompts,
+            pard_variants,
+            main_pard: v.str_req("main_pard")?,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model `{name}` not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Smallest exported T bucket >= `t_needed` for batch `b`.
+    pub fn pick_bucket(entries: &[Bucket], b: usize, t_needed: usize)
+                       -> Result<(usize, usize)> {
+        entries
+            .iter()
+            .filter(|e| e.b == b && e.t >= t_needed)
+            .map(|e| e.t)
+            .min()
+            .map(|t| (b, t))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no bucket for b={b}, t>={t_needed} (have {:?})",
+                    entries
+                        .iter()
+                        .map(|e| (e.b, e.t))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn bucket_file(entries: &[Bucket], b: usize, t: usize)
+                       -> Result<&str> {
+        entries
+            .iter()
+            .find(|e| e.b == b && e.t == t)
+            .map(|e| e.file.as_str())
+            .ok_or_else(|| anyhow::anyhow!("no exact bucket b={b} t={t}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        let entries = vec![
+            Bucket { b: 1, t: 1, file: "a".into() },
+            Bucket { b: 1, t: 16, file: "b".into() },
+            Bucket { b: 1, t: 64, file: "c".into() },
+            Bucket { b: 4, t: 16, file: "d".into() },
+        ];
+        assert_eq!(Manifest::pick_bucket(&entries, 1, 9).unwrap(), (1, 16));
+        assert_eq!(Manifest::pick_bucket(&entries, 1, 1).unwrap(), (1, 1));
+        assert_eq!(Manifest::pick_bucket(&entries, 1, 17).unwrap(), (1, 64));
+        assert!(Manifest::pick_bucket(&entries, 1, 65).is_err());
+        assert!(Manifest::pick_bucket(&entries, 2, 1).is_err());
+    }
+
+    #[test]
+    fn model_cfg_param_count() {
+        let cfg = ModelCfg {
+            name: "draft-s".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_head: 32,
+            d_ff: 256,
+            s_max: 256,
+        };
+        // matches compile.model.ModelConfig.n_params for draft-s
+        assert_eq!(cfg.n_params(false), 393_856);
+    }
+}

@@ -1,0 +1,68 @@
+//! Device-resident KV cache handles.
+//!
+//! The cache is a single `[2, L, B, S_max, H, D]` f32 PJRT buffer that
+//! never crosses to the host: `fwd` executables read it in place and
+//! `commit` executables produce a new device buffer with this step's
+//! accepted K/V scattered in (see aot.py's module docstring for why the
+//! two-executable split exists).
+//!
+//! Speculative semantics (DESIGN.md §7): `cur_len[row]` is the committed
+//! length.  Slot `s` always holds live data for `s < cur_len`; rejected
+//! speculative columns are *redirected to the reserved garbage slot*
+//! `S_max - 1` at commit time rather than erased — queries can never
+//! attend it because generation is capped at position `S_max - 2`.
+
+use anyhow::Result;
+use xla::{PjRtBuffer, PjRtClient};
+
+use super::artifact::ModelCfg;
+
+pub struct KvCache {
+    pub buf: PjRtBuffer,
+    pub batch: usize,
+    pub s_max: usize,
+    pub n_layers: usize,
+    /// Committed sequence length per batch row.
+    pub cur_len: Vec<u32>,
+}
+
+impl KvCache {
+    pub fn new(client: &PjRtClient, cfg: &ModelCfg, batch: usize)
+               -> Result<Self> {
+        let n = 2 * cfg.n_layers * batch * cfg.s_max * cfg.n_heads
+            * cfg.d_head;
+        let zeros = vec![0f32; n];
+        let dims = [2, cfg.n_layers, batch, cfg.s_max, cfg.n_heads,
+                    cfg.d_head];
+        let buf = client.buffer_from_host_buffer(&zeros, &dims, None)?;
+        Ok(KvCache {
+            buf,
+            batch,
+            s_max: cfg.s_max,
+            n_layers: cfg.n_layers,
+            cur_len: vec![0; batch],
+        })
+    }
+
+    /// The reserved write-only slot for rejected speculative columns.
+    pub fn garbage_slot(&self) -> i32 {
+        (self.s_max - 1) as i32
+    }
+
+    /// Highest position a live token may occupy.
+    pub fn max_live_pos(&self) -> u32 {
+        (self.s_max - 2) as u32
+    }
+
+    /// Reset a single row (slot reuse under continuous batching).  The
+    /// stale device data needs no zeroing: the position-mask contract
+    /// means slots >= cur_len are rewritten before they become
+    /// attendable.
+    pub fn reset_row(&mut self, row: usize) {
+        self.cur_len[row] = 0;
+    }
+
+    pub fn headroom(&self, row: usize) -> u32 {
+        self.max_live_pos().saturating_sub(self.cur_len[row])
+    }
+}

@@ -1,0 +1,53 @@
+//! PJRT runtime: load `artifacts/` (HLO text + npz weights + manifest)
+//! and execute from the rust hot path.  Python never runs at serve time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b`.
+
+pub mod artifact;
+pub mod cache;
+pub mod model;
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+use xla::PjRtClient;
+
+pub use artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
+pub use cache::KvCache;
+pub use model::{FwdOut, ModelRt};
+
+use crate::substrate::prompts::PromptSet;
+use crate::substrate::tokenizer::Tokenizer;
+
+/// Owns the PJRT client + manifest; hands out loaded models.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    pub tokenizer: Tokenizer,
+}
+
+impl Runtime {
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu()?;
+        let manifest = Manifest::load(artifacts)?;
+        let tokenizer = Tokenizer::load(&artifacts.join("vocab.json"))?;
+        Ok(Runtime { client, manifest, tokenizer })
+    }
+
+    pub fn model(&self, name: &str) -> Result<Rc<ModelRt>> {
+        Ok(Rc::new(ModelRt::load(&self.client, &self.manifest, name)?))
+    }
+
+    pub fn prompts(&self, task: &str) -> Result<PromptSet> {
+        let file = self.manifest.prompts.get(task).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no prompt set `{task}` (have: {:?})",
+                self.manifest.prompts.keys().collect::<Vec<_>>()
+            )
+        })?;
+        PromptSet::load(&self.manifest.root.join(file), task)
+    }
+}

@@ -1,0 +1,286 @@
+//! Loaded model runtime: weights on device + lazily compiled per-bucket
+//! executables, with typed `fwd` / `commit` call helpers.
+//!
+//! Call protocol (set by `python/compile/aot.py`):
+//!   fwd  (weights…, [hidden,] tokens[b,t], pos[b,t], cache) ->
+//!        tuple(logits[b,t,V], k_new[L,b,t,H,D], v_new[, hidden_out])
+//!   commit (cache, k_new, v_new, pos[b,t]) -> cache'
+//!
+//! `tokens`/`pos` layouts are chosen by the coordinator engines; this
+//! module only moves bytes and tracks per-phase timing.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{Bucket, Manifest, ModelEntry, ModelKind};
+use super::cache::KvCache;
+
+/// Synchronous f32 upload (safe wrt the async-literal hazard; see
+/// `ModelRt::load`).
+pub fn upload_f32_literal(client: &PjRtClient, l: &Literal)
+                          -> Result<PjRtBuffer> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> =
+        shape.dims().iter().map(|d| *d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(client.buffer_from_host_buffer(&data, &dims, None)?)
+}
+
+/// Host-side result of one `fwd` call.
+pub struct FwdOut {
+    /// [b, t, vocab] row-major.
+    pub logits: Vec<f32>,
+    /// This call's K/V columns, kept as host literals for the follow-up
+    /// `commit` (shape [L, b, t, H, D]).
+    pub k_new: Literal,
+    pub v_new: Literal,
+    /// [b, t, d_model] when the entry exports hidden states.
+    pub hidden: Option<Vec<f32>>,
+    /// Wall-clock of the PJRT execute + transfers.
+    pub elapsed_s: f64,
+}
+
+pub struct ModelRt {
+    pub entry: ModelEntry,
+    client: PjRtClient,
+    root: PathBuf,
+    weights: Vec<PjRtBuffer>,
+    commit_buckets: Vec<Bucket>,
+    fwd_exes: RefCell<HashMap<(usize, usize), Rc<PjRtLoadedExecutable>>>,
+    commit_exes: RefCell<HashMap<(usize, usize), Rc<PjRtLoadedExecutable>>>,
+    /// Cumulative time compiling executables (reported, not counted
+    /// against serving benchmarks — compilation is a load-time cost).
+    pub compile_s: RefCell<f64>,
+}
+
+impl ModelRt {
+    pub fn load(client: &PjRtClient, manifest: &Manifest, name: &str)
+                -> Result<Self> {
+        let entry = manifest.model(name)?.clone();
+        let wpath = manifest.root.join(&entry.weights);
+        // NOTE two xla-0.1.6 hazards handled here (see DESIGN.md §Perf):
+        // * PjRtBuffer::read_npz mistypes f32 as f16 (ElementType-vs-
+        //   PrimitiveType enum cast in buffer_from_host_raw_bytes), so read
+        //   through Literal which types correctly;
+        // * buffer_from_host_literal is ASYNC (no await in the C shim) and
+        //   use-after-frees if the literal drops early, so upload through
+        //   buffer_from_host_buffer, which copies during the call.
+        let named = Literal::read_npz(&wpath, &())
+            .with_context(|| format!("loading weights {}", wpath.display()))?;
+        // npz keys are p000.. in jax tree-flatten order == HLO param order.
+        let mut named: Vec<(String, Literal)> = named;
+        named.sort_by(|a, b| a.0.cmp(&b.0));
+        let weights: Vec<PjRtBuffer> = named
+            .into_iter()
+            .map(|(_, l)| upload_f32_literal(client, &l))
+            .collect::<Result<_>>()?;
+        let commit_buckets = manifest
+            .commits
+            .get(&entry.arch)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no commit executables for arch {}",
+                                entry.arch)
+            })?
+            .clone();
+        Ok(ModelRt {
+            entry,
+            client: client.clone(),
+            root: manifest.root.clone(),
+            weights,
+            commit_buckets,
+            fwd_exes: RefCell::new(HashMap::new()),
+            commit_exes: RefCell::new(HashMap::new()),
+            compile_s: RefCell::new(0.0),
+        })
+    }
+
+    pub fn cfg(&self) -> &super::artifact::ModelCfg {
+        &self.entry.cfg
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.entry.cfg.n_params(self.entry.kind == ModelKind::Eagle)
+    }
+
+    /// Smallest exported fwd bucket with `t >= t_needed`.
+    pub fn pick_t(&self, b: usize, t_needed: usize) -> Result<usize> {
+        Ok(Manifest::pick_bucket(&self.entry.entries, b, t_needed)?.1)
+    }
+
+    pub fn new_cache(&self, batch: usize) -> Result<KvCache> {
+        KvCache::new(&self.client, &self.entry.cfg, batch)
+    }
+
+    fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        let path = self.root.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        *self.compile_s.borrow_mut() += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    fn fwd_exe(&self, b: usize, t: usize)
+               -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.fwd_exes.borrow().get(&(b, t)) {
+            return Ok(e.clone());
+        }
+        let file =
+            Manifest::bucket_file(&self.entry.entries, b, t)?.to_string();
+        let exe = Rc::new(self.compile(&file)?);
+        self.fwd_exes.borrow_mut().insert((b, t), exe.clone());
+        Ok(exe)
+    }
+
+    fn commit_exe(&self, b: usize, t: usize)
+                  -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.commit_exes.borrow().get(&(b, t)) {
+            return Ok(e.clone());
+        }
+        let file =
+            Manifest::bucket_file(&self.commit_buckets, b, t)?.to_string();
+        let exe = Rc::new(self.compile(&file)?);
+        self.commit_exes.borrow_mut().insert((b, t), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile the buckets an engine will need (keeps JIT cost
+    /// out of the measured serving loop).
+    pub fn warmup(&self, b: usize, ts: &[usize]) -> Result<()> {
+        for &t in ts {
+            self.fwd_exe(b, t)?;
+            self.commit_exe(b, t)?;
+        }
+        Ok(())
+    }
+
+    /// Warm every bucket a dynamic T in `lo..=hi` could resolve to.
+    pub fn warmup_range(&self, b: usize, lo: usize, hi: usize)
+                        -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for need in lo..=hi {
+            let t = self.pick_t(b, need)?;
+            if seen.insert(t) {
+                self.fwd_exe(b, t)?;
+                self.commit_exe(b, t)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn upload_i32(&self, data: &[i32], b: usize, t: usize)
+                  -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, &[b, t], None)?)
+    }
+
+    /// Run the forward executable.  `tokens`/`pos` are `[b * t]`
+    /// row-major; `hidden_in` is required iff this is an EAGLE head.
+    pub fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
+               hidden_in: Option<&[f32]>, cache: &KvCache)
+               -> Result<FwdOut> {
+        debug_assert_eq!(tokens.len(), b * t);
+        debug_assert_eq!(pos.len(), b * t);
+        let t0 = Instant::now();
+        let exe = self.fwd_exe(b, t)?;
+        let tok_buf = self.upload_i32(tokens, b, t)?;
+        let pos_buf = self.upload_i32(pos, b, t)?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(self.weights.len() + 4);
+        args.extend(self.weights.iter());
+        let hid_buf;
+        match (self.entry.kind, hidden_in) {
+            (ModelKind::Eagle, Some(h)) => {
+                debug_assert_eq!(h.len(), b * t * self.entry.cfg.d_model);
+                hid_buf = self.client.buffer_from_host_buffer(
+                    h, &[b, t, self.entry.cfg.d_model], None)?;
+                args.push(&hid_buf);
+            }
+            (ModelKind::Eagle, None) => {
+                anyhow::bail!("EAGLE fwd requires hidden input")
+            }
+            (ModelKind::Lm, Some(_)) => {
+                anyhow::bail!("LM fwd takes no hidden input")
+            }
+            (ModelKind::Lm, None) => {}
+        }
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&cache.buf);
+
+        let result = exe.execute_b(&args)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.decompose_tuple()?;
+        let want = if self.entry.hidden { 4 } else { 3 };
+        anyhow::ensure!(parts.len() == want,
+                        "fwd returned {} outputs, want {want}", parts.len());
+        let mut it = parts.into_iter();
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        let k_new = it.next().unwrap();
+        let v_new = it.next().unwrap();
+        let hidden = match it.next() {
+            Some(h) => Some(h.to_vec::<f32>()?),
+            None => None,
+        };
+        Ok(FwdOut {
+            logits,
+            k_new,
+            v_new,
+            hidden,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Scatter this step's K/V into the device cache at `commit_pos`
+    /// (`[b * t]`; rejected columns point at the garbage slot).  Replaces
+    /// the cache buffer in place.  Returns elapsed seconds.
+    pub fn commit(&self, b: usize, t: usize, out: &FwdOut,
+                  commit_pos: &[i32], cache: &mut KvCache) -> Result<f64> {
+        debug_assert_eq!(commit_pos.len(), b * t);
+        let t0 = Instant::now();
+        let exe = self.commit_exe(b, t)?;
+        let k_buf = upload_f32_literal(&self.client, &out.k_new)?;
+        let v_buf = upload_f32_literal(&self.client, &out.v_new)?;
+        let pos_buf = self.upload_i32(commit_pos, b, t)?;
+        let args: [&PjRtBuffer; 4] = [&cache.buf, &k_buf, &v_buf, &pos_buf];
+        let mut result = exe.execute_b(&args)?;
+        // commit is lowered with return_tuple=False: single array output
+        // that stays on device — the whole point of the split.
+        cache.buf = result
+            .pop()
+            .and_then(|mut v| v.pop())
+            .ok_or_else(|| anyhow::anyhow!("commit returned no buffer"))?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod npz_tests {
+    use xla::{FromRawBytes, PjRtBuffer, PjRtClient};
+
+    #[test]
+    fn npz_order_and_shapes() {
+        let p = std::path::Path::new("artifacts/ckpt/draft-s.npz");
+        if !p.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let client = PjRtClient::cpu().unwrap();
+        let lits = xla::Literal::read_npz(p, &()).unwrap();
+        let bufs: Vec<(String, PjRtBuffer)> = lits.into_iter().map(|(n, l)| (n, super::upload_f32_literal(&client, &l).unwrap())).collect();
+        for (name, b) in bufs.iter().take(4) {
+            eprintln!("{} {:?}", name, b.on_device_shape().unwrap());
+        }
+        assert_eq!(bufs[0].0, "p000");
+    }
+}

@@ -1,0 +1,117 @@
+//! Serving front-end: a dedicated engine thread behind mpsc channels.
+//!
+//! (The offline build vendors no async runtime, and PJRT handles are
+//! not Send anyway — the natural architecture is the same one vLLM
+//! uses: an engine loop on its own OS thread, callers talk to it over
+//! channels.  Documented as a substitution in DESIGN.md §3.)
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::coordinator::engines::{build_engine, EngineConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::Runtime;
+
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency_s: f64,
+}
+
+enum Msg {
+    Generate(GenRequest, mpsc::Sender<GenResponse>),
+    Metrics(mpsc::Sender<Metrics>),
+    Shutdown,
+}
+
+/// Handle to the engine thread.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    join: Option<thread::JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Boot an engine on its own thread.  The artifacts and engine are
+    /// loaded inside the thread (PJRT handles never cross threads).
+    pub fn start(artifacts: PathBuf, cfg: EngineConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = thread::Builder::new()
+            .name("pard-engine".into())
+            .spawn(move || -> Result<()> {
+                let rt = Runtime::load(&artifacts)?;
+                let mut engine = build_engine(&rt, &cfg)?;
+                engine.warmup()?;
+                // Simple loop: slot 0 serves requests FCFS; the batched
+                // path is exercised through coordinator::batcher (the
+                // benches drive it directly for deterministic timing).
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Generate(req, reply) => {
+                            let t0 = std::time::Instant::now();
+                            let outs = crate::coordinator::engines::generate(
+                                engine.as_mut(),
+                                std::slice::from_ref(&req.prompt),
+                                req.max_new,
+                            )?;
+                            let _ = reply.send(GenResponse {
+                                id: req.id,
+                                tokens: outs.into_iter().next()
+                                    .unwrap_or_default(),
+                                latency_s: t0.elapsed().as_secs_f64(),
+                            });
+                        }
+                        Msg::Metrics(reply) => {
+                            let _ = reply.send(engine.metrics().clone());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+                Ok(())
+            })?;
+        Ok(Server { tx, join: Some(join) })
+    }
+
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate(req, tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Metrics(tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! In-repo micro-benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` targets use `harness = false` main functions built on
+//! this: warmup, fixed-duration sampling, and robust summary statistics
+//! (median + MAD), printed in a stable grep-friendly format that the
+//! EXPERIMENTS.md tables quote directly.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub mad_s: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "bench {name:<40} median {median:>10.3}ms  mean {mean:>10.3}ms  \
+             min {min:>10.3}ms  max {max:>10.3}ms  n={n}",
+            name = self.name,
+            median = self.median_s * 1e3,
+            mean = self.mean_s * 1e3,
+            min = self.min_s * 1e3,
+            max = self.max_s * 1e3,
+            n = self.samples
+        );
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            max_samples: 50,
+        }
+    }
+
+    /// Benchmark `f`, which performs one iteration per call and returns a
+    /// value kept alive to prevent dead-code elimination.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut times = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure && times.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        stats(name, &mut times)
+    }
+}
+
+fn stats(name: &str, times: &mut [f64]) -> BenchStats {
+    assert!(!times.is_empty());
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let mut dev: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        name: name.to_string(),
+        samples: times.len(),
+        median_s: median,
+        mean_s: mean,
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+        mad_s: dev[dev.len() / 2],
+    }
+}
+
+/// Print a markdown table row list with a header — the standard output
+/// format for the table-reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n## {}\n", self.title);
+        let widths: Vec<usize> = self
+            .header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.header));
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", fmt_row(&sep));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            max_samples: 10,
+        };
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.samples >= 1 && s.samples <= 10);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+    }
+
+    #[test]
+    fn table_builds() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Device cost model: roofline projection of decode-phase performance.
+//!
+//! The paper reports absolute TPS and draft-phase bandwidth on A100-40GB
+//! (Tables 1-6) and MI250X (Table 7).  We execute on PJRT-CPU, so absolute
+//! numbers come from this analytical model instead: decoding small batches
+//! is memory-bound (paper §2.1), so a forward pass costs
+//! `max(bytes_touched / hbm_bw, flops / peak_flops) + launch_overhead`.
+//! Speedup *ratios* combine these per-pass costs with the acceptance
+//! statistics measured by the real rust/PJRT pipeline — the same
+//! methodology the paper's Eq. 3/4 analysis uses.
+
+/// Hardware profile (published public specs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Effective memory bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Peak dense bf16 throughput, flops/s.
+    pub peak_flops: f64,
+    /// Per-kernel-launch / framework overhead per forward pass, seconds.
+    pub launch_overhead: f64,
+}
+
+/// A100-40GB SXM: 1.555 TB/s, 312 TFLOPS bf16.
+pub const A100_40GB: DeviceProfile = DeviceProfile {
+    name: "A100-40GB",
+    hbm_bw: 1.555e12,
+    peak_flops: 312e12,
+    launch_overhead: 35e-6,
+};
+
+/// MI250X (single GCD): 1.6 TB/s, 191.5 TFLOPS bf16 per GCD.
+/// Lower achievable fraction in practice — the paper's Table 7 speedups
+/// are uniformly below the A100 ones; the higher overhead models the
+/// less-tuned software stack.
+pub const MI250X: DeviceProfile = DeviceProfile {
+    name: "MI250X",
+    hbm_bw: 1.6e12,
+    peak_flops: 191.5e12,
+    launch_overhead: 60e-6,
+};
+
+/// Model footprint description for the cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelCost {
+    /// Parameter count.
+    pub n_params: f64,
+    /// Bytes per parameter (2 for bf16 — the paper's serving dtype).
+    pub bytes_per_param: f64,
+    /// KV-cache bytes read per forward pass at current context length.
+    pub kv_bytes: f64,
+}
+
+impl ModelCost {
+    pub fn new(n_params: f64, kv_bytes: f64) -> Self {
+        ModelCost { n_params, bytes_per_param: 2.0, kv_bytes }
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * self.bytes_per_param
+    }
+}
+
+impl DeviceProfile {
+    /// Cost of one forward pass over `tokens` positions, `batch` rows.
+    /// Weights are read once regardless of tokens (the memory-bound
+    /// regime); flops scale with tokens*batch.
+    pub fn fwd_seconds(&self, m: &ModelCost, tokens: usize,
+                       batch: usize) -> f64 {
+        let bytes = m.weight_bytes() + m.kv_bytes * batch as f64;
+        let flops = 2.0 * m.n_params * tokens as f64 * batch as f64;
+        (bytes / self.hbm_bw).max(flops / self.peak_flops)
+            + self.launch_overhead
+    }
+
+    /// Decode-phase TPS of plain cached autoregression (the AR+ baseline).
+    pub fn ar_tps(&self, target: &ModelCost, batch: usize) -> f64 {
+        batch as f64 / self.fwd_seconds(target, 1, batch)
+    }
+
+    /// TPS of a draft-then-verify method.
+    ///
+    /// * `draft_passes`: forward passes of the draft per iteration
+    ///   (K for VSD/EAGLE, 1 for PARD — paper Eq. 3 vs Eq. 4).
+    /// * `draft_tokens_per_pass`: positions per draft pass.
+    /// * `tokens_per_iter`: measured mean accepted+1 per iteration.
+    pub fn sd_tps(&self, target: &ModelCost, draft: &ModelCost, k: usize,
+                  draft_passes: usize, draft_tokens_per_pass: usize,
+                  tokens_per_iter: f64, batch: usize) -> f64 {
+        let t_draft = draft_passes as f64
+            * self.fwd_seconds(draft, draft_tokens_per_pass, batch);
+        let t_verify = self.fwd_seconds(target, k + 1, batch);
+        batch as f64 * tokens_per_iter / (t_draft + t_verify)
+    }
+
+    /// Draft-phase bytes moved per iteration (Table 6): weights are
+    /// re-read on every pass, so AR drafting scales with k while PARD
+    /// reads once.
+    pub fn draft_bandwidth_bytes(&self, draft: &ModelCost,
+                                 draft_passes: usize) -> f64 {
+        draft_passes as f64 * (draft.weight_bytes() + draft.kv_bytes)
+    }
+}
+
+/// Paper-scale reference models (for Tables 6/7 absolute columns):
+/// bf16 params, kv term folded into weight traffic for simplicity.
+pub fn paper_model(n_params_billion: f64) -> ModelCost {
+    ModelCost::new(n_params_billion * 1e9, 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_is_memory_bound() {
+        let m = paper_model(8.0);
+        // at batch 1 the bandwidth term must dominate the flop term
+        let t = A100_40GB.fwd_seconds(&m, 1, 1);
+        let bw_term = m.weight_bytes() / A100_40GB.hbm_bw;
+        assert!((t - bw_term - A100_40GB.launch_overhead).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ar_tps_order_of_magnitude() {
+        // LLaMA3.1-8B on A100: paper AR+ ~77 tok/s; the pure roofline
+        // bound is higher (~90-95); same order, and the ratio analysis
+        // only uses relative costs.
+        let tps = A100_40GB.ar_tps(&paper_model(8.0), 1);
+        assert!(tps > 50.0 && tps < 130.0, "tps {tps}");
+    }
+
+    #[test]
+    fn pard_beats_vsd_at_equal_acceptance() {
+        let target = paper_model(8.0);
+        let draft = paper_model(1.0);
+        let k = 8;
+        let vsd = A100_40GB.sd_tps(&target, &draft, k, k, 1, 4.0, 1);
+        let pard = A100_40GB.sd_tps(&target, &draft, k, 1, 2 * k, 4.0, 1);
+        assert!(pard > 1.4 * vsd, "pard {pard} vsd {vsd}");
+    }
+
+    #[test]
+    fn table6_shape_pard_flat_eagle_linear() {
+        let d = paper_model(1.0);
+        let e4 = A100_40GB.draft_bandwidth_bytes(&d, 4);
+        let e8 = A100_40GB.draft_bandwidth_bytes(&d, 8);
+        let p4 = A100_40GB.draft_bandwidth_bytes(&d, 1);
+        let p8 = A100_40GB.draft_bandwidth_bytes(&d, 1);
+        assert!((e8 / e4 - 2.0).abs() < 1e-9);
+        assert_eq!(p4, p8);
+    }
+
+    #[test]
+    fn batch_shifts_compute_bound() {
+        // Table 4 mechanism: at large batch the flop term overtakes the
+        // bandwidth term, shrinking speculative gains.
+        let m = paper_model(8.0);
+        let t1 = A100_40GB.fwd_seconds(&m, 9, 1);
+        // small batches ride the bandwidth roofline for free…
+        let t4 = A100_40GB.fwd_seconds(&m, 9, 4);
+        assert!((t4 - t1).abs() < 1e-9);
+        // …until the flop term takes over and verify scales with batch
+        let t64 = A100_40GB.fwd_seconds(&m, 9, 64);
+        assert!(t64 > 2.0 * t1, "crossover must appear at large batch");
+    }
+
+    #[test]
+    fn mi250x_slower_than_a100() {
+        let m = paper_model(8.0);
+        assert!(MI250X.ar_tps(&m, 1) < A100_40GB.ar_tps(&m, 1) * 1.2);
+        assert!(MI250X.fwd_seconds(&m, 1, 1) > 0.0);
+    }
+}

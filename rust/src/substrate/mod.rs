@@ -1,0 +1,12 @@
+//! Substrates built from scratch for the offline environment: JSON,
+//! RNG, tokenizer, prompt sets, workload traces, device cost model,
+//! bench + property-test harnesses.  See DESIGN.md §4.
+
+pub mod bench;
+pub mod devices;
+pub mod json;
+pub mod prompts;
+pub mod prop;
+pub mod rng;
+pub mod tokenizer;
+pub mod workload;

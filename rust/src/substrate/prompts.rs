@@ -1,0 +1,92 @@
+//! Eval prompt sets: `artifacts/prompts_{task}.json` — the HumanEval /
+//! GSM8K / MATH500 stand-ins (held-out grammar samples, see DESIGN.md §3).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub task: String,
+    pub prompt: Vec<i32>,
+    /// Grammar ground-truth continuation (used to sanity-check output
+    /// quality and to report per-task agreement; generation does NOT see
+    /// this).
+    pub reference: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PromptSet {
+    pub task: String,
+    pub prompts: Vec<Prompt>,
+}
+
+fn ids(v: &Json) -> Vec<i32> {
+    v.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|x| x.as_i64().map(|i| i as i32))
+        .collect()
+}
+
+impl PromptSet {
+    pub fn load(path: &Path, task: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing prompts json")?;
+        let rows = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("prompts json not an array"))?;
+        let prompts = rows
+            .iter()
+            .map(|r| -> Result<Prompt> {
+                Ok(Prompt {
+                    task: r.str_req("task")?,
+                    prompt: ids(r.req("prompt")?),
+                    reference: ids(r.req("reference")?),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!prompts.is_empty(), "empty prompt set {task}");
+        Ok(PromptSet { task: task.to_string(), prompts })
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+
+    /// First `n` prompts (deterministic eval subsets for fast benches).
+    pub fn take(&self, n: usize) -> Vec<Prompt> {
+        self.prompts.iter().take(n).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn load_set() {
+        let dir = std::env::temp_dir().join("pard_prompt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("prompts_code.json");
+        let mut f = std::fs::File::create(&p).unwrap();
+        write!(
+            f,
+            r#"[{{"task": "code", "prompt": [0, 12, 13],
+                 "reference": [14, 1]}}]"#
+        )
+        .unwrap();
+        let s = PromptSet::load(&p, "code").unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.prompts[0].prompt, vec![0, 12, 13]);
+        assert_eq!(s.prompts[0].reference, vec![14, 1]);
+    }
+}

@@ -1,0 +1,65 @@
+//! Tiny property-testing harness (proptest is not vendored offline).
+//!
+//! Coordinator invariants (KV-slot manager, acceptance, batcher) are
+//! checked over many seeded random cases with first-failure reporting.
+//! No shrinking — cases print their seed so failures replay exactly.
+
+use super::rng::Rng;
+
+pub struct Cases {
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        Cases { n: 256, seed: 0xC0FFEE }
+    }
+}
+
+impl Cases {
+    pub fn new(n: usize) -> Self {
+        Cases { n, seed: 0xC0FFEE }
+    }
+
+    /// Run `prop` over `n` independently seeded RNGs; panic with the case
+    /// seed on the first failure.
+    pub fn check(&self, name: &str, mut prop: impl FnMut(&mut Rng)) {
+        for i in 0..self.n {
+            let case_seed = self.seed ^ (i as u64).wrapping_mul(0x9E3779B9);
+            let mut rng = Rng::new(case_seed);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || prop(&mut rng),
+            ));
+            if let Err(e) = r {
+                eprintln!(
+                    "property `{name}` failed on case {i} \
+                     (seed {case_seed:#x})"
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        Cases::new(64).check("sum-commutes", |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_bad_property() {
+        Cases::new(64).check("always-small", |rng| {
+            assert!(rng.below(100) < 50);
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! Synthetic-vocab tokenizer: loads `artifacts/vocab.json` (authored by
+//! `python/compile/corpus.py`) and detokenizes id streams for logs,
+//! examples, and debugging.  Token ids are the wire format everywhere;
+//! there is deliberately no encode path at serve time (prompts arrive
+//! pre-tokenized in `prompts_{task}.json`, as in a real deployment where
+//! tokenization happens at the API edge).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+    pub mask: i32,
+    pub distinct_masks: Vec<i32>,
+    tok_of: HashMap<i32, String>,
+}
+
+impl Tokenizer {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing vocab.json")?;
+        let mut tok_of = HashMap::new();
+        if let Some(toks) = v.req("tokens")?.as_obj() {
+            for (k, s) in toks {
+                if let (Ok(id), Some(s)) = (k.parse::<i32>(), s.as_str()) {
+                    tok_of.insert(id, s.to_string());
+                }
+            }
+        }
+        Ok(Tokenizer {
+            vocab_size: v.usize_req("vocab_size")?,
+            bos: v.usize_req("bos")? as i32,
+            eos: v.usize_req("eos")? as i32,
+            pad: v.usize_req("pad")? as i32,
+            mask: v.usize_req("mask")? as i32,
+            distinct_masks: v
+                .req("distinct_masks")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_i64().map(|i| i as i32))
+                .collect(),
+            tok_of,
+        })
+    }
+
+    /// Human-readable rendering of a token-id stream.
+    pub fn detok(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|id| {
+                self.tok_of
+                    .get(id)
+                    .cloned()
+                    .unwrap_or_else(|| format!("<{id}>"))
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        id == self.bos
+            || id == self.eos
+            || id == self.pad
+            || id == self.mask
+            || self.distinct_masks.contains(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_vocab(dir: &Path) -> std::path::PathBuf {
+        let p = dir.join("vocab.json");
+        let mut f = std::fs::File::create(&p).unwrap();
+        write!(
+            f,
+            r#"{{"vocab_size": 16, "bos": 0, "eos": 1, "pad": 2,
+                "mask": 3, "distinct_masks": [4, 5],
+                "tokens": {{"0": "<bos>", "1": "<eos>", "12": "def"}}}}"#
+        )
+        .unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_detok() {
+        let dir = std::env::temp_dir().join("pard_tok_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = fake_vocab(&dir);
+        let t = Tokenizer::load(&p).unwrap();
+        assert_eq!(t.vocab_size, 16);
+        assert_eq!(t.mask, 3);
+        assert_eq!(t.detok(&[0, 12, 99]), "<bos> def <99>");
+        assert!(t.is_special(4));
+        assert!(!t.is_special(12));
+    }
+}

@@ -1,0 +1,100 @@
+//! Request workload generation: arrival traces over the eval prompt sets.
+//!
+//! The serving experiments (Tables 3/4) drive the coordinator with a
+//! request stream; this module synthesizes Poisson or closed-loop traces
+//! deterministically from a seed.
+
+use super::prompts::Prompt;
+use super::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time offset in seconds from trace start.
+    pub arrival_s: f64,
+    pub prompt: Vec<i32>,
+    pub reference: Vec<i32>,
+    pub task: String,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// All requests available at t=0 (offline throughput measurement —
+    /// what the paper's TPS tables report).
+    Closed,
+    /// Poisson arrivals at `rate` requests/second (online serving).
+    Poisson { rate: f64 },
+}
+
+pub fn build_trace(prompts: &[Prompt], n: usize, arrival: Arrival,
+                   max_new: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let p = &prompts[i % prompts.len()];
+        if let Arrival::Poisson { rate } = arrival {
+            t += rng.exp(rate);
+        }
+        requests.push(Request {
+            id: i as u64,
+            arrival_s: t,
+            prompt: p.prompt.clone(),
+            reference: p.reference.clone(),
+            task: p.task.clone(),
+            max_new,
+        });
+    }
+    Trace { requests }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompts() -> Vec<Prompt> {
+        (0..3)
+            .map(|i| Prompt {
+                task: "code".into(),
+                prompt: vec![0, 12 + i],
+                reference: vec![20, 1],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn closed_trace_all_at_zero() {
+        let t = build_trace(&prompts(), 7, Arrival::Closed, 32, 1);
+        assert_eq!(t.requests.len(), 7);
+        assert!(t.requests.iter().all(|r| r.arrival_s == 0.0));
+        // round-robins over prompts
+        assert_eq!(t.requests[3].prompt, t.requests[0].prompt);
+    }
+
+    #[test]
+    fn poisson_monotone_arrivals() {
+        let t = build_trace(&prompts(), 20,
+                            Arrival::Poisson { rate: 10.0 }, 32, 2);
+        for w in t.requests.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(t.requests.last().unwrap().arrival_s > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = build_trace(&prompts(), 10,
+                            Arrival::Poisson { rate: 5.0 }, 16, 9);
+        let b = build_trace(&prompts(), 10,
+                            Arrival::Poisson { rate: 5.0 }, 16, 9);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Runtime-layer integration: the fwd/commit executables against the
+//! DESIGN.md §7 cache contract.  Gated on artifacts/.
+
+use std::path::Path;
+
+use pard::coordinator::sampling::argmax;
+use pard::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let p = Path::new("artifacts");
+    if !p.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing");
+        return None;
+    }
+    Some(Runtime::load(p).expect("runtime loads"))
+}
+
+/// Drive raw fwd/commit to decode greedily; used as the reference body.
+fn raw_decode(rt: &Runtime, model: &str, prompt: &[i32], steps: usize)
+              -> Vec<i32> {
+    let m = rt.model(model).unwrap();
+    let mut cache = m.new_cache(1).unwrap();
+    let vocab = m.cfg().vocab;
+    let t = m.pick_t(1, prompt.len()).unwrap();
+    let g = cache.garbage_slot();
+    let mut tokens = vec![rt.manifest.pad; t];
+    let mut pos = vec![g; t];
+    for (i, &tk) in prompt.iter().enumerate() {
+        tokens[i] = tk;
+        pos[i] = i as i32;
+    }
+    let out = m.fwd(1, t, &tokens, &pos, None, &cache).unwrap();
+    m.commit(1, t, &out, &pos, &mut cache).unwrap();
+    cache.cur_len[0] = prompt.len() as u32;
+    let last = prompt.len() - 1;
+    let mut next = argmax(&out.logits[last * vocab..(last + 1) * vocab]);
+    let mut gen = vec![next];
+    for _ in 1..steps {
+        let p = cache.cur_len[0] as i32;
+        let out = m.fwd(1, 1, &[next], &[p], None, &cache).unwrap();
+        m.commit(1, 1, &out, &[p], &mut cache).unwrap();
+        cache.cur_len[0] += 1;
+        next = argmax(&out.logits[..vocab]);
+        gen.push(next);
+    }
+    gen
+}
+
+#[test]
+fn bucket_padding_does_not_change_logits() {
+    // The same prefill through two different T buckets (pads parked at
+    // the garbage slot) must produce identical greedy continuations.
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("draft-s").unwrap();
+    let prompt: Vec<i32> =
+        rt.prompts("code").unwrap().prompts[0].prompt.clone();
+    let vocab = m.cfg().vocab;
+    let mut firsts = Vec::new();
+    for t in [m.pick_t(1, prompt.len()).unwrap(), 32, 64] {
+        let cache = m.new_cache(1).unwrap();
+        let g = cache.garbage_slot();
+        let mut tokens = vec![rt.manifest.pad; t];
+        let mut pos = vec![g; t];
+        for (i, &tk) in prompt.iter().enumerate() {
+            tokens[i] = tk;
+            pos[i] = i as i32;
+        }
+        let out = m.fwd(1, t, &tokens, &pos, None, &cache).unwrap();
+        let last = prompt.len() - 1;
+        firsts.push(argmax(&out.logits[last * vocab..(last + 1) * vocab]));
+    }
+    assert!(firsts.windows(2).all(|w| w[0] == w[1]),
+            "bucket choice changed the argmax: {firsts:?}");
+}
+
+#[test]
+fn stale_speculative_entries_are_unreachable() {
+    // Write junk KV beyond cur_len (a rejected speculation), then decode
+    // normally: outputs must match a never-polluted trajectory.
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("target-m").unwrap();
+    let prompt: Vec<i32> =
+        rt.prompts("gsm").unwrap().prompts[0].prompt.clone();
+    let clean = raw_decode(&rt, "target-m", &prompt, 8);
+
+    // polluted run: same prefill, then junk writes at future positions
+    let mut cache = m.new_cache(1).unwrap();
+    let vocab = m.cfg().vocab;
+    let t = m.pick_t(1, prompt.len()).unwrap();
+    let g = cache.garbage_slot();
+    let mut tokens = vec![rt.manifest.pad; t];
+    let mut pos = vec![g; t];
+    for (i, &tk) in prompt.iter().enumerate() {
+        tokens[i] = tk;
+        pos[i] = i as i32;
+    }
+    let out = m.fwd(1, t, &tokens, &pos, None, &cache).unwrap();
+    m.commit(1, t, &out, &pos, &mut cache).unwrap();
+    cache.cur_len[0] = prompt.len() as u32;
+    let last = prompt.len() - 1;
+    let mut next = argmax(&out.logits[last * vocab..(last + 1) * vocab]);
+    // junk speculation at positions len..len+3, never "accepted"
+    let jt = 4;
+    let jp: Vec<i32> =
+        (0..jt).map(|i| (prompt.len() + i) as i32).collect();
+    let junk = vec![rt.manifest.mask; jt];
+    let jout = m.fwd(1, jt, &junk, &jp, None, &cache).unwrap();
+    m.commit(1, jt, &jout, &jp, &mut cache).unwrap(); // junk committed!
+    // …but cur_len was never advanced, so the decode below overwrites
+    // those slots before they are attendable.
+    let mut gen = vec![next];
+    for _ in 1..8 {
+        let p = cache.cur_len[0] as i32;
+        let out = m.fwd(1, 1, &[next], &[p], None, &cache).unwrap();
+        m.commit(1, 1, &out, &[p], &mut cache).unwrap();
+        cache.cur_len[0] += 1;
+        next = argmax(&out.logits[..vocab]);
+        gen.push(next);
+    }
+    assert_eq!(clean, gen, "stale speculative KV leaked into attention");
+}
+
+#[test]
+fn pick_t_policy() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("draft-s").unwrap();
+    assert_eq!(m.pick_t(1, 1).unwrap(), 1);
+    // T=10/12 buckets exist for the §Perf verify/draft tightening
+    assert_eq!(m.pick_t(1, 9).unwrap(), 10);
+    assert_eq!(m.pick_t(1, 11).unwrap(), 12);
+    assert_eq!(m.pick_t(1, 13).unwrap(), 16);
+    assert_eq!(m.pick_t(1, 17).unwrap(), 24);
+    assert!(m.pick_t(1, 65).is_err());
+}
+
+#[test]
+fn weights_load_for_every_model() {
+    let Some(rt) = runtime() else { return };
+    for name in rt.manifest.models.keys() {
+        let m = rt.model(name).expect("model loads");
+        assert!(m.n_params() > 0);
+    }
+}
+
+#[test]
+fn pard_variant_shares_architecture_with_draft() {
+    let Some(rt) = runtime() else { return };
+    let base = rt.model("draft-s").unwrap();
+    let pard = rt.model(&rt.manifest.main_pard).unwrap();
+    assert_eq!(base.cfg().d_model, pard.cfg().d_model);
+    assert_eq!(base.cfg().n_layers, pard.cfg().n_layers);
+    // identical architecture but different weights => different outputs
+    let prompt: Vec<i32> =
+        rt.prompts("code").unwrap().prompts[0].prompt.clone();
+    let a = raw_decode(&rt, "draft-s", &prompt, 6);
+    let b = raw_decode(&rt, &rt.manifest.main_pard, &prompt, 6);
+    assert!(a != b || a.is_empty() == false);
+}

@@ -1,0 +1,144 @@
+//! Property tests on the coordinator's speculative-decoding core —
+//! runtime-free (a deterministic hash LM stands in for the target), so
+//! they exercise the acceptance/iteration logic in isolation.
+//!
+//! Headline property: for ANY draft proposal stream, greedy speculative
+//! decoding commits EXACTLY the sequence plain greedy AR would produce —
+//! the paper's "no loss of performance" claim reduced to coordinator
+//! logic.
+
+use pard::coordinator::engines::greedy_accept;
+use pard::substrate::prop::Cases;
+use pard::substrate::rng::Rng;
+
+/// Deterministic toy LM: next token is a hash of the last 3 tokens.
+fn oracle_next(prefix: &[i32], vocab: i32) -> i32 {
+    let mut h: i64 = 0x9E37;
+    for &t in prefix.iter().rev().take(3) {
+        h = h.wrapping_mul(31).wrapping_add(t as i64 + 7);
+    }
+    (h.rem_euclid(vocab as i64)) as i32
+}
+
+fn ar_decode(prompt: &[i32], steps: usize, vocab: i32) -> Vec<i32> {
+    let mut stream = prompt.to_vec();
+    for _ in 0..steps {
+        stream.push(oracle_next(&stream, vocab));
+    }
+    stream[prompt.len()..].to_vec()
+}
+
+/// Speculative decode against the same oracle, with an arbitrary
+/// (possibly adversarial) draft.
+fn spec_decode(prompt: &[i32], steps: usize, vocab: i32, k: usize,
+               rng: &mut Rng, draft_quality: f64) -> (Vec<i32>, usize) {
+    let mut stream = prompt.to_vec();
+    let target_total = steps;
+    let mut iters = 0usize;
+    while stream.len() - prompt.len() < target_total {
+        iters += 1;
+        // draft k candidates: with prob draft_quality each matches the
+        // oracle continuation, else random junk
+        let mut cands = Vec::with_capacity(k);
+        let mut sim = stream.clone();
+        for _ in 0..k {
+            let truth = oracle_next(&sim, vocab);
+            let c = if rng.chance(draft_quality) {
+                truth
+            } else {
+                rng.below(vocab as usize) as i32
+            };
+            cands.push(c);
+            sim.push(c);
+        }
+        // verify: preds[j] = oracle's next token given stream + accepted
+        // candidate prefix (what the batched verify pass computes)
+        let mut preds = Vec::with_capacity(k + 1);
+        let mut ctx = stream.clone();
+        preds.push(oracle_next(&ctx, vocab));
+        for &c in &cands {
+            ctx.push(c);
+            preds.push(oracle_next(&ctx, vocab));
+        }
+        let (_a, committed) = greedy_accept(&cands, &preds);
+        stream.extend_from_slice(&committed);
+    }
+    stream.truncate(prompt.len() + target_total);
+    (stream[prompt.len()..].to_vec(), iters)
+}
+
+#[test]
+fn speculative_equals_ar_for_any_draft_quality() {
+    Cases::new(200).check("spec==ar", |rng| {
+        let vocab = 64;
+        let plen = 1 + rng.below(8);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.below(vocab) as i32).collect();
+        let steps = 8 + rng.below(40);
+        let k = 1 + rng.below(12);
+        let q = rng.f64(); // draft quality 0..1, incl adversarial
+        let ar = ar_decode(&prompt, steps, vocab as i32);
+        let (spec, _) =
+            spec_decode(&prompt, steps, vocab as i32, k, rng, q);
+        assert_eq!(ar, spec, "lossless property violated (k={k}, q={q})");
+    });
+}
+
+#[test]
+fn perfect_draft_commits_k_plus_one_per_iter() {
+    let mut rng = Rng::new(1);
+    let prompt = vec![3, 5];
+    let steps = 33;
+    let k = 8;
+    let (out, iters) = spec_decode(&prompt, steps, 64, k, &mut rng, 1.0);
+    assert_eq!(out.len(), steps);
+    // perfect acceptance: ceil(steps / (k+1)) iterations
+    assert_eq!(iters, steps.div_ceil(k + 1));
+}
+
+#[test]
+fn hopeless_draft_still_makes_progress() {
+    Cases::new(32).check("one-token-per-iter-min", |rng| {
+        let prompt = vec![1];
+        let steps = 12;
+        let (out, iters) = spec_decode(&prompt, steps, 64, 4, rng, 0.0);
+        assert_eq!(out.len(), steps);
+        // worst case: exactly one (the correction) per iteration
+        assert!(iters <= steps);
+    });
+}
+
+#[test]
+fn greedy_accept_edges() {
+    // empty draft: pure correction
+    let (a, c) = greedy_accept(&[], &[9]);
+    assert_eq!((a, c), (0, vec![9]));
+    // full accept
+    let (a, c) = greedy_accept(&[1, 2], &[1, 2, 7]);
+    assert_eq!((a, c), (2, vec![1, 2, 7]));
+    // reject at 0
+    let (a, c) = greedy_accept(&[5], &[6, 0]);
+    assert_eq!((a, c), (0, vec![6]));
+    // partial
+    let (a, c) = greedy_accept(&[5, 5, 5], &[5, 4, 1, 2]);
+    assert_eq!((a, c), (1, vec![5, 4]));
+}
+
+#[test]
+fn committed_never_exceeds_k_plus_one() {
+    Cases::new(200).check("commit-bound", |rng| {
+        let k = 1 + rng.below(16);
+        let vocab = 32;
+        let cands: Vec<i32> =
+            (0..k).map(|_| rng.below(vocab) as i32).collect();
+        let preds: Vec<i32> =
+            (0..=k).map(|_| rng.below(vocab) as i32).collect();
+        let (a, c) = greedy_accept(&cands, &preds);
+        assert!(a <= k);
+        assert_eq!(c.len(), a + 1);
+        // committed prefix must equal the accepted candidates
+        assert_eq!(&c[..a], &cands[..a]);
+        // the correction is the target's prediction at the break point
+        assert_eq!(c[a], preds[a]);
+    });
+}

@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# CI for the rust crate.
+#
+# Hard gates (tier-1): cargo build --release && cargo test -q — the
+# default feature set is artifact-free; the engine-equivalence suite
+# runs on the pure-Rust reference backend.  The PJRT path is
+# typechecked against the vendored stub (--features pjrt).
+#
+# Lint stage: cargo fmt --check and cargo clippy -D warnings are wired
+# here but the inherited codebase is not yet lint-clean; they fail the
+# script only with PARD_CI_STRICT=1 (see ROADMAP open items).
+#
+# Usage: ./ci.sh            # build + test + stub typecheck + soft lints
+#        PARD_CI_STRICT=1 ./ci.sh   # lints are hard gates too
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo check --features pjrt (stub typecheck) =="
+cargo check --features pjrt --all-targets
+
+lint_rc=0
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check || lint_rc=1
+else
+    echo "!! rustfmt not installed — skipping cargo fmt --check" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings || lint_rc=1
+else
+    echo "!! clippy not installed — skipping cargo clippy" >&2
+fi
+
+if [ "$lint_rc" -ne 0 ]; then
+    if [ "${PARD_CI_STRICT:-0}" = "1" ]; then
+        echo "CI FAILED (lints, strict mode)" >&2
+        exit 1
+    fi
+    echo "!! lints reported issues (non-fatal; set PARD_CI_STRICT=1)" >&2
+fi
+
+echo "CI OK"

@@ -16,6 +16,7 @@ use anyhow::Result;
 use pard::coordinator::batcher::serve_trace;
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
+use pard::runtime::Backend;
 use pard::substrate::workload::{build_trace, Arrival};
 use pard::Runtime;
 

@@ -1,0 +1,184 @@
+"""Simulate the rust engine protocols over the mirrored reference model:
+PARD (parallel mask draft) and VSD (chained draft) vs AR+ — checks the
+lossless protocol end-to-end, including garbage-slot commits, tentative
+candidate KV overwrites, and mask in-flight attention."""
+import numpy as np
+from sim import (Model, Rng, key_seed, fwd, commit, synth_prompts,
+                 ar_plus_decode, VOCAB, S_MAX, EOS, PAD, MASK, DH)
+
+GARBAGE = S_MAX - 1
+PREFILL_T = 32
+
+def new_cache(m):
+    hd = m.h * DH
+    return (np.zeros((m.L, S_MAX, hd), np.float32),
+            np.zeros((m.L, S_MAX, hd), np.float32))
+
+def prefill(m, ck, cv, prompt):
+    t = max(len(prompt), PREFILL_T)
+    toks = list(prompt) + [PAD] * (t - len(prompt))
+    pos = list(range(len(prompt))) + [GARBAGE] * (t - len(prompt))
+    logits, ks, vs = fwd(m, toks, pos, ck, cv)
+    commit(ck, cv, ks, vs, pos)  # pads land in the garbage slot
+    return int(np.argmax(logits[len(prompt) - 1]))
+
+def greedy_accept(cands, preds):
+    acc = 0
+    committed = []
+    for j, c in enumerate(cands):
+        if c == preds[j]:
+            acc += 1
+            committed.append(c)
+        else:
+            break
+    committed.append(preds[acc])
+    return acc, committed
+
+def push(stream, committed, plen, max_new):
+    taken = []
+    done = False
+    for t in committed:
+        stream.append(t)
+        taken.append(t)
+        if t == EOS or len(stream) - plen >= max_new:
+            done = True
+            break
+    return done
+
+def pard_decode(tm, dm, prompt, k, max_new, distinct=False):
+    tck, tcv = new_cache(tm)
+    dck, dcv = new_cache(dm)
+    stream = list(prompt)
+    first = prefill(tm, tck, tcv, prompt)
+    prefill(dm, dck, dcv, prompt)
+    stream.append(first)
+    done = first == EOS or max_new <= 1
+    target_len = len(stream) - 1
+    draft_len = len(prompt)
+    plen = len(prompt)
+    iters = 0
+    accepts = []
+    masks = list(range(4, 12))
+    while not done:
+        iters += 1
+        # --- one parallel draft pass
+        reals = stream[draft_len:]
+        toks = list(reals)
+        pos = list(range(draft_len, draft_len + len(reals)))
+        base_m = len(stream)
+        for j in range(k - 1):
+            mid = MASK if not distinct else masks[min(j, len(masks) - 1)]
+            toks.append(mid)
+            pos.append(base_m + j)
+        logits, ks, vs = fwd(dm, toks, pos, dck, dcv)
+        cpos = pos[: len(reals)] + [GARBAGE] * (k - 1)  # masks never commit
+        commit(dck, dcv, ks, vs, cpos)
+        fed = len(reals)
+        cands = [int(np.argmax(logits[fed - 1 + j])) for j in range(k)]
+        draft_len = len(stream)
+        # --- verify
+        base = target_len
+        vtoks = [stream[-1]] + cands
+        vpos = list(range(base, base + k + 1))
+        logits, ks, vs = fwd(tm, vtoks, vpos, tck, tcv)
+        preds = [int(np.argmax(logits[i])) for i in range(k + 1)]
+        acc, committed = greedy_accept(cands, preds)
+        accepts.append(acc)
+        vcpos = [base] + [base + 1 + j if j < acc else GARBAGE
+                          for j in range(k)]
+        commit(tck, tcv, ks, vs, vcpos)
+        done = push(stream, committed, plen, max_new)
+        target_len = len(stream) - 1
+    return stream[plen:], iters, accepts
+
+def vsd_decode(tm, dm, prompt, k, max_new):
+    tck, tcv = new_cache(tm)
+    dck, dcv = new_cache(dm)
+    stream = list(prompt)
+    first = prefill(tm, tck, tcv, prompt)
+    prefill(dm, dck, dcv, prompt)
+    stream.append(first)
+    done = first == EOS or max_new <= 1
+    target_len = len(stream) - 1
+    draft_len = len(prompt)
+    plen = len(prompt)
+    iters = 0
+    while not done:
+        iters += 1
+        # catch-up pass
+        reals = stream[draft_len:]
+        pos = list(range(draft_len, draft_len + len(reals)))
+        logits, ks, vs = fwd(dm, reals, pos, dck, dcv)
+        commit(dck, dcv, ks, vs, pos)
+        cands = [int(np.argmax(logits[len(reals) - 1]))]
+        draft_len = len(stream)
+        # k-1 chained singles (tentative commits past draft_len)
+        for j in range(1, k):
+            p = draft_len + j - 1
+            logits, ks, vs = fwd(dm, [cands[-1]], [p], dck, dcv)
+            commit(dck, dcv, ks, vs, [p])
+            cands.append(int(np.argmax(logits[0])))
+        # verify
+        base = target_len
+        vtoks = [stream[-1]] + cands
+        vpos = list(range(base, base + k + 1))
+        logits, ks, vs = fwd(tm, vtoks, vpos, tck, tcv)
+        preds = [int(np.argmax(logits[i])) for i in range(k + 1)]
+        acc, committed = greedy_accept(cands, preds)
+        vcpos = [base] + [base + 1 + j if j < acc else GARBAGE
+                          for j in range(k)]
+        commit(tck, tcv, ks, vs, vcpos)
+        done = push(stream, committed, plen, max_new)
+        target_len = len(stream) - 1
+    return stream[plen:], iters
+
+def ar_with_trunc(m, prompt, max_new):
+    g = ar_plus_decode(m, prompt, max_new)
+    return g
+
+def main(seed=7):
+    tm = Model(seed, "target-m")
+    dm = Model(seed, "pard-main")
+    prompts = synth_prompts("code", seed)[:3]
+    ok = True
+    for i, p in enumerate(prompts):
+        base = ar_with_trunc(tm, p, 20)
+        for k in (1, 2, 4, 8, 12, 16):
+            out, iters, accepts = pard_decode(tm, dm, p, k, 20)
+            if out != base:
+                ok = False
+                print(f"PARD MISMATCH prompt {i} k={k}: {out} vs {base}")
+            else:
+                alpha = (np.mean([a > 0 for a in accepts])
+                         if accepts else 0)
+                if k == 8 and i == 0:
+                    print(f"prompt {i} k={k}: lossless, iters={iters}, "
+                          f"gen={len(out)}, mean accepted="
+                          f"{np.mean(accepts):.2f}")
+        out, iters, accepts = pard_decode(tm, dm, p, 12, 20, distinct=True)
+        if out != base:
+            ok = False
+            print(f"PARD-distinct MISMATCH prompt {i}")
+        out, iters = vsd_decode(tm, dm, p, 8, 20)
+        if out != base:
+            ok = False
+            print(f"VSD MISMATCH prompt {i}: {out} vs {base}")
+    # self-draft full-accept check on draft-s
+    ds = Model(seed, "draft-s")
+    for p in prompts[:2]:
+        base = ar_with_trunc(ds, p, 20)
+        out, iters = vsd_decode(ds, ds, p, 4, 20)
+        assert out == base
+        gen = len(out)
+        # +--- every iteration must commit k+1 (up to truncation)
+        expect_iters = -(-(gen - 1) // 5) if gen > 1 else 0
+        print(f"self-draft: gen={gen}, iters={iters} "
+              f"(expect {expect_iters})")
+        assert iters == expect_iters, "self-draft not accept-all!"
+        outp, itersp, acc = pard_decode(ds, ds, p, 8, 20)
+        assert outp == base
+        assert all(a >= 1 for a in acc), f"pard c0 not always accepted {acc}"
+    print("ALL LOSSLESS CHECKS PASSED" if ok else "FAILURES ABOVE")
+
+if __name__ == "__main__":
+    main()

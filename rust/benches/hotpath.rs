@@ -3,6 +3,7 @@
 use std::path::Path;
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
+use pard::runtime::Backend;
 use pard::substrate::bench::Bencher;
 use pard::Runtime;
 

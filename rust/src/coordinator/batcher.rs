@@ -17,11 +17,13 @@ use crate::substrate::workload::Trace;
 pub struct ServeStats {
     pub completed: usize,
     pub wall_s: f64,
+    /// Tokens generated within THIS serving window (not engine
+    /// lifetime — the engine may have served earlier traces).
     pub generated: u64,
     pub latency_mean_s: f64,
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
-    /// Aggregate generated tokens/s over the serving window.
+    /// Window-generated tokens/s over the serving window.
     pub throughput_tps: f64,
     /// Mean live slots per decode iteration (batch efficiency).
     pub mean_occupancy: f64,
@@ -29,7 +31,6 @@ pub struct ServeStats {
 
 struct InFlight {
     request_idx: usize,
-    admitted_at: Instant,
 }
 
 /// Drive `engine` through `trace`.  Requests become admittable when
@@ -38,6 +39,9 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
                    -> Result<ServeStats> {
     let b = engine.batch();
     let t0 = Instant::now();
+    // Window accounting: tokens from BEFORE this trace must not count
+    // toward this trace's throughput.
+    let gen0 = engine.metrics().generated;
     let mut queue: VecDeque<usize> = VecDeque::new();
     let mut next_arrival = 0usize;
     let mut slots: Vec<Option<InFlight>> = (0..b).map(|_| None).collect();
@@ -65,17 +69,13 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
                 // request latency = completion - arrival (queueing incl.)
                 let lat = t0.elapsed().as_secs_f64()
                     - trace.requests[f.request_idx].arrival_s;
-                latencies.push(lat.max(
-                    f.admitted_at.elapsed().as_secs_f64()));
+                latencies.push(lat.max(0.0));
             }
             if slots[slot].is_none() {
                 if let Some(ri) = queue.pop_front() {
                     let req = &trace.requests[ri];
                     engine.admit(slot, &req.prompt, req.max_new)?;
-                    slots[slot] = Some(InFlight {
-                        request_idx: ri,
-                        admitted_at: Instant::now(),
-                    });
+                    slots[slot] = Some(InFlight { request_idx: ri });
                 }
             }
         }
@@ -96,14 +96,19 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
         engine.metrics_mut().iterations += 1;
     }
 
-    // final harvest
+    // Final harvest (defensive: the loop only exits once every slot has
+    // been harvested, but keep any stragglers consistent with the
+    // in-loop accounting — arrival-based, queueing delay included).
     for slot in 0..b {
         if let Some(f) = slots[slot].take() {
-            latencies.push(f.admitted_at.elapsed().as_secs_f64());
+            let lat = t0.elapsed().as_secs_f64()
+                - trace.requests[f.request_idx].arrival_s;
+            latencies.push(lat.max(0.0));
         }
     }
 
     let wall = t0.elapsed().as_secs_f64();
+    let generated = engine.metrics().generated - gen0;
     engine.metrics_mut().wall_s += wall;
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = latencies.len();
@@ -117,11 +122,15 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
     Ok(ServeStats {
         completed: n,
         wall_s: wall,
-        generated: engine.metrics().generated,
+        generated,
         latency_mean_s: latencies.iter().sum::<f64>() / n.max(1) as f64,
         latency_p50_s: pct(0.5),
         latency_p95_s: pct(0.95),
-        throughput_tps: engine.metrics().generated as f64 / wall,
+        throughput_tps: if wall > 0.0 {
+            generated as f64 / wall
+        } else {
+            0.0
+        },
         mean_occupancy: occupancy_sum as f64 / iters.max(1) as f64,
     })
 }

@@ -17,10 +17,10 @@ use super::{CallBuf, Engine, EngineConfig, EngineKind, prefill_slot};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
-use crate::runtime::{KvCache, ModelRt, Runtime};
+use crate::runtime::{Backend, KvCache, Runtime};
 
 pub struct ArEngine {
-    target: Rc<ModelRt>,
+    target: Rc<dyn Backend>,
     cache: KvCache,
     seqs: Vec<Sequence>,
     metrics: Metrics,
@@ -153,7 +153,7 @@ impl Engine for ArEngine {
         self.cache.reset_row(slot);
         let mut seq = Sequence::start(prompt, max_new);
         if self.cached {
-            let (first, _) = prefill_slot(&self.target, &mut self.cache,
+            let (first, _) = prefill_slot(&*self.target, &mut self.cache,
                                           slot, prompt, self.pad,
                                           &mut self.metrics)?;
             seq.target_len = prompt.len();

@@ -24,12 +24,12 @@ use super::{apply_verdict, verify_and_commit, CallBuf,
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
-use crate::runtime::{KvCache, ModelRt, Runtime};
+use crate::runtime::{Backend, KvCache, Runtime};
 
 pub struct EagleEngine {
     /// `_h` variant: exports hidden rows at verify/prefill.
-    target: Rc<ModelRt>,
-    head: Rc<ModelRt>,
+    target: Rc<dyn Backend>,
+    head: Rc<dyn Backend>,
     tcache: KvCache,
     ecache: KvCache,
     seqs: Vec<Sequence>,
@@ -227,7 +227,7 @@ impl Engine for EagleEngine {
 
     fn step(&mut self) -> Result<()> {
         let cands = self.draft_candidates()?;
-        let verdicts = verify_and_commit(&self.target, &mut self.tcache,
+        let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
                                          &self.seqs, &cands, self.cfg.k,
                                          self.pad, &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {

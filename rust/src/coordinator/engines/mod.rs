@@ -15,13 +15,17 @@
 //! Per-row work inside a fixed-batch executable is expressed purely
 //! through (tokens, pos, commit_pos) layouts: parked rows write to the
 //! reserved garbage slot and their outputs are ignored (DESIGN.md §7).
+//!
+//! Engines drive models only through the [`Backend`] trait, so the same
+//! code executes against AOT/PJRT artifacts or the pure-Rust reference
+//! backend (DESIGN.md §2) — the engine-equivalence suite relies on
+//! this.
 
 pub mod ar;
 pub mod eagle;
 pub mod pard;
 pub mod vsd;
 
-use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -29,7 +33,7 @@ use anyhow::Result;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
-use crate::runtime::{KvCache, ModelRt, Runtime};
+use crate::runtime::{Backend, KvCache, Runtime};
 
 /// Shared inference-time configuration.
 #[derive(Debug, Clone)]
@@ -166,7 +170,7 @@ pub fn build_engine(rt: &Runtime, cfg: &EngineConfig)
 /// stable executable serves every prefill (no mid-run JIT).
 pub const PREFILL_T: usize = 32;
 
-pub fn prefill_slot(model: &Rc<ModelRt>, cache: &mut KvCache, slot: usize,
+pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
                     prompt: &[i32], pad: i32, metrics: &mut Metrics)
                     -> Result<(i32, Option<Vec<f32>>)> {
     let b = cache.batch;
@@ -230,7 +234,7 @@ pub struct RowVerdict {
 /// row, accept the longest matching prefix, commit pending + accepted
 /// KV, and return per-row verdicts.  (Chain decoding, temperature 0 —
 /// the paper's evaluation setting.)
-pub fn verify_and_commit(target: &Rc<ModelRt>, cache: &mut KvCache,
+pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
                          seqs: &[Sequence], cands: &[Vec<i32>], k: usize,
                          pad: i32, metrics: &mut Metrics)
                          -> Result<Vec<Option<RowVerdict>>> {

@@ -16,11 +16,11 @@ use super::{apply_verdict, prefill_slot, verify_and_commit, CallBuf,
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
-use crate::runtime::{KvCache, ModelRt, Runtime};
+use crate::runtime::{Backend, KvCache, Runtime};
 
 pub struct VsdEngine {
-    target: Rc<ModelRt>,
-    draft: Rc<ModelRt>,
+    target: Rc<dyn Backend>,
+    draft: Rc<dyn Backend>,
     tcache: KvCache,
     dcache: KvCache,
     seqs: Vec<Sequence>,
@@ -141,11 +141,12 @@ impl Engine for VsdEngine {
         self.tcache.reset_row(slot);
         self.dcache.reset_row(slot);
         let mut seq = Sequence::start(prompt, max_new);
-        let (first, _) = prefill_slot(&self.target, &mut self.tcache, slot,
-                                      prompt, self.pad, &mut self.metrics)?;
+        let (first, _) = prefill_slot(&*self.target, &mut self.tcache,
+                                      slot, prompt, self.pad,
+                                      &mut self.metrics)?;
         // draft prefill: its own cache over the same prompt
         let mut dm = Metrics::default();
-        let _ = prefill_slot(&self.draft, &mut self.dcache, slot, prompt,
+        let _ = prefill_slot(&*self.draft, &mut self.dcache, slot, prompt,
                              self.pad, &mut dm)?;
         self.metrics.prefill_s += dm.prefill_s;
         seq.push_committed(&[first], self.eos);
@@ -160,7 +161,7 @@ impl Engine for VsdEngine {
 
     fn step(&mut self) -> Result<()> {
         let cands = self.draft_candidates()?;
-        let verdicts = verify_and_commit(&self.target, &mut self.tcache,
+        let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
                                          &self.seqs, &cands, self.cfg.k,
                                          self.pad, &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {

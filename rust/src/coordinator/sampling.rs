@@ -85,6 +85,30 @@ mod tests {
     }
 
     #[test]
+    fn argmax_tie_breaking_is_lowest_index() {
+        // Lossless verification depends on draft and target resolving
+        // ties identically: the FIRST maximal index wins, everywhere.
+        assert_eq!(argmax(&[1.0, 7.0, 7.0, 7.0]), 1);
+        assert_eq!(argmax(&[0.0, 0.0, 0.0]), 0);
+        assert_eq!(argmax(&[-1.0, -1.0, -0.5, -0.5]), 2);
+    }
+
+    #[test]
+    fn argmax_degenerate_rows() {
+        // Empty row: the documented fallback is index 0 (callers never
+        // pass empty rows; this pins the behavior all the same).
+        assert_eq!(argmax(&[]), 0);
+        // All -inf still yields a valid index.
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        // -inf gaps don't confuse the scan.
+        assert_eq!(argmax(&[f32::NEG_INFINITY, 2.0, f32::NEG_INFINITY]),
+                   1);
+        // Finite rows (the NaN-free contract engines rely on): the
+        // maximum wins regardless of magnitude spread.
+        assert_eq!(argmax(&[f32::MIN, 0.0, f32::MAX]), 2);
+    }
+
+    #[test]
     fn softmax_normalizes() {
         let p = softmax(&[1.0, 2.0, 3.0], 1.0);
         assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);

@@ -3,9 +3,10 @@
 //! Three-layer architecture (DESIGN.md):
 //! * L1 — Pallas cached-attention kernel (python, build time, AOT'd)
 //! * L2 — JAX SynLlama models (python, build time, AOT'd to HLO text)
-//! * L3 — this crate: the serving coordinator executing AOT artifacts
-//!   through the PJRT C API (`xla` crate) with python fully off the
-//!   request path.
+//! * L3 — this crate: the serving coordinator driving models through
+//!   the [`runtime::Backend`] trait — AOT artifacts via the PJRT C API
+//!   (`xla` crate, feature `pjrt`) or the deterministic pure-Rust
+//!   reference backend — with python fully off the request path.
 
 pub mod coordinator;
 pub mod report;
@@ -13,4 +14,4 @@ pub mod runtime;
 pub mod server;
 pub mod substrate;
 
-pub use runtime::Runtime;
+pub use runtime::{Runtime, RuntimeSpec};

@@ -7,6 +7,10 @@
 //!   tables [--which 1,2,...] [--full]
 //!   fig    --which 1a|1b|2|6a|6b
 //!   info
+//!
+//! Every subcommand accepts `--backend pjrt|reference` (default pjrt):
+//! `reference` runs the deterministic pure-Rust backend — no artifacts,
+//! no Python — with `--seed N` selecting the synthetic weights.
 
 use std::path::{Path, PathBuf};
 
@@ -66,6 +70,25 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts", "artifacts"))
 }
 
+/// `--backend` parse: true = reference.  Unknown values are an error,
+/// not a silent fall-through to PJRT.
+fn is_reference(args: &Args) -> Result<bool> {
+    match args.get("backend", "pjrt").as_str() {
+        "reference" | "ref" => Ok(true),
+        "pjrt" => Ok(false),
+        other => anyhow::bail!("unknown backend `{other}` \
+                                (pjrt|reference)"),
+    }
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    if is_reference(args)? {
+        Ok(Runtime::reference(args.usize("seed", 7) as u64))
+    } else {
+        Runtime::load(&artifacts_dir(args))
+    }
+}
+
 fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
     let kind = EngineKind::parse(&args.get("engine", "pard"))?;
     let target = args.get("target", "target-l");
@@ -85,7 +108,7 @@ fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let rt = Runtime::load(&artifacts_dir(args))?;
+    let rt = open_runtime(args)?;
     let cfg = engine_config(&rt, args)?;
     let task = args.get("task", "code");
     let n = args.usize("prompts", 16);
@@ -99,8 +122,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
     println!("TPS={:.1}  draft={:.3}s verify={:.3}s prefill={:.3}s \
               wall={:.3}s", m.tps(), m.draft_s, m.verify_s, m.prefill_s,
              m.wall_s);
-    println!("1-α={:.3} 4-α={:.3} 8-α={:.3}  ref-agreement={:.3}",
-             m.k_alpha(1), m.k_alpha(4), m.k_alpha(8), m.ref_agreement());
+    // reference backend has no grammar ground truth: show n/a, not 0
+    let ref_agree = if m.ref_total == 0 {
+        "n/a".to_string()
+    } else {
+        format!("{:.3}", m.ref_agreement())
+    };
+    println!("1-α={:.3} 4-α={:.3} 8-α={:.3}  ref-agreement={ref_agree}",
+             m.k_alpha(1), m.k_alpha(4), m.k_alpha(8));
     if args.flag("show") {
         for (i, out) in r.outputs.iter().take(3).enumerate() {
             println!("[{i}] {}", rt.tokenizer.detok(out));
@@ -110,7 +139,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let rt = Runtime::load(&artifacts_dir(args))?;
+    let rt = open_runtime(args)?;
     let cfg = engine_config(&rt, args)?;
     let task = args.get("task", "code");
     let n = args.usize("n", 32);
@@ -136,7 +165,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {
-    let rt = Runtime::load(&artifacts_dir(args))?;
+    let rt = open_runtime(args)?;
     let scale = if args.flag("full") {
         RunScale::full()
     } else {
@@ -162,7 +191,7 @@ fn cmd_tables(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig(args: &Args) -> Result<()> {
-    let rt = Runtime::load(&artifacts_dir(args))?;
+    let rt = open_runtime(args)?;
     let scale = if args.flag("full") {
         RunScale::full()
     } else {
@@ -181,7 +210,7 @@ fn cmd_fig(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let rt = Runtime::load(&artifacts_dir(args))?;
+    let rt = open_runtime(args)?;
     println!("artifacts: {}", rt.manifest.root.display());
     println!("vocab: {}  mask id: {}", rt.manifest.vocab_size,
              rt.manifest.mask);
@@ -200,10 +229,12 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = parse_args();
-    if !Path::new(&artifacts_dir(&args)).exists()
-        && args.cmd != "help"
+    if args.cmd != "help"
+        && !is_reference(&args)?
+        && !Path::new(&artifacts_dir(&args)).exists()
     {
-        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first \
+                       (or use --backend reference)");
     }
     match args.cmd.as_str() {
         "eval" => cmd_eval(&args),

@@ -7,6 +7,7 @@ use anyhow::Result;
 use crate::coordinator::engines::{EngineConfig, EngineKind};
 use crate::coordinator::evaluate::{run_eval, EvalResult};
 use crate::coordinator::router::default_draft;
+use crate::runtime::Backend;
 use crate::substrate::bench::Table;
 use crate::substrate::devices::{paper_model, DeviceProfile, ModelCost,
                                 A100_40GB, MI250X};

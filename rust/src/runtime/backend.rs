@@ -1,0 +1,83 @@
+//! The execution-backend abstraction (DESIGN.md §2).
+//!
+//! Every decode engine drives a model through this object-safe trait:
+//! `fwd` runs one forward call over a `(tokens, pos)` layout against a
+//! KV cache, `commit` scatters the call's K/V into the cache at
+//! caller-chosen positions (rejected columns → the garbage slot,
+//! DESIGN.md §7).  Two implementations exist:
+//!
+//! * [`crate::runtime::model::ModelRt`] — AOT-compiled PJRT executables
+//!   (feature `pjrt`), the measured serving path;
+//! * [`crate::runtime::reference::RefModel`] — a deterministic pure-Rust
+//!   f32 transformer with identical cache semantics, used by the
+//!   engine-equivalence test suite and artifact-free runs.
+//!
+//! The trait owns exactly the surface the engines need; anything
+//! PJRT-specific (bucket files, executable caches) stays behind it.
+
+use anyhow::Result;
+
+use super::artifact::{ModelCfg, ModelKind};
+use super::cache::KvCache;
+
+/// This call's staged K/V (shape `[L, b, t, H, D]`), kept in whatever
+/// form the backend can cheaply re-consume in the follow-up `commit`.
+pub enum KvStage {
+    /// Host-resident f32 rows (reference backend, scripted test fakes).
+    Host { k: Vec<f32>, v: Vec<f32> },
+    /// Host literals awaiting device upload (PJRT backend).
+    #[cfg(feature = "pjrt")]
+    Pjrt { k: xla::Literal, v: xla::Literal },
+}
+
+/// Host-side result of one `fwd` call.
+pub struct FwdOut {
+    /// `[b, t, vocab]` row-major.
+    pub logits: Vec<f32>,
+    /// `[b, t, d_model]` when the model exports hidden states (EAGLE).
+    pub hidden: Option<Vec<f32>>,
+    /// This call's K/V columns for the follow-up `commit`.
+    pub kv: KvStage,
+    /// Wall-clock of the forward execution + transfers.
+    pub elapsed_s: f64,
+}
+
+/// The forward/commit call surface of a loaded model (object-safe).
+pub trait Backend {
+    /// Architecture hyper-parameters (vocab, widths, `s_max`, …).
+    fn cfg(&self) -> &ModelCfg;
+
+    /// Standard LM vs EAGLE head (hidden-input) call convention.
+    fn kind(&self) -> ModelKind;
+
+    fn n_params(&self) -> usize;
+
+    /// Smallest T the backend can execute with `t >= t_needed` for
+    /// batch `b` (PJRT: exported bucket; reference: exact fit).
+    fn pick_t(&self, b: usize, t_needed: usize) -> Result<usize>;
+
+    fn new_cache(&self, batch: usize) -> Result<KvCache>;
+
+    /// Run the forward pass.  `tokens`/`pos` are `[b * t]` row-major;
+    /// `hidden_in` is required iff this is an EAGLE head.
+    fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
+           hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut>;
+
+    /// Scatter this step's K/V into the cache at `commit_pos`
+    /// (`[b * t]`; rejected columns point at the garbage slot).
+    /// Returns elapsed seconds.
+    fn commit(&self, b: usize, t: usize, out: &FwdOut, commit_pos: &[i32],
+              cache: &mut KvCache) -> Result<f64>;
+
+    /// Pre-compile / pre-warm the `(b, t)` shapes an engine will need.
+    /// No-op for backends that have nothing to JIT.
+    fn warmup(&self, _b: usize, _ts: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Warm every shape a dynamic T in `lo..=hi` could resolve to.
+    fn warmup_range(&self, _b: usize, _lo: usize, _hi: usize)
+                    -> Result<()> {
+        Ok(())
+    }
+}

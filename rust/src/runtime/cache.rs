@@ -1,10 +1,10 @@
-//! Device-resident KV cache handles.
+//! Backend-agnostic KV cache handles.
 //!
-//! The cache is a single `[2, L, B, S_max, H, D]` f32 PJRT buffer that
-//! never crosses to the host: `fwd` executables read it in place and
-//! `commit` executables produce a new device buffer with this step's
-//! accepted K/V scattered in (see aot.py's module docstring for why the
-//! two-executable split exists).
+//! Logically the cache is a `[2, L, B, S_max, H, D]` f32 tensor; the
+//! backing store is backend-private: a device-resident PJRT buffer that
+//! never crosses to the host, or a host `Vec<f32>` for the reference
+//! backend.  `fwd` reads it in place and `commit` scatters this step's
+//! accepted K/V into it.
 //!
 //! Speculative semantics (DESIGN.md §7): `cur_len[row]` is the committed
 //! length.  Slot `s` always holds live data for `s < cur_len`; rejected
@@ -13,22 +13,49 @@
 //! attend it because generation is capped at position `S_max - 2`.
 
 use anyhow::Result;
-use xla::{PjRtBuffer, PjRtClient};
 
 use super::artifact::ModelCfg;
 
+/// The backing store for the `[2, L, B, S, H, D]` tensor.
+pub enum CacheState {
+    /// Host-resident row-major f32 (reference backend, test fakes).
+    Host(Vec<f32>),
+    /// Device-resident PJRT buffer (never crosses to the host).
+    #[cfg(feature = "pjrt")]
+    Device(xla::PjRtBuffer),
+}
+
 pub struct KvCache {
-    pub buf: PjRtBuffer,
+    pub state: CacheState,
     pub batch: usize,
     pub s_max: usize,
     pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
     /// Committed sequence length per batch row.
     pub cur_len: Vec<u32>,
 }
 
 impl KvCache {
-    pub fn new(client: &PjRtClient, cfg: &ModelCfg, batch: usize)
-               -> Result<Self> {
+    /// Host-backed cache (reference backend and backend fakes).
+    pub fn host(cfg: &ModelCfg, batch: usize) -> Self {
+        let n = 2 * cfg.n_layers * batch * cfg.s_max * cfg.n_heads
+            * cfg.d_head;
+        KvCache {
+            state: CacheState::Host(vec![0f32; n]),
+            batch,
+            s_max: cfg.s_max,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            d_head: cfg.d_head,
+            cur_len: vec![0; batch],
+        }
+    }
+
+    /// Device-backed cache (PJRT).
+    #[cfg(feature = "pjrt")]
+    pub fn device(client: &xla::PjRtClient, cfg: &ModelCfg, batch: usize)
+                  -> Result<Self> {
         let n = 2 * cfg.n_layers * batch * cfg.s_max * cfg.n_heads
             * cfg.d_head;
         let zeros = vec![0f32; n];
@@ -36,10 +63,12 @@ impl KvCache {
                     cfg.d_head];
         let buf = client.buffer_from_host_buffer(&zeros, &dims, None)?;
         Ok(KvCache {
-            buf,
+            state: CacheState::Device(buf),
             batch,
             s_max: cfg.s_max,
             n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            d_head: cfg.d_head,
             cur_len: vec![0; batch],
         })
     }
@@ -55,14 +84,146 @@ impl KvCache {
     }
 
     /// Reset a single row (slot reuse under continuous batching).  The
-    /// stale device data needs no zeroing: the position-mask contract
-    /// means slots >= cur_len are rewritten before they become
-    /// attendable.
+    /// stale data needs no zeroing: the position-mask contract means
+    /// slots >= cur_len are rewritten before they become attendable.
     pub fn reset_row(&mut self, row: usize) {
         self.cur_len[row] = 0;
     }
 
     pub fn headroom(&self, row: usize) -> u32 {
         self.max_live_pos().saturating_sub(self.cur_len[row])
+    }
+
+    /// Flat offset of `[c, l, row, slot, 0, 0]` in a `[2, L, B, S, H*D]`
+    /// tensor — the single source of truth for the host cache layout.
+    fn flat_off(n_layers: usize, batch: usize, s_max: usize, hd: usize,
+                c: usize, l: usize, row: usize, slot: usize) -> usize {
+        (((c * n_layers + l) * batch + row) * s_max + slot) * hd
+    }
+
+    /// [`Self::flat_off`] with this cache's dimensions.
+    pub(crate) fn host_off(&self, c: usize, l: usize, row: usize,
+                           slot: usize) -> usize {
+        Self::flat_off(self.n_layers, self.batch, self.s_max,
+                       self.n_heads * self.d_head, c, l, row, slot)
+    }
+
+    /// Scatter staged K/V (`[L, b, t, H, D]`) into a host-backed cache
+    /// at `pos` — the commit primitive shared by the reference backend
+    /// and scripted test backends.  Later columns overwrite earlier
+    /// ones at the same slot (only ever exercised at the garbage slot).
+    pub fn host_scatter(&mut self, b: usize, t: usize, k: &[f32],
+                        v: &[f32], pos: &[i32]) -> Result<()> {
+        let hd = self.n_heads * self.d_head;
+        anyhow::ensure!(b == self.batch, "batch mismatch: {b} vs cache {}",
+                        self.batch);
+        anyhow::ensure!(pos.len() == b * t, "pos len {} != b*t", pos.len());
+        let want = self.n_layers * b * t * hd;
+        anyhow::ensure!(k.len() == want && v.len() == want,
+                        "staged kv len {} != {want}", k.len());
+        let s_max = self.s_max;
+        let n_layers = self.n_layers;
+        let batch = self.batch;
+        let data = match &mut self.state {
+            CacheState::Host(d) => d,
+            #[cfg(feature = "pjrt")]
+            CacheState::Device(_) => {
+                anyhow::bail!("host_scatter on a device cache")
+            }
+        };
+        for l in 0..n_layers {
+            for row in 0..b {
+                for col in 0..t {
+                    let slot = pos[row * t + col]
+                        .clamp(0, s_max as i32 - 1) as usize;
+                    let src = ((l * b + row) * t + col) * hd;
+                    let kdst = Self::flat_off(n_layers, batch, s_max, hd,
+                                              0, l, row, slot);
+                    let vdst = Self::flat_off(n_layers, batch, s_max, hd,
+                                              1, l, row, slot);
+                    data[kdst..kdst + hd]
+                        .copy_from_slice(&k[src..src + hd]);
+                    data[vdst..vdst + hd]
+                        .copy_from_slice(&v[src..src + hd]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read one `[H*D]` slot of a host-backed cache (`c`: 0 = K, 1 = V).
+    /// Test/debug helper; `None` for device caches or out-of-range slots.
+    pub fn host_kv(&self, c: usize, l: usize, row: usize, slot: usize)
+                   -> Option<&[f32]> {
+        if c >= 2 || l >= self.n_layers || row >= self.batch
+            || slot >= self.s_max
+        {
+            return None;
+        }
+        let hd = self.n_heads * self.d_head;
+        let off = self.host_off(c, l, row, slot);
+        match &self.state {
+            CacheState::Host(d) => d.get(off..off + hd),
+            #[cfg(feature = "pjrt")]
+            CacheState::Device(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 2,
+            d_ff: 8,
+            s_max: 6,
+        }
+    }
+
+    #[test]
+    fn host_scatter_places_rows() {
+        let c = cfg();
+        let mut cache = KvCache::host(&c, 2);
+        let (b, t, hd) = (2usize, 2usize, 4usize);
+        let n = c.n_layers * b * t * hd;
+        // stage value encodes (layer, row, col)
+        let k: Vec<f32> = (0..n)
+            .map(|i| {
+                let col = (i / hd) % t;
+                let row = (i / (hd * t)) % b;
+                let l = i / (hd * t * b);
+                (l * 100 + row * 10 + col) as f32
+            })
+            .collect();
+        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+        // row 0 commits cols to slots 1,2; row 1 redirects col 1 to
+        // the garbage slot
+        let pos = [1, 2, 0, 5];
+        cache.host_scatter(b, t, &k, &v, &pos).unwrap();
+        assert_eq!(cache.host_kv(0, 0, 0, 1).unwrap()[0], 0.0);
+        assert_eq!(cache.host_kv(0, 0, 0, 2).unwrap()[0], 1.0);
+        assert_eq!(cache.host_kv(0, 1, 0, 2).unwrap()[0], 101.0);
+        assert_eq!(cache.host_kv(0, 0, 1, 0).unwrap()[0], 10.0);
+        assert_eq!(cache.host_kv(0, 0, 1, 5).unwrap()[0], 11.0);
+        assert_eq!(cache.host_kv(1, 0, 0, 1).unwrap()[0], 0.5);
+        // untouched slots stay zero
+        assert_eq!(cache.host_kv(0, 0, 0, 3).unwrap()[0], 0.0);
+    }
+
+    #[test]
+    fn slot_bounds() {
+        let c = cfg();
+        let cache = KvCache::host(&c, 1);
+        assert_eq!(cache.garbage_slot(), 5);
+        assert_eq!(cache.max_live_pos(), 4);
+        assert!(cache.host_kv(0, 0, 0, 6).is_none());
+        assert!(cache.host_kv(2, 0, 0, 0).is_none());
     }
 }

@@ -1,53 +1,141 @@
-//! PJRT runtime: load `artifacts/` (HLO text + npz weights + manifest)
-//! and execute from the rust hot path.  Python never runs at serve time.
+//! Model runtimes behind the [`Backend`] trait (DESIGN.md §2):
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute_b`.
+//! * **PJRT** (feature `pjrt`): load `artifacts/` (HLO text + npz
+//!   weights + manifest) and execute AOT-compiled executables from the
+//!   rust hot path — python never runs at serve time.  Pattern follows
+//!   /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute_b`.
+//! * **Reference**: a deterministic pure-Rust transformer family with
+//!   identical cache semantics — no artifacts, no Python, runs in plain
+//!   `cargo test` (DESIGN.md §6).
 
 pub mod artifact;
+pub mod backend;
 pub mod cache;
+#[cfg(feature = "pjrt")]
 pub mod model;
+pub mod reference;
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::Result;
-use xla::PjRtClient;
 
 pub use artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
-pub use cache::KvCache;
-pub use model::{FwdOut, ModelRt};
+pub use backend::{Backend, FwdOut, KvStage};
+pub use cache::{CacheState, KvCache};
+#[cfg(feature = "pjrt")]
+pub use model::ModelRt;
 
 use crate::substrate::prompts::PromptSet;
 use crate::substrate::tokenizer::Tokenizer;
 
-/// Owns the PJRT client + manifest; hands out loaded models.
+enum Host {
+    #[cfg(feature = "pjrt")]
+    Pjrt { client: xla::PjRtClient },
+    Reference { seed: u64 },
+}
+
+/// Owns the manifest + backend host; hands out loaded models as
+/// [`Backend`] trait objects.
 pub struct Runtime {
-    pub client: PjRtClient,
     pub manifest: Manifest,
     pub tokenizer: Tokenizer,
+    host: Host,
+}
+
+/// A `Send` description of how to open a [`Runtime`] — lets the serve
+/// thread (and any other thread) construct its own runtime, since PJRT
+/// handles must never cross threads.
+#[derive(Debug, Clone)]
+pub enum RuntimeSpec {
+    /// AOT artifacts directory (PJRT backend).
+    Artifacts(PathBuf),
+    /// Deterministic in-process reference backend.
+    Reference { seed: u64 },
+}
+
+impl RuntimeSpec {
+    pub fn open(&self) -> Result<Runtime> {
+        match self {
+            RuntimeSpec::Artifacts(p) => Runtime::load(p),
+            RuntimeSpec::Reference { seed } => {
+                Ok(Runtime::reference(*seed))
+            }
+        }
+    }
 }
 
 impl Runtime {
+    #[cfg(feature = "pjrt")]
     pub fn load(artifacts: &Path) -> Result<Self> {
-        let client = PjRtClient::cpu()?;
+        let client = xla::PjRtClient::cpu()?;
         let manifest = Manifest::load(artifacts)?;
         let tokenizer = Tokenizer::load(&artifacts.join("vocab.json"))?;
-        Ok(Runtime { client, manifest, tokenizer })
+        Ok(Runtime { manifest, tokenizer, host: Host::Pjrt { client } })
     }
 
-    pub fn model(&self, name: &str) -> Result<Rc<ModelRt>> {
-        Ok(Rc::new(ModelRt::load(&self.client, &self.manifest, name)?))
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(_artifacts: &Path) -> Result<Self> {
+        anyhow::bail!(
+            "this build has no PJRT runtime (feature `pjrt` disabled) — \
+             run with the reference backend (--backend reference) or \
+             rebuild with --features pjrt"
+        )
+    }
+
+    /// Deterministic artifact-free runtime over the synthetic reference
+    /// family.  Same `seed` ⇒ bit-identical weights, prompts, outputs.
+    pub fn reference(seed: u64) -> Self {
+        let manifest = reference::reference_manifest();
+        let tokenizer = Tokenizer::synthetic(
+            manifest.vocab_size,
+            manifest.bos,
+            manifest.eos,
+            manifest.pad,
+            manifest.mask,
+            manifest.distinct_masks.clone(),
+        );
+        Runtime { manifest, tokenizer, host: Host::Reference { seed } }
+    }
+
+    pub fn is_reference(&self) -> bool {
+        match &self.host {
+            Host::Reference { .. } => true,
+            #[cfg(feature = "pjrt")]
+            Host::Pjrt { .. } => false,
+        }
+    }
+
+    pub fn model(&self, name: &str) -> Result<Rc<dyn Backend>> {
+        match &self.host {
+            #[cfg(feature = "pjrt")]
+            Host::Pjrt { client } => Ok(Rc::new(ModelRt::load(
+                client, &self.manifest, name)?)),
+            Host::Reference { seed } => {
+                let entry = self.manifest.model(name)?;
+                Ok(Rc::new(reference::RefModel::build(*seed, entry)?))
+            }
+        }
     }
 
     pub fn prompts(&self, task: &str) -> Result<PromptSet> {
-        let file = self.manifest.prompts.get(task).ok_or_else(|| {
-            anyhow::anyhow!(
-                "no prompt set `{task}` (have: {:?})",
-                self.manifest.prompts.keys().collect::<Vec<_>>()
-            )
-        })?;
-        PromptSet::load(&self.manifest.root.join(file), task)
+        match &self.host {
+            Host::Reference { seed } => {
+                reference::synthetic_prompts(task, *seed, &self.manifest)
+            }
+            #[cfg(feature = "pjrt")]
+            Host::Pjrt { .. } => {
+                let file =
+                    self.manifest.prompts.get(task).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "no prompt set `{task}` (have: {:?})",
+                            self.manifest.prompts.keys().collect::<Vec<_>>()
+                        )
+                    })?;
+                PromptSet::load(&self.manifest.root.join(file), task)
+            }
+        }
     }
 }

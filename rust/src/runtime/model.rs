@@ -1,5 +1,6 @@
-//! Loaded model runtime: weights on device + lazily compiled per-bucket
-//! executables, with typed `fwd` / `commit` call helpers.
+//! PJRT model runtime: weights on device + lazily compiled per-bucket
+//! executables, implementing the [`Backend`] trait's `fwd` / `commit`
+//! call surface.
 //!
 //! Call protocol (set by `python/compile/aot.py`):
 //!   fwd  (weights…, [hidden,] tokens[b,t], pos[b,t], cache) ->
@@ -19,8 +20,9 @@ use anyhow::{Context, Result};
 use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient,
           PjRtLoadedExecutable, XlaComputation};
 
-use super::artifact::{Bucket, Manifest, ModelEntry, ModelKind};
-use super::cache::KvCache;
+use super::artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
+use super::backend::{Backend, FwdOut, KvStage};
+use super::cache::{CacheState, KvCache};
 
 /// Synchronous f32 upload (safe wrt the async-literal hazard; see
 /// `ModelRt::load`).
@@ -31,20 +33,6 @@ pub fn upload_f32_literal(client: &PjRtClient, l: &Literal)
         shape.dims().iter().map(|d| *d as usize).collect();
     let data = l.to_vec::<f32>()?;
     Ok(client.buffer_from_host_buffer(&data, &dims, None)?)
-}
-
-/// Host-side result of one `fwd` call.
-pub struct FwdOut {
-    /// [b, t, vocab] row-major.
-    pub logits: Vec<f32>,
-    /// This call's K/V columns, kept as host literals for the follow-up
-    /// `commit` (shape [L, b, t, H, D]).
-    pub k_new: Literal,
-    pub v_new: Literal,
-    /// [b, t, d_model] when the entry exports hidden states.
-    pub hidden: Option<Vec<f32>>,
-    /// Wall-clock of the PJRT execute + transfers.
-    pub elapsed_s: f64,
 }
 
 pub struct ModelRt {
@@ -101,23 +89,6 @@ impl ModelRt {
         })
     }
 
-    pub fn cfg(&self) -> &super::artifact::ModelCfg {
-        &self.entry.cfg
-    }
-
-    pub fn n_params(&self) -> usize {
-        self.entry.cfg.n_params(self.entry.kind == ModelKind::Eagle)
-    }
-
-    /// Smallest exported fwd bucket with `t >= t_needed`.
-    pub fn pick_t(&self, b: usize, t_needed: usize) -> Result<usize> {
-        Ok(Manifest::pick_bucket(&self.entry.entries, b, t_needed)?.1)
-    }
-
-    pub fn new_cache(&self, batch: usize) -> Result<KvCache> {
-        KvCache::new(&self.client, &self.entry.cfg, batch)
-    }
-
     fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
         let t0 = Instant::now();
         let path = self.root.join(file);
@@ -156,9 +127,37 @@ impl ModelRt {
         Ok(exe)
     }
 
+    fn upload_i32(&self, data: &[i32], b: usize, t: usize)
+                  -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, &[b, t], None)?)
+    }
+}
+
+impl Backend for ModelRt {
+    fn cfg(&self) -> &ModelCfg {
+        &self.entry.cfg
+    }
+
+    fn kind(&self) -> ModelKind {
+        self.entry.kind
+    }
+
+    fn n_params(&self) -> usize {
+        self.entry.cfg.n_params(self.entry.kind == ModelKind::Eagle)
+    }
+
+    /// Smallest exported fwd bucket with `t >= t_needed`.
+    fn pick_t(&self, b: usize, t_needed: usize) -> Result<usize> {
+        Ok(Manifest::pick_bucket(&self.entry.entries, b, t_needed)?.1)
+    }
+
+    fn new_cache(&self, batch: usize) -> Result<KvCache> {
+        KvCache::device(&self.client, &self.entry.cfg, batch)
+    }
+
     /// Eagerly compile the buckets an engine will need (keeps JIT cost
     /// out of the measured serving loop).
-    pub fn warmup(&self, b: usize, ts: &[usize]) -> Result<()> {
+    fn warmup(&self, b: usize, ts: &[usize]) -> Result<()> {
         for &t in ts {
             self.fwd_exe(b, t)?;
             self.commit_exe(b, t)?;
@@ -167,8 +166,7 @@ impl ModelRt {
     }
 
     /// Warm every bucket a dynamic T in `lo..=hi` could resolve to.
-    pub fn warmup_range(&self, b: usize, lo: usize, hi: usize)
-                        -> Result<()> {
+    fn warmup_range(&self, b: usize, lo: usize, hi: usize) -> Result<()> {
         let mut seen = std::collections::HashSet::new();
         for need in lo..=hi {
             let t = self.pick_t(b, need)?;
@@ -180,18 +178,14 @@ impl ModelRt {
         Ok(())
     }
 
-    fn upload_i32(&self, data: &[i32], b: usize, t: usize)
-                  -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, &[b, t], None)?)
-    }
-
-    /// Run the forward executable.  `tokens`/`pos` are `[b * t]`
-    /// row-major; `hidden_in` is required iff this is an EAGLE head.
-    pub fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
-               hidden_in: Option<&[f32]>, cache: &KvCache)
-               -> Result<FwdOut> {
+    /// Run the forward executable.
+    fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
+           hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
         debug_assert_eq!(tokens.len(), b * t);
         debug_assert_eq!(pos.len(), b * t);
+        let CacheState::Device(cache_buf) = &cache.state else {
+            anyhow::bail!("PJRT fwd needs a device cache")
+        };
         let t0 = Instant::now();
         let exe = self.fwd_exe(b, t)?;
         let tok_buf = self.upload_i32(tokens, b, t)?;
@@ -217,7 +211,7 @@ impl ModelRt {
         }
         args.push(&tok_buf);
         args.push(&pos_buf);
-        args.push(&cache.buf);
+        args.push(cache_buf);
 
         let result = exe.execute_b(&args)?;
         let mut tuple = result[0][0].to_literal_sync()?;
@@ -235,29 +229,33 @@ impl ModelRt {
         };
         Ok(FwdOut {
             logits,
-            k_new,
-            v_new,
             hidden,
+            kv: KvStage::Pjrt { k: k_new, v: v_new },
             elapsed_s: t0.elapsed().as_secs_f64(),
         })
     }
 
-    /// Scatter this step's K/V into the device cache at `commit_pos`
-    /// (`[b * t]`; rejected columns point at the garbage slot).  Replaces
-    /// the cache buffer in place.  Returns elapsed seconds.
-    pub fn commit(&self, b: usize, t: usize, out: &FwdOut,
-                  commit_pos: &[i32], cache: &mut KvCache) -> Result<f64> {
+    /// Scatter this step's K/V into the device cache at `commit_pos`.
+    /// Replaces the cache buffer in place.
+    fn commit(&self, b: usize, t: usize, out: &FwdOut, commit_pos: &[i32],
+              cache: &mut KvCache) -> Result<f64> {
         debug_assert_eq!(commit_pos.len(), b * t);
+        let KvStage::Pjrt { k, v } = &out.kv else {
+            anyhow::bail!("host-staged FwdOut fed to the PJRT commit")
+        };
         let t0 = Instant::now();
         let exe = self.commit_exe(b, t)?;
-        let k_buf = upload_f32_literal(&self.client, &out.k_new)?;
-        let v_buf = upload_f32_literal(&self.client, &out.v_new)?;
+        let k_buf = upload_f32_literal(&self.client, k)?;
+        let v_buf = upload_f32_literal(&self.client, v)?;
         let pos_buf = self.upload_i32(commit_pos, b, t)?;
-        let args: [&PjRtBuffer; 4] = [&cache.buf, &k_buf, &v_buf, &pos_buf];
+        let CacheState::Device(cache_buf) = &mut cache.state else {
+            anyhow::bail!("PJRT commit needs a device cache")
+        };
+        let args: [&PjRtBuffer; 4] = [cache_buf, &k_buf, &v_buf, &pos_buf];
         let mut result = exe.execute_b(&args)?;
         // commit is lowered with return_tuple=False: single array output
         // that stays on device — the whole point of the split.
-        cache.buf = result
+        *cache_buf = result
             .pop()
             .and_then(|mut v| v.pop())
             .ok_or_else(|| anyhow::anyhow!("commit returned no buffer"))?;

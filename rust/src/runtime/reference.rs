@@ -1,0 +1,637 @@
+//! Deterministic pure-Rust reference backend (DESIGN.md §6).
+//!
+//! A small f32 LLaMA-style transformer implementing the same `extend`
+//! semantics as the AOT path (`python/compile/model.py`): per layer,
+//! this call's rotary K/V are scattered into a *transient copy* of the
+//! cache at `pos`, then every query attends cache slot `s` iff
+//! `s <= pos[query]` — so in-flight columns see each other exactly like
+//! committed slots, and the garbage slot `S_max - 1` is unreachable
+//! from any live position.  `commit` is the only operation that
+//! mutates the persistent cache, mirroring the fwd/commit executable
+//! split (DESIGN.md §7).
+//!
+//! Weights are seeded from `substrate::rng` (splitmix/xoshiro — no
+//! platform dependence); every floating-point loop runs in a fixed
+//! order, so outputs are bit-identical across runs AND across batch
+//! layouts: each (row, column) is computed independently, which is what
+//! lets the equivalence suite compare engines across batch sizes.
+//!
+//! The synthetic family mirrors the artifact family's names so every
+//! engine, the router, the batcher, and the CLI run unmodified:
+//! draft-s / target-m / target-l / target-xl, the hidden-exporting
+//! `target-l_h`, the PARD adaptation `pard-main` (same weights as
+//! draft-s: adaptation is weight-only, and weight-sharing gives the
+//! suite a deterministic handle on the accept-everything path), and an
+//! `eagle-target-l` head.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::artifact::{Manifest, ModelCfg, ModelEntry, ModelKind,
+                      PardVariantInfo};
+use super::backend::{Backend, FwdOut, KvStage};
+use super::cache::{CacheState, KvCache};
+use crate::substrate::prompts::{Prompt, PromptSet};
+use crate::substrate::rng::Rng;
+
+pub const REF_VOCAB: usize = 64;
+pub const REF_S_MAX: usize = 96;
+const REF_D_HEAD: usize = 16;
+/// Token ids below this are special (bos/eos/pad/mask/distinct masks).
+pub const REF_FIRST_PLAIN: i32 = 12;
+const ROPE_THETA: f32 = 10000.0;
+
+/// Stable per-name seed derivation (FNV-1a over the base seed).
+fn key_seed(base: u64, name: &str) -> u64 {
+    let mut h = base ^ 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The synthetic in-memory manifest the reference runtime serves.
+pub fn reference_manifest() -> Manifest {
+    let entry = |name: &str, d: usize, l: usize, h: usize, ff: usize,
+                 weight_key: &str, kind: ModelKind, hidden: bool| {
+        (
+            name.to_string(),
+            ModelEntry {
+                name: name.to_string(),
+                kind,
+                hidden,
+                arch: weight_key.to_string(),
+                // `weights` carries the weight-seed key: models sharing
+                // it share parameters (target-l_h, pard-main).
+                weights: weight_key.to_string(),
+                cfg: ModelCfg {
+                    name: name.to_string(),
+                    vocab: REF_VOCAB,
+                    d_model: d,
+                    n_layers: l,
+                    n_heads: h,
+                    d_head: REF_D_HEAD,
+                    d_ff: ff,
+                    s_max: REF_S_MAX,
+                },
+                entries: Vec::new(),
+            },
+        )
+    };
+    let models: BTreeMap<String, ModelEntry> = [
+        entry("draft-s", 32, 2, 2, 64, "draft-s", ModelKind::Lm, false),
+        entry("target-m", 48, 3, 3, 96, "target-m", ModelKind::Lm, false),
+        entry("target-l", 64, 4, 4, 128, "target-l", ModelKind::Lm, false),
+        entry("target-xl", 80, 5, 5, 160, "target-xl", ModelKind::Lm,
+              false),
+        entry("target-l_h", 64, 4, 4, 128, "target-l", ModelKind::Lm,
+              true),
+        entry("pard-main", 32, 2, 2, 64, "draft-s", ModelKind::Lm, false),
+        entry("eagle-target-l", 64, 1, 4, 128, "eagle-target-l",
+              ModelKind::Eagle, true),
+    ]
+    .into_iter()
+    .collect();
+    let prompts: BTreeMap<String, String> = ["code", "math", "gsm"]
+        .into_iter()
+        .map(|t| (t.to_string(), "<synthetic>".to_string()))
+        .collect();
+    let mut pard_variants = BTreeMap::new();
+    pard_variants.insert(
+        "pard-main".to_string(),
+        PardVariantInfo { k_train: 8, r: 0.7, r_min: 0.3,
+                          shared_mask: true },
+    );
+    Manifest {
+        root: PathBuf::from("<reference>"),
+        vocab_size: REF_VOCAB,
+        bos: 0,
+        eos: 1,
+        pad: 2,
+        mask: 3,
+        distinct_masks: (4..12).collect(),
+        models,
+        commits: BTreeMap::new(),
+        prompts,
+        pard_variants,
+        main_pard: "pard-main".to_string(),
+    }
+}
+
+/// Deterministic synthetic prompt sets (references are empty: there is
+/// no grammar ground truth on the reference backend; equivalence tests
+/// compare engines against each other instead).
+pub fn synthetic_prompts(task: &str, seed: u64, manifest: &Manifest)
+                         -> Result<PromptSet> {
+    anyhow::ensure!(
+        manifest.prompts.contains_key(task),
+        "no prompt set `{task}` (have: {:?})",
+        manifest.prompts.keys().collect::<Vec<_>>()
+    );
+    let mut rng = Rng::new(key_seed(seed, task) ^ 0x5052_4f4d_5054);
+    let n = 32;
+    let prompts = (0..n)
+        .map(|_| {
+            let len = rng.range(4, 9);
+            let mut ids = Vec::with_capacity(len + 1);
+            ids.push(manifest.bos);
+            for _ in 0..len {
+                ids.push(rng.range(REF_FIRST_PLAIN as usize,
+                                   REF_VOCAB - 1) as i32);
+            }
+            Prompt { task: task.to_string(), prompt: ids,
+                     reference: Vec::new() }
+        })
+        .collect();
+    Ok(PromptSet { task: task.to_string(), prompts })
+}
+
+struct RefLayer {
+    wq: Vec<f32>,      // [d, h*dh]
+    wk: Vec<f32>,      // [d, h*dh]
+    wv: Vec<f32>,      // [d, h*dh]
+    wo: Vec<f32>,      // [h*dh, d]
+    w1: Vec<f32>,      // [d, ff]
+    w2: Vec<f32>,      // [ff, d]
+    w3: Vec<f32>,      // [d, ff]
+    ln_attn: Vec<f32>, // [d]
+    ln_mlp: Vec<f32>,  // [d]
+}
+
+pub struct RefModel {
+    cfg: ModelCfg,
+    kind: ModelKind,
+    /// fwd exports a trailing hidden-state output.
+    hidden: bool,
+    embed: Vec<f32>, // [vocab, d]; lm head is tied
+    layers: Vec<RefLayer>,
+    ln_f: Vec<f32>,
+    fuse: Option<Vec<f32>>, // [2d, d] (EAGLE)
+    inv_freq: Vec<f32>,     // [d_head / 2]
+}
+
+fn dense(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+impl RefModel {
+    /// Build the model named by `entry`, deterministically from
+    /// `seed` + the entry's weight key.
+    pub fn build(seed: u64, entry: &ModelEntry) -> Result<RefModel> {
+        let cfg = entry.cfg.clone();
+        let (d, h, dh, ff, v) = (cfg.d_model, cfg.n_heads, cfg.d_head,
+                                 cfg.d_ff, cfg.vocab);
+        let hd = h * dh;
+        let mut rng = Rng::new(key_seed(seed, &entry.weights));
+        let embed = dense(&mut rng, v, d, 0.02);
+        let layers = (0..cfg.n_layers)
+            .map(|_| RefLayer {
+                wq: dense(&mut rng, d, hd, (d as f32).powf(-0.5)),
+                wk: dense(&mut rng, d, hd, (d as f32).powf(-0.5)),
+                wv: dense(&mut rng, d, hd, (d as f32).powf(-0.5)),
+                wo: dense(&mut rng, hd, d, (hd as f32).powf(-0.5)),
+                w1: dense(&mut rng, d, ff, (d as f32).powf(-0.5)),
+                w2: dense(&mut rng, ff, d, (ff as f32).powf(-0.5)),
+                w3: dense(&mut rng, d, ff, (d as f32).powf(-0.5)),
+                ln_attn: vec![1.0; d],
+                ln_mlp: vec![1.0; d],
+            })
+            .collect();
+        let fuse = match entry.kind {
+            ModelKind::Eagle => Some(dense(&mut rng, 2 * d, d,
+                                           (2.0 * d as f32).powf(-0.5))),
+            ModelKind::Lm => None,
+        };
+        let half = dh / 2;
+        let inv_freq = (0..half)
+            .map(|c| ROPE_THETA.powf(-(c as f32) / half as f32))
+            .collect();
+        Ok(RefModel {
+            cfg,
+            kind: entry.kind,
+            hidden: entry.hidden,
+            embed,
+            layers,
+            ln_f: vec![1.0; d],
+            fuse,
+            inv_freq,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fixed-order f32 math (order must never depend on batch layout)
+// ---------------------------------------------------------------------------
+
+/// rmsnorm per `d`-row: `x * rsqrt(mean(x²) + eps) * w`.
+fn rmsnorm(x: &[f32], d: usize, w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    for i in 0..x.len() / d {
+        let row = &x[i * d..(i + 1) * d];
+        let mut ss = 0f32;
+        for &e in row {
+            ss += e * e;
+        }
+        let inv = 1.0 / (ss / d as f32 + 1e-5).sqrt();
+        for j in 0..d {
+            out[i * d + j] = row[j] * inv * w[j];
+        }
+    }
+    out
+}
+
+/// `out[n, dout] += a[n, din] @ w[din, dout]` (fixed k-outer order).
+fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize,
+              din: usize, dout: usize) {
+    for i in 0..n {
+        let ar = &a[i * din..(i + 1) * din];
+        let or = &mut out[i * dout..(i + 1) * dout];
+        for (ki, &av) in ar.iter().enumerate() {
+            let wr = &w[ki * dout..(ki + 1) * dout];
+            for j in 0..dout {
+                or[j] += av * wr[j];
+            }
+        }
+    }
+}
+
+/// Rotary embedding in place over one `[h, dh]` token vector.
+fn rope(vecs: &mut [f32], p: i32, h: usize, dh: usize, inv_freq: &[f32]) {
+    let half = dh / 2;
+    for head in 0..h {
+        let base = head * dh;
+        for c in 0..half {
+            let ang = p as f32 * inv_freq[c];
+            let (sin, cos) = ang.sin_cos();
+            let x1 = vecs[base + c];
+            let x2 = vecs[base + half + c];
+            vecs[base + c] = x1 * cos - x2 * sin;
+            vecs[base + half + c] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+impl Backend for RefModel {
+    fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    fn kind(&self) -> ModelKind {
+        self.kind
+    }
+
+    fn n_params(&self) -> usize {
+        self.cfg.n_params(self.kind == ModelKind::Eagle)
+    }
+
+    /// No bucket grid: the reference path executes any T exactly.
+    fn pick_t(&self, _b: usize, t_needed: usize) -> Result<usize> {
+        Ok(t_needed.max(1))
+    }
+
+    fn new_cache(&self, batch: usize) -> Result<KvCache> {
+        Ok(KvCache::host(&self.cfg, batch))
+    }
+
+    fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
+           hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
+        let t0 = Instant::now();
+        let (d, h, dh, ff, vocab) = (self.cfg.d_model, self.cfg.n_heads,
+                                     self.cfg.d_head, self.cfg.d_ff,
+                                     self.cfg.vocab);
+        let hd = h * dh;
+        let s_max = cache.s_max;
+        anyhow::ensure!(tokens.len() == b * t && pos.len() == b * t,
+                        "tokens/pos must be [b*t]");
+        anyhow::ensure!(b == cache.batch, "batch {b} != cache batch {}",
+                        cache.batch);
+        let host = match &cache.state {
+            CacheState::Host(data) => data,
+            #[cfg(feature = "pjrt")]
+            CacheState::Device(_) => {
+                anyhow::bail!("reference fwd needs a host cache")
+            }
+        };
+
+        // token embeddings (EAGLE: fuse [target hidden ; embedding])
+        let mut x = vec![0f32; b * t * d];
+        match (self.kind, hidden_in) {
+            (ModelKind::Lm, None) => {
+                for i in 0..b * t {
+                    let tok =
+                        tokens[i].clamp(0, vocab as i32 - 1) as usize;
+                    x[i * d..(i + 1) * d]
+                        .copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+                }
+            }
+            (ModelKind::Eagle, Some(hin)) => {
+                anyhow::ensure!(hin.len() == b * t * d,
+                                "hidden_in must be [b*t*d]");
+                let fuse = self.fuse.as_ref().expect("eagle has fuse");
+                let mut cat = vec![0f32; 2 * d];
+                for i in 0..b * t {
+                    let tok =
+                        tokens[i].clamp(0, vocab as i32 - 1) as usize;
+                    cat[..d].copy_from_slice(&hin[i * d..(i + 1) * d]);
+                    cat[d..].copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+                    let or = &mut x[i * d..(i + 1) * d];
+                    for (r, &cv) in cat.iter().enumerate() {
+                        let wr = &fuse[r * d..(r + 1) * d];
+                        for j in 0..d {
+                            or[j] += cv * wr[j];
+                        }
+                    }
+                }
+            }
+            (ModelKind::Eagle, None) => {
+                anyhow::bail!("EAGLE fwd requires hidden input")
+            }
+            (ModelKind::Lm, Some(_)) => {
+                anyhow::bail!("LM fwd takes no hidden input")
+            }
+        }
+
+        let n_layers = self.layers.len();
+        let mut k_stage = vec![0f32; n_layers * b * t * hd];
+        let mut v_stage = vec![0f32; n_layers * b * t * hd];
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut scores = vec![0f32; s_max];
+
+        for (li, lyr) in self.layers.iter().enumerate() {
+            let xn = rmsnorm(&x, d, &lyr.ln_attn);
+            let mut q = vec![0f32; b * t * hd];
+            let mut k = vec![0f32; b * t * hd];
+            let mut v = vec![0f32; b * t * hd];
+            matmul_acc(&xn, &lyr.wq, &mut q, b * t, d, hd);
+            matmul_acc(&xn, &lyr.wk, &mut k, b * t, d, hd);
+            matmul_acc(&xn, &lyr.wv, &mut v, b * t, d, hd);
+            for i in 0..b * t {
+                rope(&mut q[i * hd..(i + 1) * hd], pos[i], h, dh,
+                     &self.inv_freq);
+                rope(&mut k[i * hd..(i + 1) * hd], pos[i], h, dh,
+                     &self.inv_freq);
+            }
+            k_stage[li * b * t * hd..(li + 1) * b * t * hd]
+                .copy_from_slice(&k);
+            v_stage[li * b * t * hd..(li + 1) * b * t * hd]
+                .copy_from_slice(&v);
+
+            // Transient cache view: persistent slots + this call's K/V
+            // scattered at `pos` (the `extend` semantics; the persistent
+            // cache is only mutated by `commit`).  Live queries attend
+            // only slots <= pos < garbage, so the view is truncated at
+            // the highest LIVE position; parked columns (pos == the
+            // garbage slot) neither scatter into it nor attend it —
+            // their outputs are ignored by contract, so they get zeros.
+            let garbage = s_max - 1;
+            let s_used = pos
+                .iter()
+                .map(|&p| p.clamp(0, s_max as i32 - 1) as usize)
+                .filter(|&p| p < garbage)
+                .max()
+                .map_or(1, |p| p + 1);
+            let mut ck = vec![0f32; b * s_used * hd];
+            let mut cv = vec![0f32; b * s_used * hd];
+            for row in 0..b {
+                let koff = cache.host_off(0, li, row, 0);
+                let voff = cache.host_off(1, li, row, 0);
+                ck[row * s_used * hd..(row + 1) * s_used * hd]
+                    .copy_from_slice(&host[koff..koff + s_used * hd]);
+                cv[row * s_used * hd..(row + 1) * s_used * hd]
+                    .copy_from_slice(&host[voff..voff + s_used * hd]);
+            }
+            for row in 0..b {
+                for col in 0..t {
+                    let slot = pos[row * t + col]
+                        .clamp(0, s_max as i32 - 1) as usize;
+                    if slot >= s_used {
+                        continue; // parked column: garbage slot only
+                    }
+                    let src = (row * t + col) * hd;
+                    let dst = (row * s_used + slot) * hd;
+                    ck[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                    cv[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                }
+            }
+
+            // causal cached attention: slot s attendable iff s <= pos
+            let mut attn = vec![0f32; b * t * hd];
+            for row in 0..b {
+                for col in 0..t {
+                    let p = pos[row * t + col]
+                        .clamp(0, s_max as i32 - 1) as usize;
+                    if p >= s_used {
+                        continue; // parked query: output ignored, zeros
+                    }
+                    for head in 0..h {
+                        let qv = &q[(row * t + col) * hd + head * dh..];
+                        let qv = &qv[..dh];
+                        let mut m = f32::NEG_INFINITY;
+                        for (s, sc) in scores.iter_mut()
+                            .enumerate().take(p + 1)
+                        {
+                            let kv = &ck[(row * s_used + s) * hd
+                                + head * dh..];
+                            let mut acc = 0f32;
+                            for e in 0..dh {
+                                acc += qv[e] * kv[e];
+                            }
+                            *sc = acc * scale;
+                            if *sc > m {
+                                m = *sc;
+                            }
+                        }
+                        let mut denom = 0f32;
+                        for sc in scores.iter_mut().take(p + 1) {
+                            *sc = (*sc - m).exp();
+                            denom += *sc;
+                        }
+                        let out = &mut attn[(row * t + col) * hd
+                            + head * dh..(row * t + col) * hd
+                            + head * dh + dh];
+                        for (s, sc) in scores.iter().enumerate()
+                            .take(p + 1)
+                        {
+                            let w = sc / denom;
+                            let vv = &cv[(row * s_used + s) * hd
+                                + head * dh..];
+                            for e in 0..dh {
+                                out[e] += w * vv[e];
+                            }
+                        }
+                    }
+                }
+            }
+            matmul_acc(&attn, &lyr.wo, &mut x, b * t, hd, d);
+
+            let xn2 = rmsnorm(&x, d, &lyr.ln_mlp);
+            let mut g = vec![0f32; b * t * ff];
+            let mut u = vec![0f32; b * t * ff];
+            matmul_acc(&xn2, &lyr.w1, &mut g, b * t, d, ff);
+            matmul_acc(&xn2, &lyr.w3, &mut u, b * t, d, ff);
+            for i in 0..b * t * ff {
+                let gv = g[i];
+                g[i] = gv * (1.0 / (1.0 + (-gv).exp())) * u[i];
+            }
+            matmul_acc(&g, &lyr.w2, &mut x, b * t, ff, d);
+        }
+
+        let hidden = rmsnorm(&x, d, &self.ln_f);
+        let mut logits = vec![0f32; b * t * vocab];
+        for i in 0..b * t {
+            let hr = &hidden[i * d..(i + 1) * d];
+            for tok in 0..vocab {
+                let er = &self.embed[tok * d..(tok + 1) * d];
+                let mut acc = 0f32;
+                for j in 0..d {
+                    acc += hr[j] * er[j];
+                }
+                logits[i * vocab + tok] = acc;
+            }
+        }
+        Ok(FwdOut {
+            logits,
+            hidden: if self.hidden { Some(hidden) } else { None },
+            kv: KvStage::Host { k: k_stage, v: v_stage },
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn commit(&self, b: usize, t: usize, out: &FwdOut, commit_pos: &[i32],
+              cache: &mut KvCache) -> Result<f64> {
+        let t0 = Instant::now();
+        match &out.kv {
+            KvStage::Host { k, v } => {
+                cache.host_scatter(b, t, k, v, commit_pos)?;
+            }
+            #[cfg(feature = "pjrt")]
+            KvStage::Pjrt { .. } => {
+                anyhow::bail!("PJRT FwdOut fed to the reference commit")
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sampling::argmax;
+
+    fn model(name: &str) -> RefModel {
+        let m = reference_manifest();
+        RefModel::build(7, m.models.get(name).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn deterministic_weights_and_logits() {
+        let a = model("draft-s");
+        let b = model("draft-s");
+        assert_eq!(a.embed, b.embed);
+        let ca = a.new_cache(1).unwrap();
+        let cb = b.new_cache(1).unwrap();
+        let oa = a.fwd(1, 3, &[0, 13, 14], &[0, 1, 2], None, &ca).unwrap();
+        let ob = b.fwd(1, 3, &[0, 13, 14], &[0, 1, 2], None, &cb).unwrap();
+        assert_eq!(oa.logits, ob.logits);
+    }
+
+    #[test]
+    fn weight_keys_share_and_split() {
+        let tl = model("target-l");
+        let tlh = model("target-l_h");
+        assert_eq!(tl.embed, tlh.embed, "target-l_h shares target-l");
+        let ds = model("draft-s");
+        let pm = model("pard-main");
+        assert_eq!(ds.embed, pm.embed, "pard-main shares draft-s");
+        let tm = model("target-m");
+        assert_ne!(&tm.embed[..8], &tl.embed[..8]);
+    }
+
+    #[test]
+    fn padding_columns_do_not_change_live_logits() {
+        // Same prompt through exact-T and padded-T calls (pads parked
+        // at the garbage slot) must give identical live logits.
+        let m = model("target-m");
+        let cache = m.new_cache(1).unwrap();
+        let g = cache.garbage_slot();
+        let prompt = [0i32, 13, 20, 21];
+        let vocab = m.cfg().vocab;
+        let exact = m
+            .fwd(1, 4, &prompt, &[0, 1, 2, 3], None, &cache)
+            .unwrap();
+        let mut toks = prompt.to_vec();
+        let mut pos = vec![0, 1, 2, 3];
+        toks.extend([2, 2, 2]); // pad
+        pos.extend([g, g, g]);
+        let padded = m.fwd(1, 7, &toks, &pos, None, &cache).unwrap();
+        assert_eq!(exact.logits[..4 * vocab], padded.logits[..4 * vocab]);
+    }
+
+    #[test]
+    fn commit_then_decode_matches_in_call_attention() {
+        // Feeding [a, b] in one call must equal feeding [a], committing,
+        // then feeding [b] — the cached-decode identity the engines
+        // build on.
+        let m = model("draft-s");
+        let vocab = m.cfg().vocab;
+        let joint_cache = m.new_cache(1).unwrap();
+        let joint = m
+            .fwd(1, 2, &[0, 17], &[0, 1], None, &joint_cache)
+            .unwrap();
+        let mut cache = m.new_cache(1).unwrap();
+        let o0 = m.fwd(1, 1, &[0], &[0], None, &cache).unwrap();
+        m.commit(1, 1, &o0, &[0], &mut cache).unwrap();
+        cache.cur_len[0] = 1;
+        let o1 = m.fwd(1, 1, &[17], &[1], None, &cache).unwrap();
+        assert_eq!(&joint.logits[vocab..2 * vocab], &o1.logits[..vocab]);
+        assert_eq!(argmax(&joint.logits[vocab..2 * vocab]),
+                   argmax(&o1.logits[..vocab]));
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        // Batch row r's logits must not depend on what other rows do.
+        let m = model("draft-s");
+        let cache1 = m.new_cache(1).unwrap();
+        let solo = m.fwd(1, 2, &[0, 30], &[0, 1], None, &cache1).unwrap();
+        let cache2 = m.new_cache(2).unwrap();
+        let g = cache2.garbage_slot();
+        let duo = m
+            .fwd(2, 2, &[0, 30, 2, 2], &[0, 1, g, g], None, &cache2)
+            .unwrap();
+        let vocab = m.cfg().vocab;
+        assert_eq!(solo.logits[..2 * vocab], duo.logits[..2 * vocab]);
+    }
+
+    #[test]
+    fn eagle_head_runs_and_exports_hidden() {
+        let m = model("eagle-target-l");
+        let d = m.cfg().d_model;
+        let cache = m.new_cache(1).unwrap();
+        let hin = vec![0.25f32; 2 * d];
+        let out = m.fwd(1, 2, &[0, 13], &[0, 1], Some(&hin), &cache)
+            .unwrap();
+        assert_eq!(out.hidden.as_ref().unwrap().len(), 2 * d);
+        assert!(m.fwd(1, 1, &[0], &[0], None, &cache).is_err(),
+                "eagle fwd without hidden must fail");
+    }
+
+    #[test]
+    fn synthetic_prompts_are_deterministic_and_plain() {
+        let m = reference_manifest();
+        let a = synthetic_prompts("code", 7, &m).unwrap();
+        let b = synthetic_prompts("code", 7, &m).unwrap();
+        assert_eq!(a.prompts[0].prompt, b.prompts[0].prompt);
+        assert!(a.prompts.iter().all(|p| {
+            p.prompt[0] == m.bos
+                && p.prompt[1..]
+                    .iter()
+                    .all(|&t| t >= REF_FIRST_PLAIN
+                         && t < REF_VOCAB as i32)
+        }));
+        assert!(synthetic_prompts("nope", 7, &m).is_err());
+    }
+}

@@ -5,7 +5,6 @@
 //! uses: an engine loop on its own OS thread, callers talk to it over
 //! channels.  Documented as a substitution in DESIGN.md §3.)
 
-use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
 
@@ -13,7 +12,7 @@ use anyhow::Result;
 
 use crate::coordinator::engines::{build_engine, EngineConfig};
 use crate::coordinator::metrics::Metrics;
-use crate::Runtime;
+use crate::runtime::RuntimeSpec;
 
 #[derive(Debug)]
 pub struct GenRequest {
@@ -42,14 +41,16 @@ pub struct Server {
 }
 
 impl Server {
-    /// Boot an engine on its own thread.  The artifacts and engine are
-    /// loaded inside the thread (PJRT handles never cross threads).
-    pub fn start(artifacts: PathBuf, cfg: EngineConfig) -> Result<Self> {
+    /// Boot an engine on its own thread.  The runtime (PJRT artifacts
+    /// or the reference backend) and engine are constructed inside the
+    /// thread (PJRT handles never cross threads); `RuntimeSpec` is the
+    /// `Send` description of what to open.
+    pub fn start(spec: RuntimeSpec, cfg: EngineConfig) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let join = thread::Builder::new()
             .name("pard-engine".into())
             .spawn(move || -> Result<()> {
-                let rt = Runtime::load(&artifacts)?;
+                let rt = spec.open()?;
                 let mut engine = build_engine(&rt, &cfg)?;
                 engine.warmup()?;
                 // Simple loop: slot 0 serves requests FCFS; the batched

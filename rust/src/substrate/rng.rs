@@ -65,6 +65,14 @@ impl Rng {
         self.f64() < p
     }
 
+    /// Standard normal via Box–Muller (used for reference-backend
+    /// weight init; determinism inherits from the integer stream).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64(); // (0, 1] — keeps ln() finite
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
     /// Exponential inter-arrival sample with the given rate (per second).
     pub fn exp(&mut self, rate: f64) -> f64 {
         -(1.0 - self.f64()).ln() / rate
@@ -122,6 +130,19 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(8);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
     }
 
     #[test]

@@ -53,6 +53,29 @@ impl Tokenizer {
         })
     }
 
+    /// In-memory tokenizer for the artifact-free reference backend:
+    /// specials get readable names, plain ids render as `<id>`.
+    pub fn synthetic(vocab_size: usize, bos: i32, eos: i32, pad: i32,
+                     mask: i32, distinct_masks: Vec<i32>) -> Self {
+        let mut tok_of = HashMap::new();
+        tok_of.insert(bos, "<bos>".to_string());
+        tok_of.insert(eos, "<eos>".to_string());
+        tok_of.insert(pad, "<pad>".to_string());
+        tok_of.insert(mask, "<mask>".to_string());
+        for (j, &id) in distinct_masks.iter().enumerate() {
+            tok_of.insert(id, format!("<mask_{j}>"));
+        }
+        Tokenizer {
+            vocab_size,
+            bos,
+            eos,
+            pad,
+            mask,
+            distinct_masks,
+            tok_of,
+        }
+    }
+
     /// Human-readable rendering of a token-id stream.
     pub fn detok(&self, ids: &[i32]) -> String {
         ids.iter()

@@ -1,0 +1,160 @@
+//! Continuous-batcher tests with a fake `Engine`: FCFS admission,
+//! slot refill between iterations, occupancy accounting, window-based
+//! throughput, and sane stats on a zero-request trace — all without
+//! any model backend.
+
+use anyhow::Result;
+use pard::coordinator::batcher::serve_trace;
+use pard::coordinator::engines::{Engine, EngineKind};
+use pard::coordinator::metrics::Metrics;
+use pard::coordinator::sequence::Sequence;
+use pard::substrate::workload::{Request, Trace};
+
+/// One token per active slot per step; requests identify themselves via
+/// `prompt[0]` so admission order can be asserted.
+struct FakeEngine {
+    seqs: Vec<Sequence>,
+    metrics: Metrics,
+    admitted: Vec<i32>,
+}
+
+impl FakeEngine {
+    fn new(batch: usize) -> Self {
+        FakeEngine {
+            seqs: vec![Sequence::default(); batch],
+            metrics: Metrics::default(),
+            admitted: Vec::new(),
+        }
+    }
+}
+
+impl Engine for FakeEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::ArPlus
+    }
+
+    fn batch(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
+             -> Result<()> {
+        self.admitted.push(prompt[0]);
+        self.seqs[slot] = Sequence::start(prompt, max_new);
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<()> {
+        for seq in &mut self.seqs {
+            if !seq.active || seq.done {
+                continue;
+            }
+            let taken = seq.push_committed(&[42], -1);
+            self.metrics.generated += taken as u64;
+            if seq.done {
+                seq.active = false;
+                self.metrics.requests += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn seqs(&self) -> &[Sequence] {
+        &self.seqs
+    }
+
+    fn seqs_mut(&mut self) -> &mut [Sequence] {
+        &mut self.seqs
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+fn closed_trace(n: usize, max_new: usize) -> Trace {
+    Trace {
+        requests: (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_s: 0.0,
+                prompt: vec![i as i32, 7, 8],
+                reference: Vec::new(),
+                task: "t".into(),
+                max_new,
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn fcfs_admission_order() {
+    let mut e = FakeEngine::new(2);
+    let stats = serve_trace(&mut e, &closed_trace(5, 3)).unwrap();
+    assert_eq!(stats.completed, 5);
+    assert_eq!(e.admitted, vec![0, 1, 2, 3, 4],
+               "queue must drain first-come-first-served");
+}
+
+#[test]
+fn slot_refill_and_occupancy_accounting() {
+    // 5 requests × 3 tokens on 2 slots: waves (0,1), (2,3), (4) →
+    // 9 iterations, occupancy (2+2+2 + 2+2+2 + 1+1+1)/9 = 5/3.
+    let mut e = FakeEngine::new(2);
+    let stats = serve_trace(&mut e, &closed_trace(5, 3)).unwrap();
+    assert_eq!(e.metrics.iterations, 9);
+    assert_eq!(stats.generated, 15);
+    assert!((stats.mean_occupancy - 5.0 / 3.0).abs() < 1e-9,
+            "occupancy {}", stats.mean_occupancy);
+}
+
+#[test]
+fn throughput_counts_only_this_window() {
+    // An engine that already served an earlier trace must not have its
+    // lifetime token count leak into this trace's throughput.
+    let mut e = FakeEngine::new(2);
+    e.metrics.generated = 1_000_000;
+    let stats = serve_trace(&mut e, &closed_trace(4, 2)).unwrap();
+    assert_eq!(stats.generated, 8, "window tokens, not lifetime");
+    assert!(stats.wall_s > 0.0);
+    let expect = stats.generated as f64 / stats.wall_s;
+    assert!((stats.throughput_tps - expect).abs() < 1e-9);
+}
+
+#[test]
+fn latency_includes_queueing_delay() {
+    // All requests arrive at t=0 but only 1 slot exists: the later
+    // request queues while the first runs, so its arrival-based latency
+    // must be >= the first one's.
+    let mut e = FakeEngine::new(1);
+    let stats = serve_trace(&mut e, &closed_trace(2, 64)).unwrap();
+    assert_eq!(stats.completed, 2);
+    assert!(stats.latency_p95_s >= stats.latency_p50_s);
+    // p95 (last finisher) covers both requests' serving time; the mean
+    // would be identical only if queueing were dropped.
+    assert!(stats.latency_mean_s < stats.latency_p95_s);
+}
+
+#[test]
+fn zero_request_trace_yields_sane_stats() {
+    let mut e = FakeEngine::new(2);
+    let stats = serve_trace(&mut e, &Trace { requests: Vec::new() })
+        .unwrap();
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.generated, 0);
+    for v in [stats.latency_mean_s, stats.latency_p50_s,
+              stats.latency_p95_s, stats.throughput_tps,
+              stats.mean_occupancy]
+    {
+        assert!(v.is_finite(), "stat must be finite, got {v}");
+        assert_eq!(v, 0.0);
+    }
+}

@@ -1,0 +1,317 @@
+//! Engine-equivalence suite on the deterministic reference backend —
+//! runs in plain `cargo test` with NO Python/XLA artifacts.
+//!
+//! The central assertion is the LOSSLESS property of draft-then-verify
+//! (paper §2 / Eq. 3-4; the invariant ParallelSpec and the SD survey
+//! both rest on): VSD/PARD/EAGLE greedy outputs are token-identical to
+//! AR+ greedy outputs for every prompt, at any K and batch size, and
+//! AR+ itself is identical to uncached full-recompute AR — which
+//! certifies the whole (tokens, pos, commit_pos) cache machinery, not
+//! just the acceptance arithmetic.
+
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind};
+use pard::coordinator::router::default_draft;
+use pard::coordinator::sampling::argmax;
+use pard::runtime::Backend;
+use pard::Runtime;
+
+fn rt() -> Runtime {
+    Runtime::reference(7)
+}
+
+fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
+       batch: usize) -> EngineConfig {
+    EngineConfig {
+        kind,
+        target: target.to_string(),
+        draft: default_draft(&rt.manifest, kind, target).unwrap(),
+        batch,
+        k,
+        max_new: 20,
+        shared_mask: true,
+    }
+}
+
+fn gen(rt: &Runtime, c: &EngineConfig, prompts: &[Vec<i32>])
+       -> Vec<Vec<i32>> {
+    let mut e = build_engine(rt, c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), prompts, c.max_new).unwrap()
+}
+
+fn some_prompts(rt: &Runtime, n: usize) -> Vec<Vec<i32>> {
+    rt.prompts("code")
+        .unwrap()
+        .take(n)
+        .into_iter()
+        .map(|p| p.prompt)
+        .collect()
+}
+
+/// The acceptance-criterion sweep: every speculative engine must
+/// reproduce AR+ greedy outputs exactly, for K ∈ {2,4,8} × batch ∈
+/// {1,4}.
+#[test]
+fn lossless_across_k_and_batch() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 4);
+    let base = gen(&rt, &cfg(&rt, EngineKind::ArPlus, "target-l", 8, 1),
+                   &prompts);
+    assert!(base.iter().all(|o| !o.is_empty()), "base generated nothing");
+    for kind in [EngineKind::Vsd, EngineKind::Pard, EngineKind::Eagle] {
+        for k in [2usize, 4, 8] {
+            for batch in [1usize, 4] {
+                let out = gen(&rt, &cfg(&rt, kind, "target-l", k, batch),
+                              &prompts);
+                assert_eq!(
+                    base, out,
+                    "{kind:?} k={k} batch={batch} diverged from AR+"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn uncached_ar_matches_cached_ar_plus() {
+    // AR (full recompute) and AR+ (KV-cached) are numerically different
+    // computations of the SAME function — greedy outputs must agree,
+    // certifying the cache scatter/position-mask contract end to end.
+    let rt = rt();
+    let prompts = some_prompts(&rt, 3);
+    let a = gen(&rt, &cfg(&rt, EngineKind::Ar, "target-m", 8, 1),
+                &prompts);
+    let b = gen(&rt, &cfg(&rt, EngineKind::ArPlus, "target-m", 8, 1),
+                &prompts);
+    assert_eq!(a, b, "KV-cached decode must equal full recompute");
+}
+
+#[test]
+fn pard_extrapolates_k_infer_beyond_k_train() {
+    // K_train = 8 for pard-main; shared mask ids let K_infer exceed it
+    // (paper §4.3) — and losslessness must hold regardless.
+    let rt = rt();
+    let prompts = some_prompts(&rt, 2);
+    let base = gen(&rt, &cfg(&rt, EngineKind::ArPlus, "target-m", 8, 1),
+                   &prompts);
+    for k in [1usize, 12, 16] {
+        let out = gen(&rt, &cfg(&rt, EngineKind::Pard, "target-m", k, 1),
+                      &prompts);
+        assert_eq!(base, out, "PARD K_infer={k} must stay lossless");
+    }
+}
+
+#[test]
+fn pard_distinct_mask_ablation_stays_lossless() {
+    // Distinct mask ids (§4.3 ablation) clamp offsets past the trained
+    // range to the last trained id — output must still equal AR+.
+    let rt = rt();
+    let prompts = some_prompts(&rt, 2);
+    let base = gen(&rt, &cfg(&rt, EngineKind::ArPlus, "target-m", 8, 1),
+                   &prompts);
+    for k in [8usize, 12] {
+        let mut c = cfg(&rt, EngineKind::Pard, "target-m", k, 1);
+        c.shared_mask = false;
+        let out = gen(&rt, &c, &prompts);
+        assert_eq!(base, out, "distinct-mask PARD K={k} diverged");
+    }
+}
+
+#[test]
+fn slot_reuse_is_clean() {
+    // Re-admitting new prompts into a used slot must behave like a
+    // fresh engine (stale cache content is unreachable by construction).
+    let rt = rt();
+    let prompts = some_prompts(&rt, 5);
+    let c = cfg(&rt, EngineKind::Pard, "target-m", 8, 1);
+    let reused = gen(&rt, &c, &prompts);
+    for (i, p) in prompts.iter().enumerate() {
+        let fresh = gen(&rt, &c, std::slice::from_ref(p));
+        assert_eq!(fresh[0], reused[i], "slot reuse leaked state at {i}");
+    }
+}
+
+#[test]
+fn batch_size_does_not_change_outputs() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 6);
+    let base = gen(&rt, &cfg(&rt, EngineKind::ArPlus, "target-l", 8, 1),
+                   &prompts);
+    for bs in [2usize, 4] {
+        let out = gen(&rt, &cfg(&rt, EngineKind::ArPlus, "target-l", 8,
+                                bs), &prompts);
+        assert_eq!(base, out, "AR+ batch={bs} changed outputs");
+    }
+}
+
+#[test]
+fn target_independence_one_draft_many_targets() {
+    // ONE PARD draft serves the whole family with no retraining — and
+    // stays lossless on each member (paper Table 2).
+    let rt = rt();
+    let prompts = some_prompts(&rt, 2);
+    for target in ["draft-s", "target-m", "target-l", "target-xl"] {
+        let base = gen(&rt, &cfg(&rt, EngineKind::ArPlus, target, 8, 1),
+                       &prompts);
+        let out = gen(&rt, &cfg(&rt, EngineKind::Pard, target, 8, 1),
+                      &prompts);
+        assert_eq!(base, out, "PARD not lossless on {target}");
+    }
+}
+
+#[test]
+fn self_draft_vsd_accepts_every_candidate() {
+    // draft == target weights ⇒ every candidate matches the verify
+    // prediction bit-for-bit ⇒ acceptance is exactly 1.0 and each
+    // iteration commits K+1 tokens.  Exercises the accept-all commit
+    // path deterministically.
+    let rt = rt();
+    let prompts = some_prompts(&rt, 2);
+    let mut c = cfg(&rt, EngineKind::Vsd, "draft-s", 4, 1);
+    c.draft = Some("draft-s".to_string());
+    let mut e = build_engine(&rt, &c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), &prompts, c.max_new).unwrap();
+    let m = e.metrics();
+    assert!(m.generated > 0);
+    assert_eq!(m.k_alpha(4), 1.0, "self-draft must accept everything");
+    assert!(m.tokens_per_iter() > 3.0,
+            "accept-all should commit ~K+1/iter, got {}",
+            m.tokens_per_iter());
+}
+
+#[test]
+fn pard_first_candidate_always_accepted_with_shared_weights() {
+    // pard-main shares draft-s weights, so when it also serves AS the
+    // target, candidate 0 (computed from reals only, no masks) always
+    // matches the verify prediction.
+    let rt = rt();
+    let prompts = some_prompts(&rt, 2);
+    let c = cfg(&rt, EngineKind::Pard, "draft-s", 8, 1);
+    let mut e = build_engine(&rt, &c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), &prompts, c.max_new).unwrap();
+    let m = e.metrics();
+    assert_eq!(m.pos_alpha(0), 1.0,
+               "c_0 must always be accepted when draft == target");
+}
+
+#[test]
+fn pard_drafts_in_one_pass_vsd_in_k() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 2);
+    let c = cfg(&rt, EngineKind::Pard, "target-m", 8, 1);
+    let mut e = build_engine(&rt, &c).unwrap();
+    generate(e.as_mut(), &prompts, 16).unwrap();
+    let m = e.metrics();
+    assert!(m.iterations > 0);
+    assert_eq!(m.draft_passes, m.iterations,
+               "PARD must draft in ONE pass per iteration");
+
+    let c = cfg(&rt, EngineKind::Vsd, "target-m", 8, 1);
+    let mut e = build_engine(&rt, &c).unwrap();
+    generate(e.as_mut(), &prompts, 16).unwrap();
+    let m = e.metrics();
+    assert_eq!(m.draft_passes, 8 * m.iterations,
+               "VSD pays K draft passes per iteration");
+}
+
+#[test]
+fn same_seed_same_outputs_different_seed_different_weights() {
+    let a = Runtime::reference(7);
+    let b = Runtime::reference(7);
+    let prompts = some_prompts(&a, 2);
+    let oa = gen(&a, &cfg(&a, EngineKind::Pard, "target-m", 8, 1),
+                 &prompts);
+    let ob = gen(&b, &cfg(&b, EngineKind::Pard, "target-m", 8, 1),
+                 &prompts);
+    assert_eq!(oa, ob, "reference backend must be run-to-run exact");
+
+    let c = Runtime::reference(8);
+    let ma = a.model("target-m").unwrap();
+    let mc = c.model("target-m").unwrap();
+    let ca = ma.new_cache(1).unwrap();
+    let cc = mc.new_cache(1).unwrap();
+    let la = ma.fwd(1, 1, &[13], &[0], None, &ca).unwrap().logits;
+    let lc = mc.fwd(1, 1, &[13], &[0], None, &cc).unwrap().logits;
+    assert_ne!(la, lc, "different seeds must give different weights");
+}
+
+/// Raw backend-level port of the garbage-slot contract test: junk KV
+/// committed beyond `cur_len` must never influence later decoding.
+#[test]
+fn stale_speculative_entries_are_unreachable() {
+    let rt = rt();
+    let m = rt.model("target-m").unwrap();
+    let vocab = m.cfg().vocab;
+    let prompt = some_prompts(&rt, 1).remove(0);
+
+    let decode = |pollute: bool| -> Vec<i32> {
+        let mut cache = m.new_cache(1).unwrap();
+        let t = prompt.len();
+        let pos: Vec<i32> = (0..t as i32).collect();
+        let out = m.fwd(1, t, &prompt, &pos, None, &cache).unwrap();
+        m.commit(1, t, &out, &pos, &mut cache).unwrap();
+        cache.cur_len[0] = t as u32;
+        let last = t - 1;
+        let mut next =
+            argmax(&out.logits[last * vocab..(last + 1) * vocab]);
+        if pollute {
+            // junk speculation at positions t..t+3, never "accepted":
+            // committed, but cur_len is not advanced, so the slots are
+            // rewritten before they become attendable.
+            let jp: Vec<i32> = (0..4).map(|i| (t + i) as i32).collect();
+            let junk = vec![rt.manifest.mask; 4];
+            let jout = m.fwd(1, 4, &junk, &jp, None, &cache).unwrap();
+            m.commit(1, 4, &jout, &jp, &mut cache).unwrap();
+        }
+        let mut out_toks = vec![next];
+        for _ in 1..8 {
+            let p = cache.cur_len[0] as i32;
+            let o = m.fwd(1, 1, &[next], &[p], None, &cache).unwrap();
+            m.commit(1, 1, &o, &[p], &mut cache).unwrap();
+            cache.cur_len[0] += 1;
+            next = argmax(&o.logits[..vocab]);
+            out_toks.push(next);
+        }
+        out_toks
+    };
+
+    assert_eq!(decode(false), decode(true),
+               "stale speculative KV leaked into attention");
+}
+
+#[test]
+fn continuous_batching_serves_trace_on_reference() {
+    use pard::coordinator::batcher::serve_trace;
+    use pard::substrate::workload::{build_trace, Arrival};
+    let rt = rt();
+    let ps = rt.prompts("gsm").unwrap().prompts;
+    let trace = build_trace(&ps, 9, Arrival::Closed, 16, 3);
+    let c = cfg(&rt, EngineKind::Pard, "target-m", 8, 4);
+    let mut e = build_engine(&rt, &c).unwrap();
+    e.warmup().unwrap();
+    let stats = serve_trace(e.as_mut(), &trace).unwrap();
+    assert_eq!(stats.completed, 9, "all requests must complete");
+    assert!(stats.generated > 0);
+    assert!(stats.throughput_tps > 0.0);
+    assert!(stats.mean_occupancy > 1.0,
+            "batcher should keep multiple slots busy");
+}
+
+#[test]
+fn eos_and_max_new_respected() {
+    let rt = rt();
+    let eos = rt.manifest.eos;
+    let prompts = some_prompts(&rt, 4);
+    let mut c = cfg(&rt, EngineKind::Pard, "target-m", 8, 1);
+    c.max_new = 10;
+    let outs = gen(&rt, &c, &prompts);
+    for o in outs {
+        assert!(o.len() <= 10);
+        if let Some(i) = o.iter().position(|&t| t == eos) {
+            assert_eq!(i + 1, o.len(), "tokens after EOS");
+        }
+    }
+}

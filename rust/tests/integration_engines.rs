@@ -1,6 +1,8 @@
 //! End-to-end integration over the REAL artifacts: every engine drives
-//! AOT-compiled PJRT executables.  Gated on `artifacts/manifest.json`
-//! (run `make artifacts` first); the harness runs these via `make test`.
+//! AOT-compiled PJRT executables.  Built only with the `pjrt` feature
+//! and gated on `artifacts/manifest.json` (run `make artifacts` first);
+//! the artifact-free equivalent lives in tests/engine_equivalence.rs.
+#![cfg(feature = "pjrt")]
 //!
 //! The central assertion is the LOSSLESS property on the real stack:
 //! VSD/PARD/EAGLE greedy outputs are token-identical to AR+ greedy

@@ -1,9 +1,12 @@
 //! Runtime-layer integration: the fwd/commit executables against the
-//! DESIGN.md §7 cache contract.  Gated on artifacts/.
+//! DESIGN.md §7 cache contract.  Built only with the `pjrt` feature
+//! and gated on artifacts/.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
 use pard::coordinator::sampling::argmax;
+use pard::runtime::Backend;
 use pard::Runtime;
 
 fn runtime() -> Option<Runtime> {

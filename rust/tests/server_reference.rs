@@ -1,0 +1,63 @@
+//! The serve thread (DESIGN.md §3) runs unmodified on the reference
+//! backend: boot a `Server`, generate over channels, read metrics,
+//! shut down — no artifacts on disk.
+
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind};
+use pard::runtime::RuntimeSpec;
+use pard::server::{GenRequest, Server};
+use pard::Runtime;
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        kind: EngineKind::Pard,
+        target: "target-m".into(),
+        draft: Some("pard-main".into()),
+        batch: 1,
+        k: 4,
+        max_new: 12,
+        shared_mask: true,
+    }
+}
+
+#[test]
+fn server_thread_serves_reference_backend() {
+    let rt = Runtime::reference(7);
+    let prompt = rt.prompts("code").unwrap().prompts[0].prompt.clone();
+
+    // ground truth: drive the engine directly
+    let mut engine = build_engine(&rt, &cfg()).unwrap();
+    let direct = generate(engine.as_mut(), &[prompt.clone()], 12)
+        .unwrap()
+        .remove(0);
+
+    let server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, cfg()).unwrap();
+    let resp = server
+        .generate(GenRequest { id: 1, prompt: prompt.clone(), max_new: 12 })
+        .unwrap();
+    assert_eq!(resp.id, 1);
+    assert_eq!(resp.tokens, direct,
+               "server thread must produce the same greedy stream");
+    assert!(resp.latency_s >= 0.0);
+
+    let m = server.metrics().unwrap();
+    assert!(m.generated > 0);
+
+    // a second request exercises slot reuse inside the server loop
+    let resp2 = server
+        .generate(GenRequest { id: 2, prompt, max_new: 12 })
+        .unwrap();
+    assert_eq!(resp2.tokens, direct);
+
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn runtime_spec_reference_opens_without_artifacts() {
+    let rt = RuntimeSpec::Reference { seed: 3 }.open().unwrap();
+    assert!(rt.is_reference());
+    assert_eq!(rt.manifest.main_pard, "pard-main");
+    assert!(rt.model("target-l").is_ok());
+    assert!(rt.model("no-such-model").is_err());
+}

@@ -1,0 +1,277 @@
+//! Unit tests for the shared verification core (`verify_and_commit`,
+//! `apply_verdict`) against a SCRIPTED backend — logits come from a
+//! test script, not from any model, so these pin down the acceptance
+//! arithmetic and the (tokens, pos, commit_pos) garbage-slot protocol
+//! independent of PJRT and of the reference transformer.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+
+use anyhow::Result;
+use pard::coordinator::engines::{apply_verdict, verify_and_commit,
+                                 RowVerdict};
+use pard::coordinator::metrics::Metrics;
+use pard::coordinator::sequence::Sequence;
+use pard::runtime::{Backend, FwdOut, KvCache, KvStage, ModelCfg,
+                    ModelKind};
+
+const VOCAB: usize = 32;
+const PAD: i32 = 2;
+const EOS: i32 = 1;
+
+fn cfg() -> ModelCfg {
+    ModelCfg {
+        name: "scripted".into(),
+        vocab: VOCAB,
+        d_model: 8,
+        n_layers: 1,
+        n_heads: 1,
+        d_head: 4,
+        d_ff: 16,
+        s_max: 64,
+    }
+}
+
+/// Backend whose fwd pops one "argmax plan" per call: a `[b*t]` vector
+/// of token ids the logits row should argmax to.  Staged K/V carry a
+/// per-column marker so commits can be traced into cache slots.
+struct Scripted {
+    cfg: ModelCfg,
+    plans: RefCell<VecDeque<Vec<i32>>>,
+}
+
+impl Scripted {
+    fn new(plans: Vec<Vec<i32>>) -> Self {
+        Scripted { cfg: cfg(), plans: RefCell::new(plans.into()) }
+    }
+}
+
+/// Marker written into the staged K for (row, col).
+fn marker(row: usize, col: usize) -> f32 {
+    (row * 1000 + col + 1) as f32
+}
+
+impl Backend for Scripted {
+    fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    fn kind(&self) -> ModelKind {
+        ModelKind::Lm
+    }
+
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    fn pick_t(&self, _b: usize, t_needed: usize) -> Result<usize> {
+        Ok(t_needed.max(1))
+    }
+
+    fn new_cache(&self, batch: usize) -> Result<KvCache> {
+        Ok(KvCache::host(&self.cfg, batch))
+    }
+
+    fn fwd(&self, b: usize, t: usize, _tokens: &[i32], _pos: &[i32],
+           _hidden_in: Option<&[f32]>, _cache: &KvCache)
+           -> Result<FwdOut> {
+        let plan = self
+            .plans
+            .borrow_mut()
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("script exhausted"))?;
+        anyhow::ensure!(plan.len() == b * t,
+                        "plan len {} != {b}x{t}", plan.len());
+        let mut logits = vec![0f32; b * t * VOCAB];
+        for (i, &tok) in plan.iter().enumerate() {
+            logits[i * VOCAB + tok as usize] = 1.0;
+        }
+        let hd = self.cfg.n_heads * self.cfg.d_head;
+        let mut k = vec![0f32; b * t * hd];
+        for row in 0..b {
+            for col in 0..t {
+                let off = (row * t + col) * hd;
+                k[off..off + hd].fill(marker(row, col));
+            }
+        }
+        let v = k.iter().map(|x| x + 0.5).collect();
+        Ok(FwdOut {
+            logits,
+            hidden: None,
+            kv: KvStage::Host { k, v },
+            elapsed_s: 0.0,
+        })
+    }
+
+    fn commit(&self, b: usize, t: usize, out: &FwdOut,
+              commit_pos: &[i32], cache: &mut KvCache) -> Result<f64> {
+        match &out.kv {
+            KvStage::Host { k, v } => {
+                cache.host_scatter(b, t, k, v, commit_pos)?;
+            }
+            #[cfg(feature = "pjrt")]
+            KvStage::Pjrt { .. } => {
+                anyhow::bail!("scripted backend stages host kv")
+            }
+        }
+        Ok(0.0)
+    }
+}
+
+/// A sequence mid-decode: prompt of `plen` tokens, first generated
+/// token already pending (the state every engine is in when verifying).
+fn mid_seq(plen: usize, pending: i32, max_new: usize) -> Sequence {
+    let prompt: Vec<i32> = (0..plen as i32).map(|i| 12 + i).collect();
+    let mut s = Sequence::start(&prompt, max_new);
+    s.push_committed(&[pending], EOS);
+    s.target_len = s.stream.len() - 1;
+    s
+}
+
+#[test]
+fn verify_accepts_longest_prefix_and_routes_rejects_to_garbage() {
+    let k = 3;
+    // row 0: cands [5,6,7], target preds [5,6,9,?] → accept 2, commit
+    //        [5,6,9];  row 1: cands [4,4,4], preds [8,...] → accept 0.
+    let plan = vec![5, 6, 9, 21, 8, 22, 23, 24];
+    let be = Scripted::new(vec![plan]);
+    let mut cache = be.new_cache(2).unwrap();
+    let seqs =
+        vec![mid_seq(4, 30, 16), mid_seq(4, 31, 16)];
+    let base = seqs[0].target_len as i32; // == 4
+    cache.cur_len[0] = base as u32;
+    cache.cur_len[1] = base as u32;
+    let cands = vec![vec![5, 6, 7], vec![4, 4, 4]];
+    let mut m = Metrics::default();
+    let verdicts =
+        verify_and_commit(&be, &mut cache, &seqs, &cands, k, PAD, &mut m)
+            .unwrap();
+
+    let v0 = verdicts[0].as_ref().unwrap();
+    assert_eq!(v0.accepted, 2);
+    assert_eq!(v0.committed, vec![5, 6, 9]);
+    let v1 = verdicts[1].as_ref().unwrap();
+    assert_eq!(v1.accepted, 0);
+    assert_eq!(v1.committed, vec![8]);
+
+    // acceptance accounting: both rows offered 3
+    assert_eq!(m.offered_pos, vec![2, 2, 2]);
+    assert_eq!(m.accept_pos, vec![1, 1, 0]);
+    assert_eq!(m.target_passes, 1);
+
+    // cache protocol: pending + accepted columns landed at their true
+    // slots; rejected columns went to the garbage slot.
+    let g = cache.garbage_slot() as usize;
+    let b = base as usize;
+    // row 0: col0 (pending) at slot 4, cols 1,2 (accepted) at 5,6
+    assert_eq!(cache.host_kv(0, 0, 0, b).unwrap()[0], marker(0, 0));
+    assert_eq!(cache.host_kv(0, 0, 0, b + 1).unwrap()[0], marker(0, 1));
+    assert_eq!(cache.host_kv(0, 0, 0, b + 2).unwrap()[0], marker(0, 2));
+    // col 3 (rejected) went to garbage; slot b+3 untouched (zero)
+    assert_eq!(cache.host_kv(0, 0, 0, b + 3).unwrap()[0], 0.0);
+    assert_eq!(cache.host_kv(0, 0, 0, g).unwrap()[0], marker(0, 3));
+    // row 1: only the pending column committed live
+    assert_eq!(cache.host_kv(0, 0, 1, b).unwrap()[0], marker(1, 0));
+    assert_eq!(cache.host_kv(0, 0, 1, b + 1).unwrap()[0], 0.0);
+    assert_eq!(cache.host_kv(0, 0, 1, g).unwrap()[0], marker(1, 3));
+    // V plane mirrors K with the +0.5 marker
+    assert_eq!(cache.host_kv(1, 0, 0, b).unwrap()[0],
+               marker(0, 0) + 0.5);
+}
+
+#[test]
+fn verify_skips_parked_rows() {
+    let k = 2;
+    let plan = vec![7, 8, 9, 0, 0, 0];
+    let be = Scripted::new(vec![plan]);
+    let mut cache = be.new_cache(2).unwrap();
+    let mut seqs = vec![mid_seq(3, 20, 16), mid_seq(3, 20, 16)];
+    seqs[1].active = false; // parked slot
+    let cands = vec![vec![7, 8], vec![9, 9]];
+    let mut m = Metrics::default();
+    let verdicts =
+        verify_and_commit(&be, &mut cache, &seqs, &cands, k, PAD, &mut m)
+            .unwrap();
+    assert!(verdicts[0].is_some());
+    assert!(verdicts[1].is_none(), "parked row must yield no verdict");
+    // parked row's cache slots untouched outside the garbage slot
+    let base = seqs[1].target_len as usize;
+    assert_eq!(cache.host_kv(0, 0, 1, base).unwrap()[0], 0.0);
+}
+
+#[test]
+fn full_accept_commits_k_plus_one() {
+    let k = 3;
+    let plan = vec![5, 6, 7, 9];
+    let be = Scripted::new(vec![plan]);
+    let mut cache = be.new_cache(1).unwrap();
+    let seqs = vec![mid_seq(4, 30, 16)];
+    let cands = vec![vec![5, 6, 7]];
+    let mut m = Metrics::default();
+    let v = verify_and_commit(&be, &mut cache, &seqs, &cands, k, PAD,
+                              &mut m)
+        .unwrap();
+    let v0 = v[0].as_ref().unwrap();
+    assert_eq!(v0.accepted, 3);
+    assert_eq!(v0.committed, vec![5, 6, 7, 9]);
+    assert_eq!(m.accept_hist, vec![0, 0, 0, 1]);
+}
+
+#[test]
+fn apply_verdict_advances_stream_and_cache() {
+    let be = Scripted::new(vec![]);
+    let mut cache = be.new_cache(1).unwrap();
+    let mut seq = mid_seq(4, 30, 16);
+    let mut m = Metrics::default();
+    let verdict = RowVerdict {
+        accepted: 2,
+        committed: vec![5, 6, 9],
+        hidden_rows: None,
+    };
+    apply_verdict(&mut seq, &mut cache, 0, &verdict, EOS, &mut m);
+    // stream = prompt(4) + pending(30) + [5,6,9]; new pending is 9
+    assert_eq!(seq.stream.len(), 8);
+    assert_eq!(seq.pending(), 9);
+    assert_eq!(seq.target_len, 7);
+    assert_eq!(cache.cur_len[0], 7);
+    assert_eq!(m.generated, 3);
+    assert!(!seq.done);
+    assert!(seq.active);
+}
+
+#[test]
+fn apply_verdict_stops_on_eos_and_counts_request() {
+    let be = Scripted::new(vec![]);
+    let mut cache = be.new_cache(1).unwrap();
+    let mut seq = mid_seq(4, 30, 16);
+    let mut m = Metrics::default();
+    let verdict = RowVerdict {
+        accepted: 2,
+        committed: vec![5, EOS, 9], // 9 must be dropped after EOS
+        hidden_rows: None,
+    };
+    apply_verdict(&mut seq, &mut cache, 0, &verdict, EOS, &mut m);
+    assert!(seq.done);
+    assert!(!seq.active);
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.generated, 2, "token after EOS must not count");
+    assert_eq!(*seq.stream.last().unwrap(), EOS);
+}
+
+#[test]
+fn apply_verdict_headroom_guard_parks_near_capacity() {
+    let be = Scripted::new(vec![]);
+    let mut cache = be.new_cache(1).unwrap(); // s_max 64 → max live 62
+    let mut seq = mid_seq(40, 30, 200);
+    let mut m = Metrics::default();
+    let verdict = RowVerdict {
+        accepted: 0,
+        committed: vec![9],
+        hidden_rows: None,
+    };
+    apply_verdict(&mut seq, &mut cache, 0, &verdict, EOS, &mut m);
+    // target_len 41; 41 + 2*16 + 2 = 75 >= 62 → must stop the row
+    assert!(seq.done, "row near cache capacity must be stopped");
+    assert!(!seq.active);
+    assert_eq!(m.requests, 1);
+}

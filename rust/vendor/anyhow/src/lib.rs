@@ -1,0 +1,147 @@
+//! Minimal offline shim of the `anyhow` API surface this crate uses:
+//! `Error`, `Result`, `anyhow!`, `bail!`, `ensure!`, and the `Context`
+//! extension trait.  Errors flatten to a context chain of strings —
+//! enough for CLI/test diagnostics without vendoring the real crate.
+
+use std::fmt::{self, Display};
+
+/// A context chain: `chain[0]` is the outermost (most recent) message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap(mut self, ctx: String) -> Error {
+        self.chain.insert(0, ctx);
+        self
+    }
+
+    /// Outermost message (parity with `anyhow::Error::to_string`).
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, so this blanket conversion cannot collide with
+// the reflexive `From<Error> for Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible result (subset of anyhow's trait: the
+/// codebase only calls it on `Result`).
+pub trait Context<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F)
+                                                  -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(ctx.to_string()))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F)
+                                                  -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(io_err()).context("reading foo");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "reading foo");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+}

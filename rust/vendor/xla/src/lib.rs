@@ -1,0 +1,137 @@
+//! Typecheck-only stub of the xla-0.1.6 PJRT bindings.
+//!
+//! The offline deployment image vendors the real crate tree at this
+//! path; this stub mirrors exactly the API surface `pard` uses so that
+//! `cargo check --features pjrt` works anywhere.  Every entry point
+//! fails at runtime with an explanatory error — the stub can never be
+//! mistaken for a working runtime (see README.md).
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>() -> Result<T> {
+    Err(Error(
+        "xla stub: the vendored PJRT crate tree is not present in this \
+         build — replace rust/vendor/xla with the real xla-0.1.6 crate \
+         (see vendor/xla/README.md) or run with the reference backend"
+            .to_string(),
+    ))
+}
+
+/// Host element types accepted by buffer upload / literal download.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+#[derive(Debug)]
+pub struct ArrayShape(Vec<i64>);
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.0
+    }
+}
+
+pub struct PjRtDevice;
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        stub()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self, _data: &[T], _dims: &[usize], _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        stub()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        stub()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub()
+    }
+
+    pub fn on_device_shape(&self) -> Result<ArrayShape> {
+        stub()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer])
+                     -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub()
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub()
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        stub()
+    }
+}
+
+/// Deserialization entry points (`Literal::read_npz` in the real crate
+/// comes from this trait).
+pub trait FromRawBytes: Sized {
+    fn read_npz<P: AsRef<Path>>(path: P, ctx: &())
+                                -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz<P: AsRef<Path>>(_path: P, _ctx: &())
+                                -> Result<Vec<(String, Self)>> {
+        stub()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        stub()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}

@@ -1,0 +1,266 @@
+"""Python mirror of rust/src/runtime/host.rs for design validation.
+
+sim.py mirrors the scalar reference oracle (reference.rs); this file
+mirrors the host fast path's *restructurings* (host.rs, DESIGN.md §8)
+and asserts they cannot change a live output:
+
+  1. dead-cell skip       — parked (garbage-slot) columns are dropped
+                            before any compute; live outputs equal the
+                            oracle's, parked outputs are zeros.
+  2. in-place cache read  — the per-layer transient cache copy is
+                            replaced by a slot -> staged-column map over
+                            the persistent tensor; attended bytes are
+                            identical by construction.
+  3. hoisted rope tables  — sin/cos(pos * inv_freq) computed once per
+                            call instead of per layer/head; same values.
+  4. commit equivalence   — staged K/V scattered by the host path land
+                            exactly where the oracle's scatter puts them.
+  5. end-to-end decode    — AR+ greedy streams through the host-style
+                            fwd are token-identical to sim.py's.
+
+Both mirrors use the same numpy primitives over the same values, so
+equality here is exact (==), not approximate.  As with sim.py this
+validates the design, not the f32 bit patterns of the Rust build —
+rust/tests/host_backend.rs does that where a toolchain exists.
+"""
+import numpy as np
+
+import sim
+from sim import DH, EOS, S_MAX, Model, commit, fwd, synth_prompts
+
+
+def fwd_host(m, tokens, pos, cache_k, cache_v):
+    """b=1 host-path forward: dead-column skip + map-based in-place
+    cache reads + rope tables hoisted out of the layer loop.  Returns
+    (logits [T,V], k_stage [L,T,hd], v_stage) in the full call layout
+    with zeros at parked columns."""
+    sim.MODEL_INV_FREQ = m.inv_freq
+    t = len(tokens)
+    d, h, hd = m.d, m.h, m.h * DH
+    half = DH // 2
+
+    # same truncated-view bound as the oracle
+    garbage = S_MAX - 1
+    clamped = [int(np.clip(p, 0, S_MAX - 1)) for p in pos]
+    live_ps = [p for p in clamped if p < garbage]
+    s_used = (max(live_ps) + 1) if live_ps else 1
+
+    # (1) dead-cell skip: gather live columns only
+    cells = [c for c in range(t) if clamped[c] < s_used]
+    logits_out = np.zeros((t, sim.VOCAB), np.float32)
+    k_out = np.zeros((m.L, t, hd), np.float32)
+    v_out = np.zeros((m.L, t, hd), np.float32)
+    n = len(cells)
+    if n == 0:
+        return logits_out, k_out, v_out
+    ps = [clamped[c] for c in cells]
+    x = m.embed[np.array([tokens[c] for c in cells])]
+
+    # (3) rope tables hoisted: one sin/cos row per live cell — from the
+    # RAW position, like the oracle (clamping is for slots only)
+    praw = np.array([pos[c] for c in cells], np.int32)
+    ang = praw[:, None].astype(np.float32) * m.inv_freq[None, :]
+    cos_t, sin_t = np.cos(ang), np.sin(ang)  # [n, half]
+
+    # (2) slot -> staged-column map (later columns win, like scatter)
+    staged_at = np.full(s_used, -1, np.int64)
+    for j, p in enumerate(ps):
+        staged_at[p] = j
+
+    k_live = np.zeros((m.L, n, hd), np.float32)
+    v_live = np.zeros((m.L, n, hd), np.float32)
+    for li, lyr in enumerate(m.layers):
+        xn = sim.rmsnorm(x, d)
+        q = (xn @ lyr["wq"]).astype(np.float32)
+        k = (xn @ lyr["wk"]).astype(np.float32)
+        v = (xn @ lyr["wv"]).astype(np.float32)
+
+        # rope from the hoisted tables (same arithmetic as sim.rope)
+        def rope_t(mat):
+            mr = mat.reshape(n, h, DH)
+            x1 = mr[:, :, :half]
+            x2 = mr[:, :, half:]
+            out = np.concatenate(
+                [x1 * cos_t[:, None, :] - x2 * sin_t[:, None, :],
+                 x1 * sin_t[:, None, :] + x2 * cos_t[:, None, :]], -1)
+            return out.reshape(n, hd).astype(np.float32)
+
+        q = rope_t(q)
+        k = rope_t(k)
+        k_live[li] = k
+        v_live[li] = v
+
+        # attention: resolve each attended slot through the map — this
+        # call's staged K/V win, else the persistent tensor in place.
+        attn = np.zeros((n, hd), np.float32)
+        scale = np.float32(1.0 / np.sqrt(DH))
+        for j in range(n):
+            p = ps[j]
+            rows = np.empty((p + 1, hd), np.float32)
+            vrows = np.empty((p + 1, hd), np.float32)
+            for s in range(p + 1):
+                jj = staged_at[s]
+                if jj >= 0:
+                    rows[s] = k[jj]
+                    vrows[s] = v[jj]
+                else:
+                    rows[s] = cache_k[li, s]
+                    vrows[s] = cache_v[li, s]
+            ckh = rows.reshape(p + 1, h, DH)
+            cvh = vrows.reshape(p + 1, h, DH)
+            qh = q[j].reshape(h, DH)
+            sc = np.einsum("hd,shd->hs", qh, ckh) * scale
+            sc = sc - sc.max(axis=1, keepdims=True)
+            w = np.exp(sc)
+            w = w / w.sum(axis=1, keepdims=True)
+            attn[j] = np.einsum("hs,shd->hd", w, cvh).reshape(hd)
+        x = (x + attn @ lyr["wo"]).astype(np.float32)
+        xn2 = sim.rmsnorm(x, d)
+        g = (xn2 @ lyr["w1"]).astype(np.float32)
+        u = (xn2 @ lyr["w3"]).astype(np.float32)
+        act = g * (1.0 / (1.0 + np.exp(-g))) * u
+        x = (x + act @ lyr["w2"]).astype(np.float32)
+
+    # NOTE: numpy mirrors must use the *same* expression as sim.py here:
+    # BLAS picks different accumulation orders for `embed.T` (view) vs a
+    # contiguous transpose, which is exactly the class of reassociation
+    # the Rust host path forbids (its embed_t matmul keeps the oracle's
+    # per-cell k-ascending order; see host.rs).
+    hidden = sim.rmsnorm(x, d)
+    logits = (hidden @ m.embed.T).astype(np.float32)
+
+    # scatter live results back to the call layout
+    for j, c in enumerate(cells):
+        logits_out[c] = logits[j]
+        k_out[:, c] = k_live[:, j]
+        v_out[:, c] = v_live[:, j]
+    return logits_out, k_out, v_out
+
+
+def fresh_cache(m):
+    hd = m.h * DH
+    return (np.zeros((m.L, S_MAX, hd), np.float32),
+            np.zeros((m.L, S_MAX, hd), np.float32))
+
+
+def check_padded_call_matches_oracle(m):
+    """Parked pad columns (garbage slot) must not change live logits,
+    and the host path must produce zeros for them."""
+    prompt = [0, 13, 20, 21]
+    ck, cv = fresh_cache(m)
+    ref_logits, ref_k, ref_v = fwd(m, prompt, [0, 1, 2, 3], ck, cv)
+    g = S_MAX - 1
+    toks = prompt + [sim.PAD] * 3
+    pos = [0, 1, 2, 3, g, g, g]
+    host_logits, host_k, host_v = fwd_host(m, toks, pos, ck, cv)
+    assert np.array_equal(ref_logits, host_logits[:4]), "live logits diverged"
+    assert np.array_equal(ref_k, host_k[:, :4]), "live staged K diverged"
+    assert np.array_equal(ref_v, host_v[:, :4]), "live staged V diverged"
+    assert not host_logits[4:].any(), "parked columns must be zeros"
+    print("  padded-call live outputs identical, parked zeros OK")
+
+
+def check_in_place_cache_read(m):
+    """Cached decode: host's map-based in-place read must equal the
+    oracle's transient-copy semantics, step for step."""
+    prompt = [0, 17, 25, 30]
+    ck_r, cv_r = fresh_cache(m)
+    ck_h, cv_h = fresh_cache(m)
+    pos = list(range(len(prompt)))
+    lr, kr, vr = fwd(m, prompt, pos, ck_r, cv_r)
+    lh, kh, vh = fwd_host(m, prompt, pos, ck_h, cv_h)
+    assert np.array_equal(lr, lh)
+    commit(ck_r, cv_r, kr, vr, pos)
+    commit(ck_h, cv_h, kh, vh, pos)
+    assert np.array_equal(ck_r, ck_h) and np.array_equal(cv_r, cv_h), \
+        "committed caches diverged"
+    cur, nxt = len(prompt), int(np.argmax(lr[len(prompt) - 1]))
+    for _ in range(8):
+        lr, kr, vr = fwd(m, [nxt], [cur], ck_r, cv_r)
+        lh, kh, vh = fwd_host(m, [nxt], [cur], ck_h, cv_h)
+        assert np.array_equal(lr[0], lh[0]), "decode step logits diverged"
+        commit(ck_r, cv_r, kr, vr, [cur])
+        commit(ck_h, cv_h, kh, vh, [cur])
+        cur += 1
+        nxt = int(np.argmax(lr[0]))
+    print("  in-place cache reads identical across 8 cached decode steps")
+
+
+def check_speculative_layout(m):
+    """PARD-shaped verify call: pending commits, candidates in-flight.
+    The map must let in-call columns attend each other exactly like the
+    oracle's scattered transient view."""
+    prompt = [0, 13, 20]
+    ck_r, cv_r = fresh_cache(m)
+    pos = list(range(len(prompt)))
+    _, kr, vr = fwd(m, prompt, pos, ck_r, cv_r)
+    commit(ck_r, cv_r, kr, vr, pos)
+    ck_h, cv_h = ck_r.copy(), cv_r.copy()
+    # verify layout: pending at 3 + three candidates at 4..6 in-flight
+    toks = [30, 31, 32, 33]
+    vpos = [3, 4, 5, 6]
+    lr, kr, vr = fwd(m, toks, vpos, ck_r, cv_r)
+    lh, kh, vh = fwd_host(m, toks, vpos, ck_h, cv_h)
+    assert np.array_equal(lr, lh), "verify-call logits diverged"
+    # rejected candidates -> garbage slot, accepted prefix -> real slots
+    cpos = [3, 4, S_MAX - 1, S_MAX - 1]
+    commit(ck_r, cv_r, kr, vr, cpos)
+    commit(ck_h, cv_h, kh, vh, cpos)
+    assert np.array_equal(ck_r[:, :s_live(cpos)], ck_h[:, :s_live(cpos)])
+    print("  speculative verify layout + garbage-slot commit identical")
+
+
+def s_live(cpos):
+    return max(p for p in cpos if p < S_MAX - 1) + 1
+
+
+def check_end_to_end_streams(m, task, n, max_new):
+    """AR+ greedy decode through the host-style fwd must reproduce
+    sim.py's streams token for token."""
+    hd = m.h * DH
+    for p in synth_prompts(task, 7)[:n]:
+        ref = sim.ar_plus_decode(m, p, max_new)
+        ck, cv = fresh_cache(m)
+        pos = list(range(len(p)))
+        logits, ks, vs = fwd_host(m, p, pos, ck, cv)
+        commit(ck, cv, ks, vs, pos)
+        cur = len(p)
+        nxt = int(np.argmax(logits[len(p) - 1]))
+        gen = [nxt]
+        while len(gen) < max_new and gen[-1] != EOS:
+            logits, ks, vs = fwd_host(m, [nxt], [cur], ck, cv)
+            commit(ck, cv, ks, vs, [cur])
+            cur += 1
+            nxt = int(np.argmax(logits[0]))
+            gen.append(nxt)
+        assert gen == ref, f"host stream diverged: {gen} vs {ref}"
+    print(f"  {n} AR+ streams token-identical (task={task}, "
+          f"max_new={max_new})")
+
+
+def check_out_of_range_pos(m):
+    """A raw pos below 0 clamps to slot 0 (live) but must still rope
+    with the raw value, exactly like the oracle."""
+    ck, cv = fresh_cache(m)
+    lr, kr, _ = fwd(m, [5], [-3], ck, cv)
+    lh, kh, _ = fwd_host(m, [5], [-3], ck, cv)
+    assert np.array_equal(lr, lh), "OOB-pos logits diverged"
+    assert np.array_equal(kr, kh), "OOB-pos staged K diverged"
+    print("  out-of-range pos ropes with raw value, identical")
+
+
+def main(seed=7):
+    for name in ["draft-s", "target-m", "target-l"]:
+        print(f"{name}:")
+        m = Model(seed, name)
+        check_padded_call_matches_oracle(m)
+        check_in_place_cache_read(m)
+        check_speculative_layout(m)
+        check_out_of_range_pos(m)
+    check_end_to_end_streams(Model(seed, "target-m"), "code", 4, 16)
+    check_end_to_end_streams(Model(seed, "draft-s"), "gsm", 3, 12)
+    print("ALL HOST-PATH EQUIVALENCE CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,46 @@
-//! Hot-path micro-benchmarks (the §Perf profiling surface): individual
-//! fwd/commit costs per phase, PARD draft vs VSD draft chain, verify.
-use std::path::Path;
+//! Hot-path micro-benchmarks (the DESIGN.md §Perf profiling surface):
+//! individual fwd/commit costs per phase, PARD draft vs VSD draft
+//! chain, verify, end-to-end engine iterations.
+//!
+//! Artifact-free by default: the backend is chosen by `PARD_BACKEND`
+//! (`pjrt` | `reference` | `host`); unset, it uses PJRT when an
+//! `artifacts/` directory exists and this build has the `pjrt`
+//! feature, otherwise the fast host backend (DESIGN.md §8) — it never
+//! panics just because artifacts are missing.  On the in-process
+//! backends the same fwd micro-benchmarks also run on the scalar
+//! reference oracle, printing the host-vs-oracle speedup per shape.
+
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
 use pard::runtime::Backend;
-use pard::substrate::bench::Bencher;
+use pard::substrate::bench::{BenchStats, Bencher};
 use pard::Runtime;
 
-fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(Path::new("artifacts"))?;
-    let b = Bencher::default();
+/// Open the benchmark runtime per `PARD_BACKEND` / artifact presence.
+fn open_runtime() -> anyhow::Result<Runtime> {
+    let pick = std::env::var("PARD_BACKEND").unwrap_or_default();
+    match pick.as_str() {
+        "pjrt" => Runtime::load(std::path::Path::new("artifacts")),
+        "reference" | "ref" => Ok(Runtime::reference(7)),
+        "host" => Ok(Runtime::host(7)),
+        "" => {
+            if std::path::Path::new("artifacts").exists() {
+                // Prefer measured artifacts, but a stub/partial tree
+                // must not kill the bench — fall back to host.
+                Runtime::load(std::path::Path::new("artifacts"))
+                    .or_else(|_| Ok(Runtime::host(7)))
+            } else {
+                Ok(Runtime::host(7))
+            }
+        }
+        other => anyhow::bail!(
+            "PARD_BACKEND=`{other}` (want pjrt|reference|host)"),
+    }
+}
 
-    // raw executable costs
+/// The raw-executable shapes every engine's inner loop touches.
+fn fwd_shapes(b: &Bencher, rt: &Runtime, tag: &str)
+              -> anyhow::Result<Vec<BenchStats>> {
     let target = rt.model("target-l")?;
     let draft = rt.model(&rt.manifest.main_pard)?;
     let tcache = target.new_cache(1)?;
@@ -19,42 +48,87 @@ fn main() -> anyhow::Result<()> {
     target.warmup(1, &[1, 10, 16, 32])?;
     draft.warmup(1, &[1, 16])?;
 
-    let s = b.run("target-l fwd t=1 (AR+ step)", || {
+    let mut all = Vec::new();
+    let s = b.run(&format!("[{tag}] target-l fwd t=1 (AR+ step)"), || {
         target.fwd(1, 1, &[5], &[10], None, &tcache).unwrap()
     });
     s.print();
-    let s = b.run("target-l fwd t=16 (verify K=8, pre-§Perf bucket)", || {
-        target
-            .fwd(1, 16, &[5; 16], &(10..26).collect::<Vec<i32>>(), None,
-                 &tcache)
-            .unwrap()
-    });
+    all.push(s);
+    let s = b.run(
+        &format!("[{tag}] target-l fwd t=16 (verify K=8, pre-§Perf \
+                  bucket)"),
+        || {
+            target
+                .fwd(1, 16, &[5; 16], &(10..26).collect::<Vec<i32>>(),
+                     None, &tcache)
+                .unwrap()
+        },
+    );
     s.print();
-    let s = b.run("target-l fwd t=10 (verify K=8, tightened bucket)", || {
-        target
-            .fwd(1, 10, &[5; 10], &(10..20).collect::<Vec<i32>>(), None,
-                 &tcache)
-            .unwrap()
-    });
+    all.push(s);
+    let s = b.run(
+        &format!("[{tag}] target-l fwd t=10 (verify K=8, tightened \
+                  bucket)"),
+        || {
+            target
+                .fwd(1, 10, &[5; 10], &(10..20).collect::<Vec<i32>>(),
+                     None, &tcache)
+                .unwrap()
+        },
+    );
     s.print();
-    let s = b.run("pard draft fwd t=16 (ONE parallel pass)", || {
+    all.push(s);
+    let s = b.run(&format!("[{tag}] pard draft fwd t=16 (ONE parallel \
+                            pass)"),
+                  || {
         draft
             .fwd(1, 16, &[5; 16], &(10..26).collect::<Vec<i32>>(), None,
                  &dcache)
             .unwrap()
     });
     s.print();
-    let s = b.run("draft fwd t=1 (one VSD chain step; VSD pays K of these)",
-                  || draft.fwd(1, 1, &[5], &[10], None, &dcache).unwrap());
+    all.push(s);
+    let s = b.run(
+        &format!("[{tag}] draft fwd t=1 (one VSD chain step; VSD pays \
+                  K of these)"),
+        || draft.fwd(1, 1, &[5], &[10], None, &dcache).unwrap(),
+    );
     s.print();
+    all.push(s);
     let out = target.fwd(1, 1, &[5], &[10], None, &tcache)?;
     let mut c2 = target.new_cache(1)?;
-    let s = b.run("target-l commit t=1", || {
+    let s = b.run(&format!("[{tag}] target-l commit t=1"), || {
         target.commit(1, 1, &out, &[10], &mut c2).unwrap()
     });
     s.print();
+    all.push(s);
+    Ok(all)
+}
 
-    // end-to-end iteration costs
+fn main() -> anyhow::Result<()> {
+    let rt = open_runtime()?;
+    println!("backend: {}", rt.backend_label());
+    let b = Bencher::default();
+
+    let main_stats = fwd_shapes(&b, &rt, rt.backend_label())?;
+
+    // On the artifact-free backends, rerun the same shapes on the
+    // scalar oracle and report per-shape host speedup (the §Perf
+    // baseline claim, continuously re-measured).
+    if rt.backend_label() == "host" {
+        let oracle = Runtime::reference(7);
+        let oracle_stats = fwd_shapes(&b, &oracle, "reference")?;
+        println!();
+        for (h, o) in main_stats.iter().zip(&oracle_stats) {
+            if h.median_s > 0.0 {
+                println!("speedup {:<55} {:>6.2}x",
+                         h.name.trim_start_matches("[host] "),
+                         o.median_s / h.median_s);
+            }
+        }
+    }
+
+    // End-to-end iteration costs on the selected backend.
     for kind in [EngineKind::ArPlus, EngineKind::Vsd, EngineKind::Pard] {
         let cfg = EngineConfig {
             kind,

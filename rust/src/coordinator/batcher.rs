@@ -1,4 +1,5 @@
-//! Continuous batcher: online serving over an arrival trace.
+//! Continuous batcher: online serving over an arrival trace
+//! (DESIGN.md §3; slot reuse contract in §7).
 //!
 //! The vLLM-style loop behind Tables 3/4: a fixed number of batch slots;
 //! arrived requests queue FCFS; finished slots are refilled between

@@ -1,4 +1,4 @@
-//! AR / AR+ baselines.
+//! AR / AR+ baselines (cache/commit contract: DESIGN.md §7).
 //!
 //! * AR ("Transformers" row in Table 1): no KV reuse — every step re-feeds
 //!   the whole prefix through the smallest fitting T bucket and takes the
@@ -59,7 +59,9 @@ impl ArEngine {
         let t0 = Instant::now();
         let out =
             self.target.fwd(b, 1, &buf.tokens, &buf.pos, None, &self.cache)?;
-        self.target.commit(b, 1, &out, &buf.cpos, &mut self.cache)?;
+        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.commit_s +=
+            self.target.commit(b, 1, &out, &buf.cpos, &mut self.cache)?;
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
         self.metrics.target_passes += 1;
         let vocab = self.target.cfg().vocab;
@@ -109,6 +111,7 @@ impl ArEngine {
         let t0 = Instant::now();
         let out =
             self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.cache)?;
+        self.metrics.fwd_s += out.elapsed_s;
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
         self.metrics.target_passes += 1;
         let vocab = self.target.cfg().vocab;

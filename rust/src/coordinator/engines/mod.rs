@@ -182,7 +182,8 @@ pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
     }
     let t0 = Instant::now();
     let out = model.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
-    model.commit(b, t, &out, &buf.cpos, cache)?;
+    metrics.fwd_s += out.elapsed_s;
+    metrics.commit_s += model.commit(b, t, &out, &buf.cpos, cache)?;
     metrics.prefill_s += t0.elapsed().as_secs_f64();
     metrics.target_passes += 1;
     cache.cur_len[slot] = prompt.len() as u32;
@@ -255,6 +256,7 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
     }
     let t0 = Instant::now();
     let out = target.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
+    metrics.fwd_s += out.elapsed_s;
     metrics.target_passes += 1;
 
     let vocab = target.cfg().vocab;
@@ -286,7 +288,7 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
         metrics.record_acceptance(cands[row].len(), accepted);
         verdicts.push(Some(RowVerdict { accepted, committed, hidden_rows }));
     }
-    target.commit(b, t, &out, &buf.cpos, cache)?;
+    metrics.commit_s += target.commit(b, t, &out, &buf.cpos, cache)?;
     metrics.verify_s += t0.elapsed().as_secs_f64();
 
     Ok(verdicts)

@@ -1,4 +1,5 @@
-//! PARD — the paper's contribution (Eq. 4, Fig. 3 right).
+//! PARD — the paper's contribution (Eq. 4, Fig. 3 right; the mask
+//! slots ride on the garbage-slot contract, DESIGN.md §7).
 //!
 //! Per iteration the draft runs exactly ONE forward pass:
 //! `[catch-up reals…, <mask> × (K-1)]`.  The last real's logits row gives
@@ -111,7 +112,9 @@ impl PardEngine {
         let t0 = Instant::now();
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
-        self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
+        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.commit_s +=
+            self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
         self.metrics.draft_s += t0.elapsed().as_secs_f64();
         self.metrics.draft_passes += 1;
 
@@ -155,6 +158,8 @@ impl Engine for PardEngine {
         let _ = prefill_slot(&*self.draft, &mut self.dcache, slot, prompt,
                              self.pad, &mut dm)?;
         self.metrics.prefill_s += dm.prefill_s;
+        self.metrics.fwd_s += dm.fwd_s;
+        self.metrics.commit_s += dm.commit_s;
         seq.push_committed(&[first], self.eos);
         self.metrics.generated += 1;
         seq.target_len = seq.stream.len() - 1;

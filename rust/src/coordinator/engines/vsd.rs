@@ -1,4 +1,5 @@
-//! Vanilla speculative decoding (paper's VSD baseline, Eq. 3).
+//! Vanilla speculative decoding (paper's VSD baseline, Eq. 3; slot
+//! contract per DESIGN.md §7).
 //!
 //! Per iteration: (1) a catch-up draft pass re-feeds the stream tokens
 //! the draft cache hasn't consumed (its last logits row yields c_0);
@@ -83,7 +84,9 @@ impl VsdEngine {
         let t0 = Instant::now();
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
-        self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
+        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.commit_s +=
+            self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
         self.metrics.draft_passes += 1;
         for (row, seq) in self.seqs.iter_mut().enumerate() {
             if !seq.active || seq.done {
@@ -111,7 +114,10 @@ impl VsdEngine {
             }
             let out = self.draft.fwd(b, 1, &buf.tokens, &buf.pos, None,
                                      &self.dcache)?;
-            self.draft.commit(b, 1, &out, &buf.cpos, &mut self.dcache)?;
+            self.metrics.fwd_s += out.elapsed_s;
+            self.metrics.commit_s +=
+                self.draft.commit(b, 1, &out, &buf.cpos,
+                                  &mut self.dcache)?;
             self.metrics.draft_passes += 1;
             for (row, seq) in self.seqs.iter().enumerate() {
                 if !seq.active || seq.done {
@@ -149,6 +155,8 @@ impl Engine for VsdEngine {
         let _ = prefill_slot(&*self.draft, &mut self.dcache, slot, prompt,
                              self.pad, &mut dm)?;
         self.metrics.prefill_s += dm.prefill_s;
+        self.metrics.fwd_s += dm.fwd_s;
+        self.metrics.commit_s += dm.commit_s;
         seq.push_committed(&[first], self.eos);
         self.metrics.generated += 1;
         seq.target_len = seq.stream.len() - 1;

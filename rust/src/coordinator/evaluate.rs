@@ -1,6 +1,7 @@
 //! Closed-loop evaluation harness: run an engine over a prompt set and
-//! report the paper's metrics.  Shared by examples/, benches/, and the
-//! CLI `eval`/`tables` subcommands.
+//! report the paper's metrics (experiment index: DESIGN.md §5).
+//! Shared by examples/, benches/, and the CLI `eval`/`tables`/`bench`
+//! subcommands.
 
 use anyhow::Result;
 

@@ -13,6 +13,15 @@ pub struct Metrics {
     pub verify_s: f64,
     /// Wall clock inside prefill calls.
     pub prefill_s: f64,
+    /// Backend-reported forward-execution time (`FwdOut::elapsed_s`),
+    /// summed over every fwd call — one side of the fwd/commit split
+    /// the executable protocol imposes (DESIGN.md §7).
+    pub fwd_s: f64,
+    /// Backend-reported commit (KV scatter) time, the other side of
+    /// the split.  `draft_s`/`verify_s`/`prefill_s` measure caller
+    /// wall-clock *around* fwd+commit, so `fwd_s + commit_s` vs their
+    /// sum isolates coordinator overhead.
+    pub commit_s: f64,
     /// End-to-end generate() wall clock (includes coordinator overhead).
     pub wall_s: f64,
     /// Decode iterations executed.
@@ -82,6 +91,22 @@ impl Metrics {
         }
     }
 
+    /// Mean accepted-prefix length per verify iteration (the paper's
+    /// mean accept length; 0 for the AR baselines, which never draft).
+    pub fn mean_accept_len(&self) -> f64 {
+        let total: u64 = self.accept_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let accepted: u64 = self
+            .accept_hist
+            .iter()
+            .enumerate()
+            .map(|(len, &cnt)| len as u64 * cnt)
+            .sum();
+        accepted as f64 / total as f64
+    }
+
     /// Mean committed tokens per decode iteration (a + 1).
     pub fn tokens_per_iter(&self) -> f64 {
         if self.iterations == 0 {
@@ -112,6 +137,8 @@ impl Metrics {
         self.draft_s += o.draft_s;
         self.verify_s += o.verify_s;
         self.prefill_s += o.prefill_s;
+        self.fwd_s += o.fwd_s;
+        self.commit_s += o.commit_s;
         self.wall_s += o.wall_s;
         self.iterations += o.iterations;
         self.draft_passes += o.draft_passes;
@@ -152,6 +179,8 @@ mod tests {
         assert!((m.pos_alpha(0) - 2.0 / 3.0).abs() < 1e-12);
         assert!((m.k_alpha(4) - 6.0 / 12.0).abs() < 1e-12);
         assert_eq!(m.accept_hist, vec![1, 0, 1, 0, 1]);
+        assert!((m.mean_accept_len() - 2.0).abs() < 1e-12);
+        assert_eq!(Metrics::default().mean_accept_len(), 0.0);
     }
 
     #[test]

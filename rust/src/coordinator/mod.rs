@@ -1,6 +1,7 @@
-//! L3 coordinator — the paper's serving-side system contribution:
-//! decode engines (AR/AR+/VSD/PARD/EAGLE), speculative acceptance, the
-//! KV-slot contract, continuous batching, routing, and metrics.
+//! L3 coordinator (DESIGN.md §1, §3) — the paper's serving-side system
+//! contribution: decode engines (AR/AR+/VSD/PARD/EAGLE), speculative
+//! acceptance, the KV-slot contract (DESIGN.md §7), continuous
+//! batching, routing, and metrics.
 
 pub mod batcher;
 pub mod engines;

@@ -1,4 +1,5 @@
-//! Model routing: which draft accelerates which target.
+//! Model routing: which draft accelerates which target (model family
+//! per DESIGN.md §6).
 //!
 //! The paper's target-independence property (Table 2) means ONE draft
 //! serves the whole family; the router encodes that policy plus the

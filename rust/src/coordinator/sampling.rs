@@ -1,7 +1,8 @@
 //! Token selection: greedy argmax (the paper's evaluation setting,
-//! temperature 0) plus full speculative sampling (Leviathan et al. /
-//! Chen et al.) for the stochastic path, with the residual-distribution
-//! correction property-tested for distribution preservation.
+//! temperature 0 — what the equivalence suite of DESIGN.md §6 pins)
+//! plus full speculative sampling (Leviathan et al. / Chen et al.) for
+//! the stochastic path, with the residual-distribution correction
+//! property-tested for distribution preservation.
 
 use crate::substrate::rng::Rng;
 

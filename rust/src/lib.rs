@@ -5,8 +5,10 @@
 //! * L2 — JAX SynLlama models (python, build time, AOT'd to HLO text)
 //! * L3 — this crate: the serving coordinator driving models through
 //!   the [`runtime::Backend`] trait — AOT artifacts via the PJRT C API
-//!   (`xla` crate, feature `pjrt`) or the deterministic pure-Rust
-//!   reference backend — with python fully off the request path.
+//!   (`xla` crate, feature `pjrt`), the deterministic pure-Rust
+//!   reference oracle (DESIGN.md §6), or the fast deterministic host
+//!   serving path (DESIGN.md §8) — with python fully off the request
+//!   path.
 
 pub mod coordinator;
 pub mod report;

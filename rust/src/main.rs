@@ -1,15 +1,20 @@
-//! `pard` CLI — leader entrypoint.
+//! `pard` CLI — leader entrypoint (layer map in DESIGN.md §1).
 //!
 //! Subcommands (hand-rolled parsing; clap is not vendored offline):
 //!   eval   --engine pard --target target-l [--task code] [--k 8]
 //!          [--batch 1] [--prompts N] [--max-new N] [--draft NAME]
 //!   serve  --engine pard --target target-l [--n N] [--rate R]
+//!   bench  [--k 2,4,8] [--batch 1,4] [--prompts N] [--max-new N]
+//!          [--task code] [--target target-l] [--seed N] [--no-oracle]
+//!          [--out BENCH_hotpath.json]
 //!   tables [--which 1,2,...] [--full]
 //!   fig    --which 1a|1b|2|6a|6b
 //!   info
 //!
-//! Every subcommand accepts `--backend pjrt|reference` (default pjrt):
-//! `reference` runs the deterministic pure-Rust backend — no artifacts,
+//! Every subcommand accepts `--backend pjrt|reference|host` (default
+//! pjrt; `bench` is always artifact-free): `reference` runs the
+//! deterministic scalar oracle (DESIGN.md §6), `host` the fast host
+//! serving path over the same weights (DESIGN.md §8) — no artifacts,
 //! no Python — with `--seed N` selecting the synthetic weights.
 
 use std::path::{Path, PathBuf};
@@ -19,7 +24,10 @@ use pard::coordinator::engines::{EngineConfig, EngineKind};
 use pard::coordinator::evaluate::run_eval;
 use pard::coordinator::router::default_draft;
 use pard::coordinator::batcher::serve_trace;
+use pard::report::bench::{hotpath_report, write_report, BenchOpts,
+                          BENCH_FILE};
 use pard::report::{self, RunScale};
+use pard::substrate::json::Json;
 use pard::substrate::workload::{build_trace, Arrival};
 use pard::Runtime;
 
@@ -70,22 +78,32 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts", "artifacts"))
 }
 
-/// `--backend` parse: true = reference.  Unknown values are an error,
-/// not a silent fall-through to PJRT.
-fn is_reference(args: &Args) -> Result<bool> {
+/// Which backend `--backend` selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BackendSel {
+    Pjrt,
+    Reference,
+    HostFast,
+}
+
+/// `--backend` parse.  Unknown values are an error, not a silent
+/// fall-through to PJRT.
+fn backend_sel(args: &Args) -> Result<BackendSel> {
     match args.get("backend", "pjrt").as_str() {
-        "reference" | "ref" => Ok(true),
-        "pjrt" => Ok(false),
+        "reference" | "ref" => Ok(BackendSel::Reference),
+        "host" => Ok(BackendSel::HostFast),
+        "pjrt" => Ok(BackendSel::Pjrt),
         other => anyhow::bail!("unknown backend `{other}` \
-                                (pjrt|reference)"),
+                                (pjrt|reference|host)"),
     }
 }
 
 fn open_runtime(args: &Args) -> Result<Runtime> {
-    if is_reference(args)? {
-        Ok(Runtime::reference(args.usize("seed", 7) as u64))
-    } else {
-        Runtime::load(&artifacts_dir(args))
+    let seed = args.usize("seed", 7) as u64;
+    match backend_sel(args)? {
+        BackendSel::Reference => Ok(Runtime::reference(seed)),
+        BackendSel::HostFast => Ok(Runtime::host(seed)),
+        BackendSel::Pjrt => Runtime::load(&artifacts_dir(args)),
     }
 }
 
@@ -209,6 +227,90 @@ fn cmd_fig(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated usize list option, e.g. `--k 2,4,8`.
+fn parse_list(args: &Args, key: &str, default: &[usize]) -> Vec<usize> {
+    match args.opts.get(key) {
+        Some(s) => s
+            .split(',')
+            .filter_map(|x| x.trim().parse().ok())
+            .collect(),
+        None => default.to_vec(),
+    }
+}
+
+/// `pard bench`: the artifact-free hot-path sweep (DESIGN.md §Perf).
+/// Always measures the fast host backend; unless `--no-oracle`, the
+/// scalar reference replays the same sweep as the speedup baseline.
+fn cmd_bench(args: &Args) -> Result<()> {
+    // bench always measures the host backend (the scalar oracle rides
+    // along unless --no-oracle); still validate the option so typos and
+    // non-host backends error instead of silently measuring host.
+    match args.get("backend", "host").as_str() {
+        "host" => {}
+        "pjrt" | "reference" | "ref" => anyhow::bail!(
+            "pard bench always measures the host backend (the scalar \
+             oracle is included unless --no-oracle) — drop --backend"),
+        other => anyhow::bail!("unknown backend `{other}` \
+                                (pjrt|reference|host)"),
+    }
+    let opts = BenchOpts {
+        seed: args.usize("seed", 7) as u64,
+        task: args.get("task", "code"),
+        target: args.get("target", "target-l"),
+        ks: parse_list(args, "k", &[2, 4, 8]),
+        batches: parse_list(args, "batch", &[1, 4]),
+        n_prompts: args.usize("prompts", 8),
+        max_new: args.usize("max-new", 32),
+        oracle: !args.flag("no-oracle"),
+    };
+    anyhow::ensure!(!opts.ks.is_empty() && !opts.batches.is_empty(),
+                    "--k/--batch must list at least one value");
+    let out = PathBuf::from(args.get("out", BENCH_FILE));
+    eprintln!(
+        "bench: {{AR+, VSD, PARD, EAGLE}} x k={:?} x batch={:?}, \
+         {} prompts x {} tokens, task={}, target={}, oracle={}",
+        opts.ks, opts.batches, opts.n_prompts, opts.max_new, opts.task,
+        opts.target, opts.oracle
+    );
+    let report = hotpath_report(&opts)?;
+    write_report(&out, &report)?;
+    print_bench_summary(&report);
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Human-readable recap of the report the JSON file now holds.
+fn print_bench_summary(report: &Json) {
+    println!("{:<7} {:>4} {:>6} {:>12} {:>8} {:>10}",
+             "engine", "k", "batch", "tokens/s", "accept", "vs AR+");
+    if let Some(runs) = report.get("runs").and_then(|r| r.as_arr()) {
+        for run in runs {
+            let f = |k: &str| {
+                run.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+            };
+            let k = run
+                .get("k")
+                .and_then(|v| v.as_f64())
+                .map_or("-".to_string(), |v| format!("{v:.0}"));
+            println!(
+                "{:<7} {:>4} {:>6} {:>12.1} {:>8.2} {:>9.2}x",
+                run.get("engine").and_then(|v| v.as_str()).unwrap_or("?"),
+                k,
+                f("batch"),
+                f("tokens_per_s"),
+                f("mean_accept_len"),
+                f("speedup_vs_ar_plus")
+            );
+        }
+    }
+    if let Some(hvr) = report.get("host_vs_reference") {
+        let g = hvr.get("geomean").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let m = hvr.get("min").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!("host vs scalar oracle: geomean {g:.2}x  min {m:.2}x \
+                  (bar: geomean >= 3x)");
+    }
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     println!("artifacts: {}", rt.manifest.root.display());
@@ -229,23 +331,28 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = parse_args();
+    // `bench` is artifact-free by construction; everything else needs
+    // artifacts only on the PJRT backend.
     if args.cmd != "help"
-        && !is_reference(&args)?
+        && args.cmd != "bench"
+        && backend_sel(&args)? == BackendSel::Pjrt
         && !Path::new(&artifacts_dir(&args)).exists()
     {
         anyhow::bail!("artifacts/ missing — run `make artifacts` first \
-                       (or use --backend reference)");
+                       (or use --backend reference|host)");
     }
     match args.cmd.as_str() {
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "tables" => cmd_tables(&args),
         "fig" => cmd_fig(&args),
         "info" => cmd_info(&args),
         _ => {
             println!(
                 "pard — PARD speculative-decoding coordinator\n\
-                 usage: pard <eval|serve|tables|fig|info> [--opt val]…\n\
+                 usage: pard <eval|serve|bench|tables|fig|info> \
+                 [--opt val]…\n\
                  see README.md"
             );
             Ok(())

@@ -1,0 +1,272 @@
+//! Artifact-free hot-path benchmark sweep (`pard bench`, DESIGN.md
+//! §Perf).
+//!
+//! Runs {AR+, VSD, PARD, EAGLE} × K × batch on the fast host backend
+//! (DESIGN.md §8), optionally replays the *identical* sweep on the
+//! scalar reference oracle, and emits a stable JSON report
+//! ([`BENCH_FILE`], schema [`BENCH_SCHEMA`]) with per-engine tokens/s,
+//! mean accept length, the fwd/commit time split, and speedup vs the
+//! AR+ baseline — the perf trajectory later PRs regress against.
+//! `tests/bench_schema.rs` pins the schema; parse with
+//! [`crate::substrate::json::Json`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::engines::{EngineConfig, EngineKind};
+use crate::coordinator::evaluate::{run_eval, EvalResult};
+use crate::coordinator::router::default_draft;
+use crate::substrate::json::Json;
+use crate::Runtime;
+
+/// Schema tag stamped into every report; bump on breaking field
+/// changes so downstream tooling fails loudly instead of misreading.
+pub const BENCH_SCHEMA: &str = "pard-bench-hotpath/v1";
+
+/// Default report file name (written at the repo root by `pard bench`).
+pub const BENCH_FILE: &str = "BENCH_hotpath.json";
+
+/// Sweep configuration for [`hotpath_report`].
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Synthetic-family weight seed (same semantics as `--seed`).
+    pub seed: u64,
+    /// Prompt task to draw the workload from.
+    pub task: String,
+    /// Verify-side target model; drafts follow the router policy.
+    pub target: String,
+    /// K_infer values swept for the speculative engines.
+    pub ks: Vec<usize>,
+    /// Batch sizes swept for every engine.
+    pub batches: Vec<usize>,
+    /// Prompts per cell.
+    pub n_prompts: usize,
+    /// Tokens generated per prompt.
+    pub max_new: usize,
+    /// Also replay the sweep on the scalar reference oracle and report
+    /// per-cell and aggregate host-vs-oracle speedups.
+    pub oracle: bool,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            seed: 7,
+            task: "code".to_string(),
+            target: "target-l".to_string(),
+            ks: vec![2, 4, 8],
+            batches: vec![1, 4],
+            n_prompts: 8,
+            max_new: 32,
+            oracle: true,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Small sweep for smoke tests: one K, batch 1, two prompts.
+    pub fn smoke() -> Self {
+        BenchOpts {
+            ks: vec![2],
+            batches: vec![1],
+            n_prompts: 2,
+            max_new: 8,
+            ..Self::default()
+        }
+    }
+}
+
+/// One measured sweep cell.
+struct RunRow {
+    engine: &'static str,
+    /// `None` for the AR+ baseline (it never drafts).
+    k: Option<usize>,
+    batch: usize,
+    r: EvalResult,
+}
+
+/// Run the full sweep on `rt`.  AR+ runs once per batch and is always
+/// the first row of its batch group, so baselines exist before any
+/// speedup is computed.
+fn sweep(rt: &Runtime, o: &BenchOpts) -> Result<Vec<RunRow>> {
+    let mut rows = Vec::new();
+    for &batch in &o.batches {
+        for kind in [EngineKind::ArPlus, EngineKind::Vsd,
+                     EngineKind::Pard, EngineKind::Eagle] {
+            let ks: Vec<Option<usize>> = if kind == EngineKind::ArPlus {
+                vec![None]
+            } else {
+                o.ks.iter().copied().map(Some).collect()
+            };
+            for kopt in ks {
+                let cfg = EngineConfig {
+                    kind,
+                    target: o.target.clone(),
+                    draft: default_draft(&rt.manifest, kind, &o.target)?,
+                    batch,
+                    k: kopt.unwrap_or(8),
+                    max_new: o.max_new,
+                    shared_mask: true,
+                };
+                let prompts = rt.prompts(&o.task)?.take(o.n_prompts);
+                let r = run_eval(rt, &cfg, &prompts, o.max_new, &o.task)?;
+                rows.push(RunRow { engine: kind.label(), k: kopt, batch,
+                                   r });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn nums(vs: &[usize]) -> Json {
+    Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn row_json(row: &RunRow, base_tps: f64) -> Json {
+    let m = &row.r.metrics;
+    obj(vec![
+        ("engine", Json::Str(row.engine.to_string())),
+        ("k", row.k.map_or(Json::Null, |k| Json::Num(k as f64))),
+        ("batch", num(row.batch as f64)),
+        ("tokens_per_s", num(m.tps())),
+        ("tokens_per_iter", num(m.tokens_per_iter())),
+        ("mean_accept_len", num(m.mean_accept_len())),
+        ("fwd_s", num(m.fwd_s)),
+        ("commit_s", num(m.commit_s)),
+        ("draft_s", num(m.draft_s)),
+        ("verify_s", num(m.verify_s)),
+        ("prefill_s", num(m.prefill_s)),
+        ("wall_s", num(m.wall_s)),
+        ("generated", num(m.generated as f64)),
+        ("iterations", num(m.iterations as f64)),
+        ("speedup_vs_ar_plus",
+         num(if base_tps > 0.0 { m.tps() / base_tps } else { 0.0 })),
+    ])
+}
+
+/// Per-batch AR+ baseline TPS, keyed by batch size.
+fn baselines(rows: &[RunRow]) -> BTreeMap<usize, f64> {
+    rows.iter()
+        .filter(|r| r.engine == "AR+")
+        .map(|r| (r.batch, r.r.tps()))
+        .collect()
+}
+
+fn rows_json(rows: &[RunRow]) -> Json {
+    let base = baselines(rows);
+    Json::Arr(
+        rows.iter()
+            .map(|r| row_json(r, *base.get(&r.batch).unwrap_or(&0.0)))
+            .collect(),
+    )
+}
+
+/// Run the sweep and build the full report document.
+///
+/// The host backend is always measured; with `opts.oracle` the scalar
+/// reference replays the identical sweep and the report gains an
+/// `oracle` section plus `host_vs_reference` speedup aggregates
+/// (acceptance bar: `geomean >= 3`).
+pub fn hotpath_report(opts: &BenchOpts) -> Result<Json> {
+    let host_rt = Runtime::host(opts.seed);
+    let host_rows = sweep(&host_rt, opts)?;
+
+    let mut top = vec![
+        ("schema", Json::Str(BENCH_SCHEMA.to_string())),
+        ("backend", Json::Str(host_rt.backend_label().to_string())),
+        ("seed", num(opts.seed as f64)),
+        ("task", Json::Str(opts.task.clone())),
+        ("target", Json::Str(opts.target.clone())),
+        ("n_prompts", num(opts.n_prompts as f64)),
+        ("max_new", num(opts.max_new as f64)),
+        ("sweep", obj(vec![
+            ("engines", Json::Arr(
+                ["AR+", "VSD", "PARD", "EAGLE"]
+                    .iter()
+                    .map(|e| Json::Str(e.to_string()))
+                    .collect(),
+            )),
+            ("k", nums(&opts.ks)),
+            ("batch", nums(&opts.batches)),
+        ])),
+        ("runs", rows_json(&host_rows)),
+    ];
+
+    if opts.oracle {
+        let ref_rt = Runtime::reference(opts.seed);
+        let ref_rows = sweep(&ref_rt, opts)?;
+        // Same sweep function, same opts => rows align pairwise.
+        let mut ratios = Vec::with_capacity(host_rows.len());
+        let mut per_run = Vec::with_capacity(host_rows.len());
+        for (hr, rr) in host_rows.iter().zip(&ref_rows) {
+            debug_assert_eq!((hr.engine, hr.k, hr.batch),
+                             (rr.engine, rr.k, rr.batch));
+            let ratio = if rr.r.tps() > 0.0 {
+                hr.r.tps() / rr.r.tps()
+            } else {
+                0.0
+            };
+            ratios.push(ratio);
+            per_run.push(obj(vec![
+                ("engine", Json::Str(hr.engine.to_string())),
+                ("k", hr.k.map_or(Json::Null, |k| Json::Num(k as f64))),
+                ("batch", num(hr.batch as f64)),
+                ("speedup", num(ratio)),
+            ]));
+        }
+        let positive: Vec<f64> =
+            ratios.iter().copied().filter(|&r| r > 0.0).collect();
+        let geomean = if positive.is_empty() {
+            0.0
+        } else {
+            (positive.iter().map(|r| r.ln()).sum::<f64>()
+                / positive.len() as f64)
+                .exp()
+        };
+        let min = positive.iter().copied().fold(f64::INFINITY, f64::min);
+        top.push(("oracle", obj(vec![
+            ("backend", Json::Str(ref_rt.backend_label().to_string())),
+            ("runs", rows_json(&ref_rows)),
+        ])));
+        top.push(("host_vs_reference", obj(vec![
+            ("per_run", Json::Arr(per_run)),
+            ("geomean", num(geomean)),
+            ("min", num(if min.is_finite() { min } else { 0.0 })),
+        ])));
+    }
+
+    Ok(obj(top))
+}
+
+/// Serialize `report` to `path` (single line + trailing newline — the
+/// in-repo JSON writer emits no insignificant whitespace).
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    let mut text = report.to_string();
+    text.push('\n');
+    std::fs::write(path, text)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_opts_cover_required_sweep() {
+        let o = BenchOpts::default();
+        assert_eq!(o.ks, vec![2, 4, 8]);
+        assert!(o.batches.contains(&1));
+        assert!(o.oracle);
+    }
+}

@@ -1,6 +1,10 @@
 //! Experiment runners that regenerate every table and figure in the
 //! paper's evaluation (the per-experiment index lives in DESIGN.md §5).
-//! Shared by `pard tables/fig`, examples/, and rust/benches/.
+//! Shared by `pard tables/fig`, examples/, and rust/benches/.  The
+//! artifact-free perf-baseline sweep behind `pard bench` lives in
+//! [`bench`] (DESIGN.md §Perf).
+
+pub mod bench;
 
 use anyhow::Result;
 

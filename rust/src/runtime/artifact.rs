@@ -1,6 +1,7 @@
 //! Artifact registry: parses `artifacts/manifest.json` (authored by
 //! `python/compile/aot.py`) into a typed view of every AOT-exported
-//! executable, checkpoint, and prompt set.
+//! executable, checkpoint, and prompt set — the load side of the
+//! backend abstraction (DESIGN.md §2).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -4,13 +4,18 @@
 //! `fwd` runs one forward call over a `(tokens, pos)` layout against a
 //! KV cache, `commit` scatters the call's K/V into the cache at
 //! caller-chosen positions (rejected columns → the garbage slot,
-//! DESIGN.md §7).  Two implementations exist:
+//! DESIGN.md §7).  Three implementations exist:
 //!
-//! * [`crate::runtime::model::ModelRt`] — AOT-compiled PJRT executables
-//!   (feature `pjrt`), the measured serving path;
-//! * [`crate::runtime::reference::RefModel`] — a deterministic pure-Rust
-//!   f32 transformer with identical cache semantics, used by the
-//!   engine-equivalence test suite and artifact-free runs.
+//! * `runtime::model::ModelRt` — AOT-compiled PJRT executables (only
+//!   under feature `pjrt`, so no doc-link — the module is compiled out
+//!   otherwise), the measured serving path on device artifacts;
+//! * [`crate::runtime::reference::RefModel`] — the deterministic
+//!   pure-Rust scalar oracle (DESIGN.md §6) behind the
+//!   engine-equivalence test suite;
+//! * [`crate::runtime::host::HostModel`] — the fast host serving path
+//!   (DESIGN.md §8): same weights and bit-identical live outputs as the
+//!   oracle, restructured for artifact-free throughput; `pard bench`
+//!   measures on it.
 //!
 //! The trait owns exactly the surface the engines need; anything
 //! PJRT-specific (bucket files, executable caches) stays behind it.

@@ -25,14 +25,26 @@ pub enum CacheState {
     Device(xla::PjRtBuffer),
 }
 
+/// One model's KV cache: `[2, L, B, S_max, H, D]` plus per-row
+/// committed lengths.  The speculative commit contract (garbage slot,
+/// stale-slot reuse) is documented at module level and in DESIGN.md §7.
 pub struct KvCache {
+    /// Backend-private backing store (host vector / device buffer).
     pub state: CacheState,
+    /// Batch rows `B` this cache was built for.
     pub batch: usize,
+    /// Slot capacity `S_max`; slot `S_max - 1` is the write-only
+    /// garbage slot, so live positions are capped at `S_max - 2`.
     pub s_max: usize,
+    /// Cached layers `L`.
     pub n_layers: usize,
+    /// Attention heads `H` per layer.
     pub n_heads: usize,
+    /// Head dimension `D`.
     pub d_head: usize,
-    /// Committed sequence length per batch row.
+    /// Committed sequence length per batch row: slot `s < cur_len[row]`
+    /// always holds live data; slots at or past it are stale until the
+    /// engine re-feeds real tokens over them.
     pub cur_len: Vec<u32>,
 }
 
@@ -96,8 +108,11 @@ impl KvCache {
 
     /// Flat offset of `[c, l, row, slot, 0, 0]` in a `[2, L, B, S, H*D]`
     /// tensor — the single source of truth for the host cache layout.
-    fn flat_off(n_layers: usize, batch: usize, s_max: usize, hd: usize,
-                c: usize, l: usize, row: usize, slot: usize) -> usize {
+    /// `pub(crate)` so the host fast path (DESIGN.md §8) can read the
+    /// tensor in place through a `Sync` view instead of copying it.
+    pub(crate) fn flat_off(n_layers: usize, batch: usize, s_max: usize,
+                           hd: usize, c: usize, l: usize, row: usize,
+                           slot: usize) -> usize {
         (((c * n_layers + l) * batch + row) * s_max + slot) * hd
     }
 

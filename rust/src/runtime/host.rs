@@ -1,0 +1,706 @@
+//! Fast deterministic host serving backend (DESIGN.md §8).
+//!
+//! [`HostModel`] drives the *same weights* as the scalar reference
+//! oracle ([`super::reference::RefModel`], DESIGN.md §6) through a
+//! restructured forward pass built for speed on real host CPUs while
+//! keeping the oracle's bit-exact determinism contract:
+//!
+//! * **Identical per-cell arithmetic.**  Every floating-point reduction
+//!   (matmul cells, attention scores, softmax sums, weighted-V sums,
+//!   rmsnorm squares, logit dot products) runs in exactly the scalar
+//!   oracle's fixed ascending order, starting from the same initial
+//!   value.  Loop *shape* is free — k-outer vs dot-product, slot
+//!   unrolling, thread partitioning — as long as no per-cell sum is
+//!   reassociated.  Live-cell outputs are therefore bit-identical to
+//!   `RefModel`, which is what lets the engine-equivalence suite (and
+//!   `tests/host_backend.rs`) compare the two backends exactly instead
+//!   of approximately.
+//! * **Dead work is skipped, not recomputed.**  Parked cells (queries
+//!   positioned at the garbage slot, DESIGN.md §7) are dropped before
+//!   the first matmul; their logits/hidden/staged-KV outputs are zeros.
+//!   The slot contract already promises nobody reads them — the scalar
+//!   oracle spends full matmul/MLP/logit FLOPs on them anyway (a 32-wide
+//!   prefill call with an 8-token prompt does 4x the live work).
+//! * **The KV cache is read in place.**  The oracle materialises a
+//!   transient `[b, s_used, H*D]` copy of the persistent cache *per
+//!   layer per call*; the host path resolves each attended slot through
+//!   a per-row `slot -> staged column` map — staged K/V from this call
+//!   win, otherwise the persistent tensor is read directly through a
+//!   `Sync` borrowed view (`CacheView`).  No copies, identical values.
+//! * **Rotary tables are computed once per call.**  `sin/cos(pos *
+//!   inv_freq)` depends only on the cell position, yet the oracle
+//!   re-evaluates it per layer *and per head*: `2 * L * H * (D/2)`
+//!   `sin_cos` calls per cell where one `D/2` pass suffices.  The trig
+//!   elimination alone is the single largest win on decode-shaped calls.
+//! * **Batch rows run in parallel.**  Rows are partitioned into
+//!   contiguous chunks executed on `std::thread::scope` threads.  Rows
+//!   share no state (DESIGN.md §6 row independence), every chunk writes
+//!   a private output block, and per-cell order never depends on the
+//!   partition — so outputs are bit-identical across thread counts,
+//!   machines, and runs.
+//!
+//! What stays deliberately identical to the oracle: `f32::exp` in
+//! softmax/SiLU and `sin_cos` values (same libm calls, same bits), the
+//! fwd/commit split, `pick_t` exact-T semantics, and the garbage-slot
+//! commit protocol via [`KvCache::host_scatter`].
+
+// Kernel-style index loops are deliberate here: the fixed per-cell
+// reduction order *is* the spec (see module docs), and explicit indices
+// keep that order auditable against reference.rs line by line.
+#![allow(clippy::needless_range_loop)]
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::artifact::{ModelCfg, ModelEntry, ModelKind};
+use super::backend::{Backend, FwdOut, KvStage};
+use super::cache::{CacheState, KvCache};
+use super::reference::{matmul_acc, rmsnorm, RefModel};
+
+/// Read-only view of a host cache tensor plus its layout.  `KvCache`
+/// itself cannot cross a scoped-thread boundary (its PJRT variant holds
+/// non-`Send` device handles under `--features pjrt`); this borrowed
+/// view is plain `&[f32]` + dimensions and is always `Sync`.
+struct CacheView<'a> {
+    data: &'a [f32],
+    n_layers: usize,
+    batch: usize,
+    s_max: usize,
+    hd: usize,
+}
+
+impl CacheView<'_> {
+    /// Offset of `[c, l, row, slot 0]` — delegates to the cache's
+    /// single-source-of-truth layout formula.
+    #[inline]
+    fn off(&self, c: usize, l: usize, row: usize) -> usize {
+        KvCache::flat_off(self.n_layers, self.batch, self.s_max, self.hd,
+                          c, l, row, 0)
+    }
+}
+
+/// One thread's private output block covering batch rows
+/// `r0 .. r0 + rows` (assembled into the `FwdOut` layout by `fwd`).
+struct RowBlock {
+    r0: usize,
+    rows: usize,
+    /// `[rows, t, vocab]`; parked cells are zero.
+    logits: Vec<f32>,
+    /// `[rows, t, d]` when the model exports hidden states.
+    hidden: Option<Vec<f32>>,
+    /// `[L, rows, t, H*D]`; parked cells are zero.
+    k_stage: Vec<f32>,
+    v_stage: Vec<f32>,
+}
+
+/// Resolve the K or V vector attended at `slot`: this call's staged
+/// column if the slot map says the slot was written in-flight, else the
+/// persistent cache tensor read in place.  Returns exactly the bytes
+/// the oracle's transient merged copy would hold.
+#[inline(always)]
+fn slot_kv<'a>(stage: &'a [f32], cache: &'a [f32], map: &[i32],
+               map_base: usize, slot: usize, cache_base: usize,
+               hd: usize, head_off: usize, dh: usize) -> &'a [f32] {
+    let j = map[map_base + slot];
+    if j >= 0 {
+        &stage[j as usize * hd + head_off..][..dh]
+    } else {
+        &cache[cache_base + slot * hd + head_off..][..dh]
+    }
+}
+
+/// The fast host backend: scalar-oracle weights, restructured execution.
+pub struct HostModel {
+    m: RefModel,
+    /// `[d, vocab]` transpose of the tied embedding, so the logit
+    /// projection runs through `matmul_acc` (k-outer, vectorizable)
+    /// instead of the oracle's scalar per-cell dot products.  Same
+    /// per-cell add order, same bits.
+    embed_t: Vec<f32>,
+    /// Worker threads to span batch rows across (`>= 1`).
+    threads: usize,
+}
+
+impl HostModel {
+    /// Build the model named by `entry` — same deterministic weights as
+    /// [`RefModel::build`] for the same `(seed, entry)`.
+    pub fn build(seed: u64, entry: &ModelEntry) -> Result<HostModel> {
+        let m = RefModel::build(seed, entry)?;
+        let (v, d) = (m.cfg.vocab, m.cfg.d_model);
+        let mut embed_t = vec![0f32; d * v];
+        for tok in 0..v {
+            for j in 0..d {
+                embed_t[j * v + tok] = m.embed[tok * d + j];
+            }
+        }
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Ok(HostModel { m, embed_t, threads })
+    }
+
+    /// Forward over batch rows `r0 .. r0 + rows` only.  Pure function of
+    /// its row range: no other row's tokens, cache lines, or scratch are
+    /// ever read, which is what makes the scoped-thread split bit-safe.
+    fn fwd_rows(&self, view: &CacheView, t: usize, r0: usize, rows: usize,
+                tokens: &[i32], pos: &[i32], hidden_in: Option<&[f32]>,
+                s_used: usize) -> RowBlock {
+        let cfg = &self.m.cfg;
+        let (d, h, dh, ff, vocab) =
+            (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff, cfg.vocab);
+        let hd = h * dh;
+        let half = dh / 2;
+        let n_layers = self.m.layers.len();
+        let mut blk = RowBlock {
+            r0,
+            rows,
+            logits: vec![0f32; rows * t * vocab],
+            hidden: if self.m.hidden {
+                Some(vec![0f32; rows * t * d])
+            } else {
+                None
+            },
+            k_stage: vec![0f32; n_layers * rows * t * hd],
+            v_stage: vec![0f32; n_layers * rows * t * hd],
+        };
+
+        // Live-cell gather: local cell index (lrow * t + col), local
+        // batch row, clamped position.  Everything parked is dropped
+        // here and never touched again.
+        let mut cells: Vec<usize> = Vec::with_capacity(rows * t);
+        let mut lrows: Vec<usize> = Vec::with_capacity(rows * t);
+        let mut ps: Vec<usize> = Vec::with_capacity(rows * t);
+        // Raw (unclamped) positions, kept separately: the oracle ropes
+        // Q/K with the raw `pos` value and clamps only for slot
+        // scatter/attention — bit-identity requires doing the same.
+        let mut praw: Vec<i32> = Vec::with_capacity(rows * t);
+        for lrow in 0..rows {
+            for col in 0..t {
+                let gi = (r0 + lrow) * t + col;
+                let p = pos[gi].clamp(0, view.s_max as i32 - 1) as usize;
+                if p < s_used {
+                    cells.push(lrow * t + col);
+                    lrows.push(lrow);
+                    ps.push(p);
+                    praw.push(pos[gi]);
+                }
+            }
+        }
+        let n = cells.len();
+        if n == 0 {
+            return blk;
+        }
+
+        // Token embeddings (EAGLE: fuse [target hidden ; embedding]),
+        // gathered densely over live cells only.
+        let mut x = vec![0f32; n * d];
+        match (self.m.kind, hidden_in) {
+            (ModelKind::Lm, _) => {
+                for j in 0..n {
+                    // global cell = (r0 + lrow) * t + col = r0*t + cells[j]
+                    let tok = tokens[r0 * t + cells[j]]
+                        .clamp(0, vocab as i32 - 1) as usize;
+                    x[j * d..(j + 1) * d].copy_from_slice(
+                        &self.m.embed[tok * d..(tok + 1) * d]);
+                }
+            }
+            (ModelKind::Eagle, Some(hin)) => {
+                let fuse = self.m.fuse.as_ref().expect("eagle has fuse");
+                let mut cat = vec![0f32; n * 2 * d];
+                for j in 0..n {
+                    let gi = r0 * t + cells[j];
+                    let tok =
+                        tokens[gi].clamp(0, vocab as i32 - 1) as usize;
+                    cat[j * 2 * d..j * 2 * d + d]
+                        .copy_from_slice(&hin[gi * d..(gi + 1) * d]);
+                    cat[j * 2 * d + d..(j + 1) * 2 * d]
+                        .copy_from_slice(&self.m.embed[tok * d..(tok + 1) * d]);
+                }
+                matmul_acc(&cat, fuse, &mut x, n, 2 * d, d);
+            }
+            (ModelKind::Eagle, None) => {
+                unreachable!("validated by fwd()")
+            }
+        }
+
+        // Rotary tables: one sin/cos row per live cell, shared by every
+        // layer and head (the oracle recomputes these 2*L*H times).
+        let mut sin_t = vec![0f32; n * half];
+        let mut cos_t = vec![0f32; n * half];
+        for j in 0..n {
+            for c in 0..half {
+                let ang = praw[j] as f32 * self.m.inv_freq[c];
+                let (s, co) = ang.sin_cos();
+                sin_t[j * half + c] = s;
+                cos_t[j * half + c] = co;
+            }
+        }
+
+        // slot -> live-cell map per local row: which in-flight column
+        // occupies a cache slot for the duration of this call (later
+        // columns win, matching the oracle's scatter order).
+        let mut staged_at = vec![-1i32; rows * s_used];
+        for j in 0..n {
+            staged_at[lrows[j] * s_used + ps[j]] = j as i32;
+        }
+
+        // Layer-loop scratch, allocated once and reused.
+        let mut q = vec![0f32; n * hd];
+        let mut k = vec![0f32; n * hd];
+        let mut v = vec![0f32; n * hd];
+        let mut attn = vec![0f32; n * hd];
+        let mut g = vec![0f32; n * ff];
+        let mut u = vec![0f32; n * ff];
+        let mut scores = vec![0f32; s_used];
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        for (l, lyr) in self.m.layers.iter().enumerate() {
+            let xn = rmsnorm(&x, d, &lyr.ln_attn);
+            q.fill(0.0);
+            k.fill(0.0);
+            v.fill(0.0);
+            matmul_acc(&xn, &lyr.wq, &mut q, n, d, hd);
+            matmul_acc(&xn, &lyr.wk, &mut k, n, d, hd);
+            matmul_acc(&xn, &lyr.wv, &mut v, n, d, hd);
+
+            // Rotary, from the precomputed tables.
+            for j in 0..n {
+                let (st, ct) =
+                    (&sin_t[j * half..(j + 1) * half],
+                     &cos_t[j * half..(j + 1) * half]);
+                for head in 0..h {
+                    let base = j * hd + head * dh;
+                    for c in 0..half {
+                        let (sin, cos) = (st[c], ct[c]);
+                        let q1 = q[base + c];
+                        let q2 = q[base + half + c];
+                        q[base + c] = q1 * cos - q2 * sin;
+                        q[base + half + c] = q1 * sin + q2 * cos;
+                        let k1 = k[base + c];
+                        let k2 = k[base + half + c];
+                        k[base + c] = k1 * cos - k2 * sin;
+                        k[base + half + c] = k1 * sin + k2 * cos;
+                    }
+                }
+            }
+
+            // Stage this call's K/V into the output block (parked cells
+            // stay zero; they only ever commit to the garbage slot).
+            for j in 0..n {
+                let dst = (l * rows * t + cells[j]) * hd;
+                blk.k_stage[dst..dst + hd]
+                    .copy_from_slice(&k[j * hd..(j + 1) * hd]);
+                blk.v_stage[dst..dst + hd]
+                    .copy_from_slice(&v[j * hd..(j + 1) * hd]);
+            }
+
+            // Causal cached attention, persistent tensor read in place.
+            attn.fill(0.0);
+            for j in 0..n {
+                let (lrow, p) = (lrows[j], ps[j]);
+                let grow = r0 + lrow;
+                let map_base = lrow * s_used;
+                let kc_base = view.off(0, l, grow);
+                let vc_base = view.off(1, l, grow);
+                for head in 0..h {
+                    let head_off = head * dh;
+                    let qv = &q[j * hd + head_off..j * hd + head_off + dh];
+                    // Scores: 4 independent accumulator chains hide the
+                    // serial-add latency; each chain is still the
+                    // oracle's e-ascending per-cell order.
+                    let mut s = 0usize;
+                    while s + 4 <= p + 1 {
+                        let k0 = slot_kv(&k, view.data, &staged_at,
+                                         map_base, s, kc_base, hd,
+                                         head_off, dh);
+                        let k1 = slot_kv(&k, view.data, &staged_at,
+                                         map_base, s + 1, kc_base, hd,
+                                         head_off, dh);
+                        let k2 = slot_kv(&k, view.data, &staged_at,
+                                         map_base, s + 2, kc_base, hd,
+                                         head_off, dh);
+                        let k3 = slot_kv(&k, view.data, &staged_at,
+                                         map_base, s + 3, kc_base, hd,
+                                         head_off, dh);
+                        let (mut a0, mut a1, mut a2, mut a3) =
+                            (0f32, 0f32, 0f32, 0f32);
+                        for e in 0..dh {
+                            let qe = qv[e];
+                            a0 += qe * k0[e];
+                            a1 += qe * k1[e];
+                            a2 += qe * k2[e];
+                            a3 += qe * k3[e];
+                        }
+                        scores[s] = a0 * scale;
+                        scores[s + 1] = a1 * scale;
+                        scores[s + 2] = a2 * scale;
+                        scores[s + 3] = a3 * scale;
+                        s += 4;
+                    }
+                    while s <= p {
+                        let kr = slot_kv(&k, view.data, &staged_at,
+                                         map_base, s, kc_base, hd,
+                                         head_off, dh);
+                        let mut acc = 0f32;
+                        for e in 0..dh {
+                            acc += qv[e] * kr[e];
+                        }
+                        scores[s] = acc * scale;
+                        s += 1;
+                    }
+                    let mut m = f32::NEG_INFINITY;
+                    for &sc in scores.iter().take(p + 1) {
+                        if sc > m {
+                            m = sc;
+                        }
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores.iter_mut().take(p + 1) {
+                        *sc = (*sc - m).exp();
+                        denom += *sc;
+                    }
+                    let out = &mut attn
+                        [j * hd + head_off..j * hd + head_off + dh];
+                    for s in 0..=p {
+                        let w = scores[s] / denom;
+                        let vr = slot_kv(&v, view.data, &staged_at,
+                                         map_base, s, vc_base, hd,
+                                         head_off, dh);
+                        for e in 0..dh {
+                            out[e] += w * vr[e];
+                        }
+                    }
+                }
+            }
+            matmul_acc(&attn, &lyr.wo, &mut x, n, hd, d);
+
+            let xn2 = rmsnorm(&x, d, &lyr.ln_mlp);
+            g.fill(0.0);
+            u.fill(0.0);
+            matmul_acc(&xn2, &lyr.w1, &mut g, n, d, ff);
+            matmul_acc(&xn2, &lyr.w3, &mut u, n, d, ff);
+            for i in 0..n * ff {
+                let gv = g[i];
+                g[i] = gv * (1.0 / (1.0 + (-gv).exp())) * u[i];
+            }
+            matmul_acc(&g, &lyr.w2, &mut x, n, ff, d);
+        }
+
+        // Final norm + tied-embedding logits, scattered back to the
+        // (zeros-padded) call layout.
+        let hidden = rmsnorm(&x, d, &self.m.ln_f);
+        let mut logits = vec![0f32; n * vocab];
+        matmul_acc(&hidden, &self.embed_t, &mut logits, n, d, vocab);
+        for j in 0..n {
+            let dst = cells[j] * vocab;
+            blk.logits[dst..dst + vocab]
+                .copy_from_slice(&logits[j * vocab..(j + 1) * vocab]);
+        }
+        if let Some(bh) = blk.hidden.as_mut() {
+            for j in 0..n {
+                let dst = cells[j] * d;
+                bh[dst..dst + d]
+                    .copy_from_slice(&hidden[j * d..(j + 1) * d]);
+            }
+        }
+        blk
+    }
+}
+
+impl Backend for HostModel {
+    fn cfg(&self) -> &ModelCfg {
+        &self.m.cfg
+    }
+
+    fn kind(&self) -> ModelKind {
+        self.m.kind
+    }
+
+    fn n_params(&self) -> usize {
+        self.m.cfg.n_params(self.m.kind == ModelKind::Eagle)
+    }
+
+    /// No bucket grid: the host path executes any T exactly (same call
+    /// layouts as the scalar oracle, so engine traffic is identical).
+    fn pick_t(&self, _b: usize, t_needed: usize) -> Result<usize> {
+        Ok(t_needed.max(1))
+    }
+
+    fn new_cache(&self, batch: usize) -> Result<KvCache> {
+        Ok(KvCache::host(&self.m.cfg, batch))
+    }
+
+    fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
+           hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
+        let t0 = Instant::now();
+        let cfg = &self.m.cfg;
+        let (d, vocab) = (cfg.d_model, cfg.vocab);
+        let hd = cfg.n_heads * cfg.d_head;
+        let s_max = cache.s_max;
+        anyhow::ensure!(b >= 1 && t >= 1, "empty call shape {b}x{t}");
+        anyhow::ensure!(tokens.len() == b * t && pos.len() == b * t,
+                        "tokens/pos must be [b*t]");
+        anyhow::ensure!(b == cache.batch, "batch {b} != cache batch {}",
+                        cache.batch);
+        match (self.m.kind, hidden_in) {
+            (ModelKind::Eagle, None) => {
+                anyhow::bail!("EAGLE fwd requires hidden input")
+            }
+            (ModelKind::Lm, Some(_)) => {
+                anyhow::bail!("LM fwd takes no hidden input")
+            }
+            (ModelKind::Eagle, Some(hin)) => {
+                anyhow::ensure!(hin.len() == b * t * d,
+                                "hidden_in must be [b*t*d]");
+            }
+            (ModelKind::Lm, None) => {}
+        }
+        let data = match &cache.state {
+            CacheState::Host(data) => data,
+            #[cfg(feature = "pjrt")]
+            CacheState::Device(_) => {
+                anyhow::bail!("host fwd needs a host cache")
+            }
+        };
+        let view = CacheView {
+            data,
+            n_layers: cache.n_layers,
+            batch: cache.batch,
+            s_max,
+            hd,
+        };
+
+        // Same truncated-view bound as the oracle: the highest LIVE
+        // position; cells at or past it are parked.
+        let garbage = s_max - 1;
+        let s_used = pos
+            .iter()
+            .map(|&p| p.clamp(0, s_max as i32 - 1) as usize)
+            .filter(|&p| p < garbage)
+            .max()
+            .map_or(1, |p| p + 1);
+
+        // Partition batch rows into contiguous per-thread chunks.  The
+        // per-cell math is row-local, so the partition (and thread
+        // count) can never change a single output bit — only wall
+        // clock.  Scoped threads are spawned per call, so tiny
+        // (decode-shaped) calls stay single-threaded: spawn+join costs
+        // tens of microseconds, comparable to a whole t=1 row on the
+        // synthetic models.
+        let live_total = pos
+            .iter()
+            .filter(|&&p| {
+                (p.clamp(0, s_max as i32 - 1) as usize) < s_used
+            })
+            .count();
+        const PAR_MIN_LIVE_CELLS: usize = 16;
+        let workers = if live_total >= PAR_MIN_LIVE_CELLS {
+            self.threads.min(b).max(1)
+        } else {
+            1
+        };
+        let chunk = b.div_ceil(workers);
+        let ranges: Vec<(usize, usize)> = (0..b)
+            .step_by(chunk)
+            .map(|r0| (r0, chunk.min(b - r0)))
+            .collect();
+        let blocks: Vec<RowBlock> = if ranges.len() == 1 {
+            vec![self.fwd_rows(&view, t, 0, b, tokens, pos, hidden_in,
+                               s_used)]
+        } else {
+            let view_ref = &view;
+            std::thread::scope(|sc| {
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .map(|&(r0, rows)| {
+                        sc.spawn(move || {
+                            self.fwd_rows(view_ref, t, r0, rows, tokens,
+                                          pos, hidden_in, s_used)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|hdl| hdl.join().expect("host worker panicked"))
+                    .collect()
+            })
+        };
+
+        // Assemble private row blocks into the FwdOut layouts.
+        let n_layers = self.m.layers.len();
+        let mut logits = vec![0f32; b * t * vocab];
+        let mut hidden_out = if self.m.hidden {
+            Some(vec![0f32; b * t * d])
+        } else {
+            None
+        };
+        let mut k_stage = vec![0f32; n_layers * b * t * hd];
+        let mut v_stage = vec![0f32; n_layers * b * t * hd];
+        for blk in &blocks {
+            let (r0, rows) = (blk.r0, blk.rows);
+            logits[r0 * t * vocab..(r0 + rows) * t * vocab]
+                .copy_from_slice(&blk.logits);
+            if let (Some(hout), Some(bh)) =
+                (hidden_out.as_mut(), blk.hidden.as_ref())
+            {
+                hout[r0 * t * d..(r0 + rows) * t * d].copy_from_slice(bh);
+            }
+            for l in 0..n_layers {
+                let src = &blk.k_stage[l * rows * t * hd
+                    ..(l + 1) * rows * t * hd];
+                k_stage[(l * b + r0) * t * hd..(l * b + r0 + rows) * t * hd]
+                    .copy_from_slice(src);
+                let src = &blk.v_stage[l * rows * t * hd
+                    ..(l + 1) * rows * t * hd];
+                v_stage[(l * b + r0) * t * hd..(l * b + r0 + rows) * t * hd]
+                    .copy_from_slice(src);
+            }
+        }
+        Ok(FwdOut {
+            logits,
+            hidden: hidden_out,
+            kv: KvStage::Host { k: k_stage, v: v_stage },
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn commit(&self, b: usize, t: usize, out: &FwdOut, commit_pos: &[i32],
+              cache: &mut KvCache) -> Result<f64> {
+        let t0 = Instant::now();
+        match &out.kv {
+            KvStage::Host { k, v } => {
+                cache.host_scatter(b, t, k, v, commit_pos)?;
+            }
+            #[cfg(feature = "pjrt")]
+            KvStage::Pjrt { .. } => {
+                anyhow::bail!("PJRT FwdOut fed to the host commit")
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::reference_manifest;
+
+    fn pair(name: &str) -> (RefModel, HostModel) {
+        let man = reference_manifest();
+        let entry = man.models.get(name).unwrap();
+        (RefModel::build(7, entry).unwrap(),
+         HostModel::build(7, entry).unwrap())
+    }
+
+    #[test]
+    fn fwd_is_bit_identical_to_oracle() {
+        let (oracle, host) = pair("target-m");
+        let co = oracle.new_cache(1).unwrap();
+        let ch = host.new_cache(1).unwrap();
+        let toks = [0i32, 13, 20, 21, 33];
+        let pos = [0i32, 1, 2, 3, 4];
+        let a = oracle.fwd(1, 5, &toks, &pos, None, &co).unwrap();
+        let b = host.fwd(1, 5, &toks, &pos, None, &ch).unwrap();
+        assert_eq!(a.logits, b.logits, "host logits diverged from oracle");
+    }
+
+    #[test]
+    fn staged_kv_and_commit_match_oracle() {
+        let (oracle, host) = pair("draft-s");
+        let mut co = oracle.new_cache(1).unwrap();
+        let mut ch = host.new_cache(1).unwrap();
+        let toks = [0i32, 17, 25];
+        let pos = [0i32, 1, 2];
+        let a = oracle.fwd(1, 3, &toks, &pos, None, &co).unwrap();
+        let b = host.fwd(1, 3, &toks, &pos, None, &ch).unwrap();
+        oracle.commit(1, 3, &a, &pos, &mut co).unwrap();
+        host.commit(1, 3, &b, &pos, &mut ch).unwrap();
+        for l in 0..oracle.cfg().n_layers {
+            for slot in 0..3 {
+                assert_eq!(co.host_kv(0, l, 0, slot),
+                           ch.host_kv(0, l, 0, slot),
+                           "K cache diverged at l={l} slot={slot}");
+                assert_eq!(co.host_kv(1, l, 0, slot),
+                           ch.host_kv(1, l, 0, slot),
+                           "V cache diverged at l={l} slot={slot}");
+            }
+        }
+    }
+
+    #[test]
+    fn parked_cells_are_skipped_but_live_cells_exact() {
+        // Pad the call out with parked columns and a parked row: live
+        // logits must stay bit-identical to the oracle's, parked cells
+        // are zero (the oracle computes pad-token logits there; both
+        // are unread by contract).
+        let (oracle, host) = pair("target-m");
+        let vocab = oracle.cfg().vocab;
+        let co = oracle.new_cache(2).unwrap();
+        let ch = host.new_cache(2).unwrap();
+        let gslot = ch.garbage_slot();
+        let toks = [0i32, 13, 20, 2, 2, 2, 2, 2];
+        let pos = [0i32, 1, 2, gslot, gslot, gslot, gslot, gslot];
+        let a = oracle.fwd(2, 4, &toks, &pos, None, &co).unwrap();
+        let b = host.fwd(2, 4, &toks, &pos, None, &ch).unwrap();
+        assert_eq!(a.logits[..3 * vocab], b.logits[..3 * vocab]);
+        assert!(b.logits[4 * vocab..].iter().all(|&x| x == 0.0),
+                "parked row must be zeros on the host path");
+    }
+
+    #[test]
+    fn eagle_head_matches_oracle() {
+        let (oracle, host) = pair("eagle-target-l");
+        let d = oracle.cfg().d_model;
+        let co = oracle.new_cache(1).unwrap();
+        let ch = host.new_cache(1).unwrap();
+        let hin: Vec<f32> = (0..2 * d).map(|i| (i as f32) * 0.01).collect();
+        let a = oracle
+            .fwd(1, 2, &[0, 13], &[0, 1], Some(&hin), &co)
+            .unwrap();
+        let b = host.fwd(1, 2, &[0, 13], &[0, 1], Some(&hin), &ch).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.hidden, b.hidden);
+        assert!(host.fwd(1, 1, &[0], &[0], None, &ch).is_err(),
+                "eagle fwd without hidden must fail");
+    }
+
+    #[test]
+    fn out_of_range_pos_ropes_with_raw_value() {
+        // A raw pos below 0 clamps to slot 0 (live) for attention and
+        // scatter, but the oracle ropes Q/K with the RAW value — the
+        // host path must too, or bit-identity breaks at the surface.
+        let (oracle, host) = pair("draft-s");
+        let co = oracle.new_cache(1).unwrap();
+        let ch = host.new_cache(1).unwrap();
+        let a = oracle.fwd(1, 1, &[5], &[-3], None, &co).unwrap();
+        let b = host.fwd(1, 1, &[5], &[-3], None, &ch).unwrap();
+        assert_eq!(a.logits, b.logits, "OOB-pos logits diverged");
+        match (&a.kv, &b.kv) {
+            (KvStage::Host { k: ka, .. }, KvStage::Host { k: kb, .. }) => {
+                assert_eq!(ka, kb, "OOB-pos staged K diverged");
+            }
+            #[cfg(feature = "pjrt")]
+            _ => unreachable!("host backends stage host KV"),
+        }
+    }
+
+    #[test]
+    fn decode_after_commit_matches_oracle() {
+        // Cached decode: prefill, commit, then T=1 steps — the
+        // in-place cache read must equal the oracle's transient copy.
+        let (oracle, host) = pair("draft-s");
+        let vocab = oracle.cfg().vocab;
+        let run = |m: &dyn Backend| -> Vec<f32> {
+            let mut cache = m.new_cache(1).unwrap();
+            let toks = [0i32, 17, 25, 30];
+            let pos = [0i32, 1, 2, 3];
+            let out = m.fwd(1, 4, &toks, &pos, None, &cache).unwrap();
+            m.commit(1, 4, &out, &pos, &mut cache).unwrap();
+            cache.cur_len[0] = 4;
+            let step = m.fwd(1, 1, &[19], &[4], None, &cache).unwrap();
+            step.logits[..vocab].to_vec()
+        };
+        assert_eq!(run(&oracle), run(&host));
+    }
+}

@@ -9,10 +9,15 @@
 //! * **Reference**: a deterministic pure-Rust transformer family with
 //!   identical cache semantics — no artifacts, no Python, runs in plain
 //!   `cargo test` (DESIGN.md §6).
+//! * **Host**: the same synthetic family through the fast host serving
+//!   path (DESIGN.md §8) — bit-identical live-cell outputs to the
+//!   reference oracle, built for artifact-free speed: the backend
+//!   `pard bench` measures against.
 
 pub mod artifact;
 pub mod backend;
 pub mod cache;
+pub mod host;
 #[cfg(feature = "pjrt")]
 pub mod model;
 pub mod reference;
@@ -25,6 +30,7 @@ use anyhow::Result;
 pub use artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
 pub use backend::{Backend, FwdOut, KvStage};
 pub use cache::{CacheState, KvCache};
+pub use host::HostModel;
 #[cfg(feature = "pjrt")]
 pub use model::ModelRt;
 
@@ -34,7 +40,10 @@ use crate::substrate::tokenizer::Tokenizer;
 enum Host {
     #[cfg(feature = "pjrt")]
     Pjrt { client: xla::PjRtClient },
+    /// Scalar reference oracle (DESIGN.md §6).
     Reference { seed: u64 },
+    /// Fast host serving path over the same weights (DESIGN.md §8).
+    HostFast { seed: u64 },
 }
 
 /// Owns the manifest + backend host; hands out loaded models as
@@ -52,17 +61,22 @@ pub struct Runtime {
 pub enum RuntimeSpec {
     /// AOT artifacts directory (PJRT backend).
     Artifacts(PathBuf),
-    /// Deterministic in-process reference backend.
+    /// Deterministic in-process reference backend (scalar oracle).
     Reference { seed: u64 },
+    /// Deterministic in-process fast host backend (DESIGN.md §8).
+    Host { seed: u64 },
 }
 
 impl RuntimeSpec {
+    /// Open a runtime for this description (constructed on the calling
+    /// thread — PJRT handles never migrate).
     pub fn open(&self) -> Result<Runtime> {
         match self {
             RuntimeSpec::Artifacts(p) => Runtime::load(p),
             RuntimeSpec::Reference { seed } => {
                 Ok(Runtime::reference(*seed))
             }
+            RuntimeSpec::Host { seed } => Ok(Runtime::host(*seed)),
         }
     }
 }
@@ -80,14 +94,26 @@ impl Runtime {
     pub fn load(_artifacts: &Path) -> Result<Self> {
         anyhow::bail!(
             "this build has no PJRT runtime (feature `pjrt` disabled) — \
-             run with the reference backend (--backend reference) or \
-             rebuild with --features pjrt"
+             run artifact-free (--backend host or --backend reference) \
+             or rebuild with --features pjrt"
         )
     }
 
     /// Deterministic artifact-free runtime over the synthetic reference
     /// family.  Same `seed` ⇒ bit-identical weights, prompts, outputs.
     pub fn reference(seed: u64) -> Self {
+        Self::synthetic(Host::Reference { seed })
+    }
+
+    /// Deterministic artifact-free runtime over the *fast host* backend
+    /// (DESIGN.md §8): same synthetic family, same weights, same seed
+    /// semantics as [`Runtime::reference`], bit-identical live outputs —
+    /// but built for throughput rather than auditability.
+    pub fn host(seed: u64) -> Self {
+        Self::synthetic(Host::HostFast { seed })
+    }
+
+    fn synthetic(host: Host) -> Self {
         let manifest = reference::reference_manifest();
         let tokenizer = Tokenizer::synthetic(
             manifest.vocab_size,
@@ -97,14 +123,26 @@ impl Runtime {
             manifest.mask,
             manifest.distinct_masks.clone(),
         );
-        Runtime { manifest, tokenizer, host: Host::Reference { seed } }
+        Runtime { manifest, tokenizer, host }
     }
 
+    /// True for the artifact-free in-process backends (reference/host).
     pub fn is_reference(&self) -> bool {
         match &self.host {
-            Host::Reference { .. } => true,
+            Host::Reference { .. } | Host::HostFast { .. } => true,
             #[cfg(feature = "pjrt")]
             Host::Pjrt { .. } => false,
+        }
+    }
+
+    /// Stable name of the active backend (`pjrt`/`reference`/`host`) —
+    /// recorded into bench reports.
+    pub fn backend_label(&self) -> &'static str {
+        match &self.host {
+            Host::Reference { .. } => "reference",
+            Host::HostFast { .. } => "host",
+            #[cfg(feature = "pjrt")]
+            Host::Pjrt { .. } => "pjrt",
         }
     }
 
@@ -117,12 +155,16 @@ impl Runtime {
                 let entry = self.manifest.model(name)?;
                 Ok(Rc::new(reference::RefModel::build(*seed, entry)?))
             }
+            Host::HostFast { seed } => {
+                let entry = self.manifest.model(name)?;
+                Ok(Rc::new(host::HostModel::build(*seed, entry)?))
+            }
         }
     }
 
     pub fn prompts(&self, task: &str) -> Result<PromptSet> {
         match &self.host {
-            Host::Reference { seed } => {
+            Host::Reference { seed } | Host::HostFast { seed } => {
                 reference::synthetic_prompts(task, *seed, &self.manifest)
             }
             #[cfg(feature = "pjrt")]

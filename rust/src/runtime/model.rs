@@ -1,6 +1,6 @@
 //! PJRT model runtime: weights on device + lazily compiled per-bucket
 //! executables, implementing the [`Backend`] trait's `fwd` / `commit`
-//! call surface.
+//! call surface (DESIGN.md §2; split rationale in §7).
 //!
 //! Call protocol (set by `python/compile/aot.py`):
 //!   fwd  (weights…, [hidden,] tokens[b,t], pos[b,t], cache) ->

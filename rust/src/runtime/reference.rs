@@ -149,28 +149,31 @@ pub fn synthetic_prompts(task: &str, seed: u64, manifest: &Manifest)
     Ok(PromptSet { task: task.to_string(), prompts })
 }
 
-struct RefLayer {
-    wq: Vec<f32>,      // [d, h*dh]
-    wk: Vec<f32>,      // [d, h*dh]
-    wv: Vec<f32>,      // [d, h*dh]
-    wo: Vec<f32>,      // [h*dh, d]
-    w1: Vec<f32>,      // [d, ff]
-    w2: Vec<f32>,      // [ff, d]
-    w3: Vec<f32>,      // [d, ff]
-    ln_attn: Vec<f32>, // [d]
-    ln_mlp: Vec<f32>,  // [d]
+/// One decoder layer's parameters.  Fields are `pub(crate)` so the host
+/// fast path ([`super::host::HostModel`], DESIGN.md §8) can drive the
+/// *same* weights through restructured loops.
+pub(crate) struct RefLayer {
+    pub(crate) wq: Vec<f32>,      // [d, h*dh]
+    pub(crate) wk: Vec<f32>,      // [d, h*dh]
+    pub(crate) wv: Vec<f32>,      // [d, h*dh]
+    pub(crate) wo: Vec<f32>,      // [h*dh, d]
+    pub(crate) w1: Vec<f32>,      // [d, ff]
+    pub(crate) w2: Vec<f32>,      // [ff, d]
+    pub(crate) w3: Vec<f32>,      // [d, ff]
+    pub(crate) ln_attn: Vec<f32>, // [d]
+    pub(crate) ln_mlp: Vec<f32>,  // [d]
 }
 
 pub struct RefModel {
-    cfg: ModelCfg,
-    kind: ModelKind,
+    pub(crate) cfg: ModelCfg,
+    pub(crate) kind: ModelKind,
     /// fwd exports a trailing hidden-state output.
-    hidden: bool,
-    embed: Vec<f32>, // [vocab, d]; lm head is tied
-    layers: Vec<RefLayer>,
-    ln_f: Vec<f32>,
-    fuse: Option<Vec<f32>>, // [2d, d] (EAGLE)
-    inv_freq: Vec<f32>,     // [d_head / 2]
+    pub(crate) hidden: bool,
+    pub(crate) embed: Vec<f32>, // [vocab, d]; lm head is tied
+    pub(crate) layers: Vec<RefLayer>,
+    pub(crate) ln_f: Vec<f32>,
+    pub(crate) fuse: Option<Vec<f32>>, // [2d, d] (EAGLE)
+    pub(crate) inv_freq: Vec<f32>,     // [d_head / 2]
 }
 
 fn dense(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
@@ -227,7 +230,7 @@ impl RefModel {
 // ---------------------------------------------------------------------------
 
 /// rmsnorm per `d`-row: `x * rsqrt(mean(x²) + eps) * w`.
-fn rmsnorm(x: &[f32], d: usize, w: &[f32]) -> Vec<f32> {
+pub(crate) fn rmsnorm(x: &[f32], d: usize, w: &[f32]) -> Vec<f32> {
     let mut out = vec![0f32; x.len()];
     for i in 0..x.len() / d {
         let row = &x[i * d..(i + 1) * d];
@@ -244,8 +247,15 @@ fn rmsnorm(x: &[f32], d: usize, w: &[f32]) -> Vec<f32> {
 }
 
 /// `out[n, dout] += a[n, din] @ w[din, dout]` (fixed k-outer order).
-fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize,
-              din: usize, dout: usize) {
+///
+/// The per-cell reduction order is `k` ascending starting from the
+/// existing `out` value — the crate-wide canonical order every backend
+/// must reproduce (DESIGN.md §6/§8).  The k-outer/j-inner loop shape
+/// keeps the inner loop free of cross-iteration dependencies so the
+/// compiler can vectorize across output cells without reassociating
+/// any per-cell sum.
+pub(crate) fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize,
+                         din: usize, dout: usize) {
     for i in 0..n {
         let ar = &a[i * din..(i + 1) * din];
         let or = &mut out[i * dout..(i + 1) * dout];

@@ -3,9 +3,17 @@
 //! `cargo bench` targets use `harness = false` main functions built on
 //! this: warmup, fixed-duration sampling, and robust summary statistics
 //! (median + MAD), printed in a stable grep-friendly format that the
-//! EXPERIMENTS.md tables quote directly.
+//! EXPERIMENTS.md tables quote directly.  The harness is
+//! backend-agnostic — benches time whatever closure they are handed, so
+//! the same target runs against PJRT artifacts, the scalar reference
+//! oracle, or the fast host backend (DESIGN.md §8); stats also export
+//! as JSON ([`BenchStats::to_json`]) for machine-read baselines like
+//! `BENCH_hotpath.json`.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchStats {
@@ -19,6 +27,20 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Stable JSON form (seconds, like the struct fields) for
+    /// machine-read perf baselines.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("samples".to_string(), Json::Num(self.samples as f64));
+        m.insert("median_s".to_string(), Json::Num(self.median_s));
+        m.insert("mean_s".to_string(), Json::Num(self.mean_s));
+        m.insert("min_s".to_string(), Json::Num(self.min_s));
+        m.insert("max_s".to_string(), Json::Num(self.max_s));
+        m.insert("mad_s".to_string(), Json::Num(self.mad_s));
+        Json::Obj(m)
+    }
+
     pub fn print(&self) {
         println!(
             "bench {name:<40} median {median:>10.3}ms  mean {mean:>10.3}ms  \
@@ -164,6 +186,9 @@ mod tests {
         let s = b.run("noop", || 1 + 1);
         assert!(s.samples >= 1 && s.samples <= 10);
         assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("noop"));
+        assert!(j.get("median_s").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Device cost model: roofline projection of decode-phase performance.
+//! Device cost model: roofline projection of decode-phase performance
+//! (feeds the Tables 6/7 runners of DESIGN.md §5).
 //!
 //! The paper reports absolute TPS and draft-phase bandwidth on A100-40GB
 //! (Tables 1-6) and MI250X (Table 7).  We execute on PJRT-CPU, so absolute

@@ -1,4 +1,4 @@
-//! Minimal JSON parser + writer.
+//! Minimal JSON parser + writer (an offline substrate, DESIGN.md §4).
 //!
 //! The offline build environment vendors only the `xla` crate tree, so the
 //! artifact manifest / vocab / prompt files (all JSON, authored by

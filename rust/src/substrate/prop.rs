@@ -1,4 +1,5 @@
-//! Tiny property-testing harness (proptest is not vendored offline).
+//! Tiny property-testing harness (proptest is not vendored offline;
+//! an offline substrate, DESIGN.md §4).
 //!
 //! Coordinator invariants (KV-slot manager, acceptance, batcher) are
 //! checked over many seeded random cases with first-failure reporting.

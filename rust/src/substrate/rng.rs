@@ -1,4 +1,5 @@
-//! Deterministic RNG (splitmix64 + xoshiro256**) — no `rand` crate offline.
+//! Deterministic RNG (splitmix64 + xoshiro256**) — no `rand` crate
+//! offline (an offline substrate, DESIGN.md §4).
 //!
 //! Used by the workload generator, sampling, and the in-repo property-test
 //! harness.  Determinism matters: benchmark tables must be reproducible

@@ -1,4 +1,5 @@
-//! Synthetic-vocab tokenizer: loads `artifacts/vocab.json` (authored by
+//! Synthetic-vocab tokenizer (an offline substrate, DESIGN.md §4):
+//! loads `artifacts/vocab.json` (authored by
 //! `python/compile/corpus.py`) and detokenizes id streams for logs,
 //! examples, and debugging.  Token ids are the wire format everywhere;
 //! there is deliberately no encode path at serve time (prompts arrive

@@ -1,4 +1,5 @@
-//! Request workload generation: arrival traces over the eval prompt sets.
+//! Request workload generation: arrival traces over the eval prompt
+//! sets (an offline substrate, DESIGN.md §4).
 //!
 //! The serving experiments (Tables 3/4) drive the coordinator with a
 //! request stream; this module synthesizes Poisson or closed-loop traces

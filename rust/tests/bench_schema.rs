@@ -1,0 +1,102 @@
+//! Bench-subsystem smoke tests: `pard bench`'s report must (a) be
+//! producible with no artifacts, (b) round-trip through the in-repo
+//! JSON parser (`substrate::json`), and (c) keep the stable
+//! `pard-bench-hotpath/v1` schema later PRs regress against
+//! (DESIGN.md §Perf).
+
+use pard::report::bench::{hotpath_report, write_report, BenchOpts,
+                          BENCH_SCHEMA};
+use pard::substrate::json::Json;
+
+fn smoke_report() -> Json {
+    // Tiny sweep: one K, batch 1, two prompts, oracle on — seconds of
+    // runtime, exercising every schema field.
+    hotpath_report(&BenchOpts::smoke()).unwrap()
+}
+
+#[test]
+fn report_round_trips_through_repo_json_parser() {
+    let report = smoke_report();
+    let path = std::env::temp_dir()
+        .join(format!("pard_bench_smoke_{}.json", std::process::id()));
+    write_report(&path, &report).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let parsed = Json::parse(text.trim()).unwrap();
+    assert_eq!(parsed, report, "serialize/parse must round-trip");
+}
+
+#[test]
+fn schema_v1_fields_are_stable() {
+    let report = smoke_report();
+    assert_eq!(report.get("schema").unwrap().as_str(),
+               Some(BENCH_SCHEMA));
+    assert_eq!(report.get("backend").unwrap().as_str(), Some("host"));
+    for key in ["seed", "task", "target", "n_prompts", "max_new",
+                "sweep", "runs", "oracle", "host_vs_reference"] {
+        assert!(report.get(key).is_some(), "missing top-level `{key}`");
+    }
+
+    let runs = report.get("runs").unwrap().as_arr().unwrap();
+    // AR+ once, VSD/PARD/EAGLE once per swept K (smoke: one K, batch 1).
+    assert_eq!(runs.len(), 4, "smoke sweep must have 4 cells");
+    let engines: Vec<&str> = runs
+        .iter()
+        .map(|r| r.get("engine").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(engines, ["AR+", "VSD", "PARD", "EAGLE"]);
+    for run in runs {
+        for key in ["engine", "k", "batch", "tokens_per_s",
+                    "tokens_per_iter", "mean_accept_len", "fwd_s",
+                    "commit_s", "draft_s", "verify_s", "prefill_s",
+                    "wall_s", "generated", "iterations",
+                    "speedup_vs_ar_plus"] {
+            assert!(run.get(key).is_some(),
+                    "run missing field `{key}`");
+        }
+        assert!(run.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0,
+                "every cell must have measured throughput");
+        assert!(run.get("generated").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // The AR+ baseline's speedup over itself is exactly 1.
+    let ar = &runs[0];
+    assert_eq!(ar.get("k").unwrap(), &Json::Null,
+               "AR+ never drafts: k must be null");
+    let sp = ar.get("speedup_vs_ar_plus").unwrap().as_f64().unwrap();
+    assert!((sp - 1.0).abs() < 1e-9, "AR+ vs itself must be 1.0");
+    assert_eq!(ar.get("mean_accept_len").unwrap().as_f64(), Some(0.0),
+               "AR+ accepts nothing (it never drafts)");
+}
+
+#[test]
+fn oracle_section_mirrors_sweep_and_reports_speedups() {
+    let report = smoke_report();
+    let oracle = report.get("oracle").unwrap();
+    assert_eq!(oracle.get("backend").unwrap().as_str(),
+               Some("reference"));
+    let oruns = oracle.get("runs").unwrap().as_arr().unwrap();
+    let runs = report.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(oruns.len(), runs.len(),
+               "oracle must replay the identical sweep");
+
+    let hvr = report.get("host_vs_reference").unwrap();
+    let per = hvr.get("per_run").unwrap().as_arr().unwrap();
+    assert_eq!(per.len(), runs.len());
+    // Timing-dependent magnitudes are asserted by `pard bench` users,
+    // not unit tests — here only well-formedness: positive and finite.
+    let geo = hvr.get("geomean").unwrap().as_f64().unwrap();
+    let min = hvr.get("min").unwrap().as_f64().unwrap();
+    assert!(geo > 0.0 && geo.is_finite());
+    assert!(min > 0.0 && min.is_finite());
+}
+
+#[test]
+fn no_oracle_flag_drops_comparison_sections() {
+    let mut o = BenchOpts::smoke();
+    o.oracle = false;
+    let report = hotpath_report(&o).unwrap();
+    assert!(report.get("oracle").is_none());
+    assert!(report.get("host_vs_reference").is_none());
+    assert!(report.get("runs").is_some());
+}

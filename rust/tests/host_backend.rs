@@ -1,0 +1,153 @@
+//! Host-backend equivalence suite (DESIGN.md §8): the fast host
+//! serving path must be *token-identical* to the scalar reference
+//! oracle (DESIGN.md §6) for every engine, across K and batch size —
+//! and, because it keeps the oracle's per-cell reduction order, even
+//! bit-identical at the logits level.  Runs in plain `cargo test` with
+//! NO Python/XLA artifacts.
+
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind};
+use pard::coordinator::router::default_draft;
+use pard::runtime::Backend;
+use pard::Runtime;
+
+fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
+       batch: usize) -> EngineConfig {
+    EngineConfig {
+        kind,
+        target: target.to_string(),
+        draft: default_draft(&rt.manifest, kind, target).unwrap(),
+        batch,
+        k,
+        max_new: 20,
+        shared_mask: true,
+    }
+}
+
+fn gen(rt: &Runtime, c: &EngineConfig, prompts: &[Vec<i32>])
+       -> Vec<Vec<i32>> {
+    let mut e = build_engine(rt, c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), prompts, c.max_new).unwrap()
+}
+
+fn some_prompts(rt: &Runtime, n: usize) -> Vec<Vec<i32>> {
+    rt.prompts("code")
+        .unwrap()
+        .take(n)
+        .into_iter()
+        .map(|p| p.prompt)
+        .collect()
+}
+
+/// The satellite acceptance sweep: every engine's host-backend outputs
+/// must equal the scalar oracle's, for K ∈ {2, 8} × batch ∈ {1, 4}.
+#[test]
+fn host_engines_token_identical_to_oracle_across_k_and_batch() {
+    let oracle = Runtime::reference(7);
+    let host = Runtime::host(7);
+    let prompts = some_prompts(&oracle, 4);
+    assert_eq!(prompts, some_prompts(&host, 4),
+               "both backends must serve the same synthetic prompts");
+    for kind in [EngineKind::ArPlus, EngineKind::Vsd, EngineKind::Pard,
+                 EngineKind::Eagle] {
+        for k in [2usize, 8] {
+            for batch in [1usize, 4] {
+                let a = gen(&oracle, &cfg(&oracle, kind, "target-l", k,
+                                          batch), &prompts);
+                let b = gen(&host, &cfg(&host, kind, "target-l", k,
+                                        batch), &prompts);
+                assert!(a.iter().all(|o| !o.is_empty()),
+                        "oracle generated nothing");
+                assert_eq!(
+                    a, b,
+                    "{kind:?} k={k} batch={batch}: host diverged from \
+                     the scalar oracle"
+                );
+            }
+        }
+    }
+}
+
+/// Host AR+ equals host uncached AR — the cache machinery holds on the
+/// fast path itself, not just relative to the oracle.
+#[test]
+fn host_cached_equals_host_uncached() {
+    let host = Runtime::host(7);
+    let prompts = some_prompts(&host, 3);
+    let a = gen(&host, &cfg(&host, EngineKind::Ar, "target-m", 8, 1),
+                &prompts);
+    let b = gen(&host, &cfg(&host, EngineKind::ArPlus, "target-m", 8, 1),
+                &prompts);
+    assert_eq!(a, b, "host KV-cached decode must equal full recompute");
+}
+
+/// Bit-level check at the backend call surface: logits of a multi-token
+/// call and of a cached decode step match the oracle exactly.
+#[test]
+fn host_logits_bit_identical_to_oracle() {
+    let oracle = Runtime::reference(7);
+    let host = Runtime::host(7);
+    for name in ["draft-s", "target-m", "target-l"] {
+        let mo = oracle.model(name).unwrap();
+        let mh = host.model(name).unwrap();
+        let mut co = mo.new_cache(2).unwrap();
+        let mut ch = mh.new_cache(2).unwrap();
+        let toks = [0i32, 13, 20, 21, 0, 30, 31, 32];
+        let pos = [0i32, 1, 2, 3, 0, 1, 2, 3];
+        let a = mo.fwd(2, 4, &toks, &pos, None, &co).unwrap();
+        let b = mh.fwd(2, 4, &toks, &pos, None, &ch).unwrap();
+        assert_eq!(a.logits, b.logits, "{name}: fwd logits diverged");
+        mo.commit(2, 4, &a, &pos, &mut co).unwrap();
+        mh.commit(2, 4, &b, &pos, &mut ch).unwrap();
+        co.cur_len = vec![4, 4];
+        ch.cur_len = vec![4, 4];
+        let a = mo.fwd(2, 1, &[17, 19], &[4, 4], None, &co).unwrap();
+        let b = mh.fwd(2, 1, &[17, 19], &[4, 4], None, &ch).unwrap();
+        assert_eq!(a.logits, b.logits, "{name}: decode logits diverged");
+    }
+}
+
+/// Host backend outputs must not depend on batch layout (the same
+/// row-independence the oracle guarantees — here it also certifies the
+/// scoped-thread row partition).
+#[test]
+fn host_batch_size_does_not_change_outputs() {
+    let host = Runtime::host(7);
+    let prompts = some_prompts(&host, 6);
+    let base = gen(&host, &cfg(&host, EngineKind::Pard, "target-l", 8, 1),
+                   &prompts);
+    for bs in [2usize, 4] {
+        let out = gen(&host,
+                      &cfg(&host, EngineKind::Pard, "target-l", 8, bs),
+                      &prompts);
+        assert_eq!(base, out, "host PARD batch={bs} changed outputs");
+    }
+}
+
+/// Continuous batching serves a trace on the host backend.
+#[test]
+fn host_continuous_batching_serves_trace() {
+    use pard::coordinator::batcher::serve_trace;
+    use pard::substrate::workload::{build_trace, Arrival};
+    let host = Runtime::host(7);
+    let ps = host.prompts("gsm").unwrap().prompts;
+    let trace = build_trace(&ps, 9, Arrival::Closed, 16, 3);
+    let c = cfg(&host, EngineKind::Pard, "target-m", 8, 4);
+    let mut e = build_engine(&host, &c).unwrap();
+    e.warmup().unwrap();
+    let stats = serve_trace(e.as_mut(), &trace).unwrap();
+    assert_eq!(stats.completed, 9, "all requests must complete");
+    assert!(stats.generated > 0);
+}
+
+/// The serve thread opens a host runtime from its `RuntimeSpec`.
+#[test]
+fn host_runtime_spec_opens() {
+    use pard::runtime::RuntimeSpec;
+    let rt = RuntimeSpec::Host { seed: 7 }.open().unwrap();
+    assert!(rt.is_reference());
+    assert_eq!(rt.backend_label(), "host");
+    let m = rt.model("target-m").unwrap();
+    assert_eq!(m.cfg().n_layers, 3);
+}

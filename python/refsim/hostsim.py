@@ -17,6 +17,12 @@ and asserts they cannot change a live output:
                             exactly where the oracle's scatter puts them.
   5. end-to-end decode    — AR+ greedy streams through the host-style
                             fwd are token-identical to sim.py's.
+  6. packed + fused sweep — the column-panel packed weight layout and
+                            the fused QKV / W1W3 matmuls (host.rs
+                            PackedMat) reproduce the canonical
+                            k-ascending matmul bit for bit, for any
+                            panel partition / lane order — the §8
+                            column-decomposition bit-safety claim.
 
 Both mirrors use the same numpy primitives over the same values, so
 equality here is exact (==), not approximate.  As with sim.py this
@@ -135,6 +141,88 @@ def fwd_host(m, tokens, pos, cache_k, cache_v):
         k_out[:, c] = k_live[:, j]
         v_out[:, c] = v_live[:, j]
     return logits_out, k_out, v_out
+
+
+# -- packed/fused matmul mirror (host.rs PackedMat, DESIGN.md §8) -----
+
+PANEL = 16  # mirrors host.rs PANEL
+
+
+def matmul_acc(a, w, out):
+    """Exact mirror of reference.rs matmul_acc: k-ascending accumulate
+    into the existing `out` values, float32 rounding at every multiply
+    and add.  (Deliberately NOT `a @ w`: BLAS reassociates, this chain
+    is the canonical per-cell order both Rust backends share.)"""
+    for k in range(a.shape[1]):
+        out += a[:, k:k + 1] * w[k][None, :]
+    return out
+
+
+def pack_panels(w):
+    """Column-panel packing mirror of host.rs PackedMat.pack: the
+    matrix becomes a list of contiguous [din, <=PANEL] panels."""
+    return [w[:, p:p + PANEL].copy()
+            for p in range(0, w.shape[1], PANEL)]
+
+
+def matmul_acc_panels(a, panels, out, order):
+    """Panel-sweep mirror of host.rs matmul_acc_panels, over an
+    arbitrary panel order (simulating any pool-lane partition).  Each
+    panel keeps the k-ascending per-cell chain of matmul_acc."""
+    for p in order:
+        pan = panels[p]
+        c0 = p * PANEL
+        sub = out[:, c0:c0 + pan.shape[1]]
+        for k in range(pan.shape[0]):
+            sub += a[:, k:k + 1] * pan[k][None, :]
+    return out
+
+
+def check_packed_fused_matmul(m):
+    """host.rs packs every weight matrix into column panels at build
+    time and fuses [wq|wk|wv] and [w1|w3] into single sweeps.  Neither
+    transform may change an output bit: each output cell's k-ascending
+    reduction chain is untouched — packing moves *where* a weight
+    lives, fusion moves *which call* computes a column, and the lane
+    partition only picks *who* computes it."""
+    rng = np.random.default_rng(123)
+    lyr = m.layers[0]
+    hd = m.h * DH
+    n = 5
+    xn = rng.standard_normal((m.d,)).astype(np.float32)
+    xn = np.stack([xn * np.float32(0.1 * (j + 1)) for j in range(n)])
+    # canonical separate projections
+    q = matmul_acc(xn, lyr["wq"], np.zeros((n, hd), np.float32))
+    k = matmul_acc(xn, lyr["wk"], np.zeros((n, hd), np.float32))
+    v = matmul_acc(xn, lyr["wv"], np.zeros((n, hd), np.float32))
+    # fused + packed sweep, three "lanes" running their panel chunks
+    # out of order
+    wqkv = np.concatenate([lyr["wq"], lyr["wk"], lyr["wv"]], axis=1)
+    panels = pack_panels(wqkv)
+    assert np.array_equal(np.concatenate(panels, axis=1), wqkv), \
+        "panel packing must round-trip exactly"
+    qkv = np.zeros((n, 3 * hd), np.float32)
+    order = list(range(len(panels)))
+    for lane in (order[2::3], order[0::3], order[1::3]):
+        matmul_acc_panels(xn, panels, qkv, lane)
+    assert np.array_equal(qkv[:, :hd], q), "fused Q diverged"
+    assert np.array_equal(qkv[:, hd:2 * hd], k), "fused K diverged"
+    assert np.array_equal(qkv[:, 2 * hd:], v), "fused V diverged"
+    # same property for the fused MLP gate/up sweep
+    ff = lyr["w1"].shape[1]
+    g = matmul_acc(xn, lyr["w1"], np.zeros((n, ff), np.float32))
+    u = matmul_acc(xn, lyr["w3"], np.zeros((n, ff), np.float32))
+    w13 = np.concatenate([lyr["w1"], lyr["w3"]], axis=1)
+    p13 = pack_panels(w13)
+    gu = np.zeros((n, 2 * ff), np.float32)
+    half_p = len(p13) // 2
+    # a deliberately unbalanced 2-lane partition, run tail-first
+    matmul_acc_panels(xn, p13, gu, list(range(half_p, len(p13))))
+    matmul_acc_panels(xn, p13, gu, list(range(half_p)))
+    assert np.array_equal(gu[:, :ff], g), "fused W1 diverged"
+    assert np.array_equal(gu[:, ff:], u), "fused W3 diverged"
+    print("  packed panels + fused QKV/W13 bit-identical under any "
+          "lane order")
 
 
 def fresh_cache(m):
@@ -257,6 +345,7 @@ def main(seed=7):
         check_in_place_cache_read(m)
         check_speculative_layout(m)
         check_out_of_range_pos(m)
+        check_packed_fused_matmul(m)
     check_end_to_end_streams(Model(seed, "target-m"), "code", 4, 16)
     check_end_to_end_streams(Model(seed, "draft-s"), "gsm", 3, 12)
     print("ALL HOST-PATH EQUIVALENCE CHECKS PASSED")

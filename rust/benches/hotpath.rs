@@ -8,7 +8,10 @@
 //! feature, otherwise the fast host backend (DESIGN.md §8) — it never
 //! panics just because artifacts are missing.  On the in-process
 //! backends the same fwd micro-benchmarks also run on the scalar
-//! reference oracle, printing the host-vs-oracle speedup per shape.
+//! reference oracle, printing the host-vs-oracle speedup per shape,
+//! and on the host backend a second pass pins the worker pool to one
+//! lane (`PARD_HOST_THREADS=1` equivalent) to show what the
+//! column-granular pool dispatch buys per shape on this machine.
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
@@ -108,6 +111,10 @@ fn fwd_shapes(b: &Bencher, rt: &Runtime, tag: &str)
 fn main() -> anyhow::Result<()> {
     let rt = open_runtime()?;
     println!("backend: {}", rt.backend_label());
+    if let Some(lanes) = rt.host_threads() {
+        println!("host worker pool: {lanes} lane(s) \
+                  (set PARD_HOST_THREADS to pin)");
+    }
     let b = Bencher::default();
 
     let main_stats = fwd_shapes(&b, &rt, rt.backend_label())?;
@@ -124,6 +131,22 @@ fn main() -> anyhow::Result<()> {
                 println!("speedup {:<55} {:>6.2}x",
                          h.name.trim_start_matches("[host] "),
                          o.median_s / h.median_s);
+            }
+        }
+    }
+
+    // Pool scaling: the same shapes with the pool pinned to one lane.
+    // Outputs are bit-identical either way (DESIGN.md §8); the ratio
+    // is what the column-granular dispatch buys on this machine.
+    if rt.backend_label() == "host" && rt.host_threads() != Some(1) {
+        let single = Runtime::host_with_threads(7, Some(1));
+        let single_stats = fwd_shapes(&b, &single, "host 1-lane")?;
+        println!();
+        for (h, s) in main_stats.iter().zip(&single_stats) {
+            if h.median_s > 0.0 {
+                println!("pool speedup {:<50} {:>6.2}x",
+                         h.name.trim_start_matches("[host] "),
+                         s.median_s / h.median_s);
             }
         }
     }

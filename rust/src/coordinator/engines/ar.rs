@@ -59,7 +59,7 @@ impl ArEngine {
         let t0 = Instant::now();
         let out =
             self.target.fwd(b, 1, &buf.tokens, &buf.pos, None, &self.cache)?;
-        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.record_fwd(&out);
         self.metrics.commit_s +=
             self.target.commit(b, 1, &out, &buf.cpos, &mut self.cache)?;
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
@@ -111,7 +111,7 @@ impl ArEngine {
         let t0 = Instant::now();
         let out =
             self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.cache)?;
-        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.record_fwd(&out);
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
         self.metrics.target_passes += 1;
         let vocab = self.target.cfg().vocab;

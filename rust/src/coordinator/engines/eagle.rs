@@ -105,7 +105,7 @@ impl EagleEngine {
         let t0 = Instant::now();
         let out = self.head.fwd(b, t, &buf.tokens, &buf.pos,
                                 Some(&hidden_in), &self.ecache)?;
-        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.record_fwd(&out);
         self.metrics.commit_s +=
             self.head.commit(b, t, &out, &buf.cpos, &mut self.ecache)?;
         self.metrics.draft_passes += 1;
@@ -145,7 +145,7 @@ impl EagleEngine {
             }
             let out = self.head.fwd(b, 1, &buf.tokens, &buf.pos,
                                     Some(&hidden_in), &self.ecache)?;
-            self.metrics.fwd_s += out.elapsed_s;
+            self.metrics.record_fwd(&out);
             self.metrics.commit_s +=
                 self.head.commit(b, 1, &out, &buf.cpos,
                                  &mut self.ecache)?;
@@ -195,7 +195,7 @@ impl Engine for EagleEngine {
         let t0 = Instant::now();
         let out =
             self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.tcache)?;
-        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.record_fwd(&out);
         self.metrics.commit_s +=
             self.target.commit(b, t, &out, &buf.cpos, &mut self.tcache)?;
         self.metrics.prefill_s += t0.elapsed().as_secs_f64();

@@ -182,7 +182,7 @@ pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
     }
     let t0 = Instant::now();
     let out = model.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
-    metrics.fwd_s += out.elapsed_s;
+    metrics.record_fwd(&out);
     metrics.commit_s += model.commit(b, t, &out, &buf.cpos, cache)?;
     metrics.prefill_s += t0.elapsed().as_secs_f64();
     metrics.target_passes += 1;
@@ -256,7 +256,7 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
     }
     let t0 = Instant::now();
     let out = target.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
-    metrics.fwd_s += out.elapsed_s;
+    metrics.record_fwd(&out);
     metrics.target_passes += 1;
 
     let vocab = target.cfg().vocab;

@@ -112,7 +112,7 @@ impl PardEngine {
         let t0 = Instant::now();
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
-        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.record_fwd(&out);
         self.metrics.commit_s +=
             self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
         self.metrics.draft_s += t0.elapsed().as_secs_f64();
@@ -159,6 +159,7 @@ impl Engine for PardEngine {
                              self.pad, &mut dm)?;
         self.metrics.prefill_s += dm.prefill_s;
         self.metrics.fwd_s += dm.fwd_s;
+        self.metrics.fwd_ops.add(&dm.fwd_ops);
         self.metrics.commit_s += dm.commit_s;
         seq.push_committed(&[first], self.eos);
         self.metrics.generated += 1;

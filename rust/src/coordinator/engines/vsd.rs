@@ -84,7 +84,7 @@ impl VsdEngine {
         let t0 = Instant::now();
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
-        self.metrics.fwd_s += out.elapsed_s;
+        self.metrics.record_fwd(&out);
         self.metrics.commit_s +=
             self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
         self.metrics.draft_passes += 1;
@@ -114,7 +114,7 @@ impl VsdEngine {
             }
             let out = self.draft.fwd(b, 1, &buf.tokens, &buf.pos, None,
                                      &self.dcache)?;
-            self.metrics.fwd_s += out.elapsed_s;
+            self.metrics.record_fwd(&out);
             self.metrics.commit_s +=
                 self.draft.commit(b, 1, &out, &buf.cpos,
                                   &mut self.dcache)?;
@@ -156,6 +156,7 @@ impl Engine for VsdEngine {
                              self.pad, &mut dm)?;
         self.metrics.prefill_s += dm.prefill_s;
         self.metrics.fwd_s += dm.fwd_s;
+        self.metrics.fwd_ops.add(&dm.fwd_ops);
         self.metrics.commit_s += dm.commit_s;
         seq.push_committed(&[first], self.eos);
         self.metrics.generated += 1;

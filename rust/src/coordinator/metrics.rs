@@ -3,7 +3,10 @@
 //! Everything the paper's tables report derives from these counters:
 //! TPS (Tables 1-4), k-α acceptance (Table 5, Fig. 1a), draft/verify
 //! time breakdown (Fig. 1b), tokens/iteration (device-model projections
-//! for Tables 6-7).
+//! for Tables 6-7), and the per-op forward breakdown the host backend
+//! reports (`fwd_ops` in `BENCH_hotpath.json`, DESIGN.md §8).
+
+use crate::runtime::{FwdOps, FwdOut};
 
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -22,6 +25,10 @@ pub struct Metrics {
     /// wall-clock *around* fwd+commit, so `fwd_s + commit_s` vs their
     /// sum isolates coordinator overhead.
     pub commit_s: f64,
+    /// Per-op breakdown of `fwd_s`, summed over every fwd call on a
+    /// backend that instruments its forward pass (the host fast path);
+    /// all-zero otherwise.  `fwd_ops.total() <= fwd_s` always.
+    pub fwd_ops: FwdOps,
     /// End-to-end generate() wall clock (includes coordinator overhead).
     pub wall_s: f64,
     /// Decode iterations executed.
@@ -49,6 +56,16 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Account one forward call: its backend-reported execution time
+    /// and, when present, its per-op breakdown.  Every engine fwd call
+    /// site funnels through here so the split stays consistent.
+    pub fn record_fwd(&mut self, out: &FwdOut) {
+        self.fwd_s += out.elapsed_s;
+        if let Some(ops) = &out.ops {
+            self.fwd_ops.add(ops);
+        }
+    }
+
     pub fn record_acceptance(&mut self, offered: usize, accepted: usize) {
         if self.offered_pos.len() < offered {
             self.offered_pos.resize(offered, 0);
@@ -139,6 +156,7 @@ impl Metrics {
         self.prefill_s += o.prefill_s;
         self.fwd_s += o.fwd_s;
         self.commit_s += o.commit_s;
+        self.fwd_ops.add(&o.fwd_ops);
         self.wall_s += o.wall_s;
         self.iterations += o.iterations;
         self.draft_passes += o.draft_passes;
@@ -205,6 +223,31 @@ mod tests {
         assert_eq!(a.generated, 12);
         assert_eq!(a.offered_pos, vec![2, 2, 1, 1]);
         assert_eq!(a.accept_pos, vec![2, 1, 1, 0]);
+    }
+
+    #[test]
+    fn record_fwd_accumulates_elapsed_and_ops() {
+        use crate::runtime::{FwdOut, KvStage};
+        let mk = |elapsed: f64, ops: Option<FwdOps>| FwdOut {
+            logits: Vec::new(),
+            hidden: None,
+            kv: KvStage::Host { k: Vec::new(), v: Vec::new() },
+            elapsed_s: elapsed,
+            ops,
+        };
+        let mut m = Metrics::default();
+        let ops = FwdOps { qkv_s: 0.5, attn_s: 0.25,
+                           ..FwdOps::default() };
+        m.record_fwd(&mk(1.0, Some(ops)));
+        m.record_fwd(&mk(2.0, None)); // oracle-style: no breakdown
+        assert_eq!(m.fwd_s, 3.0);
+        assert_eq!(m.fwd_ops.qkv_s, 0.5);
+        assert_eq!(m.fwd_ops.attn_s, 0.25);
+        assert!(m.fwd_ops.total() <= m.fwd_s);
+        // merge must carry the breakdown along
+        let mut other = Metrics::default();
+        other.merge(&m);
+        assert_eq!(other.fwd_ops.qkv_s, 0.5);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!   serve  --engine pard --target target-l [--n N] [--rate R]
 //!   bench  [--k 2,4,8] [--batch 1,4] [--prompts N] [--max-new N]
 //!          [--task code] [--target target-l] [--seed N] [--no-oracle]
-//!          [--out BENCH_hotpath.json]
+//!          [--out BENCH_hotpath.json] [--compare OLD.json]
 //!   tables [--which 1,2,...] [--full]
 //!   fig    --which 1a|1b|2|6a|6b
 //!   info
@@ -15,7 +15,11 @@
 //! pjrt; `bench` is always artifact-free): `reference` runs the
 //! deterministic scalar oracle (DESIGN.md §6), `host` the fast host
 //! serving path over the same weights (DESIGN.md §8) — no artifacts,
-//! no Python — with `--seed N` selecting the synthetic weights.
+//! no Python — with `--seed N` selecting the synthetic weights.  The
+//! host backend also takes `--threads N` to pin its worker-pool size
+//! (default: `PARD_HOST_THREADS`, then available cores); outputs are
+//! bit-identical for every pool size.  `bench --compare OLD.json`
+//! fails on any >10% tokens/s regression against an older report.
 
 use std::path::{Path, PathBuf};
 
@@ -24,8 +28,8 @@ use pard::coordinator::engines::{EngineConfig, EngineKind};
 use pard::coordinator::evaluate::run_eval;
 use pard::coordinator::router::default_draft;
 use pard::coordinator::batcher::serve_trace;
-use pard::report::bench::{hotpath_report, write_report, BenchOpts,
-                          BENCH_FILE};
+use pard::report::bench::{compare_reports, hotpath_report, write_report,
+                          BenchOpts, BENCH_FILE, COMPARE_TOL};
 use pard::report::{self, RunScale};
 use pard::substrate::json::Json;
 use pard::substrate::workload::{build_trace, Arrival};
@@ -98,11 +102,34 @@ fn backend_sel(args: &Args) -> Result<BackendSel> {
     }
 }
 
+/// `--threads N` (host worker-pool size).  `None` when absent; a value
+/// that doesn't parse as a positive integer is an error, not a silent
+/// fall-through to the default.
+fn threads_opt(args: &Args) -> Result<Option<usize>> {
+    match args.opts.get("threads") {
+        None => Ok(None),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| {
+                anyhow::anyhow!("--threads wants a positive integer, \
+                                 got `{v}`")
+            })?;
+            anyhow::ensure!(n >= 1, "--threads must be >= 1");
+            Ok(Some(n))
+        }
+    }
+}
+
 fn open_runtime(args: &Args) -> Result<Runtime> {
     let seed = args.usize("seed", 7) as u64;
-    match backend_sel(args)? {
+    let threads = threads_opt(args)?;
+    let sel = backend_sel(args)?;
+    anyhow::ensure!(threads.is_none() || sel == BackendSel::HostFast,
+                    "--threads only applies to --backend host");
+    match sel {
         BackendSel::Reference => Ok(Runtime::reference(seed)),
-        BackendSel::HostFast => Ok(Runtime::host(seed)),
+        BackendSel::HostFast => {
+            Ok(Runtime::host_with_threads(seed, threads))
+        }
         BackendSel::Pjrt => Runtime::load(&artifacts_dir(args)),
     }
 }
@@ -262,10 +289,29 @@ fn cmd_bench(args: &Args) -> Result<()> {
         n_prompts: args.usize("prompts", 8),
         max_new: args.usize("max-new", 32),
         oracle: !args.flag("no-oracle"),
+        threads: threads_opt(args)?,
     };
     anyhow::ensure!(!opts.ks.is_empty() && !opts.batches.is_empty(),
                     "--k/--batch must list at least one value");
     let out = PathBuf::from(args.get("out", BENCH_FILE));
+    // Load the --compare baseline BEFORE anything is written: --out and
+    // --compare may legitimately name the same file (refresh the
+    // committed baseline and gate against its previous contents in one
+    // run), and a bad baseline path should fail before the sweep runs.
+    let baseline: Option<(&String, Json)> = match args.opts.get("compare")
+    {
+        Some(old_path) => {
+            let text =
+                std::fs::read_to_string(old_path).map_err(|e| {
+                    anyhow::anyhow!("reading --compare {old_path}: {e}")
+                })?;
+            let old = Json::parse(text.trim()).map_err(|e| {
+                anyhow::anyhow!("parsing --compare {old_path}: {e}")
+            })?;
+            Some((old_path, old))
+        }
+        None => None,
+    };
     eprintln!(
         "bench: {{AR+, VSD, PARD, EAGLE}} x k={:?} x batch={:?}, \
          {} prompts x {} tokens, task={}, target={}, oracle={}",
@@ -276,11 +322,31 @@ fn cmd_bench(args: &Args) -> Result<()> {
     write_report(&out, &report)?;
     print_bench_summary(&report);
     println!("wrote {}", out.display());
+
+    // --compare OLD.json: fail loudly on any >10% tokens/s loss at any
+    // (engine, K, batch) cell — the perf trajectory as a gate, not
+    // advisory prose.
+    if let Some((old_path, old)) = baseline {
+        let regressions = compare_reports(&old, &report, COMPARE_TOL);
+        if regressions.is_empty() {
+            println!("compare: no >{:.0}% tokens/s regression vs {}",
+                     COMPARE_TOL * 100.0, old_path);
+        } else {
+            for line in &regressions {
+                eprintln!("REGRESSION: {line}");
+            }
+            anyhow::bail!("{} tokens/s regression(s) vs {old_path}",
+                          regressions.len());
+        }
+    }
     Ok(())
 }
 
 /// Human-readable recap of the report the JSON file now holds.
 fn print_bench_summary(report: &Json) {
+    if let Some(th) = report.get("threads").and_then(|v| v.as_f64()) {
+        println!("host worker pool: {th:.0} lane(s)");
+    }
     println!("{:<7} {:>4} {:>6} {:>12} {:>8} {:>10}",
              "engine", "k", "batch", "tokens/s", "accept", "vs AR+");
     if let Some(runs) = report.get("runs").and_then(|r| r.as_arr()) {

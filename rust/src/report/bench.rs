@@ -5,10 +5,15 @@
 //! (DESIGN.md §8), optionally replays the *identical* sweep on the
 //! scalar reference oracle, and emits a stable JSON report
 //! ([`BENCH_FILE`], schema [`BENCH_SCHEMA`]) with per-engine tokens/s,
-//! mean accept length, the fwd/commit time split, and speedup vs the
-//! AR+ baseline — the perf trajectory later PRs regress against.
-//! `tests/bench_schema.rs` pins the schema; parse with
-//! [`crate::substrate::json::Json`].
+//! mean accept length, the fwd/commit time split, the host backend's
+//! per-op forward breakdown (`fwd_ops`) and worker-pool size
+//! (`threads`), and speedup vs the AR+ baseline — the perf trajectory
+//! later PRs regress against.  `tests/bench_schema.rs` pins the
+//! schema; parse with [`crate::substrate::json::Json`].
+//!
+//! [`compare_reports`] turns the trajectory into a gate: `pard bench
+//! --compare OLD.json` fails when any (engine, K, batch) cell loses
+//! more than [`COMPARE_TOL`] of its tokens/s against the older report.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -48,6 +53,9 @@ pub struct BenchOpts {
     /// Also replay the sweep on the scalar reference oracle and report
     /// per-cell and aggregate host-vs-oracle speedups.
     pub oracle: bool,
+    /// Pin the host worker pool to this many lanes (`--threads`);
+    /// `None` resolves `PARD_HOST_THREADS` / available cores.
+    pub threads: Option<usize>,
 }
 
 impl Default for BenchOpts {
@@ -61,6 +69,7 @@ impl Default for BenchOpts {
             n_prompts: 8,
             max_new: 32,
             oracle: true,
+            threads: None,
         }
     }
 }
@@ -134,6 +143,7 @@ fn nums(vs: &[usize]) -> Json {
 
 fn row_json(row: &RunRow, base_tps: f64) -> Json {
     let m = &row.r.metrics;
+    let ops = &m.fwd_ops;
     obj(vec![
         ("engine", Json::Str(row.engine.to_string())),
         ("k", row.k.map_or(Json::Null, |k| Json::Num(k as f64))),
@@ -143,6 +153,16 @@ fn row_json(row: &RunRow, base_tps: f64) -> Json {
         ("mean_accept_len", num(m.mean_accept_len())),
         ("fwd_s", num(m.fwd_s)),
         ("commit_s", num(m.commit_s)),
+        // Per-op breakdown of fwd_s (host backend; zeros on backends
+        // that don't instrument their forward pass).
+        ("fwd_ops", obj(vec![
+            ("gather_s", num(ops.gather_s)),
+            ("qkv_s", num(ops.qkv_s)),
+            ("attn_s", num(ops.attn_s)),
+            ("wo_s", num(ops.wo_s)),
+            ("mlp_s", num(ops.mlp_s)),
+            ("logits_s", num(ops.logits_s)),
+        ])),
         ("draft_s", num(m.draft_s)),
         ("verify_s", num(m.verify_s)),
         ("prefill_s", num(m.prefill_s)),
@@ -178,12 +198,14 @@ fn rows_json(rows: &[RunRow]) -> Json {
 /// `oracle` section plus `host_vs_reference` speedup aggregates
 /// (acceptance bar: `geomean >= 3`).
 pub fn hotpath_report(opts: &BenchOpts) -> Result<Json> {
-    let host_rt = Runtime::host(opts.seed);
+    let host_rt = Runtime::host_with_threads(opts.seed, opts.threads);
     let host_rows = sweep(&host_rt, opts)?;
 
     let mut top = vec![
         ("schema", Json::Str(BENCH_SCHEMA.to_string())),
         ("backend", Json::Str(host_rt.backend_label().to_string())),
+        ("threads",
+         num(host_rt.host_threads().unwrap_or(1) as f64)),
         ("seed", num(opts.seed as f64)),
         ("task", Json::Str(opts.task.clone())),
         ("target", Json::Str(opts.target.clone())),
@@ -248,6 +270,68 @@ pub fn hotpath_report(opts: &BenchOpts) -> Result<Json> {
     Ok(obj(top))
 }
 
+/// Max fractional tokens/s loss a sweep cell may show against an older
+/// report before [`compare_reports`] flags it (10%).
+pub const COMPARE_TOL: f64 = 0.10;
+
+/// Identity of one sweep cell, as printable strings so `k = null`
+/// (AR+) keys cleanly.
+fn cell_key(run: &Json) -> (String, String, String) {
+    let field = |k: &str| {
+        run.get(k).map(|v| v.to_string()).unwrap_or_default()
+    };
+    (field("engine"), field("k"), field("batch"))
+}
+
+fn cell_tps(run: &Json) -> f64 {
+    run.get("tokens_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+/// Diff two bench reports cell by cell and return one human-readable
+/// line per regression (empty = pass).  A cell regresses when its
+/// tokens/s drops more than `tol` (a fraction, e.g. 0.10) below the
+/// old report's value, or when it disappears from the new sweep while
+/// the old one measured it.  Cells only the new report has are fine —
+/// widening the sweep is not a regression.
+pub fn compare_reports(old: &Json, new: &Json, tol: f64) -> Vec<String> {
+    let runs = |j: &Json| -> Vec<Json> {
+        j.get("runs")
+            .and_then(|r| r.as_arr())
+            .map(|a| a.to_vec())
+            .unwrap_or_default()
+    };
+    let new_tps: BTreeMap<_, f64> = runs(new)
+        .iter()
+        .map(|r| (cell_key(r), cell_tps(r)))
+        .collect();
+    let mut lines = Vec::new();
+    for run in runs(old) {
+        let key = cell_key(&run);
+        let old_tps = cell_tps(&run);
+        if old_tps <= 0.0 {
+            continue; // nothing measured to regress against
+        }
+        match new_tps.get(&key) {
+            None => lines.push(format!(
+                "engine={} k={} batch={}: cell missing from the new \
+                 report ({old_tps:.1} tok/s before)",
+                key.0, key.1, key.2
+            )),
+            Some(&tps) if tps < old_tps * (1.0 - tol) => {
+                lines.push(format!(
+                    "engine={} k={} batch={}: {old_tps:.1} -> {tps:.1} \
+                     tok/s ({:+.1}%, tolerance -{:.0}%)",
+                    key.0, key.1, key.2,
+                    (tps / old_tps - 1.0) * 100.0,
+                    tol * 100.0
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    lines
+}
+
 /// Serialize `report` to `path` (single line + trailing newline — the
 /// in-repo JSON writer emits no insignificant whitespace).
 pub fn write_report(path: &Path, report: &Json) -> Result<()> {
@@ -268,5 +352,60 @@ mod tests {
         assert_eq!(o.ks, vec![2, 4, 8]);
         assert!(o.batches.contains(&1));
         assert!(o.oracle);
+        assert!(o.threads.is_none(), "default pool size must be ambient");
+    }
+
+    /// Hand-build a report with the given (engine, k, batch, tps)
+    /// cells — enough structure for compare_reports.
+    fn fake_report(cells: &[(&str, Option<usize>, usize, f64)]) -> Json {
+        let runs = cells
+            .iter()
+            .map(|&(engine, k, batch, tps)| {
+                obj(vec![
+                    ("engine", Json::Str(engine.to_string())),
+                    ("k", k.map_or(Json::Null, |k| num(k as f64))),
+                    ("batch", num(batch as f64)),
+                    ("tokens_per_s", num(tps)),
+                ])
+            })
+            .collect();
+        obj(vec![("runs", Json::Arr(runs))])
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let old = fake_report(&[("AR+", None, 1, 100.0),
+                                ("PARD", Some(8), 1, 300.0)]);
+        let new = fake_report(&[("AR+", None, 1, 95.0),
+                                ("PARD", Some(8), 1, 280.0)]);
+        assert!(compare_reports(&old, &new, COMPARE_TOL).is_empty(),
+                "-5%/-7% are inside the 10% tolerance");
+    }
+
+    #[test]
+    fn compare_flags_regressed_and_missing_cells() {
+        let old = fake_report(&[("AR+", None, 1, 100.0),
+                                ("PARD", Some(8), 1, 300.0),
+                                ("VSD", Some(2), 4, 50.0)]);
+        let new = fake_report(&[("AR+", None, 1, 100.0),
+                                ("PARD", Some(8), 1, 150.0)]);
+        let lines = compare_reports(&old, &new, COMPARE_TOL);
+        assert_eq!(lines.len(), 2, "one regression + one missing cell");
+        assert!(lines.iter().any(|l| l.contains("PARD")
+                                 && l.contains("300.0")
+                                 && l.contains("150.0")),
+                "PARD halved must be flagged: {lines:?}");
+        assert!(lines.iter().any(|l| l.contains("VSD")
+                                 && l.contains("missing")),
+                "dropped VSD cell must be flagged: {lines:?}");
+    }
+
+    #[test]
+    fn compare_ignores_new_cells_and_zero_baselines() {
+        let old = fake_report(&[("AR+", None, 1, 0.0)]);
+        let new = fake_report(&[("AR+", None, 1, 0.0),
+                                ("PARD", Some(16), 1, 500.0)]);
+        assert!(compare_reports(&old, &new, COMPARE_TOL).is_empty(),
+                "zero baselines and sweep widening are not regressions");
     }
 }

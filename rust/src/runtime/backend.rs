@@ -35,6 +35,45 @@ pub enum KvStage {
     Pjrt { k: xla::Literal, v: xla::Literal },
 }
 
+/// Per-op wall-clock breakdown of one `fwd` call, reported by backends
+/// that instrument their forward pass (currently the host fast path,
+/// DESIGN.md §8).  Each field covers a disjoint phase of the call, so
+/// the sum is bounded by `FwdOut::elapsed_s`; `pard bench` aggregates
+/// these into the `fwd_ops` column of `BENCH_hotpath.json`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FwdOps {
+    /// Live-cell gather, token embeddings, rotary tables, slot map.
+    pub gather_s: f64,
+    /// Attention rmsnorm + fused QKV matmul + rope + K/V staging.
+    pub qkv_s: f64,
+    /// Score / softmax / weighted-V chains over the cache.
+    pub attn_s: f64,
+    /// Attention output projection (+ residual accumulate).
+    pub wo_s: f64,
+    /// MLP rmsnorm + fused W1/W3 matmul + SiLU + W2 (+ residual).
+    pub mlp_s: f64,
+    /// Final norm, logit projection, output scatter/assembly.
+    pub logits_s: f64,
+}
+
+impl FwdOps {
+    /// Accumulate another breakdown into this one (field-wise sum).
+    pub fn add(&mut self, o: &FwdOps) {
+        self.gather_s += o.gather_s;
+        self.qkv_s += o.qkv_s;
+        self.attn_s += o.attn_s;
+        self.wo_s += o.wo_s;
+        self.mlp_s += o.mlp_s;
+        self.logits_s += o.logits_s;
+    }
+
+    /// Sum of all phases (≤ the owning call's `elapsed_s`).
+    pub fn total(&self) -> f64 {
+        self.gather_s + self.qkv_s + self.attn_s + self.wo_s + self.mlp_s
+            + self.logits_s
+    }
+}
+
 /// Host-side result of one `fwd` call.
 pub struct FwdOut {
     /// `[b, t, vocab]` row-major.
@@ -45,6 +84,9 @@ pub struct FwdOut {
     pub kv: KvStage,
     /// Wall-clock of the forward execution + transfers.
     pub elapsed_s: f64,
+    /// Per-op breakdown of `elapsed_s` where the backend instruments
+    /// it (`None` on the scalar oracle and PJRT paths).
+    pub ops: Option<FwdOps>,
 }
 
 /// The forward/commit call surface of a loaded model (object-safe).

@@ -9,57 +9,157 @@
 //!   (matmul cells, attention scores, softmax sums, weighted-V sums,
 //!   rmsnorm squares, logit dot products) runs in exactly the scalar
 //!   oracle's fixed ascending order, starting from the same initial
-//!   value.  Loop *shape* is free — k-outer vs dot-product, slot
-//!   unrolling, thread partitioning — as long as no per-cell sum is
+//!   value.  Loop *shape* is free — k-outer vs dot-product, panel
+//!   packing, lane partitioning — as long as no per-cell sum is
 //!   reassociated.  Live-cell outputs are therefore bit-identical to
 //!   `RefModel`, which is what lets the engine-equivalence suite (and
 //!   `tests/host_backend.rs`) compare the two backends exactly instead
 //!   of approximately.
+//! * **A persistent worker pool with column-granular work.**  A pool of
+//!   parked worker threads ([`WorkerPool`]) is built once per runtime
+//!   (size from `--threads` / `PARD_HOST_THREADS` /
+//!   `available_parallelism`) and work is split at *output-cell*
+//!   granularity: matmul column panels, per-(row, head) attention
+//!   chains.  Each output cell is an independent reduction chain owned
+//!   by exactly one lane, so the partition — and the lane count — can
+//!   change wall clock only, never a bit.  Unlike the earlier
+//!   batch-row split on per-call scoped threads, this parallelizes
+//!   batch=1 decode and single-row prefill, and pays thread spawn cost
+//!   zero times per call instead of once.
+//! * **Packed, fused weights.**  All weight matrices are packed into
+//!   contiguous column panels (`PackedMat`) at build time; the Q/K/V
+//!   projections are fused into one `[d, 3·H·D]` sweep and the MLP
+//!   gate/up into one `[d, 2·ff]` sweep, cutting three (two) passes
+//!   over the normed activations to one while preserving each output
+//!   cell's k-ascending chain.  The logit projection runs over the
+//!   packed transpose of the tied embedding, as before.
 //! * **Dead work is skipped, not recomputed.**  Parked cells (queries
 //!   positioned at the garbage slot, DESIGN.md §7) are dropped before
 //!   the first matmul; their logits/hidden/staged-KV outputs are zeros.
-//!   The slot contract already promises nobody reads them — the scalar
-//!   oracle spends full matmul/MLP/logit FLOPs on them anyway (a 32-wide
-//!   prefill call with an 8-token prompt does 4x the live work).
-//! * **The KV cache is read in place.**  The oracle materialises a
-//!   transient `[b, s_used, H*D]` copy of the persistent cache *per
-//!   layer per call*; the host path resolves each attended slot through
-//!   a per-row `slot -> staged column` map — staged K/V from this call
-//!   win, otherwise the persistent tensor is read directly through a
-//!   `Sync` borrowed view (`CacheView`).  No copies, identical values.
-//! * **Rotary tables are computed once per call.**  `sin/cos(pos *
-//!   inv_freq)` depends only on the cell position, yet the oracle
-//!   re-evaluates it per layer *and per head*: `2 * L * H * (D/2)`
-//!   `sin_cos` calls per cell where one `D/2` pass suffices.  The trig
-//!   elimination alone is the single largest win on decode-shaped calls.
-//! * **Batch rows run in parallel.**  Rows are partitioned into
-//!   contiguous chunks executed on `std::thread::scope` threads.  Rows
-//!   share no state (DESIGN.md §6 row independence), every chunk writes
-//!   a private output block, and per-cell order never depends on the
-//!   partition — so outputs are bit-identical across thread counts,
-//!   machines, and runs.
+//! * **The KV cache is read in place.**  Each attended slot resolves
+//!   through a per-row `slot -> staged column` map — staged K/V from
+//!   this call win, otherwise the persistent tensor is read directly
+//!   through a `Sync` borrowed view (`CacheView`).  No copies,
+//!   identical values.
+//! * **Rotary tables are computed once per call.**  One `D/2`-wide
+//!   sin/cos row per live cell, shared by every layer and head (the
+//!   oracle recomputes the trig `2·L·H` times per cell).
 //!
 //! What stays deliberately identical to the oracle: `f32::exp` in
 //! softmax/SiLU and `sin_cos` values (same libm calls, same bits), the
 //! fwd/commit split, `pick_t` exact-T semantics, and the garbage-slot
-//! commit protocol via [`KvCache::host_scatter`].
+//! commit protocol via [`KvCache::host_scatter`].  `fwd` additionally
+//! reports a per-op time breakdown ([`FwdOps`]) that `pard bench`
+//! aggregates into `BENCH_hotpath.json`.
 
 // Kernel-style index loops are deliberate here: the fixed per-cell
 // reduction order *is* the spec (see module docs), and explicit indices
 // keep that order auditable against reference.rs line by line.
 #![allow(clippy::needless_range_loop)]
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::artifact::{ModelCfg, ModelEntry, ModelKind};
-use super::backend::{Backend, FwdOut, KvStage};
+use super::backend::{Backend, FwdOps, FwdOut, KvStage};
 use super::cache::{CacheState, KvCache};
-use super::reference::{matmul_acc, rmsnorm, RefModel};
+use super::pool::{chunk, default_threads, SharedSlice, WorkerPool};
+use super::reference::{rmsnorm, RefModel};
+
+/// Packed panel width (output columns per panel).  16 f32 = one 64-byte
+/// cache line, and every synthetic-family width (`h·dh`, `ff`, `vocab`,
+/// `d`) is a multiple of it; ragged tails are still handled.
+pub(crate) const PANEL: usize = 16;
+
+/// Minimum matmul MACs (`n · din · dout`) before a pool dispatch beats
+/// running the sweep on the caller lane.  Chosen so decode-shaped
+/// draft-s calls stay serial while verify/prefill shapes parallelize;
+/// the choice affects wall clock only, never bits.
+const PAR_MIN_MACS: usize = 8192;
+
+/// Same gate for the attention stage, in score-chain MACs
+/// (`n · h · s_used · dh`).
+const PAR_MIN_ATTN_MACS: usize = 4096;
+
+/// Column-panel packed weight matrix: output columns are grouped into
+/// [`PANEL`]-wide panels, each stored `[din, PANEL]` contiguously, so a
+/// lane sweeping a panel range streams its weights linearly.  The sweep
+/// keeps the oracle's per-cell reduction order (k ascending from the
+/// existing output value) — packing changes *where* a weight lives,
+/// never *when* it is accumulated.
+pub(crate) struct PackedMat {
+    /// `[n_panels, din, PANEL]`, ragged last panel zero-padded.
+    data: Vec<f32>,
+    din: usize,
+    dout: usize,
+}
+
+impl PackedMat {
+    /// Pack a row-major `[din, dout]` matrix.
+    pub(crate) fn pack(w: &[f32], din: usize, dout: usize) -> PackedMat {
+        assert_eq!(w.len(), din * dout, "pack: weight shape mismatch");
+        let panels = dout.div_ceil(PANEL);
+        let mut data = vec![0f32; panels * din * PANEL];
+        for p in 0..panels {
+            let cols = (dout - p * PANEL).min(PANEL);
+            for k in 0..din {
+                let src = k * dout + p * PANEL;
+                let dst = (p * din + k) * PANEL;
+                data[dst..dst + cols].copy_from_slice(&w[src..src + cols]);
+            }
+        }
+        PackedMat { data, din, dout }
+    }
+
+    pub(crate) fn n_panels(&self) -> usize {
+        self.dout.div_ceil(PANEL)
+    }
+
+    /// `out[n, dout] += a[n, din] @ w` restricted to panels `p0..p1`.
+    /// Bit-identical to `matmul_acc` over the matching column range for
+    /// any panel partition (the §8 column-decomposition contract).
+    ///
+    /// `out` is a [`SharedSlice`] so concurrent lanes can each own a
+    /// disjoint panel range of the same buffer.
+    pub(crate) fn matmul_acc_panels(&self, a: &[f32], out: &SharedSlice,
+                                    n: usize, p0: usize, p1: usize) {
+        let (din, dout) = (self.din, self.dout);
+        for p in p0..p1 {
+            let cols = (dout - p * PANEL).min(PANEL);
+            let c0 = p * PANEL;
+            let pan = &self.data[p * din * PANEL..(p + 1) * din * PANEL];
+            for i in 0..n {
+                let ar = &a[i * din..(i + 1) * din];
+                // SAFETY: lanes own disjoint panel ranges, so these
+                // column cells belong to this lane alone.
+                let or = unsafe { out.range(i * dout + c0, cols) };
+                for (ki, &av) in ar.iter().enumerate() {
+                    let wr = &pan[ki * PANEL..ki * PANEL + cols];
+                    for j in 0..cols {
+                        or[j] += av * wr[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One layer's build-time packed weights (see module docs).
+struct PackedLayer {
+    /// Fused `[d, 3·H·D]`: columns `[wq | wk | wv]`.
+    wqkv: PackedMat,
+    /// `[H·D, d]` attention output projection.
+    wo: PackedMat,
+    /// Fused `[d, 2·ff]`: columns `[w1 | w3]` (gate | up).
+    w13: PackedMat,
+    /// `[ff, d]` MLP down projection.
+    w2: PackedMat,
+}
 
 /// Read-only view of a host cache tensor plus its layout.  `KvCache`
-/// itself cannot cross a scoped-thread boundary (its PJRT variant holds
+/// itself cannot cross a worker-lane boundary (its PJRT variant holds
 /// non-`Send` device handles under `--features pjrt`); this borrowed
 /// view is plain `&[f32]` + dimensions and is always `Sync`.
 struct CacheView<'a> {
@@ -80,331 +180,140 @@ impl CacheView<'_> {
     }
 }
 
-/// One thread's private output block covering batch rows
-/// `r0 .. r0 + rows` (assembled into the `FwdOut` layout by `fwd`).
-struct RowBlock {
-    r0: usize,
-    rows: usize,
-    /// `[rows, t, vocab]`; parked cells are zero.
-    logits: Vec<f32>,
-    /// `[rows, t, d]` when the model exports hidden states.
-    hidden: Option<Vec<f32>>,
-    /// `[L, rows, t, H*D]`; parked cells are zero.
-    k_stage: Vec<f32>,
-    v_stage: Vec<f32>,
-}
-
 /// Resolve the K or V vector attended at `slot`: this call's staged
 /// column if the slot map says the slot was written in-flight, else the
-/// persistent cache tensor read in place.  Returns exactly the bytes
-/// the oracle's transient merged copy would hold.
+/// persistent cache tensor read in place.  `stage` is the fused QKV
+/// buffer (`stride` floats per cell, K/V at offset `base`).  Returns
+/// exactly the bytes the oracle's transient merged copy would hold.
 #[inline(always)]
-fn slot_kv<'a>(stage: &'a [f32], cache: &'a [f32], map: &[i32],
-               map_base: usize, slot: usize, cache_base: usize,
-               hd: usize, head_off: usize, dh: usize) -> &'a [f32] {
+#[allow(clippy::too_many_arguments)] // hot-path accessor, args are flat
+fn slot_kv<'a>(stage: &'a [f32], stride: usize, base: usize,
+               cache: &'a [f32], map: &[i32], map_base: usize,
+               slot: usize, cache_base: usize, hd: usize,
+               head_off: usize, dh: usize) -> &'a [f32] {
     let j = map[map_base + slot];
     if j >= 0 {
-        &stage[j as usize * hd + head_off..][..dh]
+        &stage[j as usize * stride + base + head_off..][..dh]
     } else {
         &cache[cache_base + slot * hd + head_off..][..dh]
     }
 }
 
-/// The fast host backend: scalar-oracle weights, restructured execution.
+/// Lap timer for the per-op breakdown: one clock read per phase
+/// boundary instead of two.
+struct OpClock {
+    last: Instant,
+}
+
+impl OpClock {
+    fn start() -> OpClock {
+        OpClock { last: Instant::now() }
+    }
+
+    fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// The fast host backend: scalar-oracle weights, packed layout,
+/// pool-parallel column-granular execution.
 pub struct HostModel {
     m: RefModel,
-    /// `[d, vocab]` transpose of the tied embedding, so the logit
-    /// projection runs through `matmul_acc` (k-outer, vectorizable)
-    /// instead of the oracle's scalar per-cell dot products.  Same
-    /// per-cell add order, same bits.
-    embed_t: Vec<f32>,
-    /// Worker threads to span batch rows across (`>= 1`).
-    threads: usize,
+    /// Per-layer packed weights (fused QKV / W13, packed WO / W2).
+    packed: Vec<PackedLayer>,
+    /// Packed `[d, vocab]` transpose of the tied embedding: the logit
+    /// projection runs the same k-outer panel sweep as every other
+    /// matmul.  Same per-cell add order as the oracle, same bits.
+    embed_t: PackedMat,
+    /// Packed `[2d, d]` EAGLE fuse projection, when present.
+    fuse_p: Option<PackedMat>,
+    /// Persistent worker pool; shared across the runtime's models so
+    /// target and draft dispatch onto the same parked threads.
+    pool: Arc<WorkerPool>,
 }
 
 impl HostModel {
     /// Build the model named by `entry` — same deterministic weights as
-    /// [`RefModel::build`] for the same `(seed, entry)`.
+    /// [`RefModel::build`] for the same `(seed, entry)` — with its own
+    /// default-sized pool (`PARD_HOST_THREADS` / available cores).
     pub fn build(seed: u64, entry: &ModelEntry) -> Result<HostModel> {
+        Self::build_with_pool(
+            seed, entry, Arc::new(WorkerPool::new(default_threads())))
+    }
+
+    /// [`HostModel::build`] dispatching onto a caller-provided pool
+    /// (`Runtime::host` shares one pool across all its models).
+    pub fn build_with_pool(seed: u64, entry: &ModelEntry,
+                           pool: Arc<WorkerPool>) -> Result<HostModel> {
         let m = RefModel::build(seed, entry)?;
-        let (v, d) = (m.cfg.vocab, m.cfg.d_model);
+        let cfg = &m.cfg;
+        let (v, d, ff) = (cfg.vocab, cfg.d_model, cfg.d_ff);
+        let hd = cfg.n_heads * cfg.d_head;
+        let packed = m
+            .layers
+            .iter()
+            .map(|lyr| {
+                let mut wqkv = vec![0f32; d * 3 * hd];
+                let mut w13 = vec![0f32; d * 2 * ff];
+                for k in 0..d {
+                    wqkv[k * 3 * hd..k * 3 * hd + hd]
+                        .copy_from_slice(&lyr.wq[k * hd..(k + 1) * hd]);
+                    wqkv[k * 3 * hd + hd..k * 3 * hd + 2 * hd]
+                        .copy_from_slice(&lyr.wk[k * hd..(k + 1) * hd]);
+                    wqkv[k * 3 * hd + 2 * hd..(k + 1) * 3 * hd]
+                        .copy_from_slice(&lyr.wv[k * hd..(k + 1) * hd]);
+                    w13[k * 2 * ff..k * 2 * ff + ff]
+                        .copy_from_slice(&lyr.w1[k * ff..(k + 1) * ff]);
+                    w13[k * 2 * ff + ff..(k + 1) * 2 * ff]
+                        .copy_from_slice(&lyr.w3[k * ff..(k + 1) * ff]);
+                }
+                PackedLayer {
+                    wqkv: PackedMat::pack(&wqkv, d, 3 * hd),
+                    wo: PackedMat::pack(&lyr.wo, hd, d),
+                    w13: PackedMat::pack(&w13, d, 2 * ff),
+                    w2: PackedMat::pack(&lyr.w2, ff, d),
+                }
+            })
+            .collect();
         let mut embed_t = vec![0f32; d * v];
         for tok in 0..v {
             for j in 0..d {
                 embed_t[j * v + tok] = m.embed[tok * d + j];
             }
         }
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        Ok(HostModel { m, embed_t, threads })
+        let embed_t = PackedMat::pack(&embed_t, d, v);
+        let fuse_p =
+            m.fuse.as_ref().map(|f| PackedMat::pack(f, 2 * d, d));
+        Ok(HostModel { m, packed, embed_t, fuse_p, pool })
     }
 
-    /// Forward over batch rows `r0 .. r0 + rows` only.  Pure function of
-    /// its row range: no other row's tokens, cache lines, or scratch are
-    /// ever read, which is what makes the scoped-thread split bit-safe.
-    fn fwd_rows(&self, view: &CacheView, t: usize, r0: usize, rows: usize,
-                tokens: &[i32], pos: &[i32], hidden_in: Option<&[f32]>,
-                s_used: usize) -> RowBlock {
-        let cfg = &self.m.cfg;
-        let (d, h, dh, ff, vocab) =
-            (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff, cfg.vocab);
-        let hd = h * dh;
-        let half = dh / 2;
-        let n_layers = self.m.layers.len();
-        let mut blk = RowBlock {
-            r0,
-            rows,
-            logits: vec![0f32; rows * t * vocab],
-            hidden: if self.m.hidden {
-                Some(vec![0f32; rows * t * d])
-            } else {
-                None
-            },
-            k_stage: vec![0f32; n_layers * rows * t * hd],
-            v_stage: vec![0f32; n_layers * rows * t * hd],
-        };
+    /// Pool lanes this model dispatches onto (1 = fully serial).
+    pub fn threads(&self) -> usize {
+        self.pool.lanes()
+    }
 
-        // Live-cell gather: local cell index (lrow * t + col), local
-        // batch row, clamped position.  Everything parked is dropped
-        // here and never touched again.
-        let mut cells: Vec<usize> = Vec::with_capacity(rows * t);
-        let mut lrows: Vec<usize> = Vec::with_capacity(rows * t);
-        let mut ps: Vec<usize> = Vec::with_capacity(rows * t);
-        // Raw (unclamped) positions, kept separately: the oracle ropes
-        // Q/K with the raw `pos` value and clamps only for slot
-        // scatter/attention — bit-identity requires doing the same.
-        let mut praw: Vec<i32> = Vec::with_capacity(rows * t);
-        for lrow in 0..rows {
-            for col in 0..t {
-                let gi = (r0 + lrow) * t + col;
-                let p = pos[gi].clamp(0, view.s_max as i32 - 1) as usize;
-                if p < s_used {
-                    cells.push(lrow * t + col);
-                    lrows.push(lrow);
-                    ps.push(p);
-                    praw.push(pos[gi]);
-                }
-            }
+    /// `out[n, dout] += a @ w`, panel-partitioned across the pool when
+    /// the shape is worth a dispatch.  The gate and the partition pick
+    /// *who* computes each output cell, never the order within it —
+    /// results are bit-identical for every lane count (DESIGN.md §8).
+    fn par_matmul(&self, a: &[f32], w: &PackedMat, out: &mut [f32],
+                  n: usize) {
+        let panels = w.n_panels();
+        let lanes = self.pool.lanes().min(panels);
+        let shared = SharedSlice::new(out);
+        if lanes <= 1 || n * w.din * w.dout < PAR_MIN_MACS {
+            w.matmul_acc_panels(a, &shared, n, 0, panels);
+            return;
         }
-        let n = cells.len();
-        if n == 0 {
-            return blk;
-        }
-
-        // Token embeddings (EAGLE: fuse [target hidden ; embedding]),
-        // gathered densely over live cells only.
-        let mut x = vec![0f32; n * d];
-        match (self.m.kind, hidden_in) {
-            (ModelKind::Lm, _) => {
-                for j in 0..n {
-                    // global cell = (r0 + lrow) * t + col = r0*t + cells[j]
-                    let tok = tokens[r0 * t + cells[j]]
-                        .clamp(0, vocab as i32 - 1) as usize;
-                    x[j * d..(j + 1) * d].copy_from_slice(
-                        &self.m.embed[tok * d..(tok + 1) * d]);
-                }
+        self.pool.run(&|lane| {
+            if lane < lanes {
+                let (p0, p1) = chunk(panels, lanes, lane);
+                w.matmul_acc_panels(a, &shared, n, p0, p1);
             }
-            (ModelKind::Eagle, Some(hin)) => {
-                let fuse = self.m.fuse.as_ref().expect("eagle has fuse");
-                let mut cat = vec![0f32; n * 2 * d];
-                for j in 0..n {
-                    let gi = r0 * t + cells[j];
-                    let tok =
-                        tokens[gi].clamp(0, vocab as i32 - 1) as usize;
-                    cat[j * 2 * d..j * 2 * d + d]
-                        .copy_from_slice(&hin[gi * d..(gi + 1) * d]);
-                    cat[j * 2 * d + d..(j + 1) * 2 * d]
-                        .copy_from_slice(&self.m.embed[tok * d..(tok + 1) * d]);
-                }
-                matmul_acc(&cat, fuse, &mut x, n, 2 * d, d);
-            }
-            (ModelKind::Eagle, None) => {
-                unreachable!("validated by fwd()")
-            }
-        }
-
-        // Rotary tables: one sin/cos row per live cell, shared by every
-        // layer and head (the oracle recomputes these 2*L*H times).
-        let mut sin_t = vec![0f32; n * half];
-        let mut cos_t = vec![0f32; n * half];
-        for j in 0..n {
-            for c in 0..half {
-                let ang = praw[j] as f32 * self.m.inv_freq[c];
-                let (s, co) = ang.sin_cos();
-                sin_t[j * half + c] = s;
-                cos_t[j * half + c] = co;
-            }
-        }
-
-        // slot -> live-cell map per local row: which in-flight column
-        // occupies a cache slot for the duration of this call (later
-        // columns win, matching the oracle's scatter order).
-        let mut staged_at = vec![-1i32; rows * s_used];
-        for j in 0..n {
-            staged_at[lrows[j] * s_used + ps[j]] = j as i32;
-        }
-
-        // Layer-loop scratch, allocated once and reused.
-        let mut q = vec![0f32; n * hd];
-        let mut k = vec![0f32; n * hd];
-        let mut v = vec![0f32; n * hd];
-        let mut attn = vec![0f32; n * hd];
-        let mut g = vec![0f32; n * ff];
-        let mut u = vec![0f32; n * ff];
-        let mut scores = vec![0f32; s_used];
-        let scale = 1.0 / (dh as f32).sqrt();
-
-        for (l, lyr) in self.m.layers.iter().enumerate() {
-            let xn = rmsnorm(&x, d, &lyr.ln_attn);
-            q.fill(0.0);
-            k.fill(0.0);
-            v.fill(0.0);
-            matmul_acc(&xn, &lyr.wq, &mut q, n, d, hd);
-            matmul_acc(&xn, &lyr.wk, &mut k, n, d, hd);
-            matmul_acc(&xn, &lyr.wv, &mut v, n, d, hd);
-
-            // Rotary, from the precomputed tables.
-            for j in 0..n {
-                let (st, ct) =
-                    (&sin_t[j * half..(j + 1) * half],
-                     &cos_t[j * half..(j + 1) * half]);
-                for head in 0..h {
-                    let base = j * hd + head * dh;
-                    for c in 0..half {
-                        let (sin, cos) = (st[c], ct[c]);
-                        let q1 = q[base + c];
-                        let q2 = q[base + half + c];
-                        q[base + c] = q1 * cos - q2 * sin;
-                        q[base + half + c] = q1 * sin + q2 * cos;
-                        let k1 = k[base + c];
-                        let k2 = k[base + half + c];
-                        k[base + c] = k1 * cos - k2 * sin;
-                        k[base + half + c] = k1 * sin + k2 * cos;
-                    }
-                }
-            }
-
-            // Stage this call's K/V into the output block (parked cells
-            // stay zero; they only ever commit to the garbage slot).
-            for j in 0..n {
-                let dst = (l * rows * t + cells[j]) * hd;
-                blk.k_stage[dst..dst + hd]
-                    .copy_from_slice(&k[j * hd..(j + 1) * hd]);
-                blk.v_stage[dst..dst + hd]
-                    .copy_from_slice(&v[j * hd..(j + 1) * hd]);
-            }
-
-            // Causal cached attention, persistent tensor read in place.
-            attn.fill(0.0);
-            for j in 0..n {
-                let (lrow, p) = (lrows[j], ps[j]);
-                let grow = r0 + lrow;
-                let map_base = lrow * s_used;
-                let kc_base = view.off(0, l, grow);
-                let vc_base = view.off(1, l, grow);
-                for head in 0..h {
-                    let head_off = head * dh;
-                    let qv = &q[j * hd + head_off..j * hd + head_off + dh];
-                    // Scores: 4 independent accumulator chains hide the
-                    // serial-add latency; each chain is still the
-                    // oracle's e-ascending per-cell order.
-                    let mut s = 0usize;
-                    while s + 4 <= p + 1 {
-                        let k0 = slot_kv(&k, view.data, &staged_at,
-                                         map_base, s, kc_base, hd,
-                                         head_off, dh);
-                        let k1 = slot_kv(&k, view.data, &staged_at,
-                                         map_base, s + 1, kc_base, hd,
-                                         head_off, dh);
-                        let k2 = slot_kv(&k, view.data, &staged_at,
-                                         map_base, s + 2, kc_base, hd,
-                                         head_off, dh);
-                        let k3 = slot_kv(&k, view.data, &staged_at,
-                                         map_base, s + 3, kc_base, hd,
-                                         head_off, dh);
-                        let (mut a0, mut a1, mut a2, mut a3) =
-                            (0f32, 0f32, 0f32, 0f32);
-                        for e in 0..dh {
-                            let qe = qv[e];
-                            a0 += qe * k0[e];
-                            a1 += qe * k1[e];
-                            a2 += qe * k2[e];
-                            a3 += qe * k3[e];
-                        }
-                        scores[s] = a0 * scale;
-                        scores[s + 1] = a1 * scale;
-                        scores[s + 2] = a2 * scale;
-                        scores[s + 3] = a3 * scale;
-                        s += 4;
-                    }
-                    while s <= p {
-                        let kr = slot_kv(&k, view.data, &staged_at,
-                                         map_base, s, kc_base, hd,
-                                         head_off, dh);
-                        let mut acc = 0f32;
-                        for e in 0..dh {
-                            acc += qv[e] * kr[e];
-                        }
-                        scores[s] = acc * scale;
-                        s += 1;
-                    }
-                    let mut m = f32::NEG_INFINITY;
-                    for &sc in scores.iter().take(p + 1) {
-                        if sc > m {
-                            m = sc;
-                        }
-                    }
-                    let mut denom = 0f32;
-                    for sc in scores.iter_mut().take(p + 1) {
-                        *sc = (*sc - m).exp();
-                        denom += *sc;
-                    }
-                    let out = &mut attn
-                        [j * hd + head_off..j * hd + head_off + dh];
-                    for s in 0..=p {
-                        let w = scores[s] / denom;
-                        let vr = slot_kv(&v, view.data, &staged_at,
-                                         map_base, s, vc_base, hd,
-                                         head_off, dh);
-                        for e in 0..dh {
-                            out[e] += w * vr[e];
-                        }
-                    }
-                }
-            }
-            matmul_acc(&attn, &lyr.wo, &mut x, n, hd, d);
-
-            let xn2 = rmsnorm(&x, d, &lyr.ln_mlp);
-            g.fill(0.0);
-            u.fill(0.0);
-            matmul_acc(&xn2, &lyr.w1, &mut g, n, d, ff);
-            matmul_acc(&xn2, &lyr.w3, &mut u, n, d, ff);
-            for i in 0..n * ff {
-                let gv = g[i];
-                g[i] = gv * (1.0 / (1.0 + (-gv).exp())) * u[i];
-            }
-            matmul_acc(&g, &lyr.w2, &mut x, n, ff, d);
-        }
-
-        // Final norm + tied-embedding logits, scattered back to the
-        // (zeros-padded) call layout.
-        let hidden = rmsnorm(&x, d, &self.m.ln_f);
-        let mut logits = vec![0f32; n * vocab];
-        matmul_acc(&hidden, &self.embed_t, &mut logits, n, d, vocab);
-        for j in 0..n {
-            let dst = cells[j] * vocab;
-            blk.logits[dst..dst + vocab]
-                .copy_from_slice(&logits[j * vocab..(j + 1) * vocab]);
-        }
-        if let Some(bh) = blk.hidden.as_mut() {
-            for j in 0..n {
-                let dst = cells[j] * d;
-                bh[dst..dst + d]
-                    .copy_from_slice(&hidden[j * d..(j + 1) * d]);
-            }
-        }
-        blk
+        });
     }
 }
 
@@ -435,8 +344,10 @@ impl Backend for HostModel {
            hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
         let t0 = Instant::now();
         let cfg = &self.m.cfg;
-        let (d, vocab) = (cfg.d_model, cfg.vocab);
-        let hd = cfg.n_heads * cfg.d_head;
+        let (d, h, dh, ff, vocab) =
+            (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff, cfg.vocab);
+        let hd = h * dh;
+        let half = dh / 2;
         let s_max = cache.s_max;
         anyhow::ensure!(b >= 1 && t >= 1, "empty call shape {b}x{t}");
         anyhow::ensure!(tokens.len() == b * t && pos.len() == b * t,
@@ -481,54 +392,11 @@ impl Backend for HostModel {
             .max()
             .map_or(1, |p| p + 1);
 
-        // Partition batch rows into contiguous per-thread chunks.  The
-        // per-cell math is row-local, so the partition (and thread
-        // count) can never change a single output bit — only wall
-        // clock.  Scoped threads are spawned per call, so tiny
-        // (decode-shaped) calls stay single-threaded: spawn+join costs
-        // tens of microseconds, comparable to a whole t=1 row on the
-        // synthetic models.
-        let live_total = pos
-            .iter()
-            .filter(|&&p| {
-                (p.clamp(0, s_max as i32 - 1) as usize) < s_used
-            })
-            .count();
-        const PAR_MIN_LIVE_CELLS: usize = 16;
-        let workers = if live_total >= PAR_MIN_LIVE_CELLS {
-            self.threads.min(b).max(1)
-        } else {
-            1
-        };
-        let chunk = b.div_ceil(workers);
-        let ranges: Vec<(usize, usize)> = (0..b)
-            .step_by(chunk)
-            .map(|r0| (r0, chunk.min(b - r0)))
-            .collect();
-        let blocks: Vec<RowBlock> = if ranges.len() == 1 {
-            vec![self.fwd_rows(&view, t, 0, b, tokens, pos, hidden_in,
-                               s_used)]
-        } else {
-            let view_ref = &view;
-            std::thread::scope(|sc| {
-                let handles: Vec<_> = ranges
-                    .iter()
-                    .map(|&(r0, rows)| {
-                        sc.spawn(move || {
-                            self.fwd_rows(view_ref, t, r0, rows, tokens,
-                                          pos, hidden_in, s_used)
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|hdl| hdl.join().expect("host worker panicked"))
-                    .collect()
-            })
-        };
-
-        // Assemble private row blocks into the FwdOut layouts.
+        let mut ops = FwdOps::default();
+        let mut clock = OpClock::start();
         let n_layers = self.m.layers.len();
+
+        // Call-layout outputs (parked cells stay zero).
         let mut logits = vec![0f32; b * t * vocab];
         let mut hidden_out = if self.m.hidden {
             Some(vec![0f32; b * t * d])
@@ -537,31 +405,291 @@ impl Backend for HostModel {
         };
         let mut k_stage = vec![0f32; n_layers * b * t * hd];
         let mut v_stage = vec![0f32; n_layers * b * t * hd];
-        for blk in &blocks {
-            let (r0, rows) = (blk.r0, blk.rows);
-            logits[r0 * t * vocab..(r0 + rows) * t * vocab]
-                .copy_from_slice(&blk.logits);
-            if let (Some(hout), Some(bh)) =
-                (hidden_out.as_mut(), blk.hidden.as_ref())
-            {
-                hout[r0 * t * d..(r0 + rows) * t * d].copy_from_slice(bh);
-            }
-            for l in 0..n_layers {
-                let src = &blk.k_stage[l * rows * t * hd
-                    ..(l + 1) * rows * t * hd];
-                k_stage[(l * b + r0) * t * hd..(l * b + r0 + rows) * t * hd]
-                    .copy_from_slice(src);
-                let src = &blk.v_stage[l * rows * t * hd
-                    ..(l + 1) * rows * t * hd];
-                v_stage[(l * b + r0) * t * hd..(l * b + r0 + rows) * t * hd]
-                    .copy_from_slice(src);
+
+        // Live-cell gather: global cell index (row * t + col), row,
+        // clamped position.  Everything parked is dropped here and
+        // never touched again.
+        let mut cells: Vec<usize> = Vec::with_capacity(b * t);
+        let mut rows_: Vec<usize> = Vec::with_capacity(b * t);
+        let mut ps: Vec<usize> = Vec::with_capacity(b * t);
+        // Raw (unclamped) positions, kept separately: the oracle ropes
+        // Q/K with the raw `pos` value and clamps only for slot
+        // scatter/attention — bit-identity requires doing the same.
+        let mut praw: Vec<i32> = Vec::with_capacity(b * t);
+        for gi in 0..b * t {
+            let p = pos[gi].clamp(0, s_max as i32 - 1) as usize;
+            if p < s_used {
+                cells.push(gi);
+                rows_.push(gi / t);
+                ps.push(p);
+                praw.push(pos[gi]);
             }
         }
+        let n = cells.len();
+        if n == 0 {
+            ops.gather_s += clock.lap();
+            return Ok(FwdOut {
+                logits,
+                hidden: hidden_out,
+                kv: KvStage::Host { k: k_stage, v: v_stage },
+                elapsed_s: t0.elapsed().as_secs_f64(),
+                ops: Some(ops),
+            });
+        }
+
+        // Token embeddings (EAGLE: fuse [target hidden ; embedding]),
+        // gathered densely over live cells only.
+        let mut x = vec![0f32; n * d];
+        match (self.m.kind, hidden_in) {
+            (ModelKind::Lm, _) => {
+                for j in 0..n {
+                    let tok = tokens[cells[j]]
+                        .clamp(0, vocab as i32 - 1) as usize;
+                    x[j * d..(j + 1) * d].copy_from_slice(
+                        &self.m.embed[tok * d..(tok + 1) * d]);
+                }
+            }
+            (ModelKind::Eagle, Some(hin)) => {
+                let fuse_p =
+                    self.fuse_p.as_ref().expect("eagle has packed fuse");
+                let mut cat = vec![0f32; n * 2 * d];
+                for j in 0..n {
+                    let gi = cells[j];
+                    let tok =
+                        tokens[gi].clamp(0, vocab as i32 - 1) as usize;
+                    cat[j * 2 * d..j * 2 * d + d]
+                        .copy_from_slice(&hin[gi * d..(gi + 1) * d]);
+                    cat[j * 2 * d + d..(j + 1) * 2 * d]
+                        .copy_from_slice(&self.m.embed[tok * d..(tok + 1) * d]);
+                }
+                self.par_matmul(&cat, fuse_p, &mut x, n);
+            }
+            (ModelKind::Eagle, None) => {
+                unreachable!("validated above")
+            }
+        }
+
+        // Rotary tables: one sin/cos row per live cell, shared by every
+        // layer and head (the oracle recomputes these 2*L*H times).
+        let mut sin_t = vec![0f32; n * half];
+        let mut cos_t = vec![0f32; n * half];
+        for j in 0..n {
+            for c in 0..half {
+                let ang = praw[j] as f32 * self.m.inv_freq[c];
+                let (s, co) = ang.sin_cos();
+                sin_t[j * half + c] = s;
+                cos_t[j * half + c] = co;
+            }
+        }
+
+        // slot -> live-cell map per batch row: which in-flight column
+        // occupies a cache slot for the duration of this call (later
+        // columns win, matching the oracle's scatter order).
+        let mut staged_at = vec![-1i32; b * s_used];
+        for j in 0..n {
+            staged_at[rows_[j] * s_used + ps[j]] = j as i32;
+        }
+        ops.gather_s += clock.lap();
+
+        // Layer-loop scratch, allocated once and reused.
+        let qkv_stride = 3 * hd;
+        let mut qkv = vec![0f32; n * qkv_stride];
+        let mut attn = vec![0f32; n * hd];
+        let mut gu = vec![0f32; n * 2 * ff];
+        let mut gact = vec![0f32; n * ff];
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        for (l, (lyr, pk)) in
+            self.m.layers.iter().zip(self.packed.iter()).enumerate()
+        {
+            // --- fused QKV projection + rope + staging ---
+            let xn = rmsnorm(&x, d, &lyr.ln_attn);
+            qkv.fill(0.0);
+            self.par_matmul(&xn, &pk.wqkv, &mut qkv, n);
+
+            // Rotary, from the precomputed tables, on the Q and K
+            // thirds of the fused buffer.
+            for j in 0..n {
+                let (st, ct) =
+                    (&sin_t[j * half..(j + 1) * half],
+                     &cos_t[j * half..(j + 1) * half]);
+                for part in 0..2 {
+                    for head in 0..h {
+                        let base =
+                            j * qkv_stride + part * hd + head * dh;
+                        for c in 0..half {
+                            let (sin, cos) = (st[c], ct[c]);
+                            let x1 = qkv[base + c];
+                            let x2 = qkv[base + half + c];
+                            qkv[base + c] = x1 * cos - x2 * sin;
+                            qkv[base + half + c] = x1 * sin + x2 * cos;
+                        }
+                    }
+                }
+            }
+
+            // Stage this call's K/V into the output tensors (parked
+            // cells stay zero; they only ever commit to the garbage
+            // slot).
+            for j in 0..n {
+                let src = j * qkv_stride;
+                let dst = (l * b * t + cells[j]) * hd;
+                k_stage[dst..dst + hd]
+                    .copy_from_slice(&qkv[src + hd..src + 2 * hd]);
+                v_stage[dst..dst + hd]
+                    .copy_from_slice(&qkv[src + 2 * hd..src + 3 * hd]);
+            }
+            ops.qkv_s += clock.lap();
+
+            // --- causal cached attention, persistent tensor read in
+            // place, one (cell, head) chain per work item ---
+            attn.fill(0.0);
+            let items = n * h;
+            let attn_out = SharedSlice::new(&mut attn);
+            let qkv_ref: &[f32] = &qkv;
+            let run_items = |i0: usize, i1: usize| {
+                let mut scores = vec![0f32; s_used];
+                for it in i0..i1 {
+                    let (j, head) = (it / h, it % h);
+                    let (grow, p) = (rows_[j], ps[j]);
+                    let map_base = grow * s_used;
+                    let kc_base = view.off(0, l, grow);
+                    let vc_base = view.off(1, l, grow);
+                    let head_off = head * dh;
+                    let qv = &qkv_ref[j * qkv_stride + head_off
+                        ..j * qkv_stride + head_off + dh];
+                    // Scores: 4 independent accumulator chains hide
+                    // the serial-add latency; each chain is still the
+                    // oracle's e-ascending per-cell order.
+                    let mut s = 0usize;
+                    while s + 4 <= p + 1 {
+                        let k0 = slot_kv(qkv_ref, qkv_stride, hd,
+                                         view.data, &staged_at, map_base,
+                                         s, kc_base, hd, head_off, dh);
+                        let k1 = slot_kv(qkv_ref, qkv_stride, hd,
+                                         view.data, &staged_at, map_base,
+                                         s + 1, kc_base, hd, head_off,
+                                         dh);
+                        let k2 = slot_kv(qkv_ref, qkv_stride, hd,
+                                         view.data, &staged_at, map_base,
+                                         s + 2, kc_base, hd, head_off,
+                                         dh);
+                        let k3 = slot_kv(qkv_ref, qkv_stride, hd,
+                                         view.data, &staged_at, map_base,
+                                         s + 3, kc_base, hd, head_off,
+                                         dh);
+                        let (mut a0, mut a1, mut a2, mut a3) =
+                            (0f32, 0f32, 0f32, 0f32);
+                        for e in 0..dh {
+                            let qe = qv[e];
+                            a0 += qe * k0[e];
+                            a1 += qe * k1[e];
+                            a2 += qe * k2[e];
+                            a3 += qe * k3[e];
+                        }
+                        scores[s] = a0 * scale;
+                        scores[s + 1] = a1 * scale;
+                        scores[s + 2] = a2 * scale;
+                        scores[s + 3] = a3 * scale;
+                        s += 4;
+                    }
+                    while s <= p {
+                        let kr = slot_kv(qkv_ref, qkv_stride, hd,
+                                         view.data, &staged_at, map_base,
+                                         s, kc_base, hd, head_off, dh);
+                        let mut acc = 0f32;
+                        for e in 0..dh {
+                            acc += qv[e] * kr[e];
+                        }
+                        scores[s] = acc * scale;
+                        s += 1;
+                    }
+                    let mut m = f32::NEG_INFINITY;
+                    for &sc in scores.iter().take(p + 1) {
+                        if sc > m {
+                            m = sc;
+                        }
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores.iter_mut().take(p + 1) {
+                        *sc = (*sc - m).exp();
+                        denom += *sc;
+                    }
+                    // SAFETY: work item (j, head) is owned by exactly
+                    // one lane; items map to disjoint [dh] output
+                    // ranges.
+                    let out = unsafe {
+                        attn_out.range(j * hd + head_off, dh)
+                    };
+                    for s in 0..=p {
+                        let w = scores[s] / denom;
+                        let vr = slot_kv(qkv_ref, qkv_stride, 2 * hd,
+                                         view.data, &staged_at, map_base,
+                                         s, vc_base, hd, head_off, dh);
+                        for e in 0..dh {
+                            out[e] += w * vr[e];
+                        }
+                    }
+                }
+            };
+            let lanes = self.pool.lanes().min(items);
+            if lanes <= 1 || items * s_used * dh < PAR_MIN_ATTN_MACS {
+                run_items(0, items);
+            } else {
+                self.pool.run(&|lane| {
+                    if lane < lanes {
+                        let (i0, i1) = chunk(items, lanes, lane);
+                        run_items(i0, i1);
+                    }
+                });
+            }
+            ops.attn_s += clock.lap();
+
+            // --- attention output projection (+ residual) ---
+            self.par_matmul(&attn, &pk.wo, &mut x, n);
+            ops.wo_s += clock.lap();
+
+            // --- fused MLP ---
+            let xn2 = rmsnorm(&x, d, &lyr.ln_mlp);
+            gu.fill(0.0);
+            self.par_matmul(&xn2, &pk.w13, &mut gu, n);
+            for j in 0..n {
+                let (gr, ur) = (j * 2 * ff, j * 2 * ff + ff);
+                for e in 0..ff {
+                    let gv = gu[gr + e];
+                    gact[j * ff + e] =
+                        gv * (1.0 / (1.0 + (-gv).exp())) * gu[ur + e];
+                }
+            }
+            self.par_matmul(&gact, &pk.w2, &mut x, n);
+            ops.mlp_s += clock.lap();
+        }
+
+        // Final norm + tied-embedding logits, scattered back to the
+        // (zeros-padded) call layout.
+        let hidden = rmsnorm(&x, d, &self.m.ln_f);
+        let mut dense = vec![0f32; n * vocab];
+        self.par_matmul(&hidden, &self.embed_t, &mut dense, n);
+        for j in 0..n {
+            let dst = cells[j] * vocab;
+            logits[dst..dst + vocab]
+                .copy_from_slice(&dense[j * vocab..(j + 1) * vocab]);
+        }
+        if let Some(hout) = hidden_out.as_mut() {
+            for j in 0..n {
+                let dst = cells[j] * d;
+                hout[dst..dst + d]
+                    .copy_from_slice(&hidden[j * d..(j + 1) * d]);
+            }
+        }
+        ops.logits_s += clock.lap();
+
         Ok(FwdOut {
             logits,
             hidden: hidden_out,
             kv: KvStage::Host { k: k_stage, v: v_stage },
             elapsed_s: t0.elapsed().as_secs_f64(),
+            ops: Some(ops),
         })
     }
 
@@ -584,13 +712,65 @@ impl Backend for HostModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::reference::reference_manifest;
+    use crate::runtime::reference::{matmul_acc, reference_manifest};
+    use crate::substrate::rng::Rng;
 
     fn pair(name: &str) -> (RefModel, HostModel) {
         let man = reference_manifest();
         let entry = man.models.get(name).unwrap();
         (RefModel::build(7, entry).unwrap(),
          HostModel::build(7, entry).unwrap())
+    }
+
+    #[test]
+    fn packed_panel_matmul_is_bit_identical_to_matmul_acc() {
+        // Panel packing + any panel partition must reproduce the
+        // oracle's matmul bit for bit — including a ragged tail panel.
+        let mut rng = Rng::new(0xBEEF);
+        for &(n, din, dout) in
+            &[(3usize, 32usize, 48usize), (5, 24, 40), (1, 16, 21)]
+        {
+            let a: Vec<f32> =
+                (0..n * din).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> =
+                (0..din * dout).map(|_| rng.normal() as f32).collect();
+            let mut want: Vec<f32> =
+                (0..n * dout).map(|i| (i % 5) as f32 * 0.1).collect();
+            let mut got = want.clone();
+            matmul_acc(&a, &w, &mut want, n, din, dout);
+            let pm = PackedMat::pack(&w, din, dout);
+            let panels = pm.n_panels();
+            let shared = SharedSlice::new(&mut got);
+            // split the panel range in two, applied out of order
+            let mid = panels / 2;
+            pm.matmul_acc_panels(&a, &shared, n, mid, panels);
+            pm.matmul_acc_panels(&a, &shared, n, 0, mid);
+            assert_eq!(want, got,
+                       "packed panels diverged at {n}x{din}x{dout}");
+        }
+    }
+
+    #[test]
+    fn pool_partitioned_matmul_matches_serial() {
+        let mut rng = Rng::new(0xF00D);
+        let (n, din, dout) = (4usize, 32usize, 64usize);
+        let a: Vec<f32> =
+            (0..n * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        let pm = PackedMat::pack(&w, din, dout);
+        let mut serial = vec![0f32; n * dout];
+        pm.matmul_acc_panels(&a, &SharedSlice::new(&mut serial), n, 0,
+                             pm.n_panels());
+        let pool = WorkerPool::new(3);
+        let mut par = vec![0f32; n * dout];
+        let shared = SharedSlice::new(&mut par);
+        let panels = pm.n_panels();
+        pool.run(&|lane| {
+            let (p0, p1) = chunk(panels, 3, lane);
+            pm.matmul_acc_panels(&a, &shared, n, p0, p1);
+        });
+        assert_eq!(serial, par, "lane partition changed bits");
     }
 
     #[test]
@@ -603,6 +783,10 @@ mod tests {
         let a = oracle.fwd(1, 5, &toks, &pos, None, &co).unwrap();
         let b = host.fwd(1, 5, &toks, &pos, None, &ch).unwrap();
         assert_eq!(a.logits, b.logits, "host logits diverged from oracle");
+        let ops = b.ops.expect("host fwd reports a per-op breakdown");
+        assert!(ops.total() > 0.0, "op breakdown must be populated");
+        assert!(ops.total() <= b.elapsed_s,
+                "op breakdown cannot exceed elapsed");
     }
 
     #[test]
@@ -702,5 +886,31 @@ mod tests {
             step.logits[..vocab].to_vec()
         };
         assert_eq!(run(&oracle), run(&host));
+    }
+
+    #[test]
+    fn lane_count_does_not_change_fwd_bits() {
+        // The §8 invariance at the backend-call surface: the same fwd
+        // through pools of 1, 2, and 8 lanes is bit-identical (the
+        // engine-level sweep lives in tests/host_backend.rs).
+        let man = reference_manifest();
+        let entry = man.models.get("target-m").unwrap();
+        let toks = [0i32, 13, 20, 21, 33, 40];
+        let pos = [0i32, 1, 2, 3, 4, 5];
+        let mut base: Option<Vec<f32>> = None;
+        for lanes in [1usize, 2, 8] {
+            let m = HostModel::build_with_pool(
+                7, entry, Arc::new(WorkerPool::new(lanes))).unwrap();
+            assert_eq!(m.threads(), lanes);
+            let c = m.new_cache(1).unwrap();
+            let out = m.fwd(1, 6, &toks, &pos, None, &c).unwrap();
+            match &base {
+                None => base = Some(out.logits),
+                Some(want) => {
+                    assert_eq!(want, &out.logits,
+                               "{lanes}-lane fwd changed bits");
+                }
+            }
+        }
     }
 }

@@ -20,19 +20,22 @@ pub mod cache;
 pub mod host;
 #[cfg(feature = "pjrt")]
 pub mod model;
+pub mod pool;
 pub mod reference;
 
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 pub use artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
-pub use backend::{Backend, FwdOut, KvStage};
+pub use backend::{Backend, FwdOps, FwdOut, KvStage};
 pub use cache::{CacheState, KvCache};
 pub use host::HostModel;
 #[cfg(feature = "pjrt")]
 pub use model::ModelRt;
+pub use pool::WorkerPool;
 
 use crate::substrate::prompts::PromptSet;
 use crate::substrate::tokenizer::Tokenizer;
@@ -42,8 +45,10 @@ enum Host {
     Pjrt { client: xla::PjRtClient },
     /// Scalar reference oracle (DESIGN.md §6).
     Reference { seed: u64 },
-    /// Fast host serving path over the same weights (DESIGN.md §8).
-    HostFast { seed: u64 },
+    /// Fast host serving path over the same weights (DESIGN.md §8),
+    /// with the persistent worker pool every model of this runtime
+    /// dispatches onto.
+    HostFast { seed: u64, pool: Arc<WorkerPool> },
 }
 
 /// Owns the manifest + backend host; hands out loaded models as
@@ -64,7 +69,9 @@ pub enum RuntimeSpec {
     /// Deterministic in-process reference backend (scalar oracle).
     Reference { seed: u64 },
     /// Deterministic in-process fast host backend (DESIGN.md §8).
-    Host { seed: u64 },
+    /// `threads` pins the worker-pool size; `None` resolves
+    /// `PARD_HOST_THREADS` / available cores at open time.
+    Host { seed: u64, threads: Option<usize> },
 }
 
 impl RuntimeSpec {
@@ -76,7 +83,9 @@ impl RuntimeSpec {
             RuntimeSpec::Reference { seed } => {
                 Ok(Runtime::reference(*seed))
             }
-            RuntimeSpec::Host { seed } => Ok(Runtime::host(*seed)),
+            RuntimeSpec::Host { seed, threads } => {
+                Ok(Runtime::host_with_threads(*seed, *threads))
+            }
         }
     }
 }
@@ -108,9 +117,33 @@ impl Runtime {
     /// Deterministic artifact-free runtime over the *fast host* backend
     /// (DESIGN.md §8): same synthetic family, same weights, same seed
     /// semantics as [`Runtime::reference`], bit-identical live outputs —
-    /// but built for throughput rather than auditability.
+    /// but built for throughput rather than auditability.  Pool size
+    /// resolves `PARD_HOST_THREADS`, then available cores.
     pub fn host(seed: u64) -> Self {
-        Self::synthetic(Host::HostFast { seed })
+        Self::host_with_threads(seed, None)
+    }
+
+    /// [`Runtime::host`] with the worker-pool size pinned (`--threads`
+    /// on the CLI).  `None` keeps the default resolution; outputs are
+    /// bit-identical for every pool size — only wall clock changes
+    /// (DESIGN.md §8).  One pool is shared by all models this runtime
+    /// loads, so target and draft dispatch onto the same parked
+    /// threads instead of competing pools.
+    pub fn host_with_threads(seed: u64, threads: Option<usize>) -> Self {
+        let lanes = threads.unwrap_or_else(pool::default_threads);
+        Self::synthetic(Host::HostFast {
+            seed,
+            pool: Arc::new(WorkerPool::new(lanes)),
+        })
+    }
+
+    /// Worker-pool lanes of the host backend (`None` on other
+    /// backends) — recorded into bench reports.
+    pub fn host_threads(&self) -> Option<usize> {
+        match &self.host {
+            Host::HostFast { pool, .. } => Some(pool.lanes()),
+            _ => None,
+        }
     }
 
     fn synthetic(host: Host) -> Self {
@@ -155,16 +188,18 @@ impl Runtime {
                 let entry = self.manifest.model(name)?;
                 Ok(Rc::new(reference::RefModel::build(*seed, entry)?))
             }
-            Host::HostFast { seed } => {
+            Host::HostFast { seed, pool } => {
                 let entry = self.manifest.model(name)?;
-                Ok(Rc::new(host::HostModel::build(*seed, entry)?))
+                Ok(Rc::new(host::HostModel::build_with_pool(
+                    *seed, entry, Arc::clone(pool))?))
             }
         }
     }
 
     pub fn prompts(&self, task: &str) -> Result<PromptSet> {
         match &self.host {
-            Host::Reference { seed } | Host::HostFast { seed } => {
+            Host::Reference { seed }
+            | Host::HostFast { seed, .. } => {
                 reference::synthetic_prompts(task, *seed, &self.manifest)
             }
             #[cfg(feature = "pjrt")]

@@ -232,6 +232,7 @@ impl Backend for ModelRt {
             hidden,
             kv: KvStage::Pjrt { k: k_new, v: v_new },
             elapsed_s: t0.elapsed().as_secs_f64(),
+            ops: None,
         })
     }
 

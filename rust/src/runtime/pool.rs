@@ -1,0 +1,408 @@
+//! Persistent worker pool for the host fast path (DESIGN.md §8).
+//!
+//! [`WorkerPool`] owns `threads - 1` long-lived parked OS threads; the
+//! thread calling [`WorkerPool::run`] is always lane 0, so a pool of
+//! `threads` lanes costs `threads - 1` spawns — once, at
+//! `HostModel::build`, instead of per `fwd` call the way the previous
+//! `std::thread::scope` design paid it.  Decode-shaped calls issue many
+//! small dispatches back to back, so the dispatch protocol is built for
+//! low latency:
+//!
+//! * **Publish**: `run` stores the task and bumps an epoch under a
+//!   mutex, then notifies.  Workers watch the epoch with a bounded spin
+//!   (`SPIN_ROUNDS` of `spin_loop`) before parking on a condvar — a hot
+//!   decode loop never pays a futex wake.
+//! * **Join**: workers decrement a `remaining` counter; `run` spins on
+//!   it briefly, then parks on a second condvar.  `run` returns only
+//!   after every lane finished, which is what makes it sound to hand
+//!   workers closures borrowing the caller's stack (the borrow is
+//!   erased to `'static` internally but never outlives the call).
+//! * **Determinism**: the pool only decides *who* computes which
+//!   output cells, never the per-cell reduction order (DESIGN.md §8),
+//!   so results are bit-identical across lane counts — including
+//!   `threads = 1`, where `run` degenerates to a plain call.
+//!
+//! A task panic is caught on the worker, recorded, and re-raised on the
+//! caller after the dispatch drains, so a bug fails the call instead of
+//! deadlocking the pool.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Sanity cap on pool lanes (`PARD_HOST_THREADS=9999` should not fork
+/// bomb the host).
+pub const MAX_THREADS: usize = 64;
+
+/// Bounded busy-wait rounds before a waiter parks on its condvar.
+/// Roughly a few microseconds: long enough to catch the back-to-back
+/// dispatches of a decode loop, short enough that an idle pool costs
+/// nothing measurable.
+const SPIN_ROUNDS: u32 = 1 << 14;
+
+/// A published task: called once per lane with the lane index.  The
+/// `'static` is a lie told only inside this module — `run` blocks until
+/// every worker has finished, so the erased borrow never escapes the
+/// caller's frame.
+type Task = &'static (dyn Fn(usize) + Sync);
+
+struct Shared {
+    /// Bumped once per published task (and once at shutdown); workers
+    /// spin on this before touching the mutex.
+    epoch: AtomicUsize,
+    /// Workers still running the current task.
+    remaining: AtomicUsize,
+    /// A worker task panicked; re-raised on the caller after the join.
+    panicked: AtomicBool,
+    shutdown: AtomicBool,
+    /// The current task, if a dispatch is in flight.  Written only
+    /// under the lock that `go` waiters hold.
+    task: Mutex<Option<Task>>,
+    /// Workers park here between tasks (after the bounded spin).
+    go: Condvar,
+    /// `run` parks here waiting for the last worker.
+    done_lock: Mutex<()>,
+    done: Condvar,
+}
+
+/// Long-lived worker pool; see the module docs for the protocol.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    lanes: usize,
+    /// Serializes whole `run` calls: the epoch/remaining/task protocol
+    /// handles one dispatch at a time, and overlapping dispatches from
+    /// two threads sharing this pool (it's `Sync` behind an `Arc`)
+    /// would otherwise clobber each other's join state — which could
+    /// let a caller return while workers still hold its
+    /// lifetime-erased borrow.
+    dispatch: Mutex<()>,
+}
+
+/// Pool size when the caller doesn't pin one: `PARD_HOST_THREADS` if
+/// set to a positive integer, else `std::thread::available_parallelism`.
+pub fn default_threads() -> usize {
+    std::env::var("PARD_HOST_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .min(MAX_THREADS)
+}
+
+/// Contiguous balanced chunk of `0..n_items` owned by `lane` out of
+/// `lanes`: the first `n_items % lanes` lanes get one extra item.
+/// Returns `(start, end)`; empty when there are more lanes than items.
+pub fn chunk(n_items: usize, lanes: usize, lane: usize) -> (usize, usize) {
+    debug_assert!(lane < lanes);
+    let base = n_items / lanes;
+    let rem = n_items % lanes;
+    let start = lane * base + lane.min(rem);
+    let len = base + usize::from(lane < rem);
+    (start, (start + len).min(n_items))
+}
+
+fn worker_loop(sh: &Shared, lane: usize) {
+    // Epoch of the last task this worker ran (0 = none yet; the pool
+    // starts at epoch 0 and bumps before the first dispatch).
+    let mut seen = 0usize;
+    loop {
+        // Bounded spin: catches back-to-back decode dispatches without
+        // a syscall.  The authoritative check happens under the mutex.
+        let mut rounds = 0u32;
+        while sh.epoch.load(Ordering::Acquire) == seen
+            && rounds < SPIN_ROUNDS
+        {
+            std::hint::spin_loop();
+            rounds += 1;
+        }
+        let task = {
+            let mut guard = sh.task.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let e = sh.epoch.load(Ordering::Acquire);
+                if e != seen {
+                    seen = e;
+                    // Epoch only moves with a task published (run) or
+                    // shutdown set (checked above).  `Task` is a shared
+                    // ref, so this copies out of the guard.
+                    break (*guard).expect("epoch bumped without a task");
+                }
+                guard = sh.go.wait(guard).unwrap();
+            }
+        };
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| task(lane)),
+        );
+        if result.is_err() {
+            sh.panicked.store(true, Ordering::Release);
+        }
+        if sh.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last lane out: wake the caller.  Taking the lock orders
+            // the notify after the caller's remaining-check-then-wait.
+            let _guard = sh.done_lock.lock().unwrap();
+            sh.done.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` total lanes (clamped to
+    /// `1..=MAX_THREADS`); spawns `threads - 1` worker threads.
+    pub fn new(threads: usize) -> Self {
+        let lanes = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            epoch: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            task: Mutex::new(None),
+            go: Condvar::new(),
+            done_lock: Mutex::new(()),
+            done: Condvar::new(),
+        });
+        let workers = (1..lanes)
+            .map(|lane| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pard-host-{lane}"))
+                    .spawn(move || worker_loop(&sh, lane))
+                    .expect("spawn host worker thread")
+            })
+            .collect();
+        WorkerPool { shared, workers, lanes, dispatch: Mutex::new(()) }
+    }
+
+    /// Total lanes (worker threads + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Execute `f(lane)` once per lane (0 = the calling thread) and
+    /// return when every lane finished.  `f` decides its own slice of
+    /// the work from the lane index (see [`chunk`]); the pool never
+    /// splits anything itself, so it cannot change any reduction order.
+    /// Concurrent `run` calls from threads sharing the pool serialize
+    /// on an internal lock (one dispatch in flight at a time).
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() {
+            f(0);
+            return;
+        }
+        // One dispatch at a time: see the `dispatch` field docs.  A
+        // poisoned lock just means an earlier dispatch re-raised a
+        // task panic while holding it — the protocol state was already
+        // drained, so the pool stays usable.
+        let _in_flight =
+            self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        let sh = &*self.shared;
+        {
+            let mut guard = sh.task.lock().unwrap();
+            // SAFETY: lifetime erasure only — this call blocks below
+            // until `remaining` hits 0, i.e. until no worker can still
+            // dereference the borrow.
+            #[allow(clippy::useless_transmute)] // erases a region, not a no-op
+            let erased: Task = unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(f)
+            };
+            *guard = Some(erased);
+            sh.remaining.store(self.workers.len(), Ordering::Release);
+            sh.epoch.fetch_add(1, Ordering::Release);
+            sh.go.notify_all();
+        }
+        // The caller lane must not unwind past the join below while
+        // workers still hold the lifetime-erased borrow — catch, join,
+        // then resume.
+        let lane0 = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(0)),
+        );
+        // Join: spin briefly (balanced partitions finish together),
+        // then park.
+        let mut rounds = 0u32;
+        while sh.remaining.load(Ordering::Acquire) != 0
+            && rounds < SPIN_ROUNDS
+        {
+            std::hint::spin_loop();
+            rounds += 1;
+        }
+        if sh.remaining.load(Ordering::Acquire) != 0 {
+            let mut guard = sh.done_lock.lock().unwrap();
+            while sh.remaining.load(Ordering::Acquire) != 0 {
+                guard = sh.done.wait(guard).unwrap();
+            }
+        }
+        *sh.task.lock().unwrap() = None;
+        let worker_panicked = sh.panicked.swap(false, Ordering::AcqRel);
+        if let Err(payload) = lane0 {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("host worker-pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let _guard = self.shared.task.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+            // Bump the epoch so spinning workers re-check shutdown.
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            self.shared.go.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Shared-mutable view of an `f32` buffer for pool lanes writing
+/// *disjoint* index ranges (matmul column panels, per-(row, head)
+/// attention outputs).  The soundness argument is the same one the
+/// column decomposition's bit-safety rests on: every output cell is
+/// owned by exactly one lane.
+pub(crate) struct SharedSlice {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: lanes only touch disjoint ranges (asserted by the callers
+// handing out panel/item partitions); the pool's join provides the
+// release/acquire edge back to the caller.
+unsafe impl Send for SharedSlice {}
+unsafe impl Sync for SharedSlice {}
+
+impl SharedSlice {
+    pub(crate) fn new(buf: &mut [f32]) -> Self {
+        SharedSlice { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// Reborrow `start..start + len` mutably.
+    ///
+    /// # Safety
+    /// Concurrent callers must hand out non-overlapping ranges, and no
+    /// range may outlive the buffer borrowed by [`SharedSlice::new`]
+    /// (both hold for pool tasks: partitions are disjoint by
+    /// construction and `run` joins before the buffer dies).
+    #[allow(clippy::mut_from_ref)] // deliberate: disjoint-range cells
+    #[inline]
+    pub(crate) unsafe fn range(&self, start: usize, len: usize)
+                               -> &mut [f32] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    #[test]
+    fn chunks_cover_and_balance() {
+        for &(n, lanes) in
+            &[(10usize, 3usize), (4, 8), (0, 2), (7, 1), (64, 5)]
+        {
+            let mut covered = vec![0u32; n];
+            let mut sizes = Vec::new();
+            for lane in 0..lanes {
+                let (s, e) = chunk(n, lanes, lane);
+                sizes.push(e - s);
+                for c in covered.iter_mut().take(e).skip(s) {
+                    *c += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1),
+                    "chunk({n}, {lanes}) must partition exactly once");
+            let (min, max) = (sizes.iter().min().unwrap(),
+                              sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "chunks must be balanced");
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_lane_and_is_reusable() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.lanes(), 4);
+        let hits = AtomicU64::new(0);
+        for round in 0..50u64 {
+            pool.run(&|lane| {
+                hits.fetch_add(1 << (8 * lane as u64), Ordering::Relaxed);
+            });
+            // every lane ran exactly once per round
+            let h = hits.load(Ordering::Relaxed);
+            for lane in 0..4 {
+                assert_eq!((h >> (8 * lane)) & 0xff, round + 1,
+                           "lane {lane} after round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_of_one_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.lanes(), 1);
+        let touched = AtomicBool::new(false);
+        pool.run(&|lane| {
+            assert_eq!(lane, 0, "a 1-lane pool runs on the caller");
+            touched.store(true, Ordering::Relaxed);
+        });
+        assert!(touched.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn disjoint_writes_assemble() {
+        let pool = WorkerPool::new(3);
+        let n = 1000usize;
+        let mut buf = vec![0f32; n];
+        let out = SharedSlice::new(&mut buf);
+        pool.run(&|lane| {
+            let (s, e) = chunk(n, 3, lane);
+            // SAFETY: chunks are disjoint.
+            let dst = unsafe { out.range(s, e - s) };
+            for (i, d) in dst.iter_mut().enumerate() {
+                *d = (s + i) as f32;
+            }
+        });
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_instead_of_deadlocking() {
+        let pool = WorkerPool::new(2);
+        let poisoned = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(&|lane| {
+                    if lane == 1 {
+                        panic!("boom");
+                    }
+                });
+            }),
+        );
+        assert!(poisoned.is_err(), "worker panic must surface");
+        // the pool survives and serves the next dispatch
+        let ok = AtomicU64::new(0);
+        pool.run(&|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn default_threads_is_positive_and_capped() {
+        let n = default_threads();
+        assert!((1..=MAX_THREADS).contains(&n));
+    }
+}

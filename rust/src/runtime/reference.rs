@@ -256,12 +256,32 @@ pub(crate) fn rmsnorm(x: &[f32], d: usize, w: &[f32]) -> Vec<f32> {
 /// any per-cell sum.
 pub(crate) fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize,
                          din: usize, dout: usize) {
+    matmul_acc_range(a, w, out, n, din, dout, 0, dout);
+}
+
+/// [`matmul_acc`] restricted to output columns `c0..c1` — the
+/// *spec-side anchor* of the host path's column decomposition
+/// (DESIGN.md §8): each output cell `(i, j)` is an independent
+/// reduction chain, so any column partition reproduces `matmul_acc`
+/// bit for bit — the per-cell order stays `k` ascending from the
+/// existing `out` value no matter which lane owns the column.  The
+/// kernel that actually executes on the hot path is the packed-panel
+/// sweep in `host.rs` (`PackedMat::matmul_acc_panels`), which must
+/// keep exactly this contract; this scalar form states the claim at
+/// oracle level and backs the column-split unit test.  `out` is still
+/// the full `[n, dout]` buffer; only cells in `c0..c1` are touched.
+#[allow(clippy::too_many_arguments)] // flat kernel signature, hot path
+pub(crate) fn matmul_acc_range(a: &[f32], w: &[f32], out: &mut [f32],
+                               n: usize, din: usize, dout: usize,
+                               c0: usize, c1: usize) {
+    debug_assert!(c0 <= c1 && c1 <= dout);
+    let cols = c1 - c0;
     for i in 0..n {
         let ar = &a[i * din..(i + 1) * din];
-        let or = &mut out[i * dout..(i + 1) * dout];
+        let or = &mut out[i * dout + c0..i * dout + c1];
         for (ki, &av) in ar.iter().enumerate() {
-            let wr = &w[ki * dout..(ki + 1) * dout];
-            for j in 0..dout {
+            let wr = &w[ki * dout + c0..ki * dout + c1];
+            for j in 0..cols {
                 or[j] += av * wr[j];
             }
         }
@@ -507,6 +527,7 @@ impl Backend for RefModel {
             hidden: if self.hidden { Some(hidden) } else { None },
             kv: KvStage::Host { k: k_stage, v: v_stage },
             elapsed_s: t0.elapsed().as_secs_f64(),
+            ops: None,
         })
     }
 
@@ -627,6 +648,27 @@ mod tests {
         assert_eq!(out.hidden.as_ref().unwrap().len(), 2 * d);
         assert!(m.fwd(1, 1, &[0], &[0], None, &cache).is_err(),
                 "eagle fwd without hidden must fail");
+    }
+
+    #[test]
+    fn column_split_matmul_is_bit_identical() {
+        // The §8 bit-safety claim at its smallest: computing output
+        // columns in disjoint ranges (any partition, any order) must
+        // reproduce the full-width matmul exactly, because no per-cell
+        // reduction chain crosses a column.
+        let mut rng = Rng::new(0x00C0_FFEE);
+        let (n, din, dout) = (5usize, 24usize, 40usize);
+        let a = dense(&mut rng, n, din, 0.3);
+        let w = dense(&mut rng, din, dout, 0.3);
+        let mut full: Vec<f32> =
+            (0..n * dout).map(|i| (i % 7) as f32 * 0.01).collect();
+        let mut split = full.clone();
+        matmul_acc(&a, &w, &mut full, n, din, dout);
+        // ragged three-way split, applied right-to-left
+        for &(c0, c1) in &[(29usize, 40usize), (13, 29), (0, 13)] {
+            matmul_acc_range(&a, &w, &mut split, n, din, dout, c0, c1);
+        }
+        assert_eq!(full, split, "column partition changed bits");
     }
 
     #[test]

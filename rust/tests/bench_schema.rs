@@ -32,10 +32,13 @@ fn schema_v1_fields_are_stable() {
     assert_eq!(report.get("schema").unwrap().as_str(),
                Some(BENCH_SCHEMA));
     assert_eq!(report.get("backend").unwrap().as_str(), Some("host"));
-    for key in ["seed", "task", "target", "n_prompts", "max_new",
-                "sweep", "runs", "oracle", "host_vs_reference"] {
+    for key in ["threads", "seed", "task", "target", "n_prompts",
+                "max_new", "sweep", "runs", "oracle",
+                "host_vs_reference"] {
         assert!(report.get(key).is_some(), "missing top-level `{key}`");
     }
+    assert!(report.get("threads").unwrap().as_f64().unwrap() >= 1.0,
+            "worker-pool size must be recorded");
 
     let runs = report.get("runs").unwrap().as_arr().unwrap();
     // AR+ once, VSD/PARD/EAGLE once per swept K (smoke: one K, batch 1).
@@ -48,8 +51,8 @@ fn schema_v1_fields_are_stable() {
     for run in runs {
         for key in ["engine", "k", "batch", "tokens_per_s",
                     "tokens_per_iter", "mean_accept_len", "fwd_s",
-                    "commit_s", "draft_s", "verify_s", "prefill_s",
-                    "wall_s", "generated", "iterations",
+                    "commit_s", "fwd_ops", "draft_s", "verify_s",
+                    "prefill_s", "wall_s", "generated", "iterations",
                     "speedup_vs_ar_plus"] {
             assert!(run.get(key).is_some(),
                     "run missing field `{key}`");
@@ -57,6 +60,18 @@ fn schema_v1_fields_are_stable() {
         assert!(run.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0,
                 "every cell must have measured throughput");
         assert!(run.get("generated").unwrap().as_f64().unwrap() > 0.0);
+        // per-op fwd breakdown: all six phases present, and populated
+        // on the host backend (every engine runs host fwd calls)
+        let ops = run.get("fwd_ops").unwrap();
+        let mut total = 0.0;
+        for key in ["gather_s", "qkv_s", "attn_s", "wo_s", "mlp_s",
+                    "logits_s"] {
+            total += ops.get(key).unwrap().as_f64().unwrap();
+        }
+        assert!(total > 0.0, "host rows must carry a fwd_ops breakdown");
+        assert!(total <= run.get("fwd_s").unwrap().as_f64().unwrap()
+                + 1e-9,
+                "fwd_ops must be bounded by fwd_s");
     }
 
     // The AR+ baseline's speedup over itself is exactly 1.
@@ -89,6 +104,14 @@ fn oracle_section_mirrors_sweep_and_reports_speedups() {
     let min = hvr.get("min").unwrap().as_f64().unwrap();
     assert!(geo > 0.0 && geo.is_finite());
     assert!(min > 0.0 && min.is_finite());
+}
+
+#[test]
+fn report_compares_clean_against_itself() {
+    use pard::report::bench::{compare_reports, COMPARE_TOL};
+    let report = smoke_report();
+    assert!(compare_reports(&report, &report, COMPARE_TOL).is_empty(),
+            "a report can never regress against itself");
 }
 
 #[test]

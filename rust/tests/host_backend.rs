@@ -1,9 +1,9 @@
 //! Host-backend equivalence suite (DESIGN.md §8): the fast host
 //! serving path must be *token-identical* to the scalar reference
-//! oracle (DESIGN.md §6) for every engine, across K and batch size —
-//! and, because it keeps the oracle's per-cell reduction order, even
-//! bit-identical at the logits level.  Runs in plain `cargo test` with
-//! NO Python/XLA artifacts.
+//! oracle (DESIGN.md §6) for every engine, across K, batch size, and
+//! worker-pool lane count — and, because it keeps the oracle's
+//! per-cell reduction order, even bit-identical at the logits level.
+//! Runs in plain `cargo test` with NO Python/XLA artifacts.
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
@@ -141,13 +141,80 @@ fn host_continuous_batching_serves_trace() {
     assert!(stats.generated > 0);
 }
 
-/// The serve thread opens a host runtime from its `RuntimeSpec`.
+/// The serve thread opens a host runtime from its `RuntimeSpec`,
+/// including a pinned worker-pool size.
 #[test]
 fn host_runtime_spec_opens() {
     use pard::runtime::RuntimeSpec;
-    let rt = RuntimeSpec::Host { seed: 7 }.open().unwrap();
+    let rt = RuntimeSpec::Host { seed: 7, threads: None }.open().unwrap();
     assert!(rt.is_reference());
     assert_eq!(rt.backend_label(), "host");
     let m = rt.model("target-m").unwrap();
     assert_eq!(m.cfg().n_layers, 3);
+    let pinned =
+        RuntimeSpec::Host { seed: 7, threads: Some(2) }.open().unwrap();
+    assert_eq!(pinned.host_threads(), Some(2));
+}
+
+/// Satellite acceptance: one PARD decode with the pool pinned to 1, 2,
+/// and 8 lanes must produce bit-identical logits and token streams —
+/// the DESIGN.md §8 claim that the column partition decides only *who*
+/// computes a cell, never the order within it.
+#[test]
+fn host_thread_count_invariance() {
+    let oracle = Runtime::reference(7);
+    let prompts = some_prompts(&oracle, 3);
+    let oracle_streams = gen(
+        &oracle, &cfg(&oracle, EngineKind::Pard, "target-l", 8, 1),
+        &prompts);
+    let fwd_toks = [0i32, 13, 20, 21, 33];
+    let fwd_pos = [0i32, 1, 2, 3, 4];
+    let mut base_logits: Option<Vec<f32>> = None;
+    for threads in [1usize, 2, 8] {
+        let host = Runtime::host_with_threads(7, Some(threads));
+        assert_eq!(host.host_threads(), Some(threads));
+        let streams = gen(
+            &host, &cfg(&host, EngineKind::Pard, "target-l", 8, 1),
+            &prompts);
+        assert_eq!(oracle_streams, streams,
+                   "{threads}-lane PARD token stream diverged");
+        let m = host.model("target-l").unwrap();
+        let cache = m.new_cache(1).unwrap();
+        let out = m.fwd(1, 5, &fwd_toks, &fwd_pos, None, &cache).unwrap();
+        match &base_logits {
+            None => base_logits = Some(out.logits),
+            Some(want) => assert_eq!(
+                want, &out.logits,
+                "{threads}-lane fwd logits diverged bit-wise"),
+        }
+    }
+}
+
+/// Satellite acceptance: the Metrics fwd/commit split is recorded and
+/// coherent after an engine run — both sides nonzero, their sum inside
+/// the end-to-end wall clock, and the host backend's per-op breakdown
+/// populated and bounded by fwd_s.
+#[test]
+fn metrics_fwd_commit_split_recorded() {
+    let host = Runtime::host(7);
+    let prompts = some_prompts(&host, 2);
+    let c = cfg(&host, EngineKind::Pard, "target-m", 4, 1);
+    let mut e = build_engine(&host, &c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), &prompts, c.max_new).unwrap();
+    let m = e.metrics();
+    assert!(m.fwd_s > 0.0, "fwd_s must be recorded by the engines");
+    assert!(m.commit_s > 0.0, "commit_s must be recorded by the engines");
+    assert!(m.wall_s > 0.0, "generate() must clock the run");
+    assert!(
+        m.fwd_s + m.commit_s <= m.wall_s + 1e-9,
+        "fwd ({}) + commit ({}) cannot exceed wall clock ({})",
+        m.fwd_s, m.commit_s, m.wall_s
+    );
+    // host fwd instruments every phase of its forward pass
+    assert!(m.fwd_ops.qkv_s > 0.0 && m.fwd_ops.attn_s > 0.0
+            && m.fwd_ops.logits_s > 0.0,
+            "host per-op breakdown must be populated: {:?}", m.fwd_ops);
+    assert!(m.fwd_ops.total() <= m.fwd_s + 1e-9,
+            "per-op breakdown cannot exceed fwd_s");
 }

@@ -100,6 +100,7 @@ impl Backend for Scripted {
             hidden: None,
             kv: KvStage::Host { k, v },
             elapsed_s: 0.0,
+            ops: None,
         })
     }
 

@@ -50,6 +50,7 @@ fn main() -> Result<()> {
             k: 8,
             max_new,
             shared_mask: true,
+            kv_blocks: None,
         };
         let mut base = build_engine(&rt, &mk(EngineKind::ArPlus))?;
         base.warmup()?;
@@ -89,6 +90,7 @@ fn main() -> Result<()> {
             k: 8,
             max_new,
             shared_mask: true,
+            kv_blocks: None,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;
@@ -109,6 +111,7 @@ fn main() -> Result<()> {
         k: 8,
         max_new,
         shared_mask: true,
+        kv_blocks: None,
     };
     let mut engine = build_engine(&rt, &cfg)?;
     engine.warmup()?;

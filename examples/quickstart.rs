@@ -23,6 +23,7 @@ fn main() -> Result<()> {
         k: 8,
         max_new: 48,
         shared_mask: true,
+        kv_blocks: None,
     };
     let mut engine = build_engine(&rt, &cfg)?;
     engine.warmup()?; // compile executables outside the timed region

@@ -231,6 +231,116 @@ def fresh_cache(m):
             np.zeros((m.L, S_MAX, hd), np.float32))
 
 
+# -- paged block-table mirror (rust cache.rs, DESIGN.md §7) -----------
+
+KV_BLOCK = 16  # mirrors cache.rs KV_BLOCK
+
+
+class PagedKV:
+    """Mirror of the Rust paged KV store for one batch row: a pool of
+    `[2, L, KV_BLOCK, hd]` blocks, a block table mapping logical slot
+    `s` to `(table[s // KV_BLOCK], s % KV_BLOCK)`, and a private
+    write-only garbage block for the `S_MAX - 1` redirect.  Blocks are
+    taken from a free list on first write, exactly like
+    `ensure_covered` / `ensure_garbage` in cache.rs."""
+
+    def __init__(self, m, n_blocks):
+        hd = m.h * DH
+        self.L = m.L
+        self.pool_k = np.zeros((n_blocks, m.L, KV_BLOCK, hd), np.float32)
+        self.pool_v = np.zeros((n_blocks, m.L, KV_BLOCK, hd), np.float32)
+        self.free = list(range(n_blocks - 1, -1, -1))
+        self.table = []
+        self.garbage = None
+
+    def _resolve(self, slot):
+        """(pool block, in-block offset) for a logical slot, allocating
+        on demand — the write-side mirror of cache.rs slot_index."""
+        if slot == S_MAX - 1:
+            if self.garbage is None:
+                self.garbage = self.free.pop()
+            return self.garbage, slot % KV_BLOCK
+        while len(self.table) * KV_BLOCK <= slot:
+            self.table.append(self.free.pop())
+        return self.table[slot // KV_BLOCK], slot % KV_BLOCK
+
+    def commit(self, ks, vs, pos):
+        """sim.commit through the block table: same clamp, same
+        later-column-wins order, relocated destination."""
+        for col, p in enumerate(pos):
+            s = int(np.clip(p, 0, S_MAX - 1))
+            blk, off = self._resolve(s)
+            self.pool_k[blk, :, off] = ks[:, col]
+            self.pool_v[blk, :, off] = vs[:, col]
+
+    def dense_view(self):
+        """Gather the paged store back into the dense `[L, S_MAX, hd]`
+        layout (unmapped slots zero) — the bridge the equality check
+        rides on."""
+        hd = self.pool_k.shape[-1]
+        ck = np.zeros((self.L, S_MAX, hd), np.float32)
+        cv = np.zeros((self.L, S_MAX, hd), np.float32)
+        for lb, blk in enumerate(self.table):
+            lo = lb * KV_BLOCK
+            hi = min(lo + KV_BLOCK, S_MAX)
+            ck[:, lo:hi] = self.pool_k[blk, :, :hi - lo]
+            cv[:, lo:hi] = self.pool_v[blk, :, :hi - lo]
+        if self.garbage is not None:
+            off = (S_MAX - 1) % KV_BLOCK
+            ck[:, S_MAX - 1] = self.pool_k[self.garbage, :, off]
+            cv[:, S_MAX - 1] = self.pool_v[self.garbage, :, off]
+        return ck, cv
+
+    def blocks_in_use(self):
+        return len(self.table) + (self.garbage is not None)
+
+
+def check_paged_block_table(m):
+    """Block-table addressing must be invisible: committing the same
+    staged K/V through the paged store and through the dense layout,
+    then decoding from each, gives bit-equal caches and logits at
+    every step — including a speculative verify with rejected columns
+    redirected to the garbage block."""
+    prompt = [0, 17, 25, 30]
+    ck_d, cv_d = fresh_cache(m)
+    paged = PagedKV(m, n_blocks=S_MAX // KV_BLOCK + 1)
+    pos = list(range(len(prompt)))
+    logits, ks, vs = fwd_host(m, prompt, pos, ck_d, cv_d)
+    commit(ck_d, cv_d, ks, vs, pos)
+    paged.commit(ks, vs, pos)
+    ck_p, cv_p = paged.dense_view()
+    assert np.array_equal(ck_d, ck_p) and np.array_equal(cv_d, cv_p), \
+        "paged commit diverged from dense layout"
+    # speculative verify: pending commits live, two candidates rejected
+    # to the garbage redirect (later column wins inside the block)
+    toks = [31, 32, 33]
+    vpos = [4, 5, 6]
+    lv_d, ks, vs = fwd_host(m, toks, vpos, ck_d, cv_d)
+    lv_p, ks_p, vs_p = fwd_host(m, toks, vpos, *paged.dense_view())
+    assert np.array_equal(lv_d, lv_p), "paged verify logits diverged"
+    assert np.array_equal(ks, ks_p) and np.array_equal(vs, vs_p)
+    cpos = [4, S_MAX - 1, S_MAX - 1]
+    commit(ck_d, cv_d, ks, vs, cpos)
+    paged.commit(ks, vs, cpos)
+    ck_p, cv_p = paged.dense_view()
+    assert np.array_equal(ck_d, ck_p) and np.array_equal(cv_d, cv_p), \
+        "garbage-block redirect diverged from dense garbage slot"
+    # cached decode steps keep matching, reading through the table
+    cur, nxt = 5, int(np.argmax(lv_d[0]))
+    for _ in range(6):
+        ld, ks, vs = fwd_host(m, [nxt], [cur], ck_d, cv_d)
+        lp, _, _ = fwd_host(m, [nxt], [cur], *paged.dense_view())
+        assert np.array_equal(ld, lp), "paged decode step diverged"
+        commit(ck_d, cv_d, ks, vs, [cur])
+        paged.commit(ks, vs, [cur])
+        cur += 1
+        nxt = int(np.argmax(ld[0]))
+    assert paged.blocks_in_use() == 2, \
+        "12 live slots + garbage = 1 live block + 1 garbage block"
+    print("  paged block-table addressing bit-equal to the dense "
+          "layout (live, garbage, decode)")
+
+
 def check_padded_call_matches_oracle(m):
     """Parked pad columns (garbage slot) must not change live logits,
     and the host path must produce zeros for them."""
@@ -346,6 +456,7 @@ def main(seed=7):
         check_speculative_layout(m)
         check_out_of_range_pos(m)
         check_packed_fused_matmul(m)
+        check_paged_block_table(m)
     check_end_to_end_streams(Model(seed, "target-m"), "code", 4, 16)
     check_end_to_end_streams(Model(seed, "draft-s"), "gsm", 3, 12)
     print("ALL HOST-PATH EQUIVALENCE CHECKS PASSED")

@@ -165,6 +165,7 @@ fn main() -> anyhow::Result<()> {
             k: 8,
             max_new: 32,
             shared_mask: true,
+            kv_blocks: None,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;

@@ -1,10 +1,22 @@
 //! Continuous batcher: online serving over an arrival trace
-//! (DESIGN.md §3; slot reuse contract in §7).
+//! (DESIGN.md §3; paged-cache admission contract in §7).
 //!
-//! The vLLM-style loop behind Tables 3/4: a fixed number of batch slots;
-//! arrived requests queue FCFS; finished slots are refilled between
-//! decode iterations (iteration-level scheduling).  Latency accounting
-//! is per request (arrival → completion).
+//! The vLLM-style loop behind Tables 3/4: arrived requests queue FCFS;
+//! finished slots release their KV blocks and are refilled between
+//! decode iterations (iteration-level scheduling).  Admission is
+//! **memory-bounded**: a request is admitted only when a batch slot is
+//! free AND [`super::engines::Engine::can_admit`] reports enough
+//! unreserved KV blocks for its worst case — when the pool runs dry
+//! the queue simply waits (preemption-free backpressure; admitted
+//! sequences always finish because their blocks are reserved up
+//! front).  Latency accounting is per request (arrival → completion).
+//!
+//! Time comes from an internal `ServeClock`: wall mode for real
+//! serving, or a virtual clock ([`serve_trace_virtual`]) that advances
+//! a fixed tick
+//! per decode iteration and jumps idle gaps instantly — batcher tests
+//! and serving benches run deterministically, with no 200µs idle
+//! sleeps and no dependence on host scheduling.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -28,18 +40,79 @@ pub struct ServeStats {
     pub throughput_tps: f64,
     /// Mean live slots per decode iteration (batch efficiency).
     pub mean_occupancy: f64,
+    /// Most slots simultaneously live in any iteration — under a
+    /// paged pool this can exceed what the dense layout's worst-case
+    /// `B × S_max` budget could ever admit (DESIGN.md §7).
+    pub peak_occupancy: usize,
+    /// Iterations in which a ready request waited because the KV pool
+    /// had no unreserved blocks (admission backpressure).
+    pub admission_stalls: u64,
+}
+
+/// Time source for [`serve_trace_impl`]: real wall clock, or a
+/// deterministic virtual clock that charges `tick` seconds per decode
+/// iteration and skips idle gaps instantly.
+enum ServeClock {
+    Wall(Instant),
+    Virtual { now: f64, tick: f64 },
+}
+
+impl ServeClock {
+    fn now(&self) -> f64 {
+        match self {
+            ServeClock::Wall(t0) => t0.elapsed().as_secs_f64(),
+            ServeClock::Virtual { now, .. } => *now,
+        }
+    }
+
+    /// Charge one decode iteration.
+    fn on_iteration(&mut self) {
+        if let ServeClock::Virtual { now, tick } = self {
+            *now += *tick;
+        }
+    }
+
+    /// Nothing is live: wait for the next arrival (wall: a short
+    /// sleep; virtual: jump straight to `arrival_s`).
+    fn idle_until(&mut self, arrival_s: f64) {
+        match self {
+            ServeClock::Wall(_) => {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            ServeClock::Virtual { now, .. } => {
+                *now = now.max(arrival_s);
+            }
+        }
+    }
 }
 
 struct InFlight {
     request_idx: usize,
 }
 
-/// Drive `engine` through `trace`.  Requests become admittable when
-/// their arrival offset has elapsed; slots refill between iterations.
+/// Drive `engine` through `trace` on the real wall clock.  Requests
+/// become admittable when their arrival offset has elapsed; slots
+/// refill between iterations, gated on free KV blocks.
 pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
                    -> Result<ServeStats> {
+    serve_trace_impl(engine, trace, ServeClock::Wall(Instant::now()))
+}
+
+/// [`serve_trace`] on a deterministic virtual clock: every decode
+/// iteration costs exactly `tick_s` seconds and idle gaps are skipped
+/// instantly, so completions, latencies, and stall counts depend only
+/// on the trace and the engine — not on host speed or scheduling.
+pub fn serve_trace_virtual(engine: &mut dyn Engine, trace: &Trace,
+                           tick_s: f64) -> Result<ServeStats> {
+    anyhow::ensure!(tick_s >= 0.0 && tick_s.is_finite(),
+                    "virtual tick must be a finite non-negative time");
+    serve_trace_impl(engine, trace,
+                     ServeClock::Virtual { now: 0.0, tick: tick_s })
+}
+
+fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
+                    mut clock: ServeClock) -> Result<ServeStats> {
     let b = engine.batch();
-    let t0 = Instant::now();
     // Window accounting: tokens from BEFORE this trace must not count
     // toward this trace's throughput.
     let gen0 = engine.metrics().generated;
@@ -48,10 +121,12 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
     let mut slots: Vec<Option<InFlight>> = (0..b).map(|_| None).collect();
     let mut latencies: Vec<f64> = Vec::with_capacity(trace.requests.len());
     let mut occupancy_sum = 0usize;
+    let mut peak_occupancy = 0usize;
+    let mut stalls = 0u64;
     let mut iters = 0usize;
 
     loop {
-        let now = t0.elapsed().as_secs_f64();
+        let now = clock.now();
         while next_arrival < trace.requests.len()
             && trace.requests[next_arrival].arrival_s <= now
         {
@@ -59,7 +134,10 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
             next_arrival += 1;
         }
 
-        // Harvest finished slots, refill from the queue.
+        // Harvest finished slots (returning their KV blocks to the
+        // pool), then refill from the queue — FCFS, gated on both a
+        // free slot and enough unreserved KV blocks.
+        let mut stalled = false;
         for slot in 0..b {
             let finished = slots[slot]
                 .as_ref()
@@ -67,34 +145,71 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
                 .unwrap_or(false);
             if finished {
                 let f = slots[slot].take().unwrap();
+                engine.release(slot);
                 // request latency = completion - arrival (queueing incl.)
-                let lat = t0.elapsed().as_secs_f64()
+                let lat = clock.now()
                     - trace.requests[f.request_idx].arrival_s;
                 latencies.push(lat.max(0.0));
             }
-            if slots[slot].is_none() {
-                if let Some(ri) = queue.pop_front() {
+            if slots[slot].is_none() && !stalled {
+                if let Some(&ri) = queue.front() {
                     let req = &trace.requests[ri];
-                    engine.admit(slot, &req.prompt, req.max_new)?;
-                    slots[slot] = Some(InFlight { request_idx: ri });
+                    if engine.can_admit(req.prompt.len(), req.max_new) {
+                        queue.pop_front();
+                        engine.admit(slot, &req.prompt, req.max_new)?;
+                        slots[slot] = Some(InFlight { request_idx: ri });
+                    } else {
+                        // Head-of-line waits for blocks; admitting a
+                        // smaller later request instead would starve
+                        // it (FCFS is the fairness contract).
+                        stalled = true;
+                    }
                 }
             }
+        }
+        if stalled {
+            stalls += 1;
+            engine.metrics_mut().admission_stalls += 1;
         }
 
         let live = slots.iter().filter(|s| s.is_some()).count();
         if live == 0 {
+            if stalled {
+                // The stall may predate a release that happened later
+                // in the SAME harvest pass (a lower slot consulted the
+                // gate before a higher slot freed its blocks).  With
+                // the engine now empty, re-consult the gate: only a
+                // head that cannot fit an empty pool is hopeless.
+                let ri = *queue.front().expect("stalled implies a head");
+                let req = &trace.requests[ri];
+                anyhow::ensure!(
+                    engine.can_admit(req.prompt.len(), req.max_new),
+                    "request {ri} (prompt {} + max_new {}) needs more \
+                     KV blocks than the whole pool holds — raise \
+                     --kv-blocks",
+                    req.prompt.len(),
+                    req.max_new
+                );
+                continue; // it fits now: admit on the next pass
+            }
             if next_arrival >= trace.requests.len() && queue.is_empty() {
                 break;
             }
             // idle until the next arrival
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            let next_t = trace
+                .requests
+                .get(next_arrival)
+                .map_or(clock.now(), |r| r.arrival_s);
+            clock.idle_until(next_t);
             continue;
         }
 
         occupancy_sum += live;
+        peak_occupancy = peak_occupancy.max(live);
         iters += 1;
         engine.step()?;
         engine.metrics_mut().iterations += 1;
+        clock.on_iteration();
     }
 
     // Final harvest (defensive: the loop only exits once every slot has
@@ -102,13 +217,14 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
     // in-loop accounting — arrival-based, queueing delay included).
     for slot in 0..b {
         if let Some(f) = slots[slot].take() {
-            let lat = t0.elapsed().as_secs_f64()
-                - trace.requests[f.request_idx].arrival_s;
+            engine.release(slot);
+            let lat =
+                clock.now() - trace.requests[f.request_idx].arrival_s;
             latencies.push(lat.max(0.0));
         }
     }
 
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = clock.now();
     let generated = engine.metrics().generated - gen0;
     engine.metrics_mut().wall_s += wall;
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -133,5 +249,7 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
             0.0
         },
         mean_occupancy: occupancy_sum as f64 / iters.max(1) as f64,
+        peak_occupancy,
+        admission_stalls: stalls,
     })
 }

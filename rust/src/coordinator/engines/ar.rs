@@ -13,7 +13,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{CallBuf, Engine, EngineConfig, EngineKind, prefill_slot};
+use super::{prefill_slot, reserve_len, CallBuf, Engine, EngineConfig,
+            EngineKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
@@ -34,7 +35,7 @@ impl ArEngine {
     pub fn new(rt: &Runtime, cfg: &EngineConfig, cached: bool)
                -> Result<Self> {
         let target = rt.model(&cfg.target)?;
-        let cache = target.new_cache(cfg.batch)?;
+        let cache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
         Ok(ArEngine {
             target,
             cache,
@@ -153,7 +154,15 @@ impl Engine for ArEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        self.cache.reset_row(slot);
+        if self.cached {
+            // AR+ never drafts: its reservation carries no speculative
+            // tail (k = 0).
+            self.cache
+                .reserve_row(slot, reserve_len(prompt.len(), max_new, 0))?;
+        } else {
+            // uncached AR commits nothing — the row needs no blocks
+            self.cache.release_row(slot);
+        }
         let mut seq = Sequence::start(prompt, max_new);
         if self.cached {
             let (first, _) = prefill_slot(&*self.target, &mut self.cache,
@@ -171,15 +180,29 @@ impl Engine for ArEngine {
             // running one uncached step just for this row below.
         }
         self.seqs[slot] = seq;
+        self.metrics.record_kv_blocks(self.cache.blocks_in_use());
         Ok(())
     }
 
     fn step(&mut self) -> Result<()> {
         if self.cached {
-            self.step_cached()
+            self.step_cached()?;
         } else {
-            self.step_uncached()
+            self.step_uncached()?;
         }
+        self.metrics.record_kv_blocks(self.cache.blocks_in_use());
+        Ok(())
+    }
+
+    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        !self.cached
+            || self.cache
+                .can_reserve(reserve_len(prompt_len, max_new, 0))
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.cache.release_row(slot);
+        self.metrics.record_kv_blocks(self.cache.blocks_in_use());
     }
 
     fn seqs(&self) -> &[Sequence] {

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{apply_verdict, verify_and_commit, CallBuf,
+use super::{apply_verdict, reserve_len, verify_and_commit, CallBuf,
             Engine, EngineConfig, EngineKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
@@ -52,8 +52,8 @@ impl EagleEngine {
         let head = rt.model(&head_name)?;
         anyhow::ensure!(head.cfg().d_model == target.cfg().d_model,
                         "EAGLE head/target width mismatch");
-        let tcache = target.new_cache(cfg.batch)?;
-        let ecache = head.new_cache(cfg.batch)?;
+        let tcache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        let ecache = head.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
         Ok(EagleEngine {
             d_model: target.cfg().d_model,
             target,
@@ -66,6 +66,12 @@ impl EagleEngine {
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
         })
+    }
+
+    /// Record both pools' occupancy into the metrics gauges.
+    fn note_kv(&mut self) {
+        self.metrics.record_kv_blocks(
+            self.tcache.blocks_in_use() + self.ecache.blocks_in_use());
     }
 
     /// Draft K candidates: one catch-up pass over the backlog pairs, then
@@ -181,8 +187,9 @@ impl Engine for EagleEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        self.tcache.reset_row(slot);
-        self.ecache.reset_row(slot);
+        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        self.tcache.reserve_row(slot, need)?;
+        self.ecache.reserve_row(slot, need)?;
         let mut seq = Sequence::start(prompt, max_new);
         // target prefill with hidden export
         let b = self.tcache.batch;
@@ -229,6 +236,7 @@ impl Engine for EagleEngine {
         self.tcache.cur_len[slot] = seq.target_len as u32;
         seq.eagle_backlog = backlog;
         self.seqs[slot] = seq;
+        self.note_kv();
         Ok(())
     }
 
@@ -264,7 +272,19 @@ impl Engine for EagleEngine {
             }
             seq.eagle_backlog = backlog;
         }
+        self.note_kv();
         Ok(())
+    }
+
+    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        let need = reserve_len(prompt_len, max_new, self.cfg.k);
+        self.tcache.can_reserve(need) && self.ecache.can_reserve(need)
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.tcache.release_row(slot);
+        self.ecache.release_row(slot);
+        self.note_kv();
     }
 
     fn seqs(&self) -> &[Sequence] {

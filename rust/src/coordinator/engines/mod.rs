@@ -50,6 +50,12 @@ pub struct EngineConfig {
     /// Shared-mask strategy (paper §4.3): true = single <mask> id
     /// (enables K_infer > K_train extrapolation).
     pub shared_mask: bool,
+    /// Block count of each KV cache's paged pool (`--kv-blocks`,
+    /// DESIGN.md §7).  `None` keeps capacity parity with the dense
+    /// layout (every row can grow to `S_max`); an explicit size turns
+    /// on memory-bounded admission — the batcher then gates new
+    /// sequences on free blocks instead of free slots alone.
+    pub kv_blocks: Option<usize>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -125,7 +131,10 @@ impl CallBuf {
 pub trait Engine {
     fn kind(&self) -> EngineKind;
     fn batch(&self) -> usize;
-    /// Prefill `prompt` into batch row `slot` (resets the slot).
+    /// Prefill `prompt` into batch row `slot` (resets the slot and
+    /// reserves its worst-case KV blocks; fails when the paged pool
+    /// cannot cover the reservation — check [`Engine::can_admit`]
+    /// first under memory-bounded admission).
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()>;
     /// One decode iteration over all active slots.
@@ -137,6 +146,24 @@ pub trait Engine {
     /// Pre-compile the executables `step` will need so JIT never lands in
     /// the measured loop.
     fn warmup(&mut self) -> Result<()>;
+
+    /// Memory-bounded admission gate (DESIGN.md §7): would `admit` of
+    /// a prompt of this size succeed right now without exhausting the
+    /// KV block pools?  Engines with paged caches answer from their
+    /// pools' unreserved headroom; the default (backend-less fakes,
+    /// dense device caches) admits freely.
+    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        let _ = (prompt_len, max_new);
+        true
+    }
+
+    /// Return batch row `slot`'s KV blocks to the pool after its
+    /// sequence completes (the batcher calls this at harvest so freed
+    /// memory is admittable before the next refill).  No-op by
+    /// default.
+    fn release(&mut self, slot: usize) {
+        let _ = slot;
+    }
 
     fn any_active(&self) -> bool {
         self.seqs().iter().any(|s| s.active && !s.done)
@@ -162,6 +189,19 @@ pub fn build_engine(rt: &Runtime, cfg: &EngineConfig)
 // ---------------------------------------------------------------------------
 // Shared building blocks
 // ---------------------------------------------------------------------------
+
+/// Worst-case logical slots a sequence can commit across its lifetime:
+/// the full stream (`prompt + max_new` plus the pending token) and the
+/// deepest speculative tail any engine writes past it (`k` tentative
+/// candidate commits).  [`KvCache::blocks_for`] caps this at the
+/// logical window, so the per-row reservation is always finite; the
+/// engines reserve exactly this much at `admit`, which is what makes
+/// pool backpressure preemption-free — an admitted row can never run
+/// dry mid-decode (DESIGN.md §7).
+pub fn reserve_len(prompt_len: usize, max_new: usize, k: usize)
+                   -> usize {
+    prompt_len + max_new + k + 2
+}
 
 /// Prefill one slot of a (possibly multi-row) cache: feeds the prompt,
 /// commits its KV, and returns (first generated token, last-row hidden if
@@ -326,13 +366,15 @@ pub fn generate(engine: &mut dyn Engine, prompts: &[Vec<i32>],
     let mut slot_owner: Vec<Option<usize>> = vec![None; b];
     let t0 = Instant::now();
     loop {
-        // refill idle slots
+        // refill idle slots (releasing finished rows' KV blocks first
+        // so their memory is admittable in the same pass)
         for slot in 0..b {
             let idle = match slot_owner[slot] {
                 Some(o) => {
                     let s = &engine.seqs()[slot];
                     if s.done {
                         outputs[o] = s.gen_tokens().to_vec();
+                        engine.release(slot);
                         true
                     } else {
                         false
@@ -342,7 +384,9 @@ pub fn generate(engine: &mut dyn Engine, prompts: &[Vec<i32>],
             };
             if idle {
                 slot_owner[slot] = None;
-                if next < prompts.len() {
+                if next < prompts.len()
+                    && engine.can_admit(prompts[next].len(), max_new)
+                {
                     engine.admit(slot, &prompts[next], max_new)?;
                     slot_owner[slot] = Some(next);
                     next += 1;
@@ -350,6 +394,13 @@ pub fn generate(engine: &mut dyn Engine, prompts: &[Vec<i32>],
             }
         }
         if !engine.any_active() {
+            // A prompt that cannot be admitted into an EMPTY engine
+            // can never run: fail loudly instead of spinning.
+            anyhow::ensure!(
+                next >= prompts.len(),
+                "prompt {next} needs more KV blocks than the whole \
+                 pool holds — raise --kv-blocks"
+            );
             break;
         }
         engine.step()?;

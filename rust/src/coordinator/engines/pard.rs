@@ -19,8 +19,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{apply_verdict, prefill_slot, verify_and_commit, CallBuf,
-            Engine, EngineConfig, EngineKind};
+use super::{apply_verdict, prefill_slot, reserve_len, verify_and_commit,
+            CallBuf, Engine, EngineConfig, EngineKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
@@ -47,8 +47,8 @@ impl PardEngine {
             rt.manifest.main_pard.clone()
         });
         let draft = rt.model(&draft_name)?;
-        let tcache = target.new_cache(cfg.batch)?;
-        let dcache = draft.new_cache(cfg.batch)?;
+        let tcache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        let dcache = draft.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
         Ok(PardEngine {
             target,
             draft,
@@ -62,6 +62,12 @@ impl PardEngine {
             mask: rt.manifest.mask,
             distinct_masks: rt.manifest.distinct_masks.clone(),
         })
+    }
+
+    /// Record both pools' occupancy into the metrics gauges.
+    fn note_kv(&mut self) {
+        self.metrics.record_kv_blocks(
+            self.tcache.blocks_in_use() + self.dcache.blocks_in_use());
     }
 
     fn mask_id(&self, offset: usize) -> i32 {
@@ -148,8 +154,9 @@ impl Engine for PardEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        self.tcache.reset_row(slot);
-        self.dcache.reset_row(slot);
+        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        self.tcache.reserve_row(slot, need)?;
+        self.dcache.reserve_row(slot, need)?;
         let mut seq = Sequence::start(prompt, max_new);
         let (first, _) = prefill_slot(&*self.target, &mut self.tcache,
                                       slot, prompt, self.pad,
@@ -168,6 +175,7 @@ impl Engine for PardEngine {
         self.tcache.cur_len[slot] = seq.target_len as u32;
         self.dcache.cur_len[slot] = seq.draft_len as u32;
         self.seqs[slot] = seq;
+        self.note_kv();
         Ok(())
     }
 
@@ -182,7 +190,19 @@ impl Engine for PardEngine {
                               self.eos, &mut self.metrics);
             }
         }
+        self.note_kv();
         Ok(())
+    }
+
+    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        let need = reserve_len(prompt_len, max_new, self.cfg.k);
+        self.tcache.can_reserve(need) && self.dcache.can_reserve(need)
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.tcache.release_row(slot);
+        self.dcache.release_row(slot);
+        self.note_kv();
     }
 
     fn seqs(&self) -> &[Sequence] {

@@ -12,8 +12,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{apply_verdict, prefill_slot, verify_and_commit, CallBuf,
-            Engine, EngineConfig, EngineKind};
+use super::{apply_verdict, prefill_slot, reserve_len, verify_and_commit,
+            CallBuf, Engine, EngineConfig, EngineKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
@@ -39,8 +39,8 @@ impl VsdEngine {
             .clone()
             .ok_or_else(|| anyhow::anyhow!("VSD requires a draft model"))?;
         let draft = rt.model(&draft_name)?;
-        let tcache = target.new_cache(cfg.batch)?;
-        let dcache = draft.new_cache(cfg.batch)?;
+        let tcache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        let dcache = draft.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
         Ok(VsdEngine {
             target,
             draft,
@@ -52,6 +52,12 @@ impl VsdEngine {
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
         })
+    }
+
+    /// Record both pools' occupancy into the metrics gauges.
+    fn note_kv(&mut self) {
+        self.metrics.record_kv_blocks(
+            self.tcache.blocks_in_use() + self.dcache.blocks_in_use());
     }
 
     /// Draft K candidates for every active row: one catch-up pass plus
@@ -144,8 +150,9 @@ impl Engine for VsdEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        self.tcache.reset_row(slot);
-        self.dcache.reset_row(slot);
+        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        self.tcache.reserve_row(slot, need)?;
+        self.dcache.reserve_row(slot, need)?;
         let mut seq = Sequence::start(prompt, max_new);
         let (first, _) = prefill_slot(&*self.target, &mut self.tcache,
                                       slot, prompt, self.pad,
@@ -165,6 +172,7 @@ impl Engine for VsdEngine {
         self.tcache.cur_len[slot] = seq.target_len as u32;
         self.dcache.cur_len[slot] = seq.draft_len as u32;
         self.seqs[slot] = seq;
+        self.note_kv();
         Ok(())
     }
 
@@ -179,7 +187,19 @@ impl Engine for VsdEngine {
                               self.eos, &mut self.metrics);
             }
         }
+        self.note_kv();
         Ok(())
+    }
+
+    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+        let need = reserve_len(prompt_len, max_new, self.cfg.k);
+        self.tcache.can_reserve(need) && self.dcache.can_reserve(need)
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.tcache.release_row(slot);
+        self.dcache.release_row(slot);
+        self.note_kv();
     }
 
     fn seqs(&self) -> &[Sequence] {

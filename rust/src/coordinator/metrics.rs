@@ -53,6 +53,16 @@ pub struct Metrics {
     /// (quality guard: speculative methods must not change outputs).
     pub ref_match: u64,
     pub ref_total: u64,
+    /// KV pool blocks allocated across the engine's caches at the last
+    /// observation (paged cache, DESIGN.md §7); 0 on dense backends.
+    pub kv_blocks_in_use: u64,
+    /// High-water mark of `kv_blocks_in_use` — the paged pool's peak
+    /// occupancy over the run.
+    pub kv_peak_blocks: u64,
+    /// Batcher iterations in which a ready request could not be
+    /// admitted because the KV pool lacked unreserved blocks
+    /// (memory-bounded admission backpressure).
+    pub admission_stalls: u64,
 }
 
 impl Metrics {
@@ -64,6 +74,13 @@ impl Metrics {
         if let Some(ops) = &out.ops {
             self.fwd_ops.add(ops);
         }
+    }
+
+    /// Observe the engine's current KV pool occupancy (summed over its
+    /// caches): records the last value and advances the peak.
+    pub fn record_kv_blocks(&mut self, in_use: usize) {
+        self.kv_blocks_in_use = in_use as u64;
+        self.kv_peak_blocks = self.kv_peak_blocks.max(in_use as u64);
     }
 
     pub fn record_acceptance(&mut self, offered: usize, accepted: usize) {
@@ -165,6 +182,12 @@ impl Metrics {
         self.requests += o.requests;
         self.ref_match += o.ref_match;
         self.ref_total += o.ref_total;
+        // kv occupancy is a gauge, not a counter: merged runs report
+        // the worst case, stalls accumulate.
+        self.kv_blocks_in_use = self.kv_blocks_in_use
+            .max(o.kv_blocks_in_use);
+        self.kv_peak_blocks = self.kv_peak_blocks.max(o.kv_peak_blocks);
+        self.admission_stalls += o.admission_stalls;
         if self.offered_pos.len() < o.offered_pos.len() {
             self.offered_pos.resize(o.offered_pos.len(), 0);
             self.accept_pos.resize(o.accept_pos.len(), 0);
@@ -248,6 +271,24 @@ mod tests {
         let mut other = Metrics::default();
         other.merge(&m);
         assert_eq!(other.fwd_ops.qkv_s, 0.5);
+    }
+
+    #[test]
+    fn kv_gauges_track_peak_and_merge_as_worst_case() {
+        let mut a = Metrics::default();
+        a.record_kv_blocks(4);
+        a.record_kv_blocks(9);
+        a.record_kv_blocks(2);
+        assert_eq!(a.kv_blocks_in_use, 2, "last observation");
+        assert_eq!(a.kv_peak_blocks, 9, "high-water mark");
+        a.admission_stalls = 3;
+        let mut b = Metrics::default();
+        b.record_kv_blocks(5);
+        b.admission_stalls = 1;
+        b.merge(&a);
+        assert_eq!(b.kv_blocks_in_use, 5);
+        assert_eq!(b.kv_peak_blocks, 9);
+        assert_eq!(b.admission_stalls, 4);
     }
 
     #[test]

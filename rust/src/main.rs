@@ -3,7 +3,9 @@
 //! Subcommands (hand-rolled parsing; clap is not vendored offline):
 //!   eval   --engine pard --target target-l [--task code] [--k 8]
 //!          [--batch 1] [--prompts N] [--max-new N] [--draft NAME]
+//!          [--kv-blocks N]
 //!   serve  --engine pard --target target-l [--n N] [--rate R]
+//!          [--kv-blocks N] [--virtual-tick S]
 //!   bench  [--k 2,4,8] [--batch 1,4] [--prompts N] [--max-new N]
 //!          [--task code] [--target target-l] [--seed N] [--no-oracle]
 //!          [--out BENCH_hotpath.json] [--compare OLD.json]
@@ -18,8 +20,13 @@
 //! no Python — with `--seed N` selecting the synthetic weights.  The
 //! host backend also takes `--threads N` to pin its worker-pool size
 //! (default: `PARD_HOST_THREADS`, then available cores); outputs are
-//! bit-identical for every pool size.  `bench --compare OLD.json`
-//! fails on any >10% tokens/s regression against an older report.
+//! bit-identical for every pool size.  `--kv-blocks N` sizes each KV
+//! cache's paged block pool (DESIGN.md §7) — admission then waits on
+//! free blocks instead of assuming worst-case dense rows — and
+//! `serve --virtual-tick S` runs the batcher on a deterministic
+//! virtual clock (S seconds per decode iteration).  `bench --compare
+//! OLD.json` fails on any >10% tokens/s regression against an older
+//! report.
 
 use std::path::{Path, PathBuf};
 
@@ -27,7 +34,7 @@ use anyhow::Result;
 use pard::coordinator::engines::{EngineConfig, EngineKind};
 use pard::coordinator::evaluate::run_eval;
 use pard::coordinator::router::default_draft;
-use pard::coordinator::batcher::serve_trace;
+use pard::coordinator::batcher::{serve_trace, serve_trace_virtual};
 use pard::report::bench::{compare_reports, hotpath_report, write_report,
                           BenchOpts, BENCH_FILE, COMPARE_TOL};
 use pard::report::{self, RunScale};
@@ -134,6 +141,24 @@ fn open_runtime(args: &Args) -> Result<Runtime> {
     }
 }
 
+/// `--kv-blocks N` (paged KV pool size per cache).  `None` when
+/// absent; a value that doesn't parse as an integer >= 2 is an error,
+/// not a silent fall-through to the default pool.
+fn kv_blocks_opt(args: &Args) -> Result<Option<usize>> {
+    match args.opts.get("kv-blocks") {
+        None => Ok(None),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| {
+                anyhow::anyhow!("--kv-blocks wants an integer >= 2, \
+                                 got `{v}`")
+            })?;
+            anyhow::ensure!(n >= 2, "--kv-blocks must be >= 2 \
+                                     (1 live + 1 garbage block)");
+            Ok(Some(n))
+        }
+    }
+}
+
 fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
     let kind = EngineKind::parse(&args.get("engine", "pard"))?;
     let target = args.get("target", "target-l");
@@ -149,6 +174,7 @@ fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
         k: args.usize("k", 8),
         max_new: args.usize("max-new", 64),
         shared_mask: !args.flag("distinct-mask"),
+        kv_blocks: kv_blocks_opt(args)?,
     })
 }
 
@@ -198,14 +224,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut engine =
         pard::coordinator::engines::build_engine(&rt, &cfg)?;
     engine.warmup()?;
-    let stats = serve_trace(engine.as_mut(), &trace)?;
+    // --virtual-tick S: deterministic virtual clock (S seconds per
+    // decode iteration) instead of the wall clock.
+    let stats = match args.opts.get("virtual-tick") {
+        Some(v) => {
+            let tick: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--virtual-tick wants seconds, got `{v}`")
+            })?;
+            serve_trace_virtual(engine.as_mut(), &trace, tick)?
+        }
+        None => serve_trace(engine.as_mut(), &trace)?,
+    };
     println!("engine={} batch={} completed={} wall={:.2}s",
              cfg.kind.label(), cfg.batch, stats.completed, stats.wall_s);
-    println!("throughput={:.1} tok/s  occupancy={:.2}",
-             stats.throughput_tps, stats.mean_occupancy);
+    println!("throughput={:.1} tok/s  occupancy mean={:.2} peak={}",
+             stats.throughput_tps, stats.mean_occupancy,
+             stats.peak_occupancy);
     println!("latency mean={:.3}s p50={:.3}s p95={:.3}s",
              stats.latency_mean_s, stats.latency_p50_s,
              stats.latency_p95_s);
+    let m = engine.metrics();
+    println!("kv: peak blocks={}  admission stalls={}",
+             m.kv_peak_blocks, stats.admission_stalls);
     Ok(())
 }
 

@@ -7,8 +7,9 @@
 //! ([`BENCH_FILE`], schema [`BENCH_SCHEMA`]) with per-engine tokens/s,
 //! mean accept length, the fwd/commit time split, the host backend's
 //! per-op forward breakdown (`fwd_ops`) and worker-pool size
-//! (`threads`), and speedup vs the AR+ baseline — the perf trajectory
-//! later PRs regress against.  `tests/bench_schema.rs` pins the
+//! (`threads`), paged-KV pool stats (`kv`: blocks in use, peak
+//! occupancy, admission stalls), and speedup vs the AR+ baseline —
+//! the perf trajectory later PRs regress against.  `tests/bench_schema.rs` pins the
 //! schema; parse with [`crate::substrate::json::Json`].
 //!
 //! [`compare_reports`] turns the trajectory into a gate: `pard bench
@@ -118,6 +119,7 @@ fn sweep(rt: &Runtime, o: &BenchOpts) -> Result<Vec<RunRow>> {
                     k: kopt.unwrap_or(8),
                     max_new: o.max_new,
                     shared_mask: true,
+                    kv_blocks: None,
                 };
                 let prompts = rt.prompts(&o.task)?.take(o.n_prompts);
                 let r = run_eval(rt, &cfg, &prompts, o.max_new, &o.task)?;
@@ -162,6 +164,14 @@ fn row_json(row: &RunRow, base_tps: f64) -> Json {
             ("wo_s", num(ops.wo_s)),
             ("mlp_s", num(ops.mlp_s)),
             ("logits_s", num(ops.logits_s)),
+        ])),
+        // Paged KV pool stats (DESIGN.md §7): occupancy gauges and
+        // admission backpressure.  Additive v1 fields; `--compare`
+        // keys on tokens_per_s only, so older reports stay valid.
+        ("kv", obj(vec![
+            ("blocks_in_use", num(m.kv_blocks_in_use as f64)),
+            ("peak_blocks", num(m.kv_peak_blocks as f64)),
+            ("admission_stalls", num(m.admission_stalls as f64)),
         ])),
         ("draft_s", num(m.draft_s)),
         ("verify_s", num(m.verify_s)),

@@ -57,6 +57,7 @@ pub fn cell(rt: &Runtime, kind: EngineKind, target: &str, task: &str,
         k,
         max_new: scale.max_new,
         shared_mask: true,
+        kv_blocks: None,
     };
     let prompts = rt.prompts(task)?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, task)
@@ -426,6 +427,7 @@ fn pard_cell(rt: &Runtime, variant: &str, target: &str, k: usize,
         k,
         max_new: scale.max_new,
         shared_mask: shared,
+        kv_blocks: None,
     };
     let prompts = rt.prompts("math")?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, "math")

@@ -105,6 +105,18 @@ pub trait Backend {
 
     fn new_cache(&self, batch: usize) -> Result<KvCache>;
 
+    /// [`Backend::new_cache`] with the host block pool pinned to
+    /// `kv_blocks` blocks (`--kv-blocks`, DESIGN.md §7).  `None` keeps
+    /// the default capacity-parity pool; backends without a paged host
+    /// cache (PJRT device caches) reject an explicit size.
+    fn new_cache_sized(&self, batch: usize, kv_blocks: Option<usize>)
+                       -> Result<KvCache> {
+        anyhow::ensure!(kv_blocks.is_none(),
+                        "--kv-blocks is not supported on this backend \
+                         (its KV cache is not host-paged)");
+        self.new_cache(batch)
+    }
+
     /// Run the forward pass.  `tokens`/`pos` are `[b * t]` row-major;
     /// `hidden_in` is required iff this is an EAGLE head.
     fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],

@@ -1,40 +1,86 @@
-//! Backend-agnostic KV cache handles.
+//! Paged KV cache: a shared block pool behind per-sequence block
+//! tables (DESIGN.md §7).
 //!
-//! Logically the cache is a `[2, L, B, S_max, H, D]` f32 tensor; the
-//! backing store is backend-private: a device-resident PJRT buffer that
-//! never crosses to the host, or a host `Vec<f32>` for the reference
-//! backend.  `fwd` reads it in place and `commit` scatters this step's
-//! accepted K/V into it.
+//! Logically the cache still holds `[2, L, B, S_max, H, D]` f32 — but
+//! the host backing store is no longer a dense tensor with a
+//! worst-case `S_max` row per batch slot.  Storage is a pool of
+//! fixed-size blocks ([`KV_BLOCK`] slots each); every batch row owns a
+//! [`BlockTable`] mapping logical slot `s` to `(block, s % KV_BLOCK)`,
+//! so resident memory is proportional to *live tokens*, not to
+//! `B × S_max`.  Blocks are taken from a free list as commits reach
+//! new slots and returned when a sequence releases its row — the same
+//! pool therefore sustains far more concurrent short sequences than
+//! the dense layout could hold in the same memory budget.
 //!
-//! Speculative semantics (DESIGN.md §7): `cur_len[row]` is the committed
-//! length.  Slot `s` always holds live data for `s < cur_len`; rejected
-//! speculative columns are *redirected to the reserved garbage slot*
-//! `S_max - 1` at commit time rather than erased — queries can never
-//! attend it because generation is capped at position `S_max - 2`.
+//! Admission is memory-bounded and preemption-free: [`KvCache::reserve_row`]
+//! claims (but does not yet allocate) the worst-case block count a
+//! sequence can touch, and [`KvCache::can_reserve`] is the batcher's
+//! admission gate.  A reserved row can always take its blocks
+//! mid-decode, so an admitted sequence never stalls on the pool; when
+//! the unreserved headroom runs dry, new admissions wait instead.
+//!
+//! Speculative semantics are unchanged from the dense layout:
+//! `cur_len[row]` is the committed length, slot `s` holds live data
+//! for `s < cur_len`, and rejected speculative columns are *redirected*
+//! at commit time rather than erased — `commit_pos` points them at the
+//! reserved garbage position `S_max - 1`, which resolves to the row's
+//! private write-only *garbage block*.  Queries can never attend it
+//! because generation is capped at position `S_max - 2`.  Slots past
+//! `cur_len` may hold stale junk (freed blocks are reused unzeroed);
+//! the position mask keeps them unattendable until re-fed, exactly as
+//! before.
+//!
+//! The PJRT device cache (feature `pjrt`) keeps its dense
+//! device-resident layout; the paged machinery is host-side state and
+//! degenerates to no-ops there.
 
 use anyhow::Result;
 
 use super::artifact::ModelCfg;
 
-/// The backing store for the `[2, L, B, S, H, D]` tensor.
+/// Slots per KV block.  16 lines up with the host path's `PANEL`
+/// (one 64-byte cache line of f32 per `H·D` multiple) and divides
+/// every synthetic-family `S_max`.
+pub const KV_BLOCK: usize = 16;
+
+/// The backing store for the logical `[2, L, B, S, H, D]` tensor.
 pub enum CacheState {
-    /// Host-resident row-major f32 (reference backend, test fakes).
+    /// Host-resident block pool: `[n_blocks, 2, L, KV_BLOCK, H*D]`
+    /// row-major (reference backend, host fast path, test fakes).
     Host(Vec<f32>),
-    /// Device-resident PJRT buffer (never crosses to the host).
+    /// Device-resident PJRT buffer, dense `[2, L, B, S, H, D]`
+    /// (never crosses to the host).
     #[cfg(feature = "pjrt")]
     Device(xla::PjRtBuffer),
 }
 
-/// One model's KV cache: `[2, L, B, S_max, H, D]` plus per-row
-/// committed lengths.  The speculative commit contract (garbage slot,
-/// stale-slot reuse) is documented at module level and in DESIGN.md §7.
+/// One batch row's view of the pool: which physical block backs each
+/// logical [`KV_BLOCK`]-slot range, plus the row's private garbage
+/// block and its outstanding admission reservation.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    /// `blocks[i]` backs logical slots `i*KV_BLOCK .. (i+1)*KV_BLOCK`.
+    blocks: Vec<u32>,
+    /// Write-only destination for rejected speculative columns
+    /// (allocated on the row's first garbage-redirected commit).
+    garbage: Option<u32>,
+    /// Blocks this row may still take against its admission
+    /// reservation before it has to compete for unreserved headroom.
+    reserved: usize,
+}
+
+/// One model's KV cache: a block pool plus per-row tables and
+/// committed lengths.  The speculative commit contract (garbage
+/// redirection, stale-slot reuse) is documented at module level and in
+/// DESIGN.md §7.
 pub struct KvCache {
-    /// Backend-private backing store (host vector / device buffer).
+    /// Backend-private backing store (host block pool / device buffer).
     pub state: CacheState,
     /// Batch rows `B` this cache was built for.
     pub batch: usize,
-    /// Slot capacity `S_max`; slot `S_max - 1` is the write-only
-    /// garbage slot, so live positions are capped at `S_max - 2`.
+    /// Logical slot capacity `S_max`; position `S_max - 1` is the
+    /// write-only garbage redirect, so live positions are capped at
+    /// `S_max - 2`.
     pub s_max: usize,
     /// Cached layers `L`.
     pub n_layers: usize,
@@ -46,25 +92,65 @@ pub struct KvCache {
     /// always holds live data; slots at or past it are stale until the
     /// engine re-feeds real tokens over them.
     pub cur_len: Vec<u32>,
+    /// False for the dense device cache, where the block machinery is
+    /// inert (tables empty, reservations always succeed).
+    paged: bool,
+    /// Total pool blocks.
+    n_blocks: usize,
+    /// Unallocated block ids (LIFO; freed blocks are reused unzeroed).
+    free: Vec<u32>,
+    /// Sum of all rows' outstanding reservations; the invariant
+    /// `free.len() >= reserved_total` is what makes admitted rows
+    /// stall-free.
+    reserved_total: usize,
+    /// Per-row block tables.
+    tables: Vec<BlockTable>,
+    /// High-water mark of allocated blocks over this cache's lifetime.
+    peak_in_use: usize,
 }
 
 impl KvCache {
-    /// Host-backed cache (reference backend and backend fakes).
+    /// Host-backed paged cache with capacity parity to the old dense
+    /// layout: every row can still grow to the full `S_max` window
+    /// (plus its garbage block), so closed-batch callers never hit the
+    /// pool limit.  Serving paths size the pool explicitly via
+    /// [`KvCache::host_paged`] (`--kv-blocks`).
     pub fn host(cfg: &ModelCfg, batch: usize) -> Self {
-        let n = 2 * cfg.n_layers * batch * cfg.s_max * cfg.n_heads
-            * cfg.d_head;
-        KvCache {
-            state: CacheState::Host(vec![0f32; n]),
+        let per_row = cfg.s_max.div_ceil(KV_BLOCK) + 1;
+        Self::host_paged(cfg, batch, batch * per_row)
+            .expect("parity-sized pool is always valid")
+    }
+
+    /// Host-backed paged cache over an explicitly sized pool of
+    /// `n_blocks` blocks shared by all `batch` rows.  The pool must
+    /// hold at least one live block and one garbage block.
+    pub fn host_paged(cfg: &ModelCfg, batch: usize, n_blocks: usize)
+                      -> Result<Self> {
+        anyhow::ensure!(n_blocks >= 2,
+                        "--kv-blocks must be >= 2 (1 live + 1 garbage), \
+                         got {n_blocks}");
+        let hd = cfg.n_heads * cfg.d_head;
+        let block_elems = 2 * cfg.n_layers * KV_BLOCK * hd;
+        Ok(KvCache {
+            state: CacheState::Host(vec![0f32; n_blocks * block_elems]),
             batch,
             s_max: cfg.s_max,
             n_layers: cfg.n_layers,
             n_heads: cfg.n_heads,
             d_head: cfg.d_head,
             cur_len: vec![0; batch],
-        }
+            paged: true,
+            n_blocks,
+            // LIFO from the low end so block 0 is handed out first.
+            free: (0..n_blocks as u32).rev().collect(),
+            reserved_total: 0,
+            tables: vec![BlockTable::default(); batch],
+            peak_in_use: 0,
+        })
     }
 
-    /// Device-backed cache (PJRT).
+    /// Device-backed cache (PJRT): dense `[2, L, B, S, H, D]` on the
+    /// device, block machinery inert.
     #[cfg(feature = "pjrt")]
     pub fn device(client: &xla::PjRtClient, cfg: &ModelCfg, batch: usize)
                   -> Result<Self> {
@@ -82,10 +168,17 @@ impl KvCache {
             n_heads: cfg.n_heads,
             d_head: cfg.d_head,
             cur_len: vec![0; batch],
+            paged: false,
+            n_blocks: 0,
+            free: Vec::new(),
+            reserved_total: 0,
+            tables: vec![BlockTable::default(); batch],
+            peak_in_use: 0,
         })
     }
 
-    /// The reserved write-only slot for rejected speculative columns.
+    /// The reserved write-only position rejected speculative columns
+    /// are redirected to (resolves to the row's garbage block).
     pub fn garbage_slot(&self) -> i32 {
         (self.s_max - 1) as i32
     }
@@ -95,38 +188,159 @@ impl KvCache {
         (self.s_max - 2) as u32
     }
 
-    /// Reset a single row (slot reuse under continuous batching).  The
-    /// stale data needs no zeroing: the position-mask contract means
-    /// slots >= cur_len are rewritten before they become attendable.
-    pub fn reset_row(&mut self, row: usize) {
-        self.cur_len[row] = 0;
-    }
-
     pub fn headroom(&self, row: usize) -> u32 {
         self.max_live_pos().saturating_sub(self.cur_len[row])
     }
 
-    /// Flat offset of `[c, l, row, slot, 0, 0]` in a `[2, L, B, S, H*D]`
-    /// tensor — the single source of truth for the host cache layout.
-    /// `pub(crate)` so the host fast path (DESIGN.md §8) can read the
-    /// tensor in place through a `Sync` view instead of copying it.
-    pub(crate) fn flat_off(n_layers: usize, batch: usize, s_max: usize,
-                           hd: usize, c: usize, l: usize, row: usize,
-                           slot: usize) -> usize {
-        (((c * n_layers + l) * batch + row) * s_max + slot) * hd
+    /// Floats per pool block: `[2, L, KV_BLOCK, H*D]`.
+    pub(crate) fn block_elems(&self) -> usize {
+        2 * self.n_layers * KV_BLOCK * self.n_heads * self.d_head
     }
 
-    /// [`Self::flat_off`] with this cache's dimensions.
-    pub(crate) fn host_off(&self, c: usize, l: usize, row: usize,
-                           slot: usize) -> usize {
-        Self::flat_off(self.n_layers, self.batch, self.s_max,
-                       self.n_heads * self.d_head, c, l, row, slot)
+    /// Pool blocks a sequence of `len` slots needs, including its
+    /// garbage block (`len` is capped at the logical window).
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.min(self.s_max - 1).div_ceil(KV_BLOCK) + 1
+    }
+
+    /// Total pool blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Currently allocated blocks (pool minus free list).
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Lifetime high-water mark of [`KvCache::blocks_in_use`].
+    pub fn peak_blocks(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Free blocks not promised to any admitted row — the headroom new
+    /// admissions draw from.
+    pub fn unreserved_free(&self) -> usize {
+        self.free.len() - self.reserved_total
+    }
+
+    /// Memory-bounded admission gate: can a sequence of up to `len`
+    /// slots be admitted right now without eating another admitted
+    /// row's reservation?  Always true on non-paged (device) caches.
+    pub fn can_reserve(&self, len: usize) -> bool {
+        !self.paged || self.unreserved_free() >= self.blocks_for(len)
+    }
+
+    /// Admit a sequence into `row`: release whatever the row held and
+    /// reserve the worst-case block count for `len` slots.  Reserved
+    /// blocks are allocated lazily as commits reach them, so resident
+    /// memory tracks live tokens while the reservation guarantees the
+    /// row never stalls mid-decode.  Fails when the pool's unreserved
+    /// headroom is too small (the batcher's backpressure signal).
+    pub fn reserve_row(&mut self, row: usize, len: usize) -> Result<()> {
+        self.release_row(row);
+        if !self.paged {
+            return Ok(());
+        }
+        let need = self.blocks_for(len);
+        anyhow::ensure!(
+            self.unreserved_free() >= need,
+            "kv block pool exhausted: row wants {need} blocks, \
+             {} unreserved of {} free (pool {})",
+            self.unreserved_free(), self.free.len(), self.n_blocks
+        );
+        self.tables[row].reserved = need;
+        self.reserved_total += need;
+        Ok(())
+    }
+
+    /// Return `row`'s blocks (live + garbage) and any outstanding
+    /// reservation to the pool; the row's committed length resets.
+    /// Freed blocks are reused unzeroed — the position-mask contract
+    /// makes stale content unattendable (module docs).
+    pub fn release_row(&mut self, row: usize) {
+        let t = &mut self.tables[row];
+        self.free.extend(t.blocks.drain(..));
+        self.free.extend(t.garbage.take());
+        self.reserved_total -= t.reserved;
+        t.reserved = 0;
+        self.cur_len[row] = 0;
+    }
+
+    /// Take one block for `row`: against its reservation when one is
+    /// outstanding, else from the unreserved headroom.  Errors only
+    /// when the pool is truly dry — an admitted (reserved) row cannot
+    /// hit this.
+    fn take_block(&mut self, row: usize) -> Result<u32> {
+        let from_reservation = self.tables[row].reserved > 0;
+        anyhow::ensure!(
+            if from_reservation {
+                !self.free.is_empty()
+            } else {
+                self.free.len() > self.reserved_total
+            },
+            "kv block pool exhausted ({} blocks, {} free, {} reserved) — \
+             admit fewer sequences or raise --kv-blocks",
+            self.n_blocks, self.free.len(), self.reserved_total
+        );
+        let blk = self.free.pop().expect("checked non-empty above");
+        if from_reservation {
+            self.tables[row].reserved -= 1;
+            self.reserved_total -= 1;
+        }
+        self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
+        Ok(blk)
+    }
+
+    /// Extend `row`'s table until logical `slot` is mapped.
+    fn ensure_covered(&mut self, row: usize, slot: usize) -> Result<()> {
+        while self.tables[row].blocks.len() * KV_BLOCK <= slot {
+            let blk = self.take_block(row)?;
+            self.tables[row].blocks.push(blk);
+        }
+        Ok(())
+    }
+
+    /// Allocate `row`'s garbage block if it doesn't exist yet.
+    fn ensure_garbage(&mut self, row: usize) -> Result<()> {
+        if self.tables[row].garbage.is_none() {
+            let blk = self.take_block(row)?;
+            self.tables[row].garbage = Some(blk);
+        }
+        Ok(())
+    }
+
+    /// `row`'s live block table (logical order) — the host fast path
+    /// builds its in-place read map from this.
+    pub(crate) fn row_blocks(&self, row: usize) -> &[u32] {
+        &self.tables[row].blocks
+    }
+
+    /// Flat offset of `[c, l, row, slot]`'s `H*D` vector in the host
+    /// pool, resolved through the row's block table; `None` when the
+    /// slot is unmapped (never committed — unattendable by contract).
+    /// The single source of truth for the paged layout.
+    pub(crate) fn slot_index(&self, c: usize, l: usize, row: usize,
+                             slot: usize) -> Option<usize> {
+        let t = &self.tables[row];
+        let (blk, off) = if slot == self.s_max - 1 {
+            (t.garbage?, slot % KV_BLOCK)
+        } else {
+            (*t.blocks.get(slot / KV_BLOCK)?, slot % KV_BLOCK)
+        };
+        let hd = self.n_heads * self.d_head;
+        Some(blk as usize * self.block_elems()
+             + ((c * self.n_layers + l) * KV_BLOCK + off) * hd)
     }
 
     /// Scatter staged K/V (`[L, b, t, H, D]`) into a host-backed cache
-    /// at `pos` — the commit primitive shared by the reference backend
-    /// and scripted test backends.  Later columns overwrite earlier
-    /// ones at the same slot (only ever exercised at the garbage slot).
+    /// at `pos` — the commit primitive shared by the reference and
+    /// host backends and scripted test fakes.  Live slots allocate
+    /// blocks on demand through the row's table; columns redirected to
+    /// the garbage position land in the row's garbage block (dropped
+    /// entirely for rows that hold no storage at all — a parked batch
+    /// row costs zero blocks).  Later columns overwrite earlier ones
+    /// at the same slot (only ever exercised at the garbage redirect).
     pub fn host_scatter(&mut self, b: usize, t: usize, k: &[f32],
                         v: &[f32], pos: &[i32]) -> Result<()> {
         let hd = self.n_heads * self.d_head;
@@ -136,26 +350,59 @@ impl KvCache {
         let want = self.n_layers * b * t * hd;
         anyhow::ensure!(k.len() == want && v.len() == want,
                         "staged kv len {} != {want}", k.len());
+        anyhow::ensure!(
+            matches!(self.state, CacheState::Host(_)),
+            "host_scatter on a device cache"
+        );
         let s_max = self.s_max;
-        let n_layers = self.n_layers;
-        let batch = self.batch;
+        let garbage = s_max - 1;
+        // Pass 1 — resolve every column to (block, in-block offset),
+        // allocating on demand.  Garbage writes to a row with no
+        // storage (never admitted / already released) are dropped:
+        // the garbage block is write-only, so nothing can observe the
+        // difference, and parked rows stay at zero blocks.
+        let mut dest: Vec<Option<(usize, usize)>> =
+            Vec::with_capacity(b * t);
+        for row in 0..b {
+            for col in 0..t {
+                let slot = pos[row * t + col]
+                    .clamp(0, s_max as i32 - 1) as usize;
+                let blk = if slot == garbage {
+                    let tab = &self.tables[row];
+                    let live = !tab.blocks.is_empty()
+                        || tab.garbage.is_some()
+                        || tab.reserved > 0;
+                    if live {
+                        self.ensure_garbage(row)?;
+                    }
+                    self.tables[row].garbage
+                } else {
+                    self.ensure_covered(row, slot)?;
+                    Some(self.tables[row].blocks[slot / KV_BLOCK])
+                };
+                dest.push(
+                    blk.map(|id| (id as usize, slot % KV_BLOCK)));
+            }
+        }
+        // Pass 2 — copy, same (l, row, col) order as the dense layout
+        // so overwrite semantics at a shared cell are unchanged.
+        let (n_layers, block_elems) = (self.n_layers, self.block_elems());
         let data = match &mut self.state {
             CacheState::Host(d) => d,
             #[cfg(feature = "pjrt")]
-            CacheState::Device(_) => {
-                anyhow::bail!("host_scatter on a device cache")
-            }
+            CacheState::Device(_) => unreachable!("checked above"),
         };
         for l in 0..n_layers {
             for row in 0..b {
                 for col in 0..t {
-                    let slot = pos[row * t + col]
-                        .clamp(0, s_max as i32 - 1) as usize;
+                    let Some((blk, off)) = dest[row * t + col] else {
+                        continue;
+                    };
                     let src = ((l * b + row) * t + col) * hd;
-                    let kdst = Self::flat_off(n_layers, batch, s_max, hd,
-                                              0, l, row, slot);
-                    let vdst = Self::flat_off(n_layers, batch, s_max, hd,
-                                              1, l, row, slot);
+                    let base = blk * block_elems;
+                    let kdst = base + (l * KV_BLOCK + off) * hd;
+                    let vdst = base
+                        + ((n_layers + l) * KV_BLOCK + off) * hd;
                     data[kdst..kdst + hd]
                         .copy_from_slice(&k[src..src + hd]);
                     data[vdst..vdst + hd]
@@ -166,8 +413,9 @@ impl KvCache {
         Ok(())
     }
 
-    /// Read one `[H*D]` slot of a host-backed cache (`c`: 0 = K, 1 = V).
-    /// Test/debug helper; `None` for device caches or out-of-range slots.
+    /// Read one `[H*D]` slot of a host-backed cache (`c`: 0 = K, 1 = V)
+    /// through the row's block table.  Test/debug helper; `None` for
+    /// device caches, out-of-range arguments, or unmapped slots.
     pub fn host_kv(&self, c: usize, l: usize, row: usize, slot: usize)
                    -> Option<&[f32]> {
         if c >= 2 || l >= self.n_layers || row >= self.batch
@@ -176,7 +424,7 @@ impl KvCache {
             return None;
         }
         let hd = self.n_heads * self.d_head;
-        let off = self.host_off(c, l, row, slot);
+        let off = self.slot_index(c, l, row, slot)?;
         match &self.state {
             CacheState::Host(d) => d.get(off..off + hd),
             #[cfg(feature = "pjrt")]
@@ -202,6 +450,11 @@ mod tests {
         }
     }
 
+    /// A config whose window spans several blocks (s_max = 96).
+    fn big_cfg() -> ModelCfg {
+        ModelCfg { s_max: 96, ..cfg() }
+    }
+
     #[test]
     fn host_scatter_places_rows() {
         let c = cfg();
@@ -219,7 +472,7 @@ mod tests {
             .collect();
         let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
         // row 0 commits cols to slots 1,2; row 1 redirects col 1 to
-        // the garbage slot
+        // the garbage position (its garbage block)
         let pos = [1, 2, 0, 5];
         cache.host_scatter(b, t, &k, &v, &pos).unwrap();
         assert_eq!(cache.host_kv(0, 0, 0, 1).unwrap()[0], 0.0);
@@ -228,8 +481,10 @@ mod tests {
         assert_eq!(cache.host_kv(0, 0, 1, 0).unwrap()[0], 10.0);
         assert_eq!(cache.host_kv(0, 0, 1, 5).unwrap()[0], 11.0);
         assert_eq!(cache.host_kv(1, 0, 0, 1).unwrap()[0], 0.5);
-        // untouched slots stay zero
+        // untouched slots in a mapped block stay zero (fresh pool)
         assert_eq!(cache.host_kv(0, 0, 0, 3).unwrap()[0], 0.0);
+        // row 0 never wrote garbage: no garbage block was allocated
+        assert!(cache.host_kv(0, 0, 0, 5).is_none());
     }
 
     #[test]
@@ -240,5 +495,108 @@ mod tests {
         assert_eq!(cache.max_live_pos(), 4);
         assert!(cache.host_kv(0, 0, 0, 6).is_none());
         assert!(cache.host_kv(2, 0, 0, 0).is_none());
+        // fresh row: nothing mapped yet
+        assert!(cache.host_kv(0, 0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn blocks_free_and_reuse_across_rows() {
+        let c = big_cfg();
+        // 3 blocks: enough for ONE row of ≤16 live slots + garbage,
+        // with one block spare.
+        let mut cache = KvCache::host_paged(&c, 1, 3).unwrap();
+        let hd = 4;
+        let stage = vec![1.5f32; c.n_layers * hd];
+        for round in 0..4 {
+            cache.reserve_row(0, 10).unwrap();
+            cache.host_scatter(1, 1, &stage, &stage, &[3]).unwrap();
+            cache
+                .host_scatter(1, 1, &stage, &stage,
+                              &[cache.garbage_slot()])
+                .unwrap();
+            assert_eq!(cache.blocks_in_use(), 2, "round {round}");
+            cache.release_row(0);
+            assert_eq!(cache.blocks_in_use(), 0,
+                       "release must return blocks to the pool");
+        }
+        assert_eq!(cache.peak_blocks(), 2);
+    }
+
+    #[test]
+    fn reservation_gates_admission_and_guarantees_growth() {
+        let c = big_cfg();
+        // Pool of 4; a 20-slot sequence needs ceil(20/16)+1 = 3.
+        let mut cache = KvCache::host_paged(&c, 2, 4).unwrap();
+        assert!(cache.can_reserve(20));
+        cache.reserve_row(0, 20).unwrap();
+        // Only 1 unreserved block left: a second 20-slot row must wait.
+        assert!(!cache.can_reserve(20));
+        assert!(cache.reserve_row(1, 20).is_err());
+        // The admitted row can still take every reserved block.
+        let hd = 4;
+        let stage = vec![2.0f32; c.n_layers * hd];
+        cache.host_scatter(2, 1, &stage.repeat(2), &stage.repeat(2),
+                           &[19, cache.garbage_slot()])
+            .unwrap();
+        cache.host_scatter(2, 1, &stage.repeat(2), &stage.repeat(2),
+                           &[cache.garbage_slot(),
+                             cache.garbage_slot()])
+            .unwrap();
+        assert_eq!(cache.blocks_in_use(), 3,
+                   "two live blocks + row 0's garbage block");
+        cache.release_row(0);
+        assert!(cache.can_reserve(20), "release restores admission");
+    }
+
+    #[test]
+    fn pool_exhaustion_is_an_error_not_a_corruption() {
+        let c = big_cfg();
+        let mut cache = KvCache::host_paged(&c, 1, 2).unwrap();
+        let hd = 4;
+        let stage = vec![1.0f32; c.n_layers * hd];
+        // Block 0 -> slots 0..16, block 1 -> garbage; slot 16 must fail.
+        cache.host_scatter(1, 1, &stage, &stage, &[0]).unwrap();
+        cache
+            .host_scatter(1, 1, &stage, &stage, &[cache.garbage_slot()])
+            .unwrap();
+        let err = cache
+            .host_scatter(1, 1, &stage, &stage, &[16])
+            .unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        // earlier writes intact
+        assert_eq!(cache.host_kv(0, 0, 0, 0).unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn parked_rows_cost_zero_blocks() {
+        let c = big_cfg();
+        let mut cache = KvCache::host_paged(&c, 4, 8).unwrap();
+        let hd = 4;
+        let n = c.n_layers * 4 * hd;
+        let stage = vec![3.0f32; n];
+        let g = cache.garbage_slot();
+        // one live row, three parked rows writing garbage only
+        cache.host_scatter(4, 1, &stage, &stage, &[0, g, g, g]).unwrap();
+        assert_eq!(cache.blocks_in_use(), 1,
+                   "parked rows must not allocate garbage blocks");
+        assert!(cache.host_kv(0, 0, 1, g as usize).is_none());
+    }
+
+    #[test]
+    fn garbage_redirect_is_isolated_per_row() {
+        let c = big_cfg();
+        let mut cache = KvCache::host_paged(&c, 2, 6).unwrap();
+        let hd = 4;
+        let stage: Vec<f32> =
+            (0..c.n_layers * 2 * hd).map(|i| i as f32).collect();
+        let g = cache.garbage_slot();
+        // both rows live at slot 0, then both redirect to garbage
+        cache.host_scatter(2, 1, &stage, &stage, &[0, 0]).unwrap();
+        cache.host_scatter(2, 1, &stage, &stage, &[g, g]).unwrap();
+        let g = g as usize;
+        let r0 = cache.host_kv(0, 0, 0, g).unwrap().to_vec();
+        let r1 = cache.host_kv(0, 0, 1, g).unwrap().to_vec();
+        assert_ne!(r0, r1, "rows stage different values here");
+        assert_eq!(cache.blocks_in_use(), 4, "2 live + 2 garbage blocks");
     }
 }

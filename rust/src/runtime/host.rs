@@ -36,11 +36,13 @@
 //! * **Dead work is skipped, not recomputed.**  Parked cells (queries
 //!   positioned at the garbage slot, DESIGN.md §7) are dropped before
 //!   the first matmul; their logits/hidden/staged-KV outputs are zeros.
-//! * **The KV cache is read in place.**  Each attended slot resolves
-//!   through a per-row `slot -> staged column` map — staged K/V from
-//!   this call win, otherwise the persistent tensor is read directly
-//!   through a `Sync` borrowed view (`CacheView`).  No copies,
-//!   identical values.
+//! * **The KV cache is read in place, through the block table.**  Each
+//!   attended slot resolves through a per-row `slot -> staged column`
+//!   map — staged K/V from this call win, otherwise the paged block
+//!   pool (DESIGN.md §7) is read directly through a `Sync` borrowed
+//!   view (`CacheView`) carrying precomputed per-row block bases.  No
+//!   copies, identical values; unmapped (never-committed) slots read
+//!   as zeros, which the position mask keeps unobservable.
 //! * **Rotary tables are computed once per call.**  One `D/2`-wide
 //!   sin/cos row per live cell, shared by every layer and head (the
 //!   oracle recomputes the trig `2·L·H` times per cell).
@@ -64,7 +66,7 @@ use anyhow::Result;
 
 use super::artifact::{ModelCfg, ModelEntry, ModelKind};
 use super::backend::{Backend, FwdOps, FwdOut, KvStage};
-use super::cache::{CacheState, KvCache};
+use super::cache::{CacheState, KvCache, KV_BLOCK};
 use super::pool::{chunk, default_threads, SharedSlice, WorkerPool};
 use super::reference::{rmsnorm, RefModel};
 
@@ -158,45 +160,48 @@ struct PackedLayer {
     w2: PackedMat,
 }
 
-/// Read-only view of a host cache tensor plus its layout.  `KvCache`
-/// itself cannot cross a worker-lane boundary (its PJRT variant holds
-/// non-`Send` device handles under `--features pjrt`); this borrowed
-/// view is plain `&[f32]` + dimensions and is always `Sync`.
+/// Read-only view of the host block pool plus a flattened block-base
+/// map (DESIGN.md §7).  `KvCache` itself cannot cross a worker-lane
+/// boundary (its PJRT variant holds non-`Send` device handles under
+/// `--features pjrt`); this borrowed view is plain `&[f32]` + a
+/// precomputed `Vec<i64>` and is always `Sync`.
 struct CacheView<'a> {
     data: &'a [f32],
-    n_layers: usize,
-    batch: usize,
-    s_max: usize,
-    hd: usize,
-}
-
-impl CacheView<'_> {
-    /// Offset of `[c, l, row, slot 0]` — delegates to the cache's
-    /// single-source-of-truth layout formula.
-    #[inline]
-    fn off(&self, c: usize, l: usize, row: usize) -> usize {
-        KvCache::flat_off(self.n_layers, self.batch, self.s_max, self.hd,
-                          c, l, row, 0)
-    }
+    /// `[b, max_lb]` row-major: flat pool offset of each row's mapped
+    /// logical block (`block_id * block_elems`), or `-1` when the
+    /// row's table does not map it.  Built once per `fwd` call, so the
+    /// attention loop resolves a slot with one shift, one mask, and
+    /// one add — no per-slot table walk.
+    row_blocks: Vec<i64>,
+    /// Logical blocks covered per row (`ceil(s_used / KV_BLOCK)`).
+    max_lb: usize,
 }
 
 /// Resolve the K or V vector attended at `slot`: this call's staged
-/// column if the slot map says the slot was written in-flight, else the
-/// persistent cache tensor read in place.  `stage` is the fused QKV
-/// buffer (`stride` floats per cell, K/V at offset `base`).  Returns
+/// column if the slot map says the slot was written in-flight, else
+/// the persistent block pool read in place through the row's block
+/// bases (`cl_off` selects the `(c, l)` plane inside a block).
+/// Unmapped slots resolve to `zeros` — by the §7 contract they were
+/// never committed, so the position mask keeps them unattendable and
+/// the substitute bytes can never reach a live output.  Returns
 /// exactly the bytes the oracle's transient merged copy would hold.
 #[inline(always)]
 #[allow(clippy::too_many_arguments)] // hot-path accessor, args are flat
 fn slot_kv<'a>(stage: &'a [f32], stride: usize, base: usize,
-               cache: &'a [f32], map: &[i32], map_base: usize,
-               slot: usize, cache_base: usize, hd: usize,
-               head_off: usize, dh: usize) -> &'a [f32] {
+               pool: &'a [f32], map: &[i32], map_base: usize,
+               slot: usize, row_blocks: &[i64], cl_off: usize,
+               zeros: &'a [f32], hd: usize, head_off: usize, dh: usize)
+               -> &'a [f32] {
     let j = map[map_base + slot];
     if j >= 0 {
-        &stage[j as usize * stride + base + head_off..][..dh]
-    } else {
-        &cache[cache_base + slot * hd + head_off..][..dh]
+        return &stage[j as usize * stride + base + head_off..][..dh];
     }
+    let blk_base = row_blocks[slot / KV_BLOCK];
+    if blk_base < 0 {
+        return &zeros[head_off..head_off + dh];
+    }
+    &pool[blk_base as usize + cl_off + (slot % KV_BLOCK) * hd
+        + head_off..][..dh]
 }
 
 /// Lap timer for the per-op breakdown: one clock read per phase
@@ -340,6 +345,14 @@ impl Backend for HostModel {
         Ok(KvCache::host(&self.m.cfg, batch))
     }
 
+    fn new_cache_sized(&self, batch: usize, kv_blocks: Option<usize>)
+                       -> Result<KvCache> {
+        match kv_blocks {
+            Some(n) => KvCache::host_paged(&self.m.cfg, batch, n),
+            None => self.new_cache(batch),
+        }
+    }
+
     fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
            hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
         let t0 = Instant::now();
@@ -374,13 +387,6 @@ impl Backend for HostModel {
                 anyhow::bail!("host fwd needs a host cache")
             }
         };
-        let view = CacheView {
-            data,
-            n_layers: cache.n_layers,
-            batch: cache.batch,
-            s_max,
-            hd,
-        };
 
         // Same truncated-view bound as the oracle: the highest LIVE
         // position; cells at or past it are parked.
@@ -391,6 +397,25 @@ impl Backend for HostModel {
             .filter(|&p| p < garbage)
             .max()
             .map_or(1, |p| p + 1);
+
+        // Per-row block-base map over the logical blocks this call can
+        // attend: resolves slot -> pool offset without walking the
+        // table in the attention loop.
+        let max_lb = s_used.div_ceil(KV_BLOCK);
+        let block_elems = cache.block_elems();
+        let mut row_blocks = vec![-1i64; b * max_lb];
+        for row in 0..b {
+            for (lb, &blk) in
+                cache.row_blocks(row).iter().take(max_lb).enumerate()
+            {
+                row_blocks[row * max_lb + lb] =
+                    (blk as usize * block_elems) as i64;
+            }
+        }
+        let view = CacheView { data, row_blocks, max_lb };
+        // Substitute row for unmapped (never-committed) slots; §7 says
+        // nothing can attend them, so the value is unobservable.
+        let zeros = vec![0f32; hd];
 
         let mut ops = FwdOps::default();
         let mut clock = OpClock::start();
@@ -547,14 +572,18 @@ impl Backend for HostModel {
             let items = n * h;
             let attn_out = SharedSlice::new(&mut attn);
             let qkv_ref: &[f32] = &qkv;
+            // (c, l) plane offsets inside a pool block for this layer.
+            let kc_off = l * KV_BLOCK * hd;
+            let vc_off = (n_layers + l) * KV_BLOCK * hd;
+            let zeros_ref: &[f32] = &zeros;
             let run_items = |i0: usize, i1: usize| {
                 let mut scores = vec![0f32; s_used];
                 for it in i0..i1 {
                     let (j, head) = (it / h, it % h);
                     let (grow, p) = (rows_[j], ps[j]);
                     let map_base = grow * s_used;
-                    let kc_base = view.off(0, l, grow);
-                    let vc_base = view.off(1, l, grow);
+                    let blocks = &view.row_blocks
+                        [grow * view.max_lb..(grow + 1) * view.max_lb];
                     let head_off = head * dh;
                     let qv = &qkv_ref[j * qkv_stride + head_off
                         ..j * qkv_stride + head_off + dh];
@@ -565,19 +594,20 @@ impl Backend for HostModel {
                     while s + 4 <= p + 1 {
                         let k0 = slot_kv(qkv_ref, qkv_stride, hd,
                                          view.data, &staged_at, map_base,
-                                         s, kc_base, hd, head_off, dh);
+                                         s, blocks, kc_off, zeros_ref,
+                                         hd, head_off, dh);
                         let k1 = slot_kv(qkv_ref, qkv_stride, hd,
                                          view.data, &staged_at, map_base,
-                                         s + 1, kc_base, hd, head_off,
-                                         dh);
+                                         s + 1, blocks, kc_off,
+                                         zeros_ref, hd, head_off, dh);
                         let k2 = slot_kv(qkv_ref, qkv_stride, hd,
                                          view.data, &staged_at, map_base,
-                                         s + 2, kc_base, hd, head_off,
-                                         dh);
+                                         s + 2, blocks, kc_off,
+                                         zeros_ref, hd, head_off, dh);
                         let k3 = slot_kv(qkv_ref, qkv_stride, hd,
                                          view.data, &staged_at, map_base,
-                                         s + 3, kc_base, hd, head_off,
-                                         dh);
+                                         s + 3, blocks, kc_off,
+                                         zeros_ref, hd, head_off, dh);
                         let (mut a0, mut a1, mut a2, mut a3) =
                             (0f32, 0f32, 0f32, 0f32);
                         for e in 0..dh {
@@ -596,7 +626,8 @@ impl Backend for HostModel {
                     while s <= p {
                         let kr = slot_kv(qkv_ref, qkv_stride, hd,
                                          view.data, &staged_at, map_base,
-                                         s, kc_base, hd, head_off, dh);
+                                         s, blocks, kc_off, zeros_ref,
+                                         hd, head_off, dh);
                         let mut acc = 0f32;
                         for e in 0..dh {
                             acc += qv[e] * kr[e];
@@ -625,7 +656,8 @@ impl Backend for HostModel {
                         let w = scores[s] / denom;
                         let vr = slot_kv(qkv_ref, qkv_stride, 2 * hd,
                                          view.data, &staged_at, map_base,
-                                         s, vc_base, hd, head_off, dh);
+                                         s, blocks, vc_off, zeros_ref,
+                                         hd, head_off, dh);
                         for e in 0..dh {
                             out[e] += w * vr[e];
                         }

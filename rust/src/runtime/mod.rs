@@ -31,7 +31,7 @@ use anyhow::Result;
 
 pub use artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
 pub use backend::{Backend, FwdOps, FwdOut, KvStage};
-pub use cache::{CacheState, KvCache};
+pub use cache::{CacheState, KvCache, KV_BLOCK};
 pub use host::HostModel;
 #[cfg(feature = "pjrt")]
 pub use model::ModelRt;

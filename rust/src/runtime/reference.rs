@@ -326,6 +326,14 @@ impl Backend for RefModel {
         Ok(KvCache::host(&self.cfg, batch))
     }
 
+    fn new_cache_sized(&self, batch: usize, kv_blocks: Option<usize>)
+                       -> Result<KvCache> {
+        match kv_blocks {
+            Some(n) => KvCache::host_paged(&self.cfg, batch, n),
+            None => self.new_cache(batch),
+        }
+    }
+
     fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
            hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
         let t0 = Instant::now();
@@ -423,15 +431,24 @@ impl Backend for RefModel {
                 .filter(|&p| p < garbage)
                 .max()
                 .map_or(1, |p| p + 1);
+            // Persistent slots resolve through the row's block table
+            // (DESIGN.md §7); unmapped slots stay zero — they were
+            // never committed, so the position mask already makes
+            // them unattendable and the bytes cannot reach an output.
             let mut ck = vec![0f32; b * s_used * hd];
             let mut cv = vec![0f32; b * s_used * hd];
             for row in 0..b {
-                let koff = cache.host_off(0, li, row, 0);
-                let voff = cache.host_off(1, li, row, 0);
-                ck[row * s_used * hd..(row + 1) * s_used * hd]
-                    .copy_from_slice(&host[koff..koff + s_used * hd]);
-                cv[row * s_used * hd..(row + 1) * s_used * hd]
-                    .copy_from_slice(&host[voff..voff + s_used * hd]);
+                for s in 0..s_used {
+                    let dst = (row * s_used + s) * hd;
+                    if let Some(off) = cache.slot_index(0, li, row, s) {
+                        ck[dst..dst + hd]
+                            .copy_from_slice(&host[off..off + hd]);
+                    }
+                    if let Some(off) = cache.slot_index(1, li, row, s) {
+                        cv[dst..dst + hd]
+                            .copy_from_slice(&host[off..off + hd]);
+                    }
+                }
             }
             for row in 0..b {
                 for col in 0..t {

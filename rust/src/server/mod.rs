@@ -4,13 +4,25 @@
 //! not Send anyway — the natural architecture is the same one vLLM
 //! uses: an engine loop on its own OS thread, callers talk to it over
 //! channels.  Documented as a substitution in DESIGN.md §3.)
+//!
+//! Since the paged-cache refactor (DESIGN.md §7) the engine thread
+//! runs the **batched serving loop**: every incoming `Generate`
+//! request joins an FCFS queue, free batch slots are refilled whenever
+//! the KV block pool has room ([`crate::coordinator::engines::Engine::can_admit`]),
+//! and one `step` advances every live request together — concurrent
+//! callers share decode iterations instead of serializing through
+//! slot 0.  Finished slots release their blocks and reply on their
+//! caller's channel; [`Server::submit`] is the non-blocking entry
+//! ([`Server::generate`] is submit + wait).
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::thread;
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::engines::{build_engine, EngineConfig};
+use crate::coordinator::engines::{build_engine, Engine, EngineConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::RuntimeSpec;
 
@@ -34,6 +46,14 @@ enum Msg {
     Shutdown,
 }
 
+/// A queued or in-flight request with its reply channel and the
+/// instant it reached the engine thread (latency origin).
+struct Pending {
+    req: GenRequest,
+    reply: mpsc::Sender<GenResponse>,
+    t0: Instant,
+}
+
 /// Handle to the engine thread.
 pub struct Server {
     tx: mpsc::Sender<Msg>,
@@ -53,42 +73,27 @@ impl Server {
                 let rt = spec.open()?;
                 let mut engine = build_engine(&rt, &cfg)?;
                 engine.warmup()?;
-                // Simple loop: slot 0 serves requests FCFS; the batched
-                // path is exercised through coordinator::batcher (the
-                // benches drive it directly for deterministic timing).
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Generate(req, reply) => {
-                            let t0 = std::time::Instant::now();
-                            let outs = crate::coordinator::engines::generate(
-                                engine.as_mut(),
-                                std::slice::from_ref(&req.prompt),
-                                req.max_new,
-                            )?;
-                            let _ = reply.send(GenResponse {
-                                id: req.id,
-                                tokens: outs.into_iter().next()
-                                    .unwrap_or_default(),
-                                latency_s: t0.elapsed().as_secs_f64(),
-                            });
-                        }
-                        Msg::Metrics(reply) => {
-                            let _ = reply.send(engine.metrics().clone());
-                        }
-                        Msg::Shutdown => break,
-                    }
-                }
-                Ok(())
+                serve_loop(engine.as_mut(), &rx)
             })?;
         Ok(Server { tx, join: Some(join) })
     }
 
-    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+    /// Enqueue a request without waiting: the response arrives on the
+    /// returned channel once the batched loop completes it.  Multiple
+    /// outstanding submissions share batch slots and decode
+    /// iterations.
+    pub fn submit(&self, req: GenRequest)
+                  -> Result<mpsc::Receiver<GenResponse>> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Msg::Generate(req, tx))
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
+        Ok(rx)
+    }
+
+    /// Submit and block until the response arrives.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        Ok(self.submit(req)?.recv()?)
     }
 
     pub fn metrics(&self) -> Result<Metrics> {
@@ -114,5 +119,110 @@ impl Drop for Server {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+/// The engine thread's batched serving loop: drain the channel (block
+/// only when idle), admit queued requests into free slots while the KV
+/// pool has room, step every live sequence once, harvest and reply.
+/// `Shutdown` stops intake and exits once in-flight work drains.
+fn serve_loop(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>)
+              -> Result<()> {
+    let b = engine.batch();
+    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut slots: Vec<Option<Pending>> = (0..b).map(|_| None).collect();
+    let mut open = true;
+    loop {
+        let live = slots.iter().filter(|s| s.is_some()).count();
+        let idle = live == 0 && queue.is_empty();
+        if idle && !open {
+            return Ok(());
+        }
+        if idle {
+            // Nothing to do: park on the channel instead of spinning.
+            match rx.recv() {
+                Ok(msg) => {
+                    if !handle(msg, engine, &mut queue) {
+                        open = false;
+                    }
+                }
+                Err(_) => return Ok(()), // every Server handle dropped
+            }
+        }
+        while let Ok(msg) = rx.try_recv() {
+            if !handle(msg, engine, &mut queue) {
+                open = false;
+            }
+        }
+
+        // FCFS admission, gated on free slots AND free KV blocks.
+        for slot in 0..b {
+            if slots[slot].is_some() {
+                continue;
+            }
+            let Some(head) = queue.front() else { break };
+            if !engine.can_admit(head.req.prompt.len(), head.req.max_new)
+            {
+                if slots.iter().all(|s| s.is_none()) {
+                    // Even an empty engine can't fit it: reject THIS
+                    // request — dropping its reply sender surfaces a
+                    // channel error to its caller — and keep serving
+                    // everyone else.
+                    let p = queue.pop_front().unwrap();
+                    eprintln!(
+                        "pard-engine: rejecting request {}: needs \
+                         more KV blocks than the whole pool holds — \
+                         raise --kv-blocks",
+                        p.req.id
+                    );
+                    continue; // next head, same pass
+                }
+                engine.metrics_mut().admission_stalls += 1;
+                break; // backpressure: wait for a release
+            }
+            let p = queue.pop_front().unwrap();
+            engine.admit(slot, &p.req.prompt, p.req.max_new)?;
+            slots[slot] = Some(p);
+        }
+
+        if engine.any_active() {
+            engine.step()?;
+            engine.metrics_mut().iterations += 1;
+        }
+
+        // Harvest: reply and release finished slots.
+        for slot in 0..b {
+            let done = slots[slot]
+                .as_ref()
+                .map(|_| engine.seqs()[slot].done)
+                .unwrap_or(false);
+            if done {
+                let p = slots[slot].take().unwrap();
+                let tokens = engine.seqs()[slot].gen_tokens().to_vec();
+                engine.release(slot);
+                let _ = p.reply.send(GenResponse {
+                    id: p.req.id,
+                    tokens,
+                    latency_s: p.t0.elapsed().as_secs_f64(),
+                });
+            }
+        }
+    }
+}
+
+/// Apply one control message; returns false when intake must close
+/// (`Shutdown`).
+fn handle(msg: Msg, engine: &mut dyn Engine,
+          queue: &mut VecDeque<Pending>) -> bool {
+    match msg {
+        Msg::Generate(req, reply) => {
+            queue.push_back(Pending { req, reply, t0: Instant::now() });
+            true
+        }
+        Msg::Metrics(reply) => {
+            let _ = reply.send(engine.metrics().clone());
+            true
+        }
+        Msg::Shutdown => false,
     }
 }

@@ -1,21 +1,30 @@
 //! Continuous-batcher tests with a fake `Engine`: FCFS admission,
 //! slot refill between iterations, occupancy accounting, window-based
-//! throughput, and sane stats on a zero-request trace — all without
-//! any model backend.
+//! throughput, memory-bounded admission backpressure, and sane stats
+//! on a zero-request trace — all without any model backend.  Most
+//! tests run on the VIRTUAL clock (`serve_trace_virtual`), so
+//! latencies and stall counts are exact numbers, not sleep-dependent
+//! approximations.
 
 use anyhow::Result;
-use pard::coordinator::batcher::serve_trace;
+use pard::coordinator::batcher::{serve_trace, serve_trace_virtual};
 use pard::coordinator::engines::{Engine, EngineKind};
 use pard::coordinator::metrics::Metrics;
 use pard::coordinator::sequence::Sequence;
 use pard::substrate::workload::{Request, Trace};
 
 /// One token per active slot per step; requests identify themselves via
-/// `prompt[0]` so admission order can be asserted.
+/// `prompt[0]` so admission order can be asserted.  `pool_blocks`
+/// simulates a paged KV pool: every admitted row holds
+/// `blocks_per_row` until released (`None` = unbounded, the dense-era
+/// default behavior).
 struct FakeEngine {
     seqs: Vec<Sequence>,
     metrics: Metrics,
     admitted: Vec<i32>,
+    pool_blocks: Option<usize>,
+    blocks_per_row: usize,
+    held: Vec<usize>,
 }
 
 impl FakeEngine {
@@ -24,7 +33,39 @@ impl FakeEngine {
             seqs: vec![Sequence::default(); batch],
             metrics: Metrics::default(),
             admitted: Vec::new(),
+            pool_blocks: None,
+            blocks_per_row: 0,
+            held: vec![0; batch],
         }
+    }
+
+    /// Bounded-pool variant: `pool` blocks total, each admitted row
+    /// holding `per_row` until released.
+    fn with_pool(batch: usize, pool: usize, per_row: usize) -> Self {
+        FakeEngine {
+            pool_blocks: Some(pool),
+            blocks_per_row: per_row,
+            ..Self::new(batch)
+        }
+    }
+
+    /// Bounded-pool variant where a request's block need is its PROMPT
+    /// LENGTH (`blocks_per_row == 0` is the marker) — lets one trace
+    /// mix differently sized requests.
+    fn with_prompt_sized_pool(batch: usize, pool: usize) -> Self {
+        FakeEngine { pool_blocks: Some(pool), ..Self::new(batch) }
+    }
+
+    fn need_of(&self, prompt_len: usize) -> usize {
+        if self.blocks_per_row == 0 {
+            prompt_len
+        } else {
+            self.blocks_per_row
+        }
+    }
+
+    fn in_use(&self) -> usize {
+        self.held.iter().sum()
     }
 }
 
@@ -39,6 +80,14 @@ impl Engine for FakeEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
+        if let Some(pool) = self.pool_blocks {
+            let need = self.need_of(prompt.len());
+            anyhow::ensure!(
+                self.in_use() - self.held[slot] + need <= pool,
+                "fake pool exhausted"
+            );
+            self.held[slot] = need;
+        }
         self.admitted.push(prompt[0]);
         self.seqs[slot] = Sequence::start(prompt, max_new);
         Ok(())
@@ -57,6 +106,17 @@ impl Engine for FakeEngine {
             }
         }
         Ok(())
+    }
+
+    fn can_admit(&self, prompt_len: usize, _max_new: usize) -> bool {
+        match self.pool_blocks {
+            Some(pool) => self.in_use() + self.need_of(prompt_len) <= pool,
+            None => true,
+        }
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.held[slot] = 0;
     }
 
     fn seqs(&self) -> &[Sequence] {
@@ -98,7 +158,8 @@ fn closed_trace(n: usize, max_new: usize) -> Trace {
 #[test]
 fn fcfs_admission_order() {
     let mut e = FakeEngine::new(2);
-    let stats = serve_trace(&mut e, &closed_trace(5, 3)).unwrap();
+    let stats = serve_trace_virtual(&mut e, &closed_trace(5, 3), 1.0)
+        .unwrap();
     assert_eq!(stats.completed, 5);
     assert_eq!(e.admitted, vec![0, 1, 2, 3, 4],
                "queue must drain first-come-first-served");
@@ -109,17 +170,49 @@ fn slot_refill_and_occupancy_accounting() {
     // 5 requests × 3 tokens on 2 slots: waves (0,1), (2,3), (4) →
     // 9 iterations, occupancy (2+2+2 + 2+2+2 + 1+1+1)/9 = 5/3.
     let mut e = FakeEngine::new(2);
-    let stats = serve_trace(&mut e, &closed_trace(5, 3)).unwrap();
+    let stats = serve_trace_virtual(&mut e, &closed_trace(5, 3), 1.0)
+        .unwrap();
     assert_eq!(e.metrics.iterations, 9);
     assert_eq!(stats.generated, 15);
     assert!((stats.mean_occupancy - 5.0 / 3.0).abs() < 1e-9,
             "occupancy {}", stats.mean_occupancy);
+    assert_eq!(stats.peak_occupancy, 2);
+    assert_eq!(stats.admission_stalls, 0);
+}
+
+#[test]
+fn virtual_clock_latencies_are_exact() {
+    // Each decode iteration costs exactly one virtual second, so every
+    // latency is an integer: waves finish at t = 3, 6, 9.
+    let mut e = FakeEngine::new(2);
+    let stats = serve_trace_virtual(&mut e, &closed_trace(5, 3), 1.0)
+        .unwrap();
+    assert_eq!(stats.wall_s, 9.0, "9 iterations × 1s tick");
+    assert_eq!(stats.latency_p50_s, 6.0);
+    assert_eq!(stats.latency_p95_s, 9.0);
+    assert!((stats.latency_mean_s - 27.0 / 5.0).abs() < 1e-12);
+    assert!((stats.throughput_tps - 15.0 / 9.0).abs() < 1e-12);
+}
+
+#[test]
+fn virtual_clock_skips_idle_gaps_deterministically() {
+    // One request arrives late: the virtual clock jumps straight to
+    // its arrival instead of sleeping, so the run is exact.
+    let mut requests = closed_trace(1, 2).requests;
+    requests[0].arrival_s = 5.0;
+    let mut e = FakeEngine::new(1);
+    let stats =
+        serve_trace_virtual(&mut e, &Trace { requests }, 1.0).unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.wall_s, 7.0, "jump to t=5, then 2 iterations");
+    assert_eq!(stats.latency_p50_s, 2.0, "latency excludes the gap");
 }
 
 #[test]
 fn throughput_counts_only_this_window() {
     // An engine that already served an earlier trace must not have its
-    // lifetime token count leak into this trace's throughput.
+    // lifetime token count leak into this trace's throughput.  (Wall
+    // clock: the one batcher path virtual mode doesn't exercise.)
     let mut e = FakeEngine::new(2);
     e.metrics.generated = 1_000_000;
     let stats = serve_trace(&mut e, &closed_trace(4, 2)).unwrap();
@@ -132,24 +225,86 @@ fn throughput_counts_only_this_window() {
 #[test]
 fn latency_includes_queueing_delay() {
     // All requests arrive at t=0 but only 1 slot exists: the later
-    // request queues while the first runs, so its arrival-based latency
-    // must be >= the first one's.
+    // request queues while the first runs, so its arrival-based
+    // latency covers both serving times — exactly, on the virtual
+    // clock.
     let mut e = FakeEngine::new(1);
-    let stats = serve_trace(&mut e, &closed_trace(2, 64)).unwrap();
+    let stats = serve_trace_virtual(&mut e, &closed_trace(2, 4), 1.0)
+        .unwrap();
     assert_eq!(stats.completed, 2);
-    assert!(stats.latency_p95_s >= stats.latency_p50_s);
-    // p95 (last finisher) covers both requests' serving time; the mean
-    // would be identical only if queueing were dropped.
-    assert!(stats.latency_mean_s < stats.latency_p95_s);
+    assert_eq!(stats.latency_p95_s, 8.0, "queued request waits 4s");
+    assert_eq!(stats.latency_mean_s, 6.0, "(4 + 8) / 2");
+}
+
+#[test]
+fn pool_backpressure_stalls_then_completes() {
+    // 4 slots but a pool that fits only 2 rows: admission must wait
+    // for releases, stall at least once, and still complete everything
+    // FCFS.
+    let mut e = FakeEngine::with_pool(4, 6, 3);
+    let stats = serve_trace_virtual(&mut e, &closed_trace(6, 3), 1.0)
+        .unwrap();
+    assert_eq!(stats.completed, 6, "backpressure must not drop work");
+    assert_eq!(e.admitted, vec![0, 1, 2, 3, 4, 5], "FCFS preserved");
+    assert_eq!(stats.peak_occupancy, 2,
+               "pool admits 2 concurrent rows, not 4");
+    assert!(stats.admission_stalls > 0, "stalls must be visible");
+    assert_eq!(e.metrics.admission_stalls, stats.admission_stalls,
+               "stalls are mirrored into engine metrics");
+    assert_eq!(e.in_use(), 0, "all blocks released at drain");
+}
+
+#[test]
+fn stall_before_same_pass_release_is_not_fatal() {
+    // Regression: slot 0 consults the gate (and stalls) BEFORE slot 1
+    // is harvested in the same pass.  When that release empties the
+    // engine, the batcher must re-check the head against the empty
+    // pool and admit it next pass — not conclude it can never fit.
+    // Pool 6, needs = prompt length: A=2, B=4 run together; C=5 fits
+    // only an empty pool.
+    let mk = |id: i32, plen: usize, max_new: usize| {
+        let mut prompt = vec![9; plen];
+        prompt[0] = id;
+        Request {
+            id: id as u64,
+            arrival_s: 0.0,
+            prompt,
+            reference: Vec::new(),
+            task: "t".into(),
+            max_new,
+        }
+    };
+    let trace = Trace {
+        requests: vec![mk(0, 2, 2), mk(1, 4, 4), mk(2, 5, 2)],
+    };
+    let mut e = FakeEngine::with_prompt_sized_pool(2, 6);
+    let stats = serve_trace_virtual(&mut e, &trace, 1.0).unwrap();
+    assert_eq!(stats.completed, 3,
+               "C must be admitted once the pool empties");
+    assert_eq!(e.admitted, vec![0, 1, 2], "FCFS preserved");
+    assert!(stats.admission_stalls > 0, "C did wait on blocks");
+    assert_eq!(e.in_use(), 0);
+}
+
+#[test]
+fn impossible_request_fails_loudly_instead_of_spinning() {
+    // A per-row need larger than the whole pool can never be admitted:
+    // the batcher must error out, not livelock.
+    let mut e = FakeEngine::with_pool(2, 2, 3);
+    let err = serve_trace_virtual(&mut e, &closed_trace(1, 2), 1.0)
+        .unwrap_err();
+    assert!(err.to_string().contains("KV blocks"), "{err}");
 }
 
 #[test]
 fn zero_request_trace_yields_sane_stats() {
     let mut e = FakeEngine::new(2);
-    let stats = serve_trace(&mut e, &Trace { requests: Vec::new() })
-        .unwrap();
+    let stats =
+        serve_trace_virtual(&mut e, &Trace { requests: Vec::new() }, 1.0)
+            .unwrap();
     assert_eq!(stats.completed, 0);
     assert_eq!(stats.generated, 0);
+    assert_eq!(stats.peak_occupancy, 0);
     for v in [stats.latency_mean_s, stats.latency_p50_s,
               stats.latency_p95_s, stats.throughput_tps,
               stats.mean_occupancy]

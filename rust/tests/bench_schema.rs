@@ -51,7 +51,7 @@ fn schema_v1_fields_are_stable() {
     for run in runs {
         for key in ["engine", "k", "batch", "tokens_per_s",
                     "tokens_per_iter", "mean_accept_len", "fwd_s",
-                    "commit_s", "fwd_ops", "draft_s", "verify_s",
+                    "commit_s", "fwd_ops", "kv", "draft_s", "verify_s",
                     "prefill_s", "wall_s", "generated", "iterations",
                     "speedup_vs_ar_plus"] {
             assert!(run.get(key).is_some(),
@@ -60,6 +60,22 @@ fn schema_v1_fields_are_stable() {
         assert!(run.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0,
                 "every cell must have measured throughput");
         assert!(run.get("generated").unwrap().as_f64().unwrap() > 0.0);
+        // paged-KV pool stats (additive v1 fields): all three present,
+        // peak occupancy positive (every engine allocates blocks), no
+        // admission stalls in a closed-batch sweep, and the gauge
+        // bounded by its peak
+        let kv = run.get("kv").unwrap();
+        for key in ["blocks_in_use", "peak_blocks", "admission_stalls"] {
+            assert!(kv.get(key).is_some(), "kv missing field `{key}`");
+        }
+        let kv_peak = kv.get("peak_blocks").unwrap().as_f64().unwrap();
+        assert!(kv_peak > 0.0, "engines must record pool occupancy");
+        assert!(kv.get("blocks_in_use").unwrap().as_f64().unwrap()
+                <= kv_peak,
+                "gauge cannot exceed its own peak");
+        assert_eq!(kv.get("admission_stalls").unwrap().as_f64(),
+                   Some(0.0),
+                   "closed-batch eval never stalls admission");
         // per-op fwd breakdown: all six phases present, and populated
         // on the host backend (every engine runs host fwd calls)
         let ops = run.get("fwd_ops").unwrap();

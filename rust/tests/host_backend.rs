@@ -21,6 +21,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         k,
         max_new: 20,
         shared_mask: true,
+        kv_blocks: None,
     }
 }
 

@@ -34,6 +34,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         k,
         max_new: 32,
         shared_mask: true,
+        kv_blocks: None,
     }
 }
 

@@ -1,0 +1,209 @@
+//! Paged-KV-cache contract suite (DESIGN.md §7): block-table reads
+//! stay bit-identical to the dense-era semantics, garbage redirection
+//! lands in the per-row garbage block, blocks free and reuse across
+//! sequences, pool exhaustion backpressures admission instead of
+//! corrupting state — exercised through ALL FIVE engines — and the
+//! headline batcher property: a paged pool admits more concurrent
+//! sequences than the dense layout could hold in the same memory.
+//! Runs in plain `cargo test` with NO artifacts.
+
+use pard::coordinator::batcher::serve_trace_virtual;
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind};
+use pard::coordinator::router::default_draft;
+use pard::runtime::{Backend, KvStage, KV_BLOCK};
+use pard::substrate::workload::{build_trace, Arrival};
+use pard::Runtime;
+
+fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
+       batch: usize, kv_blocks: Option<usize>) -> EngineConfig {
+    EngineConfig {
+        kind,
+        target: target.to_string(),
+        draft: default_draft(&rt.manifest, kind, target).unwrap(),
+        batch,
+        k,
+        max_new: 12,
+        shared_mask: true,
+        kv_blocks,
+    }
+}
+
+fn gen(rt: &Runtime, c: &EngineConfig, prompts: &[Vec<i32>])
+       -> Vec<Vec<i32>> {
+    let mut e = build_engine(rt, c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), prompts, c.max_new).unwrap()
+}
+
+fn some_prompts(rt: &Runtime, n: usize) -> Vec<Vec<i32>> {
+    rt.prompts("code")
+        .unwrap()
+        .take(n)
+        .into_iter()
+        .map(|p| p.prompt)
+        .collect()
+}
+
+/// The five-engine sweep: a deliberately tight pool (4 blocks per
+/// cache — one row's worth plus slack) must produce outputs identical
+/// to the capacity-parity default, across three sequential prompts per
+/// engine.  That only works if (a) rejected speculation is redirected
+/// to the garbage block instead of clobbering live slots, and (b) a
+/// finished sequence's blocks free and are reused cleanly by the next
+/// admission.
+#[test]
+fn tight_pool_outputs_identical_across_all_five_engines() {
+    let rt = Runtime::reference(7);
+    let prompts = some_prompts(&rt, 3);
+    for kind in [EngineKind::Ar, EngineKind::ArPlus, EngineKind::Vsd,
+                 EngineKind::Pard, EngineKind::Eagle] {
+        let base = gen(&rt, &cfg(&rt, kind, "target-l", 8, 1, None),
+                       &prompts);
+        let tight = gen(&rt, &cfg(&rt, kind, "target-l", 8, 1, Some(4)),
+                        &prompts);
+        assert!(base.iter().all(|o| !o.is_empty()),
+                "{kind:?}: default pool generated nothing");
+        assert_eq!(base, tight,
+                   "{kind:?}: tight paged pool changed outputs");
+    }
+}
+
+/// Host fast path under an explicitly paged pool: token-identical to
+/// the scalar oracle with the same pool size (the block-table read
+/// path of DESIGN.md §8 under block reuse).
+#[test]
+fn host_paged_pool_matches_oracle_paged_pool() {
+    let oracle = Runtime::reference(7);
+    let host = Runtime::host(7);
+    let prompts = some_prompts(&oracle, 3);
+    for kind in [EngineKind::ArPlus, EngineKind::Pard] {
+        let a = gen(&oracle,
+                    &cfg(&oracle, kind, "target-m", 4, 2, Some(8)),
+                    &prompts);
+        let b = gen(&host, &cfg(&host, kind, "target-m", 4, 2, Some(8)),
+                    &prompts);
+        assert_eq!(a, b, "{kind:?}: host paged pool diverged");
+    }
+}
+
+/// The tentpole batcher property: with the same memory budget, the
+/// paged pool admits MORE concurrent sequences than the dense layout
+/// could.  12 blocks/cache = 192 slots = floor(192 / S_max) = 2 dense
+/// worst-case rows; short requests reserve 3 blocks each, so all 4
+/// batch slots run simultaneously.
+#[test]
+fn paged_pool_admits_more_than_dense_budget() {
+    let rt = Runtime::reference(7);
+    let kv_blocks = 12usize;
+    let s_max = rt.model("target-m").unwrap().cfg().s_max;
+    let dense_rows = kv_blocks * KV_BLOCK / s_max;
+    assert_eq!(dense_rows, 2, "12 blocks hold 2 dense worst-case rows");
+
+    let ps = rt.prompts("gsm").unwrap().prompts;
+    let trace = build_trace(&ps, 8, Arrival::Closed, 8, 3);
+    let c = EngineConfig {
+        kind: EngineKind::Pard,
+        target: "target-m".to_string(),
+        draft: default_draft(&rt.manifest, EngineKind::Pard, "target-m")
+            .unwrap(),
+        batch: 4,
+        k: 4,
+        max_new: 8,
+        shared_mask: true,
+        kv_blocks: Some(kv_blocks),
+    };
+    let mut e = build_engine(&rt, &c).unwrap();
+    e.warmup().unwrap();
+    let stats = serve_trace_virtual(e.as_mut(), &trace, 1.0).unwrap();
+    assert_eq!(stats.completed, 8, "all requests must complete");
+    assert!(
+        stats.peak_occupancy > dense_rows,
+        "paged pool must beat the dense budget: peak {} vs dense {}",
+        stats.peak_occupancy, dense_rows
+    );
+    assert_eq!(stats.peak_occupancy, 4,
+               "short requests fit all four slots");
+    let m = e.metrics();
+    assert!(m.kv_peak_blocks > 0, "kv gauges must be recorded");
+    assert!(m.kv_peak_blocks <= 2 * kv_blocks as u64,
+            "pools can never exceed their configured size");
+}
+
+/// Pool-exhaustion backpressure through a real engine: a pool sized
+/// for one row serializes a 2-slot batch — stalls are counted, FCFS
+/// holds, everything completes, and blocks drain back to zero.
+#[test]
+fn engine_pool_backpressure_serializes_and_completes() {
+    let rt = Runtime::reference(7);
+    let ps = rt.prompts("code").unwrap().prompts;
+    let trace = build_trace(&ps, 4, Arrival::Closed, 8, 5);
+    let c = EngineConfig {
+        kind: EngineKind::Pard,
+        target: "target-m".to_string(),
+        draft: default_draft(&rt.manifest, EngineKind::Pard, "target-m")
+            .unwrap(),
+        batch: 2,
+        k: 4,
+        max_new: 8,
+        shared_mask: true,
+        kv_blocks: Some(3),
+    };
+    let mut e = build_engine(&rt, &c).unwrap();
+    e.warmup().unwrap();
+    let stats = serve_trace_virtual(e.as_mut(), &trace, 1.0).unwrap();
+    assert_eq!(stats.completed, 4, "backpressure must not drop work");
+    assert_eq!(stats.peak_occupancy, 1,
+               "a one-row pool serializes the batch");
+    assert!(stats.admission_stalls > 0,
+            "waiting on blocks must be visible as stalls");
+    assert_eq!(e.metrics().kv_blocks_in_use, 0,
+               "all blocks released after the last harvest");
+}
+
+/// Raw backend-level garbage redirection: rejected speculative columns
+/// land in the row's garbage block (readable at the garbage position),
+/// never in a live slot, and later garbage columns overwrite earlier
+/// ones.
+#[test]
+fn garbage_block_receives_rejected_columns() {
+    let rt = Runtime::reference(7);
+    let m = rt.model("target-m").unwrap();
+    let mut cache = m.new_cache(1).unwrap();
+    let g = cache.garbage_slot();
+    let hd = m.cfg().n_heads * m.cfg().d_head;
+
+    // prefill 3 tokens, then a verify-shaped call: pending commits
+    // live at 3, two "candidates" are rejected to the garbage slot.
+    let out = m.fwd(1, 3, &[0, 13, 20], &[0, 1, 2], None, &cache)
+        .unwrap();
+    m.commit(1, 3, &out, &[0, 1, 2], &mut cache).unwrap();
+    cache.cur_len[0] = 3;
+    let vout = m
+        .fwd(1, 3, &[30, 31, 32], &[3, 4, 5], None, &cache)
+        .unwrap();
+    m.commit(1, 3, &vout, &[3, g, g], &mut cache).unwrap();
+
+    let staged_k = match &vout.kv {
+        KvStage::Host { k, .. } => k,
+        #[cfg(feature = "pjrt")]
+        KvStage::Pjrt { .. } => unreachable!("reference stages host KV"),
+    };
+    // live slot 3 holds column 0's K; the garbage block holds the LAST
+    // rejected column (col 2 overwrote col 1); slots 4 and 5 untouched.
+    assert_eq!(cache.host_kv(0, 0, 0, 3).unwrap(), &staged_k[..hd]);
+    assert_eq!(cache.host_kv(0, 0, 0, g as usize).unwrap(),
+               &staged_k[2 * hd..3 * hd]);
+    assert_ne!(cache.host_kv(0, 0, 0, g as usize).unwrap(),
+               &staged_k[hd..2 * hd],
+               "later garbage column must win");
+    assert_eq!(cache.host_kv(0, 0, 0, 4).unwrap(), vec![0f32; hd],
+               "rejected candidates must not touch live slots");
+
+    // release returns every block — including the garbage block.
+    assert!(cache.blocks_in_use() >= 2);
+    cache.release_row(0);
+    assert_eq!(cache.blocks_in_use(), 0);
+    assert!(cache.host_kv(0, 0, 0, 3).is_none(),
+            "released rows map nothing");
+}

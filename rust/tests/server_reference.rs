@@ -17,6 +17,7 @@ fn cfg() -> EngineConfig {
         k: 4,
         max_new: 12,
         shared_mask: true,
+        kv_blocks: None,
     }
 }
 
@@ -50,6 +51,81 @@ fn server_thread_serves_reference_backend() {
         .unwrap();
     assert_eq!(resp2.tokens, direct);
 
+    server.shutdown().unwrap();
+}
+
+/// Concurrent requests share the batched loop: a 2-slot server takes
+/// several outstanding submissions at once, batches them through
+/// shared decode iterations, and every response matches the directly
+/// generated greedy stream for its prompt.
+#[test]
+fn server_batches_concurrent_requests() {
+    let rt = Runtime::reference(7);
+    let prompts: Vec<Vec<i32>> = rt
+        .prompts("code")
+        .unwrap()
+        .take(4)
+        .into_iter()
+        .map(|p| p.prompt)
+        .collect();
+
+    // ground truth: the same engine config driven directly
+    let mut c = cfg();
+    c.batch = 2;
+    let mut engine = build_engine(&rt, &c).unwrap();
+    let direct = generate(engine.as_mut(), &prompts, c.max_new).unwrap();
+
+    let server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, c).unwrap();
+    // submit everything before reading any response: all four are
+    // outstanding together, so they must flow through the batched path
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            server
+                .submit(GenRequest {
+                    id: i as u64,
+                    prompt: p.clone(),
+                    max_new: 12,
+                })
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.tokens, direct[i],
+                   "request {i}: batched serving changed the stream");
+    }
+    let m = server.metrics().unwrap();
+    assert_eq!(m.requests, 4);
+    server.shutdown().unwrap();
+}
+
+/// An oversized request (reservation bigger than the whole KV pool)
+/// must fail ITS caller — the reply channel drops — without killing
+/// the engine thread: later, smaller requests still serve.
+#[test]
+fn oversized_request_rejected_without_killing_server() {
+    let mut c = cfg();
+    c.kv_blocks = Some(2); // minimum pool: 1 live + 1 garbage block
+    let server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, c).unwrap();
+    // needs ceil((5 + 64 + 4 + 2)/16) + 1 = 6 blocks > 2: impossible
+    let rx = server
+        .submit(GenRequest { id: 1, prompt: vec![0, 13, 20, 21, 22],
+                             max_new: 64 })
+        .unwrap();
+    assert!(rx.recv().is_err(),
+            "oversized request must surface an error to its caller");
+    // a small request still fits the pool and completes
+    let resp = server
+        .generate(GenRequest { id: 2, prompt: vec![0, 13, 20],
+                               max_new: 4 })
+        .unwrap();
+    assert_eq!(resp.id, 2);
+    assert!(!resp.tokens.is_empty(), "server must keep serving");
     server.shutdown().unwrap();
 }
 

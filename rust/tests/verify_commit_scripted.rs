@@ -195,9 +195,15 @@ fn verify_skips_parked_rows() {
             .unwrap();
     assert!(verdicts[0].is_some());
     assert!(verdicts[1].is_none(), "parked row must yield no verdict");
-    // parked row's cache slots untouched outside the garbage slot
+    // Parked rows own NO storage under the paged cache: their garbage
+    // writes are dropped, so nothing is mapped — not even the slot the
+    // live row committed at.
     let base = seqs[1].target_len as usize;
-    assert_eq!(cache.host_kv(0, 0, 1, base).unwrap()[0], 0.0);
+    assert!(cache.host_kv(0, 0, 1, base).is_none(),
+            "parked row must not allocate blocks");
+    assert!(cache.host_kv(0, 0, 1, cache.garbage_slot() as usize)
+                .is_none(),
+            "parked row must not allocate a garbage block");
 }
 
 #[test]

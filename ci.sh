@@ -18,10 +18,17 @@
 # BENCH_hotpath.json and the script reruns `pard bench --compare` —
 # any >10% per-cell tokens/s regression fails CI.
 #
+# Python mirror gate: when python3 exists, the executable
+# layout-equality mirror (python/refsim/hostsim.py, which also replays
+# the paged block table and prefix-sharing/COW layout) must pass —
+# auto-skipped only when python3 is not installed at all.
+#
 # Usage: ./ci.sh            # build + test + stub typecheck + doc gate
 #                           # + whole-crate fmt/clippy hard gates
+#                           # + refsim mirror gate (needs python3)
 set -euo pipefail
-cd "$(dirname "$0")/rust"
+ROOT="$(cd "$(dirname "$0")" && pwd)"
+cd "$ROOT/rust"
 
 echo "== cargo build --release =="
 cargo build --release
@@ -47,6 +54,13 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "!! clippy not installed — skipping cargo clippy" >&2
+fi
+
+if command -v python3 >/dev/null 2>&1; then
+    echo "== python3 python/refsim/hostsim.py (layout-equality gate) =="
+    (cd "$ROOT" && python3 python/refsim/hostsim.py)
+else
+    echo "!! python3 not installed — skipping refsim hostsim mirror" >&2
 fi
 
 # Opt-in perf gate against a committed baseline report.

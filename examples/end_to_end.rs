@@ -51,6 +51,7 @@ fn main() -> Result<()> {
             max_new,
             shared_mask: true,
             kv_blocks: None,
+            prefix_cache: false,
         };
         let mut base = build_engine(&rt, &mk(EngineKind::ArPlus))?;
         base.warmup()?;
@@ -91,6 +92,7 @@ fn main() -> Result<()> {
             max_new,
             shared_mask: true,
             kv_blocks: None,
+            prefix_cache: false,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;
@@ -112,6 +114,7 @@ fn main() -> Result<()> {
         max_new,
         shared_mask: true,
         kv_blocks: None,
+        prefix_cache: false,
     };
     let mut engine = build_engine(&rt, &cfg)?;
     engine.warmup()?;

@@ -43,6 +43,7 @@ fn main() -> Result<()> {
             max_new: 48,
             shared_mask: true,
             kv_blocks: None,
+            prefix_cache: false,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;

@@ -23,6 +23,14 @@ and asserts they cannot change a live output:
                             k-ascending matmul bit for bit, for any
                             panel partition / lane order — the §8
                             column-decomposition bit-safety claim.
+  7. prefix sharing + COW — rows mapping another row's cached full
+                            blocks read bit-identical bytes to a
+                            private dense prefill (same tokens, same
+                            positions, deterministic weights ⇒ same
+                            K/V), suffix-only prefill reproduces the
+                            full prefill exactly, and a copy-on-write
+                            divergence never leaks into the sharing
+                            row (cache.rs prefix pool, DESIGN.md §7).
 
 Both mirrors use the same numpy primitives over the same values, so
 equality here is exact (==), not approximate.  As with sim.py this
@@ -341,6 +349,171 @@ def check_paged_block_table(m):
           "layout (live, garbage, decode)")
 
 
+class PrefixPool:
+    """Mirror of the Rust prefix-sharing pool: one block store shared
+    by several logical rows, per-row tables, per-block refcounts, a
+    content index over full committed blocks, and copy-on-write when a
+    row commits into a block it shares — the write-side machinery of
+    cache.rs reserve_row_prefixed / release_row_cached / cow_copy."""
+
+    def __init__(self, m, n_blocks, rows):
+        hd = m.h * DH
+        self.L = m.L
+        self.pool_k = np.zeros((n_blocks, m.L, KV_BLOCK, hd), np.float32)
+        self.pool_v = np.zeros((n_blocks, m.L, KV_BLOCK, hd), np.float32)
+        self.free = list(range(n_blocks - 1, -1, -1))
+        self.tables = [[] for _ in range(rows)]
+        self.refc = [0] * n_blocks
+        self.index = {}    # token-prefix tuple -> block id
+        self.owner = {}    # block id -> token-prefix tuple
+        self.cow_copies = 0
+
+    def register(self, row, tokens):
+        """release_row_cached: index the row's full committed blocks
+        under the token prefix they hold, then drop the row's refs."""
+        for i in range(len(tokens) // KV_BLOCK):
+            key = tuple(tokens[:(i + 1) * KV_BLOCK])
+            blk = self.tables[row][i]
+            if key not in self.index and blk not in self.owner:
+                self.index[key] = blk
+                self.owner[blk] = key
+        for blk in self.tables[row]:
+            self.refc[blk] -= 1
+            if self.refc[blk] == 0 and blk not in self.owner:
+                self.free.append(blk)
+        self.tables[row] = []
+
+    def map_prefix(self, row, tokens):
+        """reserve_row_prefixed: map the longest cached block-aligned
+        proper prefix; returns the matched token count."""
+        matched = 0
+        for i in range((len(tokens) - 1) // KV_BLOCK):
+            key = tuple(tokens[:(i + 1) * KV_BLOCK])
+            if key not in self.index:
+                break
+            blk = self.index[key]
+            if self.refc[blk] == 0 and blk in self.free:
+                self.free.remove(blk)
+            self.refc[blk] += 1
+            self.tables[row].append(blk)
+            matched = (i + 1) * KV_BLOCK
+        return matched
+
+    def _writable(self, row, lb):
+        """ensure_covered + the COW hook of host_scatter."""
+        while len(self.tables[row]) <= lb:
+            blk = self.free.pop()
+            self.refc[blk] = 1
+            self.tables[row].append(blk)
+        blk = self.tables[row][lb]
+        if self.refc[blk] > 1:
+            fresh = self.free.pop()
+            self.pool_k[fresh] = self.pool_k[blk]
+            self.pool_v[fresh] = self.pool_v[blk]
+            self.refc[blk] -= 1
+            self.refc[fresh] = 1
+            self.tables[row][lb] = fresh
+            self.cow_copies += 1
+        return self.tables[row][lb]
+
+    def commit(self, row, ks, vs, pos):
+        for col, p in enumerate(pos):
+            s = int(np.clip(p, 0, S_MAX - 2))  # no garbage path here
+            blk = self._writable(row, s // KV_BLOCK)
+            self.pool_k[blk, :, s % KV_BLOCK] = ks[:, col]
+            self.pool_v[blk, :, s % KV_BLOCK] = vs[:, col]
+
+    def dense_view(self, row):
+        hd = self.pool_k.shape[-1]
+        ck = np.zeros((self.L, S_MAX, hd), np.float32)
+        cv = np.zeros((self.L, S_MAX, hd), np.float32)
+        for lb, blk in enumerate(self.tables[row]):
+            lo = lb * KV_BLOCK
+            hi = min(lo + KV_BLOCK, S_MAX)
+            ck[:, lo:hi] = self.pool_k[blk, :, :hi - lo]
+            cv[:, lo:hi] = self.pool_v[blk, :, :hi - lo]
+        return ck, cv
+
+
+def check_prefix_sharing_cow(m):
+    """A row admitted over a cached 2-block prefix — suffix-only
+    prefill through shared blocks — must hold bit-identical cache
+    bytes and produce bit-identical logits to a private row that
+    committed its own dense copy of the same prefix; a COW divergence
+    stays private.  (Every comparison keeps equal call shapes: numpy's
+    BLAS reassociates across different T — the docstring's mirror
+    gotcha — whereas reference.rs/host.rs fix the per-cell order and
+    are shape-independent by construction, unit-proven Rust-side by
+    `commit_then_decode_matches_in_call_attention`.  What this check
+    isolates is the sharing LAYOUT: shared blocks vs a private dense
+    copy of the identical bytes.)"""
+    base = [0] + [13 + (i % 17) for i in range(35)]  # 36 tokens
+    pool = PrefixPool(m, n_blocks=12, rows=2)
+
+    # row 0: prefill the 32-token prefix, commit, extend with its own
+    # tail, commit, release with registration
+    ppos = list(range(32))
+    l0, k0, v0 = fwd_host(m, base[:32], ppos, *fresh_cache(m))
+    pool.commit(0, k0, v0, ppos)
+    tpos0 = list(range(32, len(base)))
+    _, kt0, vt0 = fwd_host(m, base[32:], tpos0, *pool.dense_view(0))
+    pool.commit(0, kt0, vt0, tpos0)
+    pool.register(0, base)
+    assert len(pool.index) == 2, "36 committed tokens = 2 full blocks"
+
+    # row 1: same 32-token prefix, different tail
+    tail = [40, 41, 42, 43]
+    req = base[:32] + tail
+    matched = pool.map_prefix(1, req)
+    assert matched == 32, f"prefix hit must cover 2 blocks, got {matched}"
+    # private dense baseline: commit an OWN copy of the same prefix
+    # (identical call shape as row 0's prefill ⇒ identical bytes),
+    # then the tail
+    ck_d, cv_d = fresh_cache(m)
+    lp, kp, vp = fwd_host(m, req[:32], ppos, ck_d, cv_d)
+    assert np.array_equal(kp, k0) and np.array_equal(vp, v0), \
+        "same tokens, same positions must stage identical K/V"
+    commit(ck_d, cv_d, kp, vp, ppos)
+    # suffix-only prefill through the SHARED blocks vs the private copy
+    spos = list(range(32, len(req)))
+    ls, ksuf, vsuf = fwd_host(m, req[32:], spos, *pool.dense_view(1))
+    ld, kd, vd = fwd_host(m, req[32:], spos, ck_d, cv_d)
+    assert np.array_equal(ls, ld), \
+        "suffix prefill through shared blocks diverged from the \
+         private dense copy"
+    pool.commit(1, ksuf, vsuf, spos)
+    commit(ck_d, cv_d, kd, vd, spos)
+    ck_p, cv_p = pool.dense_view(1)
+    assert np.array_equal(ck_p[:, :len(req)], ck_d[:, :len(req)]), \
+        "shared-prefix cache bytes diverged from private prefill"
+    assert np.array_equal(cv_p[:, :len(req)], cv_d[:, :len(req)])
+
+    # decode steps through the shared table stay bit-identical
+    cur, nxt = len(req), int(np.argmax(ls[-1]))
+    for _ in range(4):
+        lp, kp, vp = fwd_host(m, [nxt], [cur], *pool.dense_view(1))
+        ld, kd, vd = fwd_host(m, [nxt], [cur], ck_d, cv_d)
+        assert np.array_equal(lp, ld), "shared decode step diverged"
+        pool.commit(1, kp, vp, [cur])
+        commit(ck_d, cv_d, kd, vd, [cur])
+        cur += 1
+        nxt = int(np.argmax(lp[0]))
+
+    # COW: row 0 remaps the prefix, then overwrites slot 3; row 1's
+    # bytes must be untouched and row 0 gets a private copy
+    pool.map_prefix(0, req)
+    before = pool.dense_view(1)[0][:, 3].copy()
+    poison_k = np.full((m.L, 1, m.h * DH), 7.25, np.float32)
+    pool.commit(0, poison_k, poison_k, [3])
+    assert pool.cow_copies == 1, "shared-block write must COW"
+    assert np.array_equal(pool.dense_view(1)[0][:, 3], before), \
+        "COW leaked into the sharing row"
+    assert np.array_equal(pool.dense_view(0)[0][:, 3], poison_k[:, 0]), \
+        "writer must see its own bytes"
+    print("  prefix sharing: suffix prefill + shared reads bit-equal "
+          "to private prefill; COW isolated")
+
+
 def check_padded_call_matches_oracle(m):
     """Parked pad columns (garbage slot) must not change live logits,
     and the host path must produce zeros for them."""
@@ -457,6 +630,7 @@ def main(seed=7):
         check_out_of_range_pos(m)
         check_packed_fused_matmul(m)
         check_paged_block_table(m)
+        check_prefix_sharing_cow(m)
     check_end_to_end_streams(Model(seed, "target-m"), "code", 4, 16)
     check_end_to_end_streams(Model(seed, "draft-s"), "gsm", 3, 12)
     print("ALL HOST-PATH EQUIVALENCE CHECKS PASSED")

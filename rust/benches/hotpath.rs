@@ -166,6 +166,7 @@ fn main() -> anyhow::Result<()> {
             max_new: 32,
             shared_mask: true,
             kv_blocks: None,
+            prefix_cache: false,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;

@@ -154,7 +154,7 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
             if slots[slot].is_none() && !stalled {
                 if let Some(&ri) = queue.front() {
                     let req = &trace.requests[ri];
-                    if engine.can_admit(req.prompt.len(), req.max_new) {
+                    if engine.can_admit(&req.prompt, req.max_new) {
                         queue.pop_front();
                         engine.admit(slot, &req.prompt, req.max_new)?;
                         slots[slot] = Some(InFlight { request_idx: ri });
@@ -183,7 +183,7 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
                 let ri = *queue.front().expect("stalled implies a head");
                 let req = &trace.requests[ri];
                 anyhow::ensure!(
-                    engine.can_admit(req.prompt.len(), req.max_new),
+                    engine.can_admit(&req.prompt, req.max_new),
                     "request {ri} (prompt {} + max_new {}) needs more \
                      KV blocks than the whole pool holds — raise \
                      --kv-blocks",
@@ -226,7 +226,16 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
 
     let wall = clock.now();
     let generated = engine.metrics().generated - gen0;
-    engine.metrics_mut().wall_s += wall;
+    // Only REAL elapsed time may enter `Metrics::wall_s` — virtual
+    // seconds land in `virtual_s`, so tokens/s derived from Metrics
+    // after a virtual serve stays a wall-clock number (the ServeStats
+    // below still report the virtual window).
+    match &clock {
+        ServeClock::Wall(_) => engine.metrics_mut().wall_s += wall,
+        ServeClock::Virtual { .. } => {
+            engine.metrics_mut().virtual_s += wall;
+        }
+    }
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = latencies.len();
     let pct = |p: f64| -> f64 {

@@ -35,7 +35,10 @@ impl ArEngine {
     pub fn new(rt: &Runtime, cfg: &EngineConfig, cached: bool)
                -> Result<Self> {
         let target = rt.model(&cfg.target)?;
-        let cache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        let mut cache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        // Prefix sharing only helps the cached variant; uncached AR
+        // commits nothing, so there is nothing to share.
+        cache.set_prefix_sharing(cached && cfg.prefix_cache);
         Ok(ArEngine {
             target,
             cache,
@@ -46,6 +49,15 @@ impl ArEngine {
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
         })
+    }
+
+    /// Record the pool's occupancy + prefix-sharing stats into the
+    /// metrics gauges.
+    fn note_kv(&mut self) {
+        self.metrics.record_kv_blocks(self.cache.blocks_in_use());
+        self.metrics.record_prefix_stats(self.cache.prefix_hit_tokens(),
+                                         self.cache.blocks_shared(),
+                                         self.cache.cow_copies());
     }
 
     fn step_cached(&mut self) -> Result<()> {
@@ -154,19 +166,21 @@ impl Engine for ArEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        if self.cached {
-            // AR+ never drafts: its reservation carries no speculative
-            // tail (k = 0).
-            self.cache
-                .reserve_row(slot, reserve_len(prompt.len(), max_new, 0))?;
+        // AR+ never drafts: its reservation carries no speculative
+        // tail (k = 0).  A prefix hit maps cached blocks and shrinks
+        // the prefill to the uncached suffix.
+        let hit = if self.cached {
+            self.cache.reserve_row_prefixed(
+                slot, prompt, reserve_len(prompt.len(), max_new, 0))?
         } else {
             // uncached AR commits nothing — the row needs no blocks
             self.cache.release_row(slot);
-        }
+            0
+        };
         let mut seq = Sequence::start(prompt, max_new);
         if self.cached {
             let (first, _) = prefill_slot(&*self.target, &mut self.cache,
-                                          slot, prompt, self.pad,
+                                          slot, prompt, hit, self.pad,
                                           &mut self.metrics)?;
             seq.target_len = prompt.len();
             // pending token joins the stream; its KV commits next step
@@ -180,7 +194,7 @@ impl Engine for ArEngine {
             // running one uncached step just for this row below.
         }
         self.seqs[slot] = seq;
-        self.metrics.record_kv_blocks(self.cache.blocks_in_use());
+        self.note_kv();
         Ok(())
     }
 
@@ -190,19 +204,21 @@ impl Engine for ArEngine {
         } else {
             self.step_uncached()?;
         }
-        self.metrics.record_kv_blocks(self.cache.blocks_in_use());
+        self.note_kv();
         Ok(())
     }
 
-    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
+    fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
         !self.cached
-            || self.cache
-                .can_reserve(reserve_len(prompt_len, max_new, 0))
+            || self.cache.can_reserve_prefixed(
+                prompt, reserve_len(prompt.len(), max_new, 0))
     }
 
     fn release(&mut self, slot: usize) {
-        self.cache.release_row(slot);
-        self.metrics.record_kv_blocks(self.cache.blocks_in_use());
+        // Registers the released row's full committed blocks for
+        // prefix reuse (no-op with --prefix-cache off / uncached AR).
+        self.cache.release_row_cached(slot, &self.seqs[slot].stream);
+        self.note_kv();
     }
 
     fn seqs(&self) -> &[Sequence] {

@@ -52,8 +52,14 @@ impl EagleEngine {
         let head = rt.model(&head_name)?;
         anyhow::ensure!(head.cfg().d_model == target.cfg().d_model,
                         "EAGLE head/target width mismatch");
-        let tcache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        let mut tcache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
         let ecache = head.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        // Only the target cache shares prefixes.  The head cache opts
+        // out: its backlog protocol re-feeds the whole prompt through
+        // the first catch-up pass anyway (head K/V depend on target
+        // hiddens, which admit must recompute for the backlog), so a
+        // mapped prefix would only be COW-copied straight back.
+        tcache.set_prefix_sharing(cfg.prefix_cache);
         Ok(EagleEngine {
             d_model: target.cfg().d_model,
             target,
@@ -68,10 +74,15 @@ impl EagleEngine {
         })
     }
 
-    /// Record both pools' occupancy into the metrics gauges.
+    /// Record both pools' occupancy + prefix-sharing stats into the
+    /// metrics gauges (the head cache never shares — see `new`).
     fn note_kv(&mut self) {
         self.metrics.record_kv_blocks(
             self.tcache.blocks_in_use() + self.ecache.blocks_in_use());
+        self.metrics.record_prefix_stats(
+            self.tcache.prefix_hit_tokens(),
+            self.tcache.blocks_shared(),
+            self.tcache.cow_copies());
     }
 
     /// Draft K candidates: one catch-up pass over the backlog pairs, then
@@ -188,7 +199,7 @@ impl Engine for EagleEngine {
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
         let need = reserve_len(prompt.len(), max_new, self.cfg.k);
-        self.tcache.reserve_row(slot, need)?;
+        let t_hit = self.tcache.reserve_row_prefixed(slot, prompt, need)?;
         self.ecache.reserve_row(slot, need)?;
         let mut seq = Sequence::start(prompt, max_new);
         // target prefill with hidden export
@@ -197,7 +208,13 @@ impl Engine for EagleEngine {
         let garbage = self.tcache.garbage_slot();
         let mut buf = CallBuf::parked(b, t, self.pad, garbage);
         for (i, &tok) in prompt.iter().enumerate() {
-            buf.set(slot, i, tok, i as i32, true);
+            // A cached-prefix column is still FED (its hidden row
+            // feeds the head backlog, which a mapped block cannot
+            // provide) but not committed: the shared blocks already
+            // hold exactly these bytes — in-flight attention equals
+            // committed attention bit for bit (DESIGN.md §6/§7) — so
+            // EAGLE's prefix hits share memory, not prefill compute.
+            buf.set(slot, i, tok, i as i32, i >= t_hit);
         }
         let t0 = Instant::now();
         let out =
@@ -249,8 +266,8 @@ impl Engine for EagleEngine {
             let Some(v) = v else { continue };
             let seq = &mut self.seqs[row];
             let pre_len = seq.stream.len(); // before commit
-            apply_verdict(seq, &mut self.tcache, row, v, self.eos,
-                          &mut self.metrics);
+            apply_verdict(seq, &mut self.tcache, row, v, self.cfg.k,
+                          self.eos, &mut self.metrics);
             if seq.done {
                 continue;
             }
@@ -276,13 +293,16 @@ impl Engine for EagleEngine {
         Ok(())
     }
 
-    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
-        let need = reserve_len(prompt_len, max_new, self.cfg.k);
-        self.tcache.can_reserve(need) && self.ecache.can_reserve(need)
+    fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
+        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        self.tcache.can_reserve_prefixed(prompt, need)
+            && self.ecache.can_reserve(need)
     }
 
     fn release(&mut self, slot: usize) {
-        self.tcache.release_row(slot);
+        // Target blocks register for prefix reuse; the head cache
+        // opts out of sharing (see `new`).
+        self.tcache.release_row_cached(slot, &self.seqs[slot].stream);
         self.ecache.release_row(slot);
         self.note_kv();
     }

@@ -50,6 +50,12 @@ pub struct EngineConfig {
     /// Shared-mask strategy (paper §4.3): true = single <mask> id
     /// (enables K_infer > K_train extrapolation).
     pub shared_mask: bool,
+    /// Prefix sharing across requests (`--prefix-cache`, DESIGN.md
+    /// §7): released rows keep their full committed KV blocks cached,
+    /// and `admit` maps the longest cached block-aligned prompt prefix
+    /// into the new row, prefilling only the uncached suffix.
+    /// Bit-identical outputs; host-side paged caches only.
+    pub prefix_cache: bool,
     /// Block count of each KV cache's paged pool (`--kv-blocks`,
     /// DESIGN.md §7).  `None` keeps capacity parity with the dense
     /// layout (every row can grow to `S_max`); an explicit size turns
@@ -148,12 +154,14 @@ pub trait Engine {
     fn warmup(&mut self) -> Result<()>;
 
     /// Memory-bounded admission gate (DESIGN.md §7): would `admit` of
-    /// a prompt of this size succeed right now without exhausting the
-    /// KV block pools?  Engines with paged caches answer from their
-    /// pools' unreserved headroom; the default (backend-less fakes,
-    /// dense device caches) admits freely.
-    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
-        let _ = (prompt_len, max_new);
+    /// this prompt succeed right now without exhausting the KV block
+    /// pools?  Engines with paged caches answer from their pools'
+    /// unreserved headroom — under prefix sharing a prompt whose
+    /// prefix is cached needs only its uncached remainder, so the gate
+    /// takes the prompt tokens, not just a length.  The default
+    /// (backend-less fakes, dense device caches) admits freely.
+    fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
+        let _ = (prompt, max_new);
         true
     }
 
@@ -203,22 +211,35 @@ pub fn reserve_len(prompt_len: usize, max_new: usize, k: usize)
     prompt_len + max_new + k + 2
 }
 
-/// Prefill one slot of a (possibly multi-row) cache: feeds the prompt,
-/// commits its KV, and returns (first generated token, last-row hidden if
-/// the model exports it).
-/// Fixed prefill bucket: prompts are < 32 tokens by construction, so one
-/// stable executable serves every prefill (no mid-run JIT).
+/// Prefill one slot of a (possibly multi-row) cache: feeds the prompt
+/// from token `start` on (tokens before `start` are already committed —
+/// a prefix-cache hit mapped their blocks into the row), commits the
+/// suffix KV, and returns (first generated token, last-row hidden if
+/// the model exports it).  `start = 0` is the full dense-era prefill.
+/// The suffix attends the cached prefix through the block table, so
+/// the result is bit-identical to a full prefill (the cached-decode
+/// identity, DESIGN.md §6).
+/// Minimum prefill bucket: task prompts are < 32 tokens by
+/// construction, so one stable executable serves their prefills (no
+/// mid-run JIT).  Shared-prefix workloads (`--shared-prefix`) prepend
+/// a system prompt and can exceed it — `pick_t` then sizes up, which
+/// is exact-T (free) on the host/reference backends; a PJRT bucket
+/// tuner must account for `prefix_len + tail` shapes.
 pub const PREFILL_T: usize = 32;
 
 pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
-                    prompt: &[i32], pad: i32, metrics: &mut Metrics)
+                    prompt: &[i32], start: usize, pad: i32,
+                    metrics: &mut Metrics)
                     -> Result<(i32, Option<Vec<f32>>)> {
+    debug_assert!(start < prompt.len(),
+                  "prefix hits always leave a suffix to prefill");
     let b = cache.batch;
-    let t = model.pick_t(b, prompt.len().max(PREFILL_T))?;
+    let suffix = &prompt[start..];
+    let t = model.pick_t(b, suffix.len().max(PREFILL_T))?;
     let garbage = cache.garbage_slot();
     let mut buf = CallBuf::parked(b, t, pad, garbage);
-    for (i, &tok) in prompt.iter().enumerate() {
-        buf.set(slot, i, tok, i as i32, true);
+    for (i, &tok) in suffix.iter().enumerate() {
+        buf.set(slot, i, tok, (start + i) as i32, true);
     }
     let t0 = Instant::now();
     let out = model.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
@@ -228,7 +249,7 @@ pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
     metrics.target_passes += 1;
     cache.cur_len[slot] = prompt.len() as u32;
     let vocab = model.cfg().vocab;
-    let last = prompt.len() - 1;
+    let last = suffix.len() - 1;
     let row = &out.logits
         [(slot * t + last) * vocab..(slot * t + last + 1) * vocab];
     let first = argmax(row);
@@ -318,8 +339,13 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
             // accepted candidate's KV is valid: commit it
             buf.cpos[row * t + 1 + j] = base + 1 + j as i32;
         }
+        // Hidden rows for [pending, c_0..]: clamp to the row's actual
+        // candidate count — columns past it are parked PAD cells whose
+        // hidden is garbage by contract (today every engine drafts
+        // exactly `k` candidates per active row, but a short-drafting
+        // row must not hand parked-cell junk to EAGLE's feature chain).
         let hidden_rows = out.hidden.as_ref().map(|h| {
-            (0..=k.min(t - 1))
+            (0..=cands[row].len().min(t - 1))
                 .map(|i| {
                     h[(row * t + i) * d..(row * t + i + 1) * d].to_vec()
                 })
@@ -334,9 +360,11 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
     Ok(verdicts)
 }
 
-/// Apply a verdict to the sequence + target cache bookkeeping.
+/// Apply a verdict to the sequence + target cache bookkeeping.  `k` is
+/// the engine's configured candidate depth — the headroom guard below
+/// must track it, not a worst-case constant.
 pub fn apply_verdict(seq: &mut Sequence, cache: &mut KvCache, row: usize,
-                     verdict: &RowVerdict, eos: i32,
+                     verdict: &RowVerdict, k: usize, eos: i32,
                      metrics: &mut Metrics) {
     let taken = seq.push_committed(&verdict.committed, eos);
     metrics.generated += taken as u64;
@@ -347,8 +375,12 @@ pub fn apply_verdict(seq: &mut Sequence, cache: &mut KvCache, row: usize,
         metrics.requests += 1;
         return;
     }
-    // Cache headroom guard: stop rows that would overflow the window.
-    if seq.target_len as u32 + 2 * 16 + 2 >= cache.max_live_pos() {
+    // Cache headroom guard: stop rows whose next iteration could
+    // overflow the window.  The deepest position a verify touches is
+    // `target_len + k` (pending + K candidates), guarded with the same
+    // `k + 2` tail `reserve_len` reserves — NOT a hardcoded worst-case
+    // K, which parked small-K rows up to 30 positions early.
+    if seq.target_len as u32 + k as u32 + 2 >= cache.max_live_pos() {
         seq.done = true;
         seq.active = false;
         metrics.requests += 1;
@@ -385,7 +417,7 @@ pub fn generate(engine: &mut dyn Engine, prompts: &[Vec<i32>],
             if idle {
                 slot_owner[slot] = None;
                 if next < prompts.len()
-                    && engine.can_admit(prompts[next].len(), max_new)
+                    && engine.can_admit(&prompts[next], max_new)
                 {
                     engine.admit(slot, &prompts[next], max_new)?;
                     slot_owner[slot] = Some(next);

@@ -39,8 +39,10 @@ impl VsdEngine {
             .clone()
             .ok_or_else(|| anyhow::anyhow!("VSD requires a draft model"))?;
         let draft = rt.model(&draft_name)?;
-        let tcache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
-        let dcache = draft.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        let mut tcache = target.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        let mut dcache = draft.new_cache_sized(cfg.batch, cfg.kv_blocks)?;
+        tcache.set_prefix_sharing(cfg.prefix_cache);
+        dcache.set_prefix_sharing(cfg.prefix_cache);
         Ok(VsdEngine {
             target,
             draft,
@@ -54,10 +56,16 @@ impl VsdEngine {
         })
     }
 
-    /// Record both pools' occupancy into the metrics gauges.
+    /// Record both pools' occupancy + prefix-sharing stats into the
+    /// metrics gauges.
     fn note_kv(&mut self) {
         self.metrics.record_kv_blocks(
             self.tcache.blocks_in_use() + self.dcache.blocks_in_use());
+        self.metrics.record_prefix_stats(
+            self.tcache.prefix_hit_tokens()
+                + self.dcache.prefix_hit_tokens(),
+            self.tcache.blocks_shared() + self.dcache.blocks_shared(),
+            self.tcache.cow_copies() + self.dcache.cow_copies());
     }
 
     /// Draft K candidates for every active row: one catch-up pass plus
@@ -151,16 +159,18 @@ impl Engine for VsdEngine {
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
         let need = reserve_len(prompt.len(), max_new, self.cfg.k);
-        self.tcache.reserve_row(slot, need)?;
-        self.dcache.reserve_row(slot, need)?;
+        // Prefix hits map cached blocks in; only the uncached suffix
+        // of each cache is prefilled (hits may differ per cache).
+        let t_hit = self.tcache.reserve_row_prefixed(slot, prompt, need)?;
+        let d_hit = self.dcache.reserve_row_prefixed(slot, prompt, need)?;
         let mut seq = Sequence::start(prompt, max_new);
         let (first, _) = prefill_slot(&*self.target, &mut self.tcache,
-                                      slot, prompt, self.pad,
+                                      slot, prompt, t_hit, self.pad,
                                       &mut self.metrics)?;
         // draft prefill: its own cache over the same prompt
         let mut dm = Metrics::default();
         let _ = prefill_slot(&*self.draft, &mut self.dcache, slot, prompt,
-                             self.pad, &mut dm)?;
+                             d_hit, self.pad, &mut dm)?;
         self.metrics.prefill_s += dm.prefill_s;
         self.metrics.fwd_s += dm.fwd_s;
         self.metrics.fwd_ops.add(&dm.fwd_ops);
@@ -184,21 +194,24 @@ impl Engine for VsdEngine {
         for (row, v) in verdicts.iter().enumerate() {
             if let Some(v) = v {
                 apply_verdict(&mut self.seqs[row], &mut self.tcache, row, v,
-                              self.eos, &mut self.metrics);
+                              self.cfg.k, self.eos, &mut self.metrics);
             }
         }
         self.note_kv();
         Ok(())
     }
 
-    fn can_admit(&self, prompt_len: usize, max_new: usize) -> bool {
-        let need = reserve_len(prompt_len, max_new, self.cfg.k);
-        self.tcache.can_reserve(need) && self.dcache.can_reserve(need)
+    fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
+        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        self.tcache.can_reserve_prefixed(prompt, need)
+            && self.dcache.can_reserve_prefixed(prompt, need)
     }
 
     fn release(&mut self, slot: usize) {
-        self.tcache.release_row(slot);
-        self.dcache.release_row(slot);
+        // Registers the released row's full committed blocks for
+        // prefix reuse (no-op with --prefix-cache off).
+        self.tcache.release_row_cached(slot, &self.seqs[slot].stream);
+        self.dcache.release_row_cached(slot, &self.seqs[slot].stream);
         self.note_kv();
     }
 

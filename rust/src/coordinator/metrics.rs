@@ -30,7 +30,13 @@ pub struct Metrics {
     /// all-zero otherwise.  `fwd_ops.total() <= fwd_s` always.
     pub fwd_ops: FwdOps,
     /// End-to-end generate() wall clock (includes coordinator overhead).
+    /// REAL time only — a virtual-clock serve accrues `virtual_s`
+    /// instead, so `tps()` never divides by simulated seconds.
     pub wall_s: f64,
+    /// Simulated seconds accumulated by virtual-clock serving windows
+    /// (`serve_trace_virtual`); kept apart from `wall_s` so derived
+    /// wall-clock rates stay honest.
+    pub virtual_s: f64,
     /// Decode iterations executed.
     pub iterations: u64,
     /// Draft-model forward passes (K per iter for VSD/EAGLE, 1 for PARD).
@@ -63,6 +69,15 @@ pub struct Metrics {
     /// admitted because the KV pool lacked unreserved blocks
     /// (memory-bounded admission backpressure).
     pub admission_stalls: u64,
+    /// Prompt tokens served from cached prefix blocks at admit,
+    /// cumulative over the engine's caches (`--prefix-cache`).
+    pub prefix_hit_tokens: u64,
+    /// High-water mark of extra references onto shared KV blocks (a
+    /// block mapped by r rows contributes r-1).
+    pub kv_blocks_shared: u64,
+    /// Copy-on-write block copies, cumulative over the engine's
+    /// caches (0 under the engine protocol — COW is a safety net).
+    pub cow_copies: u64,
 }
 
 impl Metrics {
@@ -81,6 +96,16 @@ impl Metrics {
     pub fn record_kv_blocks(&mut self, in_use: usize) {
         self.kv_blocks_in_use = in_use as u64;
         self.kv_peak_blocks = self.kv_peak_blocks.max(in_use as u64);
+    }
+
+    /// Observe the engine's prefix-sharing state (summed over its
+    /// caches): `hit_tokens`/`cow` are the caches' cumulative counters
+    /// (assigned), `shared` a gauge whose peak is kept.
+    pub fn record_prefix_stats(&mut self, hit_tokens: u64, shared: usize,
+                               cow: u64) {
+        self.prefix_hit_tokens = hit_tokens;
+        self.kv_blocks_shared = self.kv_blocks_shared.max(shared as u64);
+        self.cow_copies = cow;
     }
 
     pub fn record_acceptance(&mut self, offered: usize, accepted: usize) {
@@ -175,6 +200,7 @@ impl Metrics {
         self.commit_s += o.commit_s;
         self.fwd_ops.add(&o.fwd_ops);
         self.wall_s += o.wall_s;
+        self.virtual_s += o.virtual_s;
         self.iterations += o.iterations;
         self.draft_passes += o.draft_passes;
         self.target_passes += o.target_passes;
@@ -188,6 +214,10 @@ impl Metrics {
             .max(o.kv_blocks_in_use);
         self.kv_peak_blocks = self.kv_peak_blocks.max(o.kv_peak_blocks);
         self.admission_stalls += o.admission_stalls;
+        self.prefix_hit_tokens += o.prefix_hit_tokens;
+        self.kv_blocks_shared = self.kv_blocks_shared
+            .max(o.kv_blocks_shared);
+        self.cow_copies += o.cow_copies;
         if self.offered_pos.len() < o.offered_pos.len() {
             self.offered_pos.resize(o.offered_pos.len(), 0);
             self.accept_pos.resize(o.accept_pos.len(), 0);

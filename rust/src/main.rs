@@ -3,9 +3,10 @@
 //! Subcommands (hand-rolled parsing; clap is not vendored offline):
 //!   eval   --engine pard --target target-l [--task code] [--k 8]
 //!          [--batch 1] [--prompts N] [--max-new N] [--draft NAME]
-//!          [--kv-blocks N]
+//!          [--kv-blocks N] [--prefix-cache]
 //!   serve  --engine pard --target target-l [--n N] [--rate R]
-//!          [--kv-blocks N] [--virtual-tick S]
+//!          [--kv-blocks N] [--virtual-tick S] [--prefix-cache]
+//!          [--shared-prefix N] [--prefix-len L]
 //!   bench  [--k 2,4,8] [--batch 1,4] [--prompts N] [--max-new N]
 //!          [--task code] [--target target-l] [--seed N] [--no-oracle]
 //!          [--out BENCH_hotpath.json] [--compare OLD.json]
@@ -24,7 +25,13 @@
 //! cache's paged block pool (DESIGN.md §7) — admission then waits on
 //! free blocks instead of assuming worst-case dense rows — and
 //! `serve --virtual-tick S` runs the batcher on a deterministic
-//! virtual clock (S seconds per decode iteration).  `bench --compare
+//! virtual clock (S seconds per decode iteration).  `--prefix-cache`
+//! turns on cross-request prefix sharing in the paged pools (released
+//! rows keep their full blocks cached; later prompts map the longest
+//! cached prefix and prefill only the suffix — bit-identical outputs),
+//! and `serve --shared-prefix N` generates the matching workload: N
+//! distinct system prompts of `--prefix-len L` tokens (default 32)
+//! prepended round-robin to the task prompts.  `bench --compare
 //! OLD.json` fails on any >10% tokens/s regression against an older
 //! report.
 
@@ -39,7 +46,8 @@ use pard::report::bench::{compare_reports, hotpath_report, write_report,
                           BenchOpts, BENCH_FILE, COMPARE_TOL};
 use pard::report::{self, RunScale};
 use pard::substrate::json::Json;
-use pard::substrate::workload::{build_trace, Arrival};
+use pard::substrate::workload::{build_shared_prefix_trace, build_trace,
+                                Arrival};
 use pard::Runtime;
 
 struct Args {
@@ -175,6 +183,7 @@ fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
         max_new: args.usize("max-new", 64),
         shared_mask: !args.flag("distinct-mask"),
         kv_blocks: kv_blocks_opt(args)?,
+        prefix_cache: args.flag("prefix-cache"),
     })
 }
 
@@ -219,8 +228,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(r) => Arrival::Poisson { rate: r.parse()? },
         None => Arrival::Closed,
     };
-    let trace = build_trace(&prompts, n, arrival, cfg.max_new,
-                            args.usize("seed", 7) as u64);
+    // --shared-prefix N: synthesize N distinct system prompts of
+    // --prefix-len tokens and prepend them round-robin (the workload
+    // --prefix-cache exists for).
+    let seed = args.usize("seed", 7) as u64;
+    let trace = match args.usize("shared-prefix", 0) {
+        0 => build_trace(&prompts, n, arrival, cfg.max_new, seed),
+        np => build_shared_prefix_trace(&prompts, n, np,
+                                        args.usize("prefix-len", 32),
+                                        arrival, cfg.max_new, seed),
+    };
     let mut engine =
         pard::coordinator::engines::build_engine(&rt, &cfg)?;
     engine.warmup()?;
@@ -246,6 +263,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = engine.metrics();
     println!("kv: peak blocks={}  admission stalls={}",
              m.kv_peak_blocks, stats.admission_stalls);
+    if cfg.prefix_cache {
+        println!("prefix cache: hit tokens={}  peak shared blocks={}  \
+                  cow copies={}",
+                 m.prefix_hit_tokens, m.kv_blocks_shared, m.cow_copies);
+    }
     Ok(())
 }
 

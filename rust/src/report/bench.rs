@@ -120,6 +120,7 @@ fn sweep(rt: &Runtime, o: &BenchOpts) -> Result<Vec<RunRow>> {
                     max_new: o.max_new,
                     shared_mask: true,
                     kv_blocks: None,
+                    prefix_cache: false,
                 };
                 let prompts = rt.prompts(&o.task)?.take(o.n_prompts);
                 let r = run_eval(rt, &cfg, &prompts, o.max_new, &o.task)?;
@@ -165,13 +166,17 @@ fn row_json(row: &RunRow, base_tps: f64) -> Json {
             ("mlp_s", num(ops.mlp_s)),
             ("logits_s", num(ops.logits_s)),
         ])),
-        // Paged KV pool stats (DESIGN.md §7): occupancy gauges and
-        // admission backpressure.  Additive v1 fields; `--compare`
-        // keys on tokens_per_s only, so older reports stay valid.
+        // Paged KV pool stats (DESIGN.md §7): occupancy gauges,
+        // admission backpressure, and prefix-sharing counters.
+        // Additive v1 fields; `--compare` keys on tokens_per_s only,
+        // so older reports stay valid.
         ("kv", obj(vec![
             ("blocks_in_use", num(m.kv_blocks_in_use as f64)),
             ("peak_blocks", num(m.kv_peak_blocks as f64)),
             ("admission_stalls", num(m.admission_stalls as f64)),
+            ("prefix_hit_tokens", num(m.prefix_hit_tokens as f64)),
+            ("blocks_shared", num(m.kv_blocks_shared as f64)),
+            ("cow_copies", num(m.cow_copies as f64)),
         ])),
         ("draft_s", num(m.draft_s)),
         ("verify_s", num(m.verify_s)),
@@ -199,6 +204,64 @@ fn rows_json(rows: &[RunRow]) -> Json {
             .map(|r| row_json(r, *base.get(&r.batch).unwrap_or(&0.0)))
             .collect(),
     )
+}
+
+/// Shared-prefix serving rows (`serving_prefix` in the report): the
+/// same shared-system-prompt trace served twice through PARD on the
+/// virtual clock — prefix cache off, then on — over a deliberately
+/// tight pool, so the report carries the hit-rate/concurrency win the
+/// prefix cache buys (DESIGN.md §7).  Virtual clock + deterministic
+/// backend ⇒ every number here is exact run-to-run.
+fn serving_prefix_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
+    use crate::coordinator::batcher::serve_trace_virtual;
+    use crate::coordinator::engines::build_engine;
+    use crate::substrate::workload::{build_shared_prefix_trace, Arrival};
+    let k = o.ks.first().copied().unwrap_or(4);
+    let max_new = o.max_new.min(16);
+    let (kv_blocks, n_req, n_prefixes, prefix_len) = (8usize, 8, 2, 32);
+    let prompts = rt.prompts(&o.task)?.prompts;
+    let trace = build_shared_prefix_trace(&prompts, n_req, n_prefixes,
+                                          prefix_len, Arrival::Closed,
+                                          max_new, o.seed);
+    let mut rows = Vec::new();
+    for share in [false, true] {
+        let cfg = EngineConfig {
+            kind: EngineKind::Pard,
+            target: o.target.clone(),
+            draft: default_draft(&rt.manifest, EngineKind::Pard,
+                                 &o.target)?,
+            batch: 4,
+            k,
+            max_new,
+            shared_mask: true,
+            kv_blocks: Some(kv_blocks),
+            prefix_cache: share,
+        };
+        let mut engine = build_engine(rt, &cfg)?;
+        engine.warmup()?;
+        let stats = serve_trace_virtual(engine.as_mut(), &trace, 1.0)?;
+        let m = engine.metrics();
+        rows.push(obj(vec![
+            ("prefix_cache", Json::Bool(share)),
+            ("completed", num(stats.completed as f64)),
+            ("peak_occupancy", num(stats.peak_occupancy as f64)),
+            ("admission_stalls", num(stats.admission_stalls as f64)),
+            ("kv_peak_blocks", num(m.kv_peak_blocks as f64)),
+            ("prefix_hit_tokens", num(m.prefix_hit_tokens as f64)),
+            ("blocks_shared", num(m.kv_blocks_shared as f64)),
+            ("cow_copies", num(m.cow_copies as f64)),
+        ]));
+    }
+    Ok(obj(vec![
+        ("engine", Json::Str("PARD".to_string())),
+        ("k", num(k as f64)),
+        ("batch", num(4.0)),
+        ("kv_blocks", num(kv_blocks as f64)),
+        ("n_requests", num(n_req as f64)),
+        ("shared_prefixes", num(n_prefixes as f64)),
+        ("prefix_len", num(prefix_len as f64)),
+        ("rows", Json::Arr(rows)),
+    ]))
 }
 
 /// Run the sweep and build the full report document.
@@ -232,6 +295,7 @@ pub fn hotpath_report(opts: &BenchOpts) -> Result<Json> {
             ("batch", nums(&opts.batches)),
         ])),
         ("runs", rows_json(&host_rows)),
+        ("serving_prefix", serving_prefix_json(&host_rt, opts)?),
     ];
 
     if opts.oracle {

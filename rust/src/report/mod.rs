@@ -58,6 +58,7 @@ pub fn cell(rt: &Runtime, kind: EngineKind, target: &str, task: &str,
         max_new: scale.max_new,
         shared_mask: true,
         kv_blocks: None,
+        prefix_cache: false,
     };
     let prompts = rt.prompts(task)?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, task)
@@ -428,6 +429,7 @@ fn pard_cell(rt: &Runtime, variant: &str, target: &str, k: usize,
         max_new: scale.max_new,
         shared_mask: shared,
         kv_blocks: None,
+        prefix_cache: false,
     };
     let prompts = rt.prompts("math")?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, "math")

@@ -30,9 +30,29 @@
 //! the position mask keeps them unattendable until re-fed, exactly as
 //! before.
 //!
+//! **Prefix sharing** (`--prefix-cache`, DESIGN.md §7): with sharing
+//! enabled, a released row's *full* committed blocks stay registered
+//! in a content index keyed by the chained hash of the token prefix
+//! they hold (the cache is per model, so the key is effectively
+//! `(model, token-prefix)`).  [`KvCache::reserve_row_prefixed`] maps
+//! the longest cached block-aligned prefix of a new prompt straight
+//! into the row's table — several rows then *share* physical blocks,
+//! refcounted, and the engine prefills only the uncached suffix.
+//! Bit-identity holds because a shared block contains exactly the
+//! bytes a private dense prefill would produce: same tokens, same
+//! positions, deterministic weights ⇒ identical K/V.  Registered
+//! blocks nobody references sit on an LRU list: reusable by the next
+//! prefix hit, evicted (oldest first) when the free list runs dry.
+//! Commits into a block a row shares trigger **copy-on-write** — a
+//! safety net the engine protocol never exercises (only full blocks
+//! are shared and commits never land below `cur_len`), kept so a
+//! buggy or future caller can never corrupt another row's prefix.
+//!
 //! The PJRT device cache (feature `pjrt`) keeps its dense
 //! device-resident layout; the paged machinery is host-side state and
 //! degenerates to no-ops there.
+
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Result;
 
@@ -52,6 +72,36 @@ pub enum CacheState {
     /// (never crosses to the host).
     #[cfg(feature = "pjrt")]
     Device(xla::PjRtBuffer),
+}
+
+/// Chain-hash seed of the empty prefix (FNV-1a offset basis): block 0
+/// of every row hashes against this parent.
+const PREFIX_CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One link of the prefix chain hash: fold `tokens` into `parent`
+/// (FNV-1a over the little-endian token bytes).  The chain makes a
+/// block's key depend on its *entire* token history, which is what
+/// K/V bytes at a slot actually depend on.
+fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = parent ^ 0x9e37_79b9_7f4a_7c15;
+    for &t in tokens {
+        for b in (t as u32).to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Registration record of a cached full block: the chain hash it is
+/// indexed under, its parent's chain hash, and the [`KV_BLOCK`] tokens
+/// it holds.  Lookups verify `parent` and `tokens` (not just the
+/// 64-bit key), so a hash collision cannot alias two different
+/// prefixes — the chain below the match was verified the same way.
+#[derive(Debug, Clone)]
+struct BlockMeta {
+    hash: u64,
+    parent: u64,
+    tokens: Vec<i32>,
 }
 
 /// One batch row's view of the pool: which physical block backs each
@@ -97,16 +147,34 @@ pub struct KvCache {
     paged: bool,
     /// Total pool blocks.
     n_blocks: usize,
-    /// Unallocated block ids (LIFO; freed blocks are reused unzeroed).
+    /// Unallocated block ids with no cached content (LIFO; freed
+    /// blocks are reused unzeroed).
     free: Vec<u32>,
     /// Sum of all rows' outstanding reservations; the invariant
-    /// `free.len() >= reserved_total` is what makes admitted rows
-    /// stall-free.
+    /// `reclaimable() >= reserved_total` is what makes admitted rows
+    /// stall-free (LRU-cached blocks are evictable on demand).
     reserved_total: usize,
     /// Per-row block tables.
     tables: Vec<BlockTable>,
     /// High-water mark of allocated blocks over this cache's lifetime.
     peak_in_use: usize,
+    /// Prefix sharing enabled (`--prefix-cache`): released rows
+    /// register their full committed blocks for reuse.
+    sharing: bool,
+    /// Row-table references per pool block (a block shared by two rows
+    /// counts 2; garbage blocks count 1; free/LRU blocks 0).
+    ref_count: Vec<u32>,
+    /// Prefix-chain hash → cached block id (one block per hash).
+    index: BTreeMap<u64, u32>,
+    /// Registration record per block (`None` = unregistered).
+    meta: Vec<Option<BlockMeta>>,
+    /// Registered blocks no row references, oldest first: reusable by
+    /// a prefix hit, evicted from the front when `free` runs dry.
+    lru: VecDeque<u32>,
+    /// Cumulative prompt tokens served from cached blocks at admit.
+    prefix_hits: u64,
+    /// Cumulative copy-on-write block copies.
+    cow: u64,
 }
 
 impl KvCache {
@@ -146,6 +214,13 @@ impl KvCache {
             reserved_total: 0,
             tables: vec![BlockTable::default(); batch],
             peak_in_use: 0,
+            sharing: false,
+            ref_count: vec![0; n_blocks],
+            index: BTreeMap::new(),
+            meta: vec![None; n_blocks],
+            lru: VecDeque::new(),
+            prefix_hits: 0,
+            cow: 0,
         })
     }
 
@@ -174,6 +249,13 @@ impl KvCache {
             reserved_total: 0,
             tables: vec![BlockTable::default(); batch],
             peak_in_use: 0,
+            sharing: false,
+            ref_count: Vec::new(),
+            index: BTreeMap::new(),
+            meta: Vec::new(),
+            lru: VecDeque::new(),
+            prefix_hits: 0,
+            cow: 0,
         })
     }
 
@@ -208,9 +290,11 @@ impl KvCache {
         self.n_blocks
     }
 
-    /// Currently allocated blocks (pool minus free list).
+    /// Currently allocated blocks: referenced by a row table (shared
+    /// blocks count once).  Cached-but-unreferenced (LRU) blocks are
+    /// reclaimable and do not count.
     pub fn blocks_in_use(&self) -> usize {
-        self.n_blocks - self.free.len()
+        self.n_blocks - self.free.len() - self.lru.len()
     }
 
     /// Lifetime high-water mark of [`KvCache::blocks_in_use`].
@@ -218,10 +302,16 @@ impl KvCache {
         self.peak_in_use
     }
 
-    /// Free blocks not promised to any admitted row — the headroom new
-    /// admissions draw from.
+    /// Blocks an allocation can draw from: the free list plus the
+    /// cached-but-unreferenced LRU blocks (evictable on demand).
+    fn reclaimable(&self) -> usize {
+        self.free.len() + self.lru.len()
+    }
+
+    /// Reclaimable blocks not promised to any admitted row — the
+    /// headroom new admissions draw from.
     pub fn unreserved_free(&self) -> usize {
-        self.free.len() - self.reserved_total
+        self.reclaimable() - self.reserved_total
     }
 
     /// Memory-bounded admission gate: can a sequence of up to `len`
@@ -229,6 +319,152 @@ impl KvCache {
     /// row's reservation?  Always true on non-paged (device) caches.
     pub fn can_reserve(&self, len: usize) -> bool {
         !self.paged || self.unreserved_free() >= self.blocks_for(len)
+    }
+
+    /// Admission arithmetic shared by the gate and the reservation —
+    /// ONE definition so `can_reserve_prefixed == true` always implies
+    /// `reserve_row_prefixed` succeeds (the batcher's backpressure
+    /// contract): the matched prefix blocks, how many of them would
+    /// leave the LRU (shrinking the reclaimable pool), and the
+    /// fresh-block need for `len` slots past them.
+    fn admission_plan(&self, tokens: &[i32], len: usize)
+                      -> (Vec<u32>, usize, usize) {
+        let blocks = self.match_blocks(tokens);
+        let from_lru = blocks
+            .iter()
+            .filter(|&&b| self.ref_count[b as usize] == 0)
+            .count();
+        let need = self.blocks_for(len).saturating_sub(blocks.len());
+        (blocks, from_lru, need)
+    }
+
+    /// Does a plan from [`KvCache::admission_plan`] fit the pool right
+    /// now without eating another admitted row's reservation?
+    fn admission_fits(&self, from_lru: usize, need: usize) -> bool {
+        self.reclaimable() - from_lru >= self.reserved_total + need
+    }
+
+    /// [`KvCache::can_reserve`] over shared headroom: a prompt whose
+    /// prefix is cached needs only its uncached remainder of fresh
+    /// blocks (matched blocks are shared and counted once).
+    pub fn can_reserve_prefixed(&self, tokens: &[i32], len: usize)
+                                -> bool {
+        if !self.paged {
+            return true;
+        }
+        let (_, from_lru, need) = self.admission_plan(tokens, len);
+        self.admission_fits(from_lru, need)
+    }
+
+    /// Enable/disable prefix sharing (no-op on non-paged caches):
+    /// released rows register their full committed blocks, and
+    /// [`KvCache::reserve_row_prefixed`] serves prefix hits from them.
+    pub fn set_prefix_sharing(&mut self, on: bool) {
+        self.sharing = on && self.paged;
+    }
+
+    /// Cumulative prompt tokens served from cached prefix blocks.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    /// Cumulative copy-on-write block copies (0 under the engine
+    /// protocol — see the module docs).
+    pub fn cow_copies(&self) -> u64 {
+        self.cow
+    }
+
+    /// Extra row-table references onto shared blocks right now: a
+    /// block mapped by `r` rows contributes `r - 1`.
+    pub fn blocks_shared(&self) -> usize {
+        self.ref_count
+            .iter()
+            .filter(|&&r| r > 1)
+            .map(|&r| r as usize - 1)
+            .sum()
+    }
+
+    /// Drop the content registration of `blk` (about to be evicted or
+    /// overwritten): its bytes no longer answer for any prefix.
+    fn unregister(&mut self, blk: u32) {
+        if let Some(m) = self.meta[blk as usize].take() {
+            self.index.remove(&m.hash);
+        }
+    }
+
+    /// Walk the prefix chain of `tokens` through the content index and
+    /// return the cached block ids covering its longest block-aligned
+    /// proper prefix.  Proper: at least one suffix token is always
+    /// left for the caller to prefill (first-token logits need it).
+    fn match_blocks(&self, tokens: &[i32]) -> Vec<u32> {
+        let mut blocks = Vec::new();
+        if !self.sharing || tokens.is_empty() {
+            return blocks;
+        }
+        let nb_max = (tokens.len() - 1) / KV_BLOCK;
+        let mut parent = PREFIX_CHAIN_SEED;
+        for i in 0..nb_max {
+            let toks = &tokens[i * KV_BLOCK..(i + 1) * KV_BLOCK];
+            let h = chain_hash(parent, toks);
+            match self.index.get(&h) {
+                Some(&blk)
+                    if self.meta[blk as usize]
+                        .as_ref()
+                        .is_some_and(|m| m.parent == parent
+                                     && m.tokens == toks) =>
+                {
+                    blocks.push(blk);
+                    parent = h;
+                }
+                _ => break,
+            }
+        }
+        blocks
+    }
+
+    /// Longest cached block-aligned proper prefix of `tokens`, in
+    /// tokens (0 with sharing disabled or on a miss).
+    pub fn prefix_match(&self, tokens: &[i32]) -> usize {
+        self.match_blocks(tokens).len() * KV_BLOCK
+    }
+
+    /// [`KvCache::reserve_row`] with prefix reuse: map the longest
+    /// cached block-aligned prefix of `tokens` into the row's table —
+    /// sharing the physical blocks, refcounted, counted once by the
+    /// admission accounting — and reserve only the remaining worst
+    /// case for `len` slots.  Returns the number of prefix tokens
+    /// served from cache; the caller prefills only `tokens[hit..]`
+    /// (always at least the final token).  With sharing off (or a
+    /// miss) this is exactly [`KvCache::reserve_row`].
+    pub fn reserve_row_prefixed(&mut self, row: usize, tokens: &[i32],
+                                len: usize) -> Result<usize> {
+        self.release_row(row);
+        if !self.paged {
+            return Ok(0);
+        }
+        let (blocks, from_lru, need) = self.admission_plan(tokens, len);
+        anyhow::ensure!(
+            self.admission_fits(from_lru, need),
+            "kv block pool exhausted: row wants {need} fresh blocks \
+             past a {}-block prefix hit, {} unreserved of {} \
+             reclaimable (pool {})",
+            blocks.len(), self.unreserved_free(), self.reclaimable(),
+            self.n_blocks
+        );
+        let matched = blocks.len() * KV_BLOCK;
+        for blk in blocks {
+            if self.ref_count[blk as usize] == 0 {
+                self.lru.retain(|&b| b != blk);
+            }
+            self.ref_count[blk as usize] += 1;
+            self.tables[row].blocks.push(blk);
+        }
+        self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
+        self.tables[row].reserved = need;
+        self.reserved_total += need;
+        self.cur_len[row] = matched as u32;
+        self.prefix_hits += matched as u64;
+        Ok(matched)
     }
 
     /// Admit a sequence into `row`: release whatever the row held and
@@ -254,36 +490,97 @@ impl KvCache {
         Ok(())
     }
 
+    /// Drop one row-table reference on `blk`; the last reference sends
+    /// the block to the LRU list when its content is registered (so a
+    /// later prefix hit can revive it), to the free list otherwise.
+    fn drop_ref(&mut self, blk: u32) {
+        let rc = &mut self.ref_count[blk as usize];
+        debug_assert!(*rc > 0, "unbalanced block refcount");
+        *rc -= 1;
+        if *rc == 0 {
+            if self.meta[blk as usize].is_some() {
+                self.lru.push_back(blk);
+            } else {
+                self.free.push(blk);
+            }
+        }
+    }
+
     /// Return `row`'s blocks (live + garbage) and any outstanding
     /// reservation to the pool; the row's committed length resets.
     /// Freed blocks are reused unzeroed — the position-mask contract
-    /// makes stale content unattendable (module docs).
+    /// makes stale content unattendable (module docs).  Under prefix
+    /// sharing, blocks other rows still reference stay allocated, and
+    /// registered blocks park on the LRU list instead of freeing.
     pub fn release_row(&mut self, row: usize) {
-        let t = &mut self.tables[row];
-        self.free.extend(t.blocks.drain(..));
-        self.free.extend(t.garbage.take());
-        self.reserved_total -= t.reserved;
-        t.reserved = 0;
+        let blocks = std::mem::take(&mut self.tables[row].blocks);
+        let garbage = self.tables[row].garbage.take();
+        let reserved = std::mem::take(&mut self.tables[row].reserved);
+        self.reserved_total -= reserved;
+        for blk in blocks.into_iter().chain(garbage) {
+            self.drop_ref(blk);
+        }
         self.cur_len[row] = 0;
     }
 
+    /// [`KvCache::release_row`] that first registers the row's full
+    /// committed blocks in the prefix index (no-op with sharing off).
+    /// `tokens` is the row's committed stream; only blocks entirely
+    /// below the committed length are cacheable — their 16 slots all
+    /// hold live K/V for exactly these tokens.
+    pub fn release_row_cached(&mut self, row: usize, tokens: &[i32]) {
+        if self.paged && self.sharing {
+            let n = (self.cur_len[row] as usize).min(tokens.len());
+            let full = (n / KV_BLOCK).min(self.tables[row].blocks.len());
+            let mut parent = PREFIX_CHAIN_SEED;
+            for i in 0..full {
+                let toks = &tokens[i * KV_BLOCK..(i + 1) * KV_BLOCK];
+                let h = chain_hash(parent, toks);
+                let blk = self.tables[row].blocks[i];
+                // First block in wins; an identical-content duplicate
+                // stays unregistered and frees normally.
+                if self.meta[blk as usize].is_none()
+                    && !self.index.contains_key(&h)
+                {
+                    self.meta[blk as usize] = Some(BlockMeta {
+                        hash: h,
+                        parent,
+                        tokens: toks.to_vec(),
+                    });
+                    self.index.insert(h, blk);
+                }
+                parent = h;
+            }
+        }
+        self.release_row(row);
+    }
+
     /// Take one block for `row`: against its reservation when one is
-    /// outstanding, else from the unreserved headroom.  Errors only
-    /// when the pool is truly dry — an admitted (reserved) row cannot
-    /// hit this.
+    /// outstanding, else from the unreserved headroom.  Draws from the
+    /// free list first, then evicts the least-recently-cached LRU
+    /// block.  Errors only when the pool is truly dry — an admitted
+    /// (reserved) row cannot hit this.
     fn take_block(&mut self, row: usize) -> Result<u32> {
         let from_reservation = self.tables[row].reserved > 0;
         anyhow::ensure!(
             if from_reservation {
-                !self.free.is_empty()
+                self.reclaimable() > 0
             } else {
-                self.free.len() > self.reserved_total
+                self.reclaimable() > self.reserved_total
             },
-            "kv block pool exhausted ({} blocks, {} free, {} reserved) — \
-             admit fewer sequences or raise --kv-blocks",
-            self.n_blocks, self.free.len(), self.reserved_total
+            "kv block pool exhausted ({} blocks, {} reclaimable, \
+             {} reserved) — admit fewer sequences or raise --kv-blocks",
+            self.n_blocks, self.reclaimable(), self.reserved_total
         );
-        let blk = self.free.pop().expect("checked non-empty above");
+        let blk = match self.free.pop() {
+            Some(b) => b,
+            None => {
+                let b = self.lru.pop_front()
+                    .expect("reclaimable > 0 with free empty");
+                self.unregister(b);
+                b
+            }
+        };
         if from_reservation {
             self.tables[row].reserved -= 1;
             self.reserved_total -= 1;
@@ -296,6 +593,7 @@ impl KvCache {
     fn ensure_covered(&mut self, row: usize, slot: usize) -> Result<()> {
         while self.tables[row].blocks.len() * KV_BLOCK <= slot {
             let blk = self.take_block(row)?;
+            self.ref_count[blk as usize] = 1;
             self.tables[row].blocks.push(blk);
         }
         Ok(())
@@ -305,8 +603,31 @@ impl KvCache {
     fn ensure_garbage(&mut self, row: usize) -> Result<()> {
         if self.tables[row].garbage.is_none() {
             let blk = self.take_block(row)?;
+            self.ref_count[blk as usize] = 1;
             self.tables[row].garbage = Some(blk);
         }
+        Ok(())
+    }
+
+    /// Copy-on-write: give `row` a private copy of the shared block
+    /// backing its logical block `lb` before a write diverges it.  The
+    /// other rows keep the original bytes untouched.
+    fn cow_copy(&mut self, row: usize, lb: usize) -> Result<()> {
+        let old = self.tables[row].blocks[lb] as usize;
+        let fresh = self.take_block(row)? as usize;
+        let be = self.block_elems();
+        let data = match &mut self.state {
+            CacheState::Host(d) => d,
+            #[cfg(feature = "pjrt")]
+            CacheState::Device(_) => {
+                anyhow::bail!("copy-on-write on a device cache")
+            }
+        };
+        data.copy_within(old * be..(old + 1) * be, fresh * be);
+        self.ref_count[old] -= 1;
+        self.ref_count[fresh] = 1;
+        self.tables[row].blocks[lb] = fresh as u32;
+        self.cow += 1;
         Ok(())
     }
 
@@ -378,7 +699,19 @@ impl KvCache {
                     self.tables[row].garbage
                 } else {
                     self.ensure_covered(row, slot)?;
-                    Some(self.tables[row].blocks[slot / KV_BLOCK])
+                    let lb = slot / KV_BLOCK;
+                    let blk = self.tables[row].blocks[lb];
+                    if self.ref_count[blk as usize] > 1 {
+                        // the row shares this block: copy-on-write so
+                        // the other rows' prefix bytes stay intact
+                        self.cow_copy(row, lb)?;
+                    } else if self.meta[blk as usize].is_some() {
+                        // sole owner writing into a registered block:
+                        // its bytes will no longer answer for the
+                        // registered prefix — unregister it.
+                        self.unregister(blk);
+                    }
+                    Some(self.tables[row].blocks[lb])
                 };
                 dest.push(
                     blk.map(|id| (id as usize, slot % KV_BLOCK)));
@@ -580,6 +913,139 @@ mod tests {
         assert_eq!(cache.blocks_in_use(), 1,
                    "parked rows must not allocate garbage blocks");
         assert!(cache.host_kv(0, 0, 1, g as usize).is_none());
+    }
+
+    /// Commit `tokens.len()` live slots into `row` of a batch-2 cache
+    /// (the other row parked at the garbage redirect), staging value
+    /// `base + slot` at every cell so divergence is observable.
+    fn commit_row(cache: &mut KvCache, row: usize, n: usize, base: f32) {
+        let hd = cache.n_heads * cache.d_head;
+        let b = cache.batch;
+        let g = cache.garbage_slot();
+        for slot in 0..n {
+            let mut k = vec![0f32; cache.n_layers * b * hd];
+            for l in 0..cache.n_layers {
+                let off = (l * b + row) * hd;
+                k[off..off + hd].fill(base + slot as f32);
+            }
+            let mut pos = vec![g; b];
+            pos[row] = slot as i32;
+            cache.host_scatter(b, 1, &k, &k, &pos).unwrap();
+        }
+        cache.cur_len[row] = n as u32;
+    }
+
+    #[test]
+    fn prefix_chain_verifies_tokens_not_just_hashes() {
+        let c = big_cfg();
+        let mut cache = KvCache::host_paged(&c, 2, 8).unwrap();
+        cache.set_prefix_sharing(true);
+        let tokens: Vec<i32> = (0..40).map(|i| 12 + i).collect();
+        cache.reserve_row(0, 42).unwrap();
+        commit_row(&mut cache, 0, 40, 100.0);
+        cache.release_row_cached(0, &tokens);
+        // 40 committed tokens = 2 full blocks = 32 cacheable tokens
+        assert_eq!(cache.prefix_match(&tokens), 32);
+        // a proper prefix never swallows the whole prompt
+        assert_eq!(cache.prefix_match(&tokens[..32]), 16);
+        assert_eq!(cache.prefix_match(&tokens[..16]), 0);
+        // divergence inside block 1 keeps only block 0
+        let mut fork = tokens.clone();
+        fork[20] += 1;
+        assert_eq!(cache.prefix_match(&fork), 16);
+        // divergence inside block 0 kills the chain entirely
+        fork = tokens.clone();
+        fork[3] += 1;
+        assert_eq!(cache.prefix_match(&fork), 0);
+        // sharing off: the same index answers no hits
+        cache.set_prefix_sharing(false);
+        assert_eq!(cache.prefix_match(&tokens), 0);
+    }
+
+    #[test]
+    fn prefix_hit_maps_shared_blocks_and_reserves_the_rest() {
+        let c = big_cfg();
+        let mut cache = KvCache::host_paged(&c, 8, 8).unwrap();
+        cache.set_prefix_sharing(true);
+        let tokens: Vec<i32> = (0..40).map(|i| 12 + i).collect();
+        cache.reserve_row(0, 42).unwrap();
+        commit_row(&mut cache, 0, 40, 100.0);
+        cache.release_row_cached(0, &tokens);
+        assert_eq!(cache.blocks_in_use(), 0,
+                   "cached blocks are reclaimable, not in use");
+        // two rows admit the same prompt: both map the 2 cached blocks
+        let hit0 = cache.reserve_row_prefixed(0, &tokens, 42).unwrap();
+        let hit1 = cache.reserve_row_prefixed(1, &tokens, 42).unwrap();
+        assert_eq!((hit0, hit1), (32, 32));
+        assert_eq!(cache.cur_len[0], 32);
+        assert_eq!(cache.blocks_shared(), 2,
+                   "each shared block carries one extra reference");
+        assert_eq!(cache.blocks_in_use(), 2,
+                   "shared blocks count once");
+        assert_eq!(cache.prefix_hit_tokens(), 64);
+        // the shared bytes read identically through both tables
+        for s in [0usize, 17, 31] {
+            assert_eq!(cache.host_kv(0, 0, 0, s).unwrap(),
+                       cache.host_kv(0, 0, 1, s).unwrap());
+        }
+        // releasing one row keeps the other's mapping intact
+        cache.release_row(1);
+        assert_eq!(cache.blocks_shared(), 0);
+        assert_eq!(cache.host_kv(0, 0, 0, 17).unwrap()[0], 117.0);
+    }
+
+    #[test]
+    fn cow_gives_the_writer_a_private_copy() {
+        let c = big_cfg();
+        let mut cache = KvCache::host_paged(&c, 2, 8).unwrap();
+        cache.set_prefix_sharing(true);
+        let tokens: Vec<i32> = (0..40).map(|i| 12 + i).collect();
+        cache.reserve_row(0, 42).unwrap();
+        commit_row(&mut cache, 0, 40, 100.0);
+        cache.release_row_cached(0, &tokens);
+        cache.reserve_row_prefixed(0, &tokens, 42).unwrap();
+        cache.reserve_row_prefixed(1, &tokens, 42).unwrap();
+        let before = cache.blocks_in_use();
+        // row 1 commits into slot 5 of the shared block 0 (the helper
+        // also parks LIVE row 0 at the garbage redirect, so row 0's
+        // garbage block is allocated alongside the COW copy)
+        commit_row(&mut cache, 1, 6, 500.0);
+        assert_eq!(cache.cow_copies(), 1, "one shared block diverged");
+        assert_eq!(cache.blocks_in_use(), before + 2,
+                   "one COW copy + row 0's garbage block");
+        assert_eq!(cache.host_kv(0, 0, 1, 5).unwrap()[0], 505.0,
+                   "writer sees its own bytes");
+        assert_eq!(cache.host_kv(0, 0, 0, 5).unwrap()[0], 105.0,
+                   "the other row's prefix bytes stay intact");
+        // slot 31 sits in block 1, still shared untouched
+        assert_eq!(cache.host_kv(0, 0, 0, 31).unwrap(),
+                   cache.host_kv(0, 0, 1, 31).unwrap());
+    }
+
+    #[test]
+    fn lru_eviction_reclaims_cached_blocks_when_free_runs_dry() {
+        let c = big_cfg();
+        let mut cache = KvCache::host_paged(&c, 2, 4).unwrap();
+        cache.set_prefix_sharing(true);
+        let tokens: Vec<i32> = (0..40).map(|i| 12 + i).collect();
+        cache.reserve_row(0, 40).unwrap();
+        commit_row(&mut cache, 0, 40, 100.0);
+        cache.release_row_cached(0, &tokens);
+        assert_eq!(cache.prefix_match(&tokens), 32);
+        assert_eq!(cache.unreserved_free(), 4,
+                   "cached blocks stay admission headroom");
+        // a different 40-token sequence needs 3 live blocks + garbage:
+        // the free list (1 partial + 1 garbage block) runs dry and the
+        // oldest cached blocks are evicted.
+        let other: Vec<i32> = (0..40).map(|i| 60 - i).collect();
+        cache.reserve_row_prefixed(0, &other, 40).unwrap();
+        commit_row(&mut cache, 0, 40, 900.0);
+        assert_eq!(cache.prefix_match(&tokens), 0,
+                   "evicted blocks must leave the index");
+        cache.release_row_cached(0, &other);
+        assert_eq!(cache.prefix_match(&other), 32,
+                   "the new sequence is cached in their place");
+        assert_eq!(cache.blocks_in_use(), 0);
     }
 
     #[test]

@@ -42,7 +42,10 @@
 //!   pool (DESIGN.md §7) is read directly through a `Sync` borrowed
 //!   view (`CacheView`) carrying precomputed per-row block bases.  No
 //!   copies, identical values; unmapped (never-committed) slots read
-//!   as zeros, which the position mask keeps unobservable.
+//!   as zeros, which the position mask keeps unobservable.  Prefix
+//!   sharing (§7) needs nothing extra here: a shared block is just
+//!   another base two rows' tables point at, and commits route
+//!   through `KvCache::host_scatter`, which owns the COW hook.
 //! * **Rotary tables are computed once per call.**  One `D/2`-wide
 //!   sin/cos row per live cell, shared by every layer and head (the
 //!   oracle recomputes the trig `2·L·H` times per cell).

@@ -8,7 +8,11 @@
 //! committed slots, and the garbage slot `S_max - 1` is unreachable
 //! from any live position.  `commit` is the only operation that
 //! mutates the persistent cache, mirroring the fwd/commit executable
-//! split (DESIGN.md §7).
+//! split (DESIGN.md §7).  Persistent reads resolve through the row's
+//! block table (`slot_index`), so prefix-shared blocks (DESIGN.md §7)
+//! are read transparently — same bytes wherever the table points —
+//! and commits route through `host_scatter`, which carries the
+//! copy-on-write hook.
 //!
 //! Weights are seeded from `substrate::rng` (splitmix/xoshiro — no
 //! platform dependence); every floating-point loop runs in a fixed

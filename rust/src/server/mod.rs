@@ -161,8 +161,7 @@ fn serve_loop(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>)
                 continue;
             }
             let Some(head) = queue.front() else { break };
-            if !engine.can_admit(head.req.prompt.len(), head.req.max_new)
-            {
+            if !engine.can_admit(&head.req.prompt, head.req.max_new) {
                 if slots.iter().all(|s| s.is_none()) {
                     // Even an empty engine can't fit it: reject THIS
                     // request — dropping its reply sender surfaces a

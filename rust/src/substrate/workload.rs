@@ -55,6 +55,57 @@ pub fn build_trace(prompts: &[Prompt], n: usize, arrival: Arrival,
     Trace { requests }
 }
 
+/// [`build_trace`] over a shared-system-prompt workload (`--shared-prefix`):
+/// `n_prefixes` distinct synthetic system prompts of `prefix_len`
+/// tokens are generated once, and request `i` carries
+/// `prefix[i % n_prefixes] ++ tail of prompts[i % len]` — the
+/// production shape the prefix cache (DESIGN.md §7) exists for.
+/// Prefix tokens are drawn from the alphabet the base prompts already
+/// use (skipping each prompt's leading BOS), so every request stays a
+/// valid model input; the whole trace is a pure function of `seed`.
+pub fn build_shared_prefix_trace(prompts: &[Prompt], n: usize,
+                                 n_prefixes: usize, prefix_len: usize,
+                                 arrival: Arrival, max_new: usize,
+                                 seed: u64) -> Trace {
+    assert!(n_prefixes >= 1 && prefix_len >= 1,
+            "shared-prefix traces need at least one prefix token");
+    let mut rng = Rng::new(seed ^ 0x5348_5052_4546); // "SHPREF"
+    let bos = prompts[0].prompt[0];
+    let alphabet: Vec<i32> = prompts
+        .iter()
+        .flat_map(|p| p.prompt[1..].iter().copied())
+        .collect();
+    let prefixes: Vec<Vec<i32>> = (0..n_prefixes)
+        .map(|_| {
+            let mut v = Vec::with_capacity(prefix_len);
+            v.push(bos);
+            while v.len() < prefix_len {
+                v.push(alphabet[rng.below(alphabet.len())]);
+            }
+            v
+        })
+        .collect();
+    let mut t = 0.0f64;
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let p = &prompts[i % prompts.len()];
+        if let Arrival::Poisson { rate } = arrival {
+            t += rng.exp(rate);
+        }
+        let mut prompt = prefixes[i % n_prefixes].clone();
+        prompt.extend_from_slice(&p.prompt[1..]);
+        requests.push(Request {
+            id: i as u64,
+            arrival_s: t,
+            prompt,
+            reference: p.reference.clone(),
+            task: p.task.clone(),
+            max_new,
+        });
+    }
+    Trace { requests }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +137,30 @@ mod tests {
             assert!(w[1].arrival_s >= w[0].arrival_s);
         }
         assert!(t.requests.last().unwrap().arrival_s > 0.0);
+    }
+
+    #[test]
+    fn shared_prefix_trace_shares_block_aligned_heads() {
+        let t = build_shared_prefix_trace(&prompts(), 6, 2, 32,
+                                          Arrival::Closed, 8, 4);
+        assert_eq!(t.requests.len(), 6);
+        for r in &t.requests {
+            assert_eq!(r.prompt[0], 0, "prefix keeps the BOS head");
+            assert!(r.prompt.len() > 32, "tail must follow the prefix");
+        }
+        // requests 0 and 2 share prefix 0; 1 and 3 share prefix 1
+        assert_eq!(t.requests[0].prompt[..32], t.requests[2].prompt[..32]);
+        assert_eq!(t.requests[1].prompt[..32], t.requests[3].prompt[..32]);
+        assert_ne!(t.requests[0].prompt[..32], t.requests[1].prompt[..32]);
+        // tails still round-robin over the base prompts
+        assert_eq!(t.requests[0].prompt[32..],
+                   t.requests[3].prompt[32..]);
+        // deterministic in the seed
+        let u = build_shared_prefix_trace(&prompts(), 6, 2, 32,
+                                          Arrival::Closed, 8, 4);
+        for (a, b) in t.requests.iter().zip(&u.requests) {
+            assert_eq!(a.prompt, b.prompt);
+        }
     }
 
     #[test]

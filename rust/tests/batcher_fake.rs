@@ -108,9 +108,11 @@ impl Engine for FakeEngine {
         Ok(())
     }
 
-    fn can_admit(&self, prompt_len: usize, _max_new: usize) -> bool {
+    fn can_admit(&self, prompt: &[i32], _max_new: usize) -> bool {
         match self.pool_blocks {
-            Some(pool) => self.in_use() + self.need_of(prompt_len) <= pool,
+            Some(pool) => {
+                self.in_use() + self.need_of(prompt.len()) <= pool
+            }
             None => true,
         }
     }
@@ -220,6 +222,25 @@ fn throughput_counts_only_this_window() {
     assert!(stats.wall_s > 0.0);
     let expect = stats.generated as f64 / stats.wall_s;
     assert!((stats.throughput_tps - expect).abs() < 1e-9);
+    // a wall-clock serve accrues wall_s, never virtual_s
+    assert!(e.metrics.wall_s > 0.0);
+    assert_eq!(e.metrics.virtual_s, 0.0);
+}
+
+#[test]
+fn virtual_serve_never_pollutes_wall_clock_metrics() {
+    // Regression: serve_trace_virtual used to add its SIMULATED
+    // seconds into Metrics::wall_s, corrupting every tokens/s derived
+    // from Metrics afterwards.  Virtual time must land in virtual_s.
+    let mut e = FakeEngine::new(2);
+    let stats = serve_trace_virtual(&mut e, &closed_trace(5, 3), 1.0)
+        .unwrap();
+    assert_eq!(stats.wall_s, 9.0, "ServeStats still report the window");
+    assert_eq!(e.metrics.wall_s, 0.0,
+               "virtual seconds must not enter wall_s");
+    assert_eq!(e.metrics.virtual_s, 9.0);
+    assert_eq!(e.metrics.tps(), 0.0,
+               "no wall time observed -> no wall tokens/s claim");
 }
 
 #[test]

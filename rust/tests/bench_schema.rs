@@ -33,7 +33,7 @@ fn schema_v1_fields_are_stable() {
                Some(BENCH_SCHEMA));
     assert_eq!(report.get("backend").unwrap().as_str(), Some("host"));
     for key in ["threads", "seed", "task", "target", "n_prompts",
-                "max_new", "sweep", "runs", "oracle",
+                "max_new", "sweep", "runs", "serving_prefix", "oracle",
                 "host_vs_reference"] {
         assert!(report.get(key).is_some(), "missing top-level `{key}`");
     }
@@ -65,9 +65,13 @@ fn schema_v1_fields_are_stable() {
         // admission stalls in a closed-batch sweep, and the gauge
         // bounded by its peak
         let kv = run.get("kv").unwrap();
-        for key in ["blocks_in_use", "peak_blocks", "admission_stalls"] {
+        for key in ["blocks_in_use", "peak_blocks", "admission_stalls",
+                    "prefix_hit_tokens", "blocks_shared", "cow_copies"] {
             assert!(kv.get(key).is_some(), "kv missing field `{key}`");
         }
+        // the closed-batch sweep runs with the prefix cache off
+        assert_eq!(kv.get("prefix_hit_tokens").unwrap().as_f64(),
+                   Some(0.0), "sweep cells never share prefixes");
         let kv_peak = kv.get("peak_blocks").unwrap().as_f64().unwrap();
         assert!(kv_peak > 0.0, "engines must record pool occupancy");
         assert!(kv.get("blocks_in_use").unwrap().as_f64().unwrap()
@@ -98,6 +102,32 @@ fn schema_v1_fields_are_stable() {
     assert!((sp - 1.0).abs() < 1e-9, "AR+ vs itself must be 1.0");
     assert_eq!(ar.get("mean_accept_len").unwrap().as_f64(), Some(0.0),
                "AR+ accepts nothing (it never drafts)");
+}
+
+#[test]
+fn serving_prefix_section_shows_the_hit_rate_win() {
+    let report = smoke_report();
+    let sp = report.get("serving_prefix").unwrap();
+    for key in ["engine", "k", "batch", "kv_blocks", "n_requests",
+                "shared_prefixes", "prefix_len", "rows"] {
+        assert!(sp.get(key).is_some(),
+                "serving_prefix missing field `{key}`");
+    }
+    let rows = sp.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2, "one row per prefix-cache setting");
+    let f = |r: &pard::substrate::json::Json, k: &str| {
+        r.get(k).unwrap().as_f64().unwrap()
+    };
+    let (off, on) = (&rows[0], &rows[1]);
+    assert_eq!(off.get("prefix_cache"), Some(&Json::Bool(false)));
+    assert_eq!(on.get("prefix_cache"), Some(&Json::Bool(true)));
+    assert_eq!(f(off, "completed"), f(on, "completed"),
+               "both settings must serve the whole trace");
+    assert_eq!(f(off, "prefix_hit_tokens"), 0.0);
+    assert!(f(on, "prefix_hit_tokens") > 0.0,
+            "the shared-prefix trace must hit the cache");
+    assert!(f(on, "peak_occupancy") >= f(off, "peak_occupancy"),
+            "sharing must not reduce concurrency");
 }
 
 #[test]

@@ -22,6 +22,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         max_new: 20,
         shared_mask: true,
         kv_blocks: None,
+        prefix_cache: false,
     }
 }
 

@@ -35,6 +35,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         max_new: 32,
         shared_mask: true,
         kv_blocks: None,
+        prefix_cache: false,
     }
 }
 

@@ -26,6 +26,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         max_new: 12,
         shared_mask: true,
         kv_blocks,
+        prefix_cache: false,
     }
 }
 
@@ -112,6 +113,7 @@ fn paged_pool_admits_more_than_dense_budget() {
         max_new: 8,
         shared_mask: true,
         kv_blocks: Some(kv_blocks),
+        prefix_cache: false,
     };
     let mut e = build_engine(&rt, &c).unwrap();
     e.warmup().unwrap();
@@ -148,6 +150,7 @@ fn engine_pool_backpressure_serializes_and_completes() {
         max_new: 8,
         shared_mask: true,
         kv_blocks: Some(3),
+        prefix_cache: false,
     };
     let mut e = build_engine(&rt, &c).unwrap();
     e.warmup().unwrap();

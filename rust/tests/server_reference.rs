@@ -18,6 +18,7 @@ fn cfg() -> EngineConfig {
         max_new: 12,
         shared_mask: true,
         kv_blocks: None,
+        prefix_cache: false,
     }
 }
 

@@ -235,7 +235,7 @@ fn apply_verdict_advances_stream_and_cache() {
         committed: vec![5, 6, 9],
         hidden_rows: None,
     };
-    apply_verdict(&mut seq, &mut cache, 0, &verdict, EOS, &mut m);
+    apply_verdict(&mut seq, &mut cache, 0, &verdict, 3, EOS, &mut m);
     // stream = prompt(4) + pending(30) + [5,6,9]; new pending is 9
     assert_eq!(seq.stream.len(), 8);
     assert_eq!(seq.pending(), 9);
@@ -257,7 +257,7 @@ fn apply_verdict_stops_on_eos_and_counts_request() {
         committed: vec![5, EOS, 9], // 9 must be dropped after EOS
         hidden_rows: None,
     };
-    apply_verdict(&mut seq, &mut cache, 0, &verdict, EOS, &mut m);
+    apply_verdict(&mut seq, &mut cache, 0, &verdict, 3, EOS, &mut m);
     assert!(seq.done);
     assert!(!seq.active);
     assert_eq!(m.requests, 1);
@@ -269,16 +269,43 @@ fn apply_verdict_stops_on_eos_and_counts_request() {
 fn apply_verdict_headroom_guard_parks_near_capacity() {
     let be = Scripted::new(vec![]);
     let mut cache = be.new_cache(1).unwrap(); // s_max 64 → max live 62
-    let mut seq = mid_seq(40, 30, 200);
+    let mut seq = mid_seq(56, 30, 200);
     let mut m = Metrics::default();
     let verdict = RowVerdict {
         accepted: 0,
         committed: vec![9],
         hidden_rows: None,
     };
-    apply_verdict(&mut seq, &mut cache, 0, &verdict, EOS, &mut m);
-    // target_len 41; 41 + 2*16 + 2 = 75 >= 62 → must stop the row
+    apply_verdict(&mut seq, &mut cache, 0, &verdict, 3, EOS, &mut m);
+    // target_len 57; 57 + 3 + 2 = 62 >= 62 → must stop the row
     assert!(seq.done, "row near cache capacity must be stopped");
     assert!(!seq.active);
     assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn headroom_guard_tracks_configured_k_not_a_hardcoded_worst_case() {
+    // Regression: the guard used to hardcode `2*16 + 2` (worst-case
+    // K) instead of the engine's configured `k + 2`, parking small-K
+    // rows up to 30 positions before the window was actually full.
+    let be = Scripted::new(vec![]);
+    let mut cache = be.new_cache(1).unwrap(); // s_max 64 → max live 62
+    let mut m = Metrics::default();
+    let verdict = RowVerdict {
+        accepted: 0,
+        committed: vec![9],
+        hidden_rows: None,
+    };
+    // target_len becomes 41: the old guard stopped here (41+34 >= 62)
+    // even though a K=2 verify only ever reaches position 43.
+    let mut seq = mid_seq(40, 30, 200);
+    apply_verdict(&mut seq, &mut cache, 0, &verdict, 2, EOS, &mut m);
+    assert!(!seq.done,
+            "K=2 row with 21 free positions must keep generating");
+    assert!(seq.active);
+    assert_eq!(m.requests, 0);
+    // at the true K=2 edge (58 + 2 + 2 >= 62) it must still stop
+    let mut edge = mid_seq(57, 30, 200);
+    apply_verdict(&mut edge, &mut cache, 0, &verdict, 2, EOS, &mut m);
+    assert!(edge.done, "the guard must still fire at the real edge");
 }

@@ -20,7 +20,8 @@
 #
 # Python mirror gate: when python3 exists, the executable
 # layout-equality mirror (python/refsim/hostsim.py, which also replays
-# the paged block table and prefix-sharing/COW layout) must pass —
+# the paged block table, prefix-sharing/COW layout, and the stochastic
+# sampling accept/residual math of coordinator/sampling.rs) must pass —
 # auto-skipped only when python3 is not installed at all.
 #
 # Usage: ./ci.sh            # build + test + stub typecheck + doc gate

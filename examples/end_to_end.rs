@@ -52,6 +52,7 @@ fn main() -> Result<()> {
             shared_mask: true,
             kv_blocks: None,
             prefix_cache: false,
+            sampling: None,
         };
         let mut base = build_engine(&rt, &mk(EngineKind::ArPlus))?;
         base.warmup()?;
@@ -93,6 +94,7 @@ fn main() -> Result<()> {
             shared_mask: true,
             kv_blocks: None,
             prefix_cache: false,
+            sampling: None,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;
@@ -115,6 +117,7 @@ fn main() -> Result<()> {
         shared_mask: true,
         kv_blocks: None,
         prefix_cache: false,
+        sampling: None,
     };
     let mut engine = build_engine(&rt, &cfg)?;
     engine.warmup()?;

@@ -44,6 +44,7 @@ fn main() -> Result<()> {
             shared_mask: true,
             kv_blocks: None,
             prefix_cache: false,
+            sampling: None,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;

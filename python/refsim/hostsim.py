@@ -31,6 +31,12 @@ and asserts they cannot change a live output:
                             full prefill exactly, and a copy-on-write
                             divergence never leaks into the sharing
                             row (cache.rs prefix pool, DESIGN.md §7).
+  8. sampling accept/residual — mirror of coordinator/sampling.rs
+                            (DESIGN.md §6): exact first-max one-hot at
+                            temperature 0, f64-accumulated CDF walks,
+                            and the spec_accept/residual construction
+                            preserving the target distribution with
+                            the zero-mass-proposal reject guard.
 
 Both mirrors use the same numpy primitives over the same values, so
 equality here is exact (==), not approximate.  As with sim.py this
@@ -620,6 +626,134 @@ def check_out_of_range_pos(m):
     print("  out-of-range pos ropes with raw value, identical")
 
 
+# ---------------------------------------------------------------------------
+# Stochastic sampling mirror (coordinator/sampling.rs, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+#
+# Mirrors the accept/residual math of the stochastic verification path:
+# temperature softmax with an EXACT first-max one-hot at t=0 (never a
+# tiny-temperature softmax, which splits tied mass), the nucleus filter
+# with index tie-breaking, the f64-accumulated inverse-CDF walk, and
+# spec_accept's min(1, p/q) acceptance with residual max(p-q,0)
+# resampling — including the q[x]==0 guard that must REJECT when the
+# target gives x no mass.  Probabilities stay float32 like the Rust
+# side; only CDF accumulation runs at f64.
+
+
+def sm_softmax(row, temperature):
+    row = np.asarray(row, dtype=np.float32)
+    p = np.zeros(len(row), dtype=np.float32)
+    if temperature <= 0.0:
+        p[int(np.argmax(row))] = 1.0  # np.argmax: first max, like Rust
+        return p
+    z = np.exp((row - row.max()) / np.float32(temperature),
+               dtype=np.float32)
+    return (z / z.sum(dtype=np.float32)).astype(np.float32)
+
+
+def sm_top_p(p, top_p):
+    if top_p >= 1.0 or len(p) == 0:
+        return p
+    idx = sorted(range(len(p)), key=lambda i: (-p[i], i))
+    cum, keep = 0.0, len(p)
+    for n, i in enumerate(idx):
+        cum += float(p[i])
+        if cum >= top_p:
+            keep = n + 1
+            break
+    out = np.zeros_like(p)
+    kept = idx[:keep]
+    s = np.float32(sum(p[i] for i in kept))
+    for i in kept:
+        out[i] = p[i] / s
+    return out
+
+
+def sm_dist(row, temperature, top_p):
+    return sm_top_p(sm_softmax(row, temperature), top_p)
+
+
+def sm_sample(p, u):
+    acc = 0.0  # f64 accumulation against the f64 draw
+    for i, pi in enumerate(p):
+        acc += float(pi)
+        if u < acc:
+            return i
+    nz = [i for i, pi in enumerate(p) if pi > 0.0]
+    return nz[-1] if nz else 0
+
+
+def sm_spec_accept(p, q, x, rng):
+    if q[x] <= 0.0:
+        ratio = 1.0 if p[x] > 0.0 else 0.0
+    else:
+        ratio = min(1.0, float(p[x]) / float(q[x]))
+    if rng.random() < ratio:
+        return True, x
+    resid = np.maximum(p - q, 0.0).astype(np.float32)
+    s = resid.sum(dtype=np.float32)
+    if s <= 0.0:
+        return False, sm_sample(p, rng.random())
+    return False, sm_sample(resid / s, rng.random())
+
+
+def check_sampling_t0_and_cdf():
+    """t=0 is the exact first-max one-hot (ties included, top-p
+    ignored), and the f64 CDF walk never emits a zero-mass token."""
+    p = sm_softmax([1.0, 7.0, -2.0, 7.0], 0.0)
+    assert list(p) == [0.0, 1.0, 0.0, 0.0], "t=0 must one-hot FIRST max"
+    assert list(sm_dist([1.0, 7.0, -2.0], 0.0, 0.3)) == [0.0, 1.0, 0.0]
+    rng = np.random.default_rng(17)
+    for e in range(3, 30):
+        eps = np.float32(10.0 ** -e)
+        pd = np.array([1.0 - eps, eps, 0.0], dtype=np.float32)
+        for _ in range(500):
+            assert sm_sample(pd, rng.random()) < 2, \
+                "sampled a zero-probability bin"
+    pf = np.array([0.5, 0.4999, 0.0, 0.0], dtype=np.float32)
+    for _ in range(2000):
+        assert sm_sample(pf, rng.random()) < 2, \
+            "fallback must land on the last NONZERO bin"
+    print("  t=0 exact one-hot (ties, top-p) + f64 CDF walk verified")
+
+
+def check_sampling_accept_residual(trials=40_000):
+    """spec_accept preserves the target distribution (with support
+    holes on both sides), rejects zero-target-mass proposals, and
+    reduces to greedy on t=0 one-hots."""
+    rng = np.random.default_rng(29)
+    p = np.array([0.0, 0.35, 0.15, 0.3, 0.2], dtype=np.float32)
+    q = np.array([0.3, 0.0, 0.2, 0.25, 0.25], dtype=np.float32)
+    counts = np.zeros(len(p), dtype=np.int64)
+    accepts = 0
+    for _ in range(trials):
+        x = sm_sample(q, rng.random())
+        ok, tok = sm_spec_accept(p, q, x, rng)
+        accepts += ok
+        counts[tok] += 1
+    assert counts[0] == 0, "emitted a token outside the target support"
+    freq = counts / trials
+    assert np.abs(freq - p).max() < 0.02, \
+        f"output dist {freq} strayed from target {p}"
+    alpha = float(np.minimum(p, q).sum())
+    assert abs(accepts / trials - alpha) < 0.02, \
+        f"accept rate {accepts / trials:.4f} vs sum min(p,q) {alpha:.4f}"
+
+    hot = lambda i: sm_softmax([9.0 if j == i else 0.0
+                                for j in range(4)], 0.0)
+    for _ in range(200):
+        ok, tok = sm_spec_accept(hot(2), hot(2), 2, rng)
+        assert ok and tok == 2
+        ok, tok = sm_spec_accept(hot(1), hot(2), 2, rng)
+        assert not ok and tok == 1, "residual must BE the target argmax"
+        ok, tok = sm_spec_accept(np.zeros(3, dtype=np.float32) + [0.0, 0.6, 0.4],
+                                 np.zeros(3, dtype=np.float32) + [0.0, 0.4, 0.6],
+                                 0, rng)
+        assert not ok and tok != 0, "q[x]=0, p[x]=0 must reject"
+    print(f"  accept/residual preserves target dist "
+          f"(alpha={alpha:.3f}, {trials} trials); t=0 reduces to greedy")
+
+
 def main(seed=7):
     for name in ["draft-s", "target-m", "target-l"]:
         print(f"{name}:")
@@ -633,6 +767,9 @@ def main(seed=7):
         check_prefix_sharing_cow(m)
     check_end_to_end_streams(Model(seed, "target-m"), "code", 4, 16)
     check_end_to_end_streams(Model(seed, "draft-s"), "gsm", 3, 12)
+    print("sampling:")
+    check_sampling_t0_and_cdf()
+    check_sampling_accept_residual()
     print("ALL HOST-PATH EQUIVALENCE CHECKS PASSED")
 
 

@@ -167,6 +167,7 @@ fn main() -> anyhow::Result<()> {
             shared_mask: true,
             kv_blocks: None,
             prefix_cache: false,
+            sampling: None,
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;

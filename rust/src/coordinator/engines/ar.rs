@@ -13,10 +13,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{prefill_slot, reserve_len, CallBuf, Engine, EngineConfig,
-            EngineKind};
+use super::{next_token, prefill_slot, reserve_len, seed_sequence_rng,
+            CallBuf, Engine, EngineConfig, EngineKind};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
 
@@ -29,6 +28,8 @@ pub struct ArEngine {
     cached: bool,
     pad: i32,
     eos: i32,
+    /// FCFS admission counter — keys per-sequence sampling streams.
+    admitted: u64,
 }
 
 impl ArEngine {
@@ -48,6 +49,7 @@ impl ArEngine {
             cached,
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
+            admitted: 0,
         })
     }
 
@@ -78,11 +80,14 @@ impl ArEngine {
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
         self.metrics.target_passes += 1;
         let vocab = self.target.cfg().vocab;
+        let sp = self.cfg.sampling;
         for (row, seq) in self.seqs.iter_mut().enumerate() {
             if !seq.active || seq.done {
                 continue;
             }
-            let next = argmax(&out.logits[row * vocab..(row + 1) * vocab]);
+            let next = next_token(
+                &out.logits[row * vocab..(row + 1) * vocab],
+                sp.as_ref(), seq.rng.as_mut());
             let taken = seq.push_committed(&[next], self.eos);
             self.metrics.generated += taken as u64;
             seq.target_len = seq.stream.len() - 1;
@@ -128,15 +133,16 @@ impl ArEngine {
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
         self.metrics.target_passes += 1;
         let vocab = self.target.cfg().vocab;
+        let sp = self.cfg.sampling;
         for (row, seq) in self.seqs.iter_mut().enumerate() {
             if !seq.active || seq.done {
                 continue;
             }
             let last = seq.stream.len() - 1;
-            let next = argmax(
+            let next = next_token(
                 &out.logits
                     [(row * t + last) * vocab..(row * t + last + 1) * vocab],
-            );
+                sp.as_ref(), seq.rng.as_mut());
             let taken = seq.push_committed(&[next], self.eos);
             self.metrics.generated += taken as u64;
             seq.target_len = seq.stream.len() - 1;
@@ -178,10 +184,15 @@ impl Engine for ArEngine {
             0
         };
         let mut seq = Sequence::start(prompt, max_new);
+        seed_sequence_rng(&mut seq, self.cfg.sampling.as_ref(),
+                          self.admitted);
+        self.admitted += 1;
         if self.cached {
-            let (first, _) = prefill_slot(&*self.target, &mut self.cache,
-                                          slot, prompt, hit, self.pad,
-                                          &mut self.metrics)?;
+            let (last_row, _) = prefill_slot(&*self.target, &mut self.cache,
+                                             slot, prompt, hit, self.pad,
+                                             &mut self.metrics)?;
+            let first = next_token(&last_row, self.cfg.sampling.as_ref(),
+                                   seq.rng.as_mut());
             seq.target_len = prompt.len();
             // pending token joins the stream; its KV commits next step
             seq.push_committed(&[first], self.eos);

@@ -19,10 +19,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{apply_verdict, reserve_len, verify_and_commit, CallBuf,
-            Engine, EngineConfig, EngineKind};
+use super::{apply_verdict, draft_token, next_token, reserve_len,
+            seed_sequence_rng, verify_and_commit, CallBuf, Engine,
+            EngineConfig, EngineKind, VerifySpec};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
 
@@ -38,6 +38,8 @@ pub struct EagleEngine {
     pad: i32,
     eos: i32,
     d_model: usize,
+    /// FCFS admission counter — keys per-sequence sampling streams.
+    admitted: u64,
 }
 
 impl EagleEngine {
@@ -71,6 +73,7 @@ impl EagleEngine {
             cfg: cfg.clone(),
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
+            admitted: 0,
         })
     }
 
@@ -86,14 +89,20 @@ impl EagleEngine {
     }
 
     /// Draft K candidates: one catch-up pass over the backlog pairs, then
-    /// K-1 feature-chained singles.
-    fn draft_candidates(&mut self) -> Result<Vec<Vec<i32>>> {
+    /// K-1 feature-chained singles.  Returns per-row candidates plus,
+    /// under stochastic decoding, the head distribution each was
+    /// sampled from (rows stay empty under greedy).
+    #[allow(clippy::type_complexity)]
+    fn draft_candidates(&mut self)
+                        -> Result<(Vec<Vec<i32>>, Vec<Vec<Vec<f32>>>)> {
         let b = self.ecache.batch;
         let k = self.cfg.k;
+        let sp = self.cfg.sampling;
         let d = self.d_model;
         let garbage = self.ecache.garbage_slot();
         let vocab = self.head.cfg().vocab;
         let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut qdists: Vec<Vec<Vec<f32>>> = vec![Vec::new(); b];
         // chained state per row: (token, pos, hidden)
         let mut chain: Vec<Option<(i32, i32, Vec<f32>)>> = vec![None; b];
 
@@ -138,7 +147,8 @@ impl EagleEngine {
             let i = fed - 1;
             let lg = &out.logits
                 [(row * t + i) * vocab..(row * t + i + 1) * vocab];
-            let c0 = argmax(lg);
+            let c0 = draft_token(lg, sp.as_ref(), seq.rng.as_mut(),
+                                 &mut qdists[row]);
             cands[row].push(c0);
             let h = head_hidden[(row * t + i) * d..(row * t + i + 1) * d]
                 .to_vec();
@@ -168,13 +178,13 @@ impl EagleEngine {
                                  &mut self.ecache)?;
             self.metrics.draft_passes += 1;
             let hh = out.hidden.as_ref().unwrap();
-            for (row, seq) in self.seqs.iter().enumerate() {
+            for (row, seq) in self.seqs.iter_mut().enumerate() {
                 if !seq.active || seq.done {
                     continue;
                 }
-                let _ = seq;
-                let c =
-                    argmax(&out.logits[row * vocab..(row + 1) * vocab]);
+                let c = draft_token(
+                    &out.logits[row * vocab..(row + 1) * vocab],
+                    sp.as_ref(), seq.rng.as_mut(), &mut qdists[row]);
                 cands[row].push(c);
                 let (_, p, _) = chain[row].as_ref().unwrap();
                 let np = *p + 1;
@@ -183,7 +193,7 @@ impl EagleEngine {
             }
         }
         self.metrics.draft_s += t0.elapsed().as_secs_f64();
-        Ok(cands)
+        Ok((cands, qdists))
     }
 }
 
@@ -202,6 +212,9 @@ impl Engine for EagleEngine {
         let t_hit = self.tcache.reserve_row_prefixed(slot, prompt, need)?;
         self.ecache.reserve_row(slot, need)?;
         let mut seq = Sequence::start(prompt, max_new);
+        seed_sequence_rng(&mut seq, self.cfg.sampling.as_ref(),
+                          self.admitted);
+        self.admitted += 1;
         // target prefill with hidden export
         let b = self.tcache.batch;
         let t = self.target.pick_t(b, prompt.len())?;
@@ -229,8 +242,10 @@ impl Engine for EagleEngine {
         let d = self.d_model;
         let hidden = out.hidden.as_ref().expect("_h target exports hidden");
         let last = prompt.len() - 1;
-        let first = argmax(&out.logits
-            [(slot * t + last) * vocab..(slot * t + last + 1) * vocab]);
+        let first = next_token(
+            &out.logits
+                [(slot * t + last) * vocab..(slot * t + last + 1) * vocab],
+            self.cfg.sampling.as_ref(), seq.rng.as_mut());
         // head backlog under the (h_{t-1}, x_t) pairing: prompt token
         // x_q pairs with the hidden at q-1 (zeros for q=0, as trained),
         // plus the pending first token with the last prompt hidden.
@@ -258,10 +273,13 @@ impl Engine for EagleEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let cands = self.draft_candidates()?;
+        let (cands, qdists) = self.draft_candidates()?;
+        let spec = VerifySpec { k: self.cfg.k, pad: self.pad,
+                                sampling: self.cfg.sampling,
+                                qdists: &qdists };
         let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
-                                         &self.seqs, &cands, self.cfg.k,
-                                         self.pad, &mut self.metrics)?;
+                                         &mut self.seqs, &cands, &spec,
+                                         &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {
             let Some(v) = v else { continue };
             let seq = &mut self.seqs[row];

@@ -31,9 +31,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::sampling::argmax;
+use crate::coordinator::sampling::{argmax, dist, sample, spec_accept};
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::rng::Rng;
 
 /// Shared inference-time configuration.
 #[derive(Debug, Clone)]
@@ -62,6 +63,27 @@ pub struct EngineConfig {
     /// on memory-bounded admission — the batcher then gates new
     /// sequences on free blocks instead of free slots alone.
     pub kv_blocks: Option<usize>,
+    /// Stochastic decoding (`--temperature`/`--top-p`/`--sample-seed`).
+    /// `None` = greedy argmax everywhere (the paper's evaluation
+    /// setting and the default).  `Some` routes every engine through
+    /// seeded sampling: AR/AR+ sample the target distribution, the
+    /// speculative engines sample their drafts and verify with the
+    /// Leviathan accept/residual correction — losslessly, and token-
+    /// identical to greedy at temperature 0 (DESIGN.md §6).
+    pub sampling: Option<SamplingCfg>,
+}
+
+/// Stochastic-decoding knobs, shared by draft and verify: both sides
+/// MUST process logits identically or the accept/residual correction
+/// loses the losslessness guarantee.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingCfg {
+    /// Softmax temperature; 0 = exact greedy limit (first-max one-hot).
+    pub temperature: f32,
+    /// Nucleus cutoff in (0, 1]; 1 disables the filter.
+    pub top_p: f32,
+    /// Base seed of the per-sequence rng streams.
+    pub seed: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -214,8 +236,10 @@ pub fn reserve_len(prompt_len: usize, max_new: usize, k: usize)
 /// Prefill one slot of a (possibly multi-row) cache: feeds the prompt
 /// from token `start` on (tokens before `start` are already committed —
 /// a prefix-cache hit mapped their blocks into the row), commits the
-/// suffix KV, and returns (first generated token, last-row hidden if
-/// the model exports it).  `start = 0` is the full dense-era prefill.
+/// suffix KV, and returns (last-position logits row, last-row hidden if
+/// the model exports it).  The caller turns the logits into the first
+/// generated token via [`next_token`] — greedy or sampled, its choice.
+/// `start = 0` is the full dense-era prefill.
 /// The suffix attends the cached prefix through the block table, so
 /// the result is bit-identical to a full prefill (the cached-decode
 /// identity, DESIGN.md §6).
@@ -230,7 +254,7 @@ pub const PREFILL_T: usize = 32;
 pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
                     prompt: &[i32], start: usize, pad: i32,
                     metrics: &mut Metrics)
-                    -> Result<(i32, Option<Vec<f32>>)> {
+                    -> Result<(Vec<f32>, Option<Vec<f32>>)> {
     debug_assert!(start < prompt.len(),
                   "prefix hits always leave a suffix to prefill");
     let b = cache.batch;
@@ -250,14 +274,57 @@ pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
     cache.cur_len[slot] = prompt.len() as u32;
     let vocab = model.cfg().vocab;
     let last = suffix.len() - 1;
-    let row = &out.logits
-        [(slot * t + last) * vocab..(slot * t + last + 1) * vocab];
-    let first = argmax(row);
+    let row = out.logits
+        [(slot * t + last) * vocab..(slot * t + last + 1) * vocab]
+        .to_vec();
     let hidden = out.hidden.as_ref().map(|h| {
         let d = model.cfg().d_model;
         h[(slot * t + last) * d..(slot * t + last + 1) * d].to_vec()
     });
-    Ok((first, hidden))
+    Ok((row, hidden))
+}
+
+/// Seed row-local sampling state at admission: sequence `ordinal` (the
+/// engine's FCFS admission counter) gets its own rng substream, so
+/// sampled output depends only on (sample_seed, admission order) — not
+/// batch size or slot assignment.  No-op under greedy decoding.
+pub fn seed_sequence_rng(seq: &mut Sequence,
+                         sampling: Option<&SamplingCfg>, ordinal: u64) {
+    if let Some(s) = sampling {
+        seq.rng = Some(Rng::new_stream(s.seed, ordinal));
+    }
+}
+
+/// Turn a logits row into the next committed token: greedy argmax by
+/// default, a temperature/top-p sample from the processed distribution
+/// when the engine decodes stochastically (AR/AR+ target steps, prefill
+/// first tokens).
+pub fn next_token(row: &[f32], sampling: Option<&SamplingCfg>,
+                  rng: Option<&mut Rng>) -> i32 {
+    match (sampling, rng) {
+        (Some(s), Some(rng)) => {
+            sample(&dist(row, s.temperature, s.top_p), rng)
+        }
+        _ => argmax(row),
+    }
+}
+
+/// Draft-side candidate selection: greedy argmax, or a sample from the
+/// processed draft distribution, which is then RETAINED on `qrow` —
+/// stochastic verification needs q exactly as the candidate was sampled
+/// from it ([`spec_accept`]'s contract).
+pub fn draft_token(row: &[f32], sampling: Option<&SamplingCfg>,
+                   rng: Option<&mut Rng>, qrow: &mut Vec<Vec<f32>>)
+                   -> i32 {
+    match (sampling, rng) {
+        (Some(s), Some(rng)) => {
+            let q = dist(row, s.temperature, s.top_p);
+            let tok = sample(&q, rng);
+            qrow.push(q);
+            tok
+        }
+        _ => argmax(row),
+    }
 }
 
 /// Pure greedy acceptance (chain decoding, temperature 0): `preds[j]` is
@@ -292,18 +359,44 @@ pub struct RowVerdict {
     pub hidden_rows: Option<Vec<Vec<f32>>>,
 }
 
-/// Shared greedy verification: feed `[pending, c_0..c_{K-1}]` per active
-/// row, accept the longest matching prefix, commit pending + accepted
-/// KV, and return per-row verdicts.  (Chain decoding, temperature 0 —
-/// the paper's evaluation setting.)
+/// Per-call verification parameters: the engine's candidate depth and
+/// pad token, plus the verdict mode.  `sampling == None` is pure greedy
+/// acceptance; `Some` switches every row to the distribution-aware
+/// path, for which `qdists[row][j]` must hold the processed draft
+/// distribution candidate j of that row was sampled from (leave the
+/// slice empty under greedy).
+pub struct VerifySpec<'a> {
+    pub k: usize,
+    pub pad: i32,
+    pub sampling: Option<SamplingCfg>,
+    pub qdists: &'a [Vec<Vec<f32>>],
+}
+
+/// Shared verification: feed `[pending, c_0..c_{K-1}]` per active row,
+/// accept a candidate prefix, commit pending + accepted KV, and return
+/// per-row verdicts.  Two verdict paths share the call:
+///
+/// * greedy (chain decoding, temperature 0 — the paper's evaluation
+///   setting): accept the longest prefix matching the target argmax;
+///   the correction token is the argmax at the break point.
+/// * stochastic ([`VerifySpec::sampling`] set): per position, accept
+///   drafted token x with prob min(1, p[x]/q[x]) via [`spec_accept`]
+///   using the row's private rng; the first rejection commits a
+///   residual resample instead, and a fully-accepting row commits a
+///   bonus token sampled from the target's K-th distribution.  Output
+///   provably follows the target distribution (lossless), and reduces
+///   token-for-token to the greedy path at temperature 0.
+///
+/// Both paths commit `accepted + 1` tokens, so [`apply_verdict`] and
+/// the slot protocol are verdict-mode agnostic.
 pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
-                         seqs: &[Sequence], cands: &[Vec<i32>], k: usize,
-                         pad: i32, metrics: &mut Metrics)
+                         seqs: &mut [Sequence], cands: &[Vec<i32>],
+                         spec: &VerifySpec, metrics: &mut Metrics)
                          -> Result<Vec<Option<RowVerdict>>> {
     let b = cache.batch;
-    let t = target.pick_t(b, k + 1)?;
+    let t = target.pick_t(b, spec.k + 1)?;
     let garbage = cache.garbage_slot();
-    let mut buf = CallBuf::parked(b, t, pad, garbage);
+    let mut buf = CallBuf::parked(b, t, spec.pad, garbage);
     for (row, seq) in seqs.iter().enumerate() {
         if !seq.active || seq.done {
             continue;
@@ -323,7 +416,7 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
     let vocab = target.cfg().vocab;
     let d = target.cfg().d_model;
     let mut verdicts: Vec<Option<RowVerdict>> = Vec::with_capacity(b);
-    for (row, seq) in seqs.iter().enumerate() {
+    for (row, seq) in seqs.iter_mut().enumerate() {
         if !seq.active || seq.done {
             verdicts.push(None);
             continue;
@@ -332,9 +425,40 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
         let logit_row = |i: usize| {
             &out.logits[(row * t + i) * vocab..(row * t + i + 1) * vocab]
         };
-        let preds: Vec<i32> =
-            (0..=cands[row].len()).map(|i| argmax(logit_row(i))).collect();
-        let (accepted, committed) = greedy_accept(&cands[row], &preds);
+        let n = cands[row].len();
+        let (accepted, committed) = match spec.sampling {
+            None => {
+                let preds: Vec<i32> =
+                    (0..=n).map(|i| argmax(logit_row(i))).collect();
+                greedy_accept(&cands[row], &preds)
+            }
+            Some(s) => {
+                let rng = seq.rng.as_mut().expect(
+                    "stochastic verify needs a seeded per-row rng",
+                );
+                let q = &spec.qdists[row];
+                debug_assert_eq!(q.len(), n,
+                                 "one draft distribution per candidate");
+                let mut accepted = 0usize;
+                let mut committed = Vec::with_capacity(n + 1);
+                for (j, &c) in cands[row].iter().enumerate() {
+                    let p = dist(logit_row(j), s.temperature, s.top_p);
+                    let (ok, tok) = spec_accept(&p, &q[j], c, rng);
+                    committed.push(tok);
+                    if !ok {
+                        metrics.residual_resamples += 1;
+                        break;
+                    }
+                    accepted += 1;
+                }
+                if accepted == n {
+                    let p = dist(logit_row(n), s.temperature, s.top_p);
+                    committed.push(sample(&p, rng));
+                    metrics.bonus_samples += 1;
+                }
+                (accepted, committed)
+            }
+        };
         for j in 0..accepted {
             // accepted candidate's KV is valid: commit it
             buf.cpos[row * t + 1 + j] = base + 1 + j as i32;

@@ -19,10 +19,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{apply_verdict, prefill_slot, reserve_len, verify_and_commit,
-            CallBuf, Engine, EngineConfig, EngineKind};
+use super::{apply_verdict, draft_token, next_token, prefill_slot,
+            reserve_len, seed_sequence_rng, verify_and_commit, CallBuf,
+            Engine, EngineConfig, EngineKind, VerifySpec};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
 
@@ -38,6 +38,8 @@ pub struct PardEngine {
     eos: i32,
     mask: i32,
     distinct_masks: Vec<i32>,
+    /// FCFS admission counter — keys per-sequence sampling streams.
+    admitted: u64,
 }
 
 impl PardEngine {
@@ -63,6 +65,7 @@ impl PardEngine {
             eos: rt.manifest.eos,
             mask: rt.manifest.mask,
             distinct_masks: rt.manifest.distinct_masks.clone(),
+            admitted: 0,
         })
     }
 
@@ -89,13 +92,23 @@ impl PardEngine {
         }
     }
 
-    /// ONE parallel draft pass for all rows.
-    fn draft_candidates(&mut self) -> Result<Vec<Vec<i32>>> {
+    /// ONE parallel draft pass for all rows.  Returns per-row
+    /// candidates plus, under stochastic decoding, the draft
+    /// distribution each was sampled from (rows stay empty under
+    /// greedy).  PARD's candidates condition on mask tokens rather than
+    /// earlier samples — the verify step only needs q to BE the
+    /// distribution the candidate was drawn from, which holds either
+    /// way.
+    #[allow(clippy::type_complexity)]
+    fn draft_candidates(&mut self)
+                        -> Result<(Vec<Vec<i32>>, Vec<Vec<Vec<f32>>>)> {
         let b = self.dcache.batch;
         let k = self.cfg.k;
+        let sp = self.cfg.sampling;
         let garbage = self.dcache.garbage_slot();
         let vocab = self.draft.cfg().vocab;
         let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut qdists: Vec<Vec<Vec<f32>>> = vec![Vec::new(); b];
 
         // T = reals (catch-up incl pending) + K-1 masks.
         let need = self
@@ -142,12 +155,14 @@ impl PardEngine {
                 let i = fed - 1 + j;
                 let lg =
                     &out.logits[(row * t + i) * vocab..(row * t + i + 1) * vocab];
-                cands[row].push(argmax(lg));
+                cands[row].push(draft_token(lg, sp.as_ref(),
+                                            seq.rng.as_mut(),
+                                            &mut qdists[row]));
             }
             seq.draft_len = seq.stream.len();
             self.dcache.cur_len[row] = seq.draft_len as u32;
         }
-        Ok(cands)
+        Ok((cands, qdists))
     }
 }
 
@@ -169,9 +184,14 @@ impl Engine for PardEngine {
         let t_hit = self.tcache.reserve_row_prefixed(slot, prompt, need)?;
         let d_hit = self.dcache.reserve_row_prefixed(slot, prompt, need)?;
         let mut seq = Sequence::start(prompt, max_new);
-        let (first, _) = prefill_slot(&*self.target, &mut self.tcache,
-                                      slot, prompt, t_hit, self.pad,
-                                      &mut self.metrics)?;
+        seed_sequence_rng(&mut seq, self.cfg.sampling.as_ref(),
+                          self.admitted);
+        self.admitted += 1;
+        let (last_row, _) = prefill_slot(&*self.target, &mut self.tcache,
+                                         slot, prompt, t_hit, self.pad,
+                                         &mut self.metrics)?;
+        let first = next_token(&last_row, self.cfg.sampling.as_ref(),
+                               seq.rng.as_mut());
         let mut dm = Metrics::default();
         let _ = prefill_slot(&*self.draft, &mut self.dcache, slot, prompt,
                              d_hit, self.pad, &mut dm)?;
@@ -191,10 +211,13 @@ impl Engine for PardEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let cands = self.draft_candidates()?;
+        let (cands, qdists) = self.draft_candidates()?;
+        let spec = VerifySpec { k: self.cfg.k, pad: self.pad,
+                                sampling: self.cfg.sampling,
+                                qdists: &qdists };
         let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
-                                         &self.seqs, &cands, self.cfg.k,
-                                         self.pad, &mut self.metrics)?;
+                                         &mut self.seqs, &cands, &spec,
+                                         &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {
             if let Some(v) = v {
                 apply_verdict(&mut self.seqs[row], &mut self.tcache, row, v,

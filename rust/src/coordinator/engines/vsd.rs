@@ -12,10 +12,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{apply_verdict, prefill_slot, reserve_len, verify_and_commit,
-            CallBuf, Engine, EngineConfig, EngineKind};
+use super::{apply_verdict, draft_token, next_token, prefill_slot,
+            reserve_len, seed_sequence_rng, verify_and_commit, CallBuf,
+            Engine, EngineConfig, EngineKind, VerifySpec};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::sampling::argmax;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
 
@@ -29,6 +29,8 @@ pub struct VsdEngine {
     cfg: EngineConfig,
     pad: i32,
     eos: i32,
+    /// FCFS admission counter — keys per-sequence sampling streams.
+    admitted: u64,
 }
 
 impl VsdEngine {
@@ -53,6 +55,7 @@ impl VsdEngine {
             cfg: cfg.clone(),
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
+            admitted: 0,
         })
     }
 
@@ -69,13 +72,19 @@ impl VsdEngine {
     }
 
     /// Draft K candidates for every active row: one catch-up pass plus
-    /// K-1 chained singles.  Returns per-row candidates.
-    fn draft_candidates(&mut self) -> Result<Vec<Vec<i32>>> {
+    /// K-1 chained singles.  Returns per-row candidates plus, under
+    /// stochastic decoding, the draft distribution each was sampled
+    /// from (rows stay empty under greedy).
+    #[allow(clippy::type_complexity)]
+    fn draft_candidates(&mut self)
+                        -> Result<(Vec<Vec<i32>>, Vec<Vec<Vec<f32>>>)> {
         let b = self.dcache.batch;
         let k = self.cfg.k;
+        let sp = self.cfg.sampling;
         let garbage = self.dcache.garbage_slot();
         let vocab = self.draft.cfg().vocab;
         let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut qdists: Vec<Vec<Vec<f32>>> = vec![Vec::new(); b];
 
         // (1) catch-up: feed stream[draft_len..] (includes pending).
         let need = self
@@ -109,7 +118,9 @@ impl VsdEngine {
             let fed = seq.stream.len() - seq.draft_len;
             let row_logits = &out.logits
                 [(row * t + fed - 1) * vocab..(row * t + fed) * vocab];
-            cands[row].push(argmax(row_logits));
+            cands[row].push(draft_token(row_logits, sp.as_ref(),
+                                        seq.rng.as_mut(),
+                                        &mut qdists[row]));
             seq.draft_len = seq.stream.len();
             self.dcache.cur_len[row] = seq.draft_len as u32;
         }
@@ -133,17 +144,17 @@ impl VsdEngine {
                 self.draft.commit(b, 1, &out, &buf.cpos,
                                   &mut self.dcache)?;
             self.metrics.draft_passes += 1;
-            for (row, seq) in self.seqs.iter().enumerate() {
+            for (row, seq) in self.seqs.iter_mut().enumerate() {
                 if !seq.active || seq.done {
                     continue;
                 }
-                let _ = seq;
-                cands[row]
-                    .push(argmax(&out.logits[row * vocab..(row + 1) * vocab]));
+                cands[row].push(draft_token(
+                    &out.logits[row * vocab..(row + 1) * vocab],
+                    sp.as_ref(), seq.rng.as_mut(), &mut qdists[row]));
             }
         }
         self.metrics.draft_s += t0.elapsed().as_secs_f64();
-        Ok(cands)
+        Ok((cands, qdists))
     }
 }
 
@@ -164,9 +175,14 @@ impl Engine for VsdEngine {
         let t_hit = self.tcache.reserve_row_prefixed(slot, prompt, need)?;
         let d_hit = self.dcache.reserve_row_prefixed(slot, prompt, need)?;
         let mut seq = Sequence::start(prompt, max_new);
-        let (first, _) = prefill_slot(&*self.target, &mut self.tcache,
-                                      slot, prompt, t_hit, self.pad,
-                                      &mut self.metrics)?;
+        seed_sequence_rng(&mut seq, self.cfg.sampling.as_ref(),
+                          self.admitted);
+        self.admitted += 1;
+        let (last_row, _) = prefill_slot(&*self.target, &mut self.tcache,
+                                         slot, prompt, t_hit, self.pad,
+                                         &mut self.metrics)?;
+        let first = next_token(&last_row, self.cfg.sampling.as_ref(),
+                               seq.rng.as_mut());
         // draft prefill: its own cache over the same prompt
         let mut dm = Metrics::default();
         let _ = prefill_slot(&*self.draft, &mut self.dcache, slot, prompt,
@@ -187,10 +203,13 @@ impl Engine for VsdEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let cands = self.draft_candidates()?;
+        let (cands, qdists) = self.draft_candidates()?;
+        let spec = VerifySpec { k: self.cfg.k, pad: self.pad,
+                                sampling: self.cfg.sampling,
+                                qdists: &qdists };
         let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
-                                         &self.seqs, &cands, self.cfg.k,
-                                         self.pad, &mut self.metrics)?;
+                                         &mut self.seqs, &cands, &spec,
+                                         &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {
             if let Some(v) = v {
                 apply_verdict(&mut self.seqs[row], &mut self.tcache, row, v,

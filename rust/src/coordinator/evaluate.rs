@@ -29,8 +29,10 @@ impl EvalResult {
     }
 }
 
-/// Run `cfg` over `prompts` (closed batch, greedy).  Warmup compiles are
-/// excluded from the measured wall clock.
+/// Run `cfg` over `prompts` (closed batch; greedy unless
+/// `cfg.sampling` routes the engines through seeded stochastic
+/// decoding).  Warmup compiles are excluded from the measured wall
+/// clock.
 pub fn run_eval(rt: &Runtime, cfg: &EngineConfig, prompts: &[Prompt],
                 max_new: usize, task: &str) -> Result<EvalResult> {
     let mut engine = build_engine(rt, cfg)?;

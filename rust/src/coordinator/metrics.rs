@@ -78,6 +78,13 @@ pub struct Metrics {
     /// Copy-on-write block copies, cumulative over the engine's
     /// caches (0 under the engine protocol — COW is a safety net).
     pub cow_copies: u64,
+    /// Stochastic verification: verify rows whose first rejection was
+    /// repaired by a residual resample (at most one per row per iter;
+    /// 0 under greedy decoding).
+    pub residual_resamples: u64,
+    /// Stochastic verification: bonus tokens sampled from the target at
+    /// fully-accepting verify rows (0 under greedy decoding).
+    pub bonus_samples: u64,
 }
 
 impl Metrics {
@@ -218,6 +225,8 @@ impl Metrics {
         self.kv_blocks_shared = self.kv_blocks_shared
             .max(o.kv_blocks_shared);
         self.cow_copies += o.cow_copies;
+        self.residual_resamples += o.residual_resamples;
+        self.bonus_samples += o.bonus_samples;
         if self.offered_pos.len() < o.offered_pos.len() {
             self.offered_pos.resize(o.offered_pos.len(), 0);
             self.accept_pos.resize(o.accept_pos.len(), 0);
@@ -276,6 +285,19 @@ mod tests {
         assert_eq!(a.generated, 12);
         assert_eq!(a.offered_pos, vec![2, 2, 1, 1]);
         assert_eq!(a.accept_pos, vec![2, 1, 1, 0]);
+    }
+
+    #[test]
+    fn merge_sums_stochastic_counters() {
+        let mut a = Metrics::default();
+        a.residual_resamples = 3;
+        a.bonus_samples = 2;
+        let mut b = Metrics::default();
+        b.residual_resamples = 1;
+        b.bonus_samples = 4;
+        a.merge(&b);
+        assert_eq!(a.residual_resamples, 4);
+        assert_eq!(a.bonus_samples, 6);
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! plus full speculative sampling (Leviathan et al. / Chen et al.) for
 //! the stochastic path, with the residual-distribution correction
 //! property-tested for distribution preservation.
+//!
+//! Temperature 0 is routed to an EXACT first-max one-hot (not a tiny-
+//! temperature softmax): ties must resolve to the same index `argmax`
+//! picks, or the stochastic path at t=0 would diverge from greedy on
+//! tied logits.  All CDF walks accumulate in f64 against the f64
+//! uniform draw so tail mass never lands on the wrong bin.
 
 use crate::substrate::rng::Rng;
 
@@ -20,10 +26,23 @@ pub fn argmax(row: &[f32]) -> i32 {
 }
 
 /// Softmax with temperature into a probability vector.
+///
+/// `temperature <= 0` is the exact greedy limit: a one-hot at the FIRST
+/// maximal index (argmax's tie rule).  A near-zero softmax instead
+/// splits tied mass across every maximal index, which breaks the
+/// temperature→0 ≡ greedy identity the equivalence suite asserts.
 pub fn softmax(row: &[f32], temperature: f32) -> Vec<f32> {
-    let t = temperature.max(1e-6);
+    if row.is_empty() {
+        return Vec::new();
+    }
+    if temperature <= 0.0 {
+        let mut p = vec![0.0f32; row.len()];
+        p[argmax(row) as usize] = 1.0;
+        return p;
+    }
     let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut p: Vec<f32> = row.iter().map(|&x| ((x - m) / t).exp()).collect();
+    let mut p: Vec<f32> =
+        row.iter().map(|&x| ((x - m) / temperature).exp()).collect();
     let s: f32 = p.iter().sum();
     for x in &mut p {
         *x /= s;
@@ -31,16 +50,68 @@ pub fn softmax(row: &[f32], temperature: f32) -> Vec<f32> {
     p
 }
 
+/// Nucleus (top-p) filter in place: keep the smallest probability-
+/// sorted set whose cumulative mass reaches `top_p` (ties broken by
+/// index so the kept set is deterministic), zero the rest, renormalize.
+/// `top_p >= 1` is a no-op; `top_p <= 0` degenerates to top-1.
+pub fn top_p_filter(p: &mut [f32], top_p: f32) {
+    if top_p >= 1.0 || p.is_empty() {
+        return;
+    }
+    let mut idx: Vec<usize> = (0..p.len()).collect();
+    idx.sort_by(|&a, &b| p[b].total_cmp(&p[a]).then(a.cmp(&b)));
+    let mut cum = 0.0f64;
+    let mut keep = p.len();
+    for (n, &i) in idx.iter().enumerate() {
+        cum += p[i] as f64;
+        if cum >= top_p as f64 {
+            keep = n + 1;
+            break;
+        }
+    }
+    let mut kept = vec![false; p.len()];
+    for &i in &idx[..keep] {
+        kept[i] = true;
+    }
+    let mut s = 0.0f32;
+    for (i, v) in p.iter_mut().enumerate() {
+        if !kept[i] {
+            *v = 0.0;
+        } else {
+            s += *v;
+        }
+    }
+    for v in p.iter_mut() {
+        *v /= s;
+    }
+}
+
+/// The processed distribution of a logits row — temperature softmax
+/// then nucleus filter.  This is the ONE distribution both draft
+/// sampling and stochastic verification must use: the accept/residual
+/// correction is lossless only when p and q pass through identical
+/// processing (DESIGN.md §6).
+pub fn dist(row: &[f32], temperature: f32, top_p: f32) -> Vec<f32> {
+    let mut p = softmax(row, temperature);
+    top_p_filter(&mut p, top_p);
+    p
+}
+
+/// Inverse-CDF sample from a probability vector.  The CDF accumulates
+/// in f64 — `u` is drawn at f64 precision, and an f32 accumulator can
+/// misassign tail mass on near-degenerate distributions.  If rounding
+/// still leaves `u` past the total mass, fall back to the LAST index
+/// with nonzero probability (never a zero-probability token).
 pub fn sample(p: &[f32], rng: &mut Rng) -> i32 {
-    let u = rng.f64() as f32;
-    let mut acc = 0.0f32;
+    let u = rng.f64();
+    let mut acc = 0.0f64;
     for (i, &pi) in p.iter().enumerate() {
-        acc += pi;
+        acc += pi as f64;
         if u < acc {
             return i as i32;
         }
     }
-    (p.len() - 1) as i32
+    p.iter().rposition(|&pi| pi > 0.0).unwrap_or(0) as i32
 }
 
 /// One speculative-sampling acceptance step (stochastic verification).
@@ -50,11 +121,25 @@ pub fn sample(p: &[f32], rng: &mut Rng) -> i32 {
 /// from the residual max(p-q, 0).  Returns (accepted, token) where
 /// `token` is `x` if accepted else the residual sample — the classic
 /// construction whose output provably follows `p` exactly.
+///
+/// `q[x] == 0` means the draft could not have proposed `x` (the pair
+/// only arises from mismatched processing or a buggy caller); the limit
+/// of min(1, p/q) is 1 when the target gives `x` mass and the step must
+/// REJECT when it does not — force-accepting would emit a token outside
+/// the target's support.
 pub fn spec_accept(p: &[f32], q: &[f32], x: i32, rng: &mut Rng)
                    -> (bool, i32) {
     let xi = x as usize;
-    let ratio = if q[xi] <= 0.0 { 1.0 } else { (p[xi] / q[xi]).min(1.0) };
-    if (rng.f64() as f32) < ratio {
+    let ratio = if q[xi] <= 0.0 {
+        if p[xi] > 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        (p[xi] as f64 / q[xi] as f64).min(1.0)
+    };
+    if rng.f64() < ratio {
         return (true, x);
     }
     let mut resid: Vec<f32> = p
@@ -64,7 +149,8 @@ pub fn spec_accept(p: &[f32], q: &[f32], x: i32, rng: &mut Rng)
         .collect();
     let s: f32 = resid.iter().sum();
     if s <= 0.0 {
-        // p == q pointwise; rejection can't actually occur, but guard.
+        // p <= q pointwise (p == q up to rounding); rejection can't
+        // meaningfully occur, but guard by sampling the target itself.
         return (false, sample(p, rng));
     }
     for r in &mut resid {
@@ -123,6 +209,56 @@ mod tests {
     }
 
     #[test]
+    fn softmax_t0_is_exact_first_max_one_hot() {
+        // Regression: `temperature.max(1e-6)` used to make t=0 a tiny-
+        // temperature softmax that splits TIED mass across all maximal
+        // indices (here 0.5/0.5 on indices 1 and 3), diverging from
+        // argmax's first-maximal-index rule.  t=0 must be the exact
+        // one-hot at argmax.
+        let p = softmax(&[1.0, 7.0, -2.0, 7.0], 0.0);
+        assert_eq!(p, vec![0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(argmax(&[1.0, 7.0, -2.0, 7.0]), 1);
+        // all-tied row: all mass on index 0
+        let p = softmax(&[3.0, 3.0, 3.0], 0.0);
+        assert_eq!(p, vec![1.0, 0.0, 0.0]);
+        // and sampling a t=0 one-hot always returns argmax
+        let mut rng = Rng::new(17);
+        for _ in 0..100 {
+            assert_eq!(sample(&softmax(&[1.0, 7.0, -2.0, 7.0], 0.0),
+                              &mut rng),
+                       1);
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_nucleus_and_renormalizes() {
+        // p = [0.5, 0.3, 0.2]; top_p=0.7 keeps {0, 1} (cum 0.8 >= 0.7)
+        let mut p = vec![0.5f32, 0.3, 0.2];
+        top_p_filter(&mut p, 0.7);
+        assert_eq!(p[2], 0.0);
+        assert!((p[0] - 0.625).abs() < 1e-6);
+        assert!((p[1] - 0.375).abs() < 1e-6);
+        // top_p=1.0 is a no-op; top_p=0 keeps exactly the max
+        let mut q = vec![0.5f32, 0.3, 0.2];
+        top_p_filter(&mut q, 1.0);
+        assert_eq!(q, vec![0.5, 0.3, 0.2]);
+        let mut r = vec![0.3f32, 0.5, 0.2];
+        top_p_filter(&mut r, 0.0);
+        assert_eq!(r, vec![0.0, 1.0, 0.0]);
+        // tied probabilities: the LOWER index enters the nucleus first
+        let mut t = vec![0.4f32, 0.4, 0.2];
+        top_p_filter(&mut t, 0.4);
+        assert_eq!(t, vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dist_t0_ignores_top_p() {
+        // the t=0 one-hot survives any nucleus cutoff unchanged
+        let p = dist(&[1.0, 7.0, -2.0], 0.0, 0.3);
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
     fn sample_respects_distribution() {
         let mut rng = Rng::new(11);
         let p = [0.1f32, 0.6, 0.3];
@@ -136,8 +272,40 @@ mod tests {
         }
     }
 
+    #[test]
+    fn sample_near_degenerate_never_picks_zero_mass() {
+        // Regression for the f32-CDF bug: with almost all mass on bin 0
+        // and a zero-probability tail bin, f32 accumulation rounding
+        // (and the old unconditional `p.len()-1` fallback) could emit
+        // the impossible token.  The f64 walk never does, over many
+        // seeds and tail shapes.
+        Cases::new(16).check("no-zero-mass-tokens", |rng| {
+            let eps = 10f32.powi(-(3 + rng.below(30) as i32));
+            let p = [1.0f32 - eps, eps, 0.0];
+            for _ in 0..2_000 {
+                let x = sample(&p, rng) as usize;
+                assert!(x < 2, "sampled zero-probability bin");
+            }
+        });
+    }
+
+    #[test]
+    fn sample_fallback_lands_on_last_nonzero() {
+        // A distribution whose f32 entries undersum 1.0: the fallback
+        // must land on the last index with mass, not blindly len()-1.
+        let p = [0.5f32, 0.4999f32, 0.0, 0.0];
+        let mut rng = Rng::new(23);
+        for _ in 0..10_000 {
+            assert!(sample(&p, &mut rng) < 2);
+        }
+    }
+
     /// The headline property: speculative sampling must reproduce the
-    /// target distribution exactly, for ANY draft distribution.
+    /// target distribution exactly, for ANY draft distribution —
+    /// including drafts with zero-mass entries where the target has
+    /// support (residual covers them) and targets with zero-mass
+    /// entries the draft proposes (the tightened q[x]==0 / p[x]==0
+    /// guard must reject, never force-accept).
     #[test]
     fn spec_sampling_preserves_target_distribution() {
         Cases::new(8).check("spec-preserves-p", |rng| {
@@ -146,6 +314,11 @@ mod tests {
                 (0..n).map(|_| rng.f64() as f32 + 0.01).collect();
             let mut q: Vec<f32> =
                 (0..n).map(|_| rng.f64() as f32 + 0.01).collect();
+            // knock holes in both supports: p[0] = 0 (q still proposes
+            // it — exercises the reject-on-zero-target guard), q[1] = 0
+            // (only the residual can produce it)
+            p[0] = 0.0;
+            q[1] = 0.0;
             let sp: f32 = p.iter().sum();
             let sq: f32 = q.iter().sum();
             p.iter_mut().for_each(|x| *x /= sp);
@@ -157,6 +330,8 @@ mod tests {
                 let (_, tok) = spec_accept(&p, &q, x, rng);
                 counts[tok as usize] += 1;
             }
+            assert_eq!(counts[0], 0,
+                       "emitted a token outside the target support");
             for i in 0..n {
                 let f = counts[i] as f32 / trials as f32;
                 assert!(
@@ -169,6 +344,27 @@ mod tests {
     }
 
     #[test]
+    fn spec_accept_rejects_zero_target_mass() {
+        // Regression for the force-accept bug: q[x] == 0 used to set
+        // the ratio to 1.0 unconditionally.  With p[x] == 0 too, the
+        // step must reject and resample from the residual.
+        let p = [0.0f32, 0.6, 0.4];
+        let q = [0.0f32, 0.4, 0.6];
+        let mut rng = Rng::new(31);
+        for _ in 0..500 {
+            let (acc, tok) = spec_accept(&p, &q, 0, &mut rng);
+            assert!(!acc);
+            assert_ne!(tok, 0);
+        }
+        // and with p[x] > 0 = q[x], the limit accepts
+        let p2 = [0.5f32, 0.5];
+        let q2 = [0.0f32, 1.0];
+        let (acc, tok) = spec_accept(&p2, &q2, 0, &mut rng);
+        assert!(acc);
+        assert_eq!(tok, 0);
+    }
+
+    #[test]
     fn spec_accept_identical_dists_always_accepts() {
         let mut rng = Rng::new(5);
         let p = [0.25f32, 0.25, 0.25, 0.25];
@@ -177,6 +373,33 @@ mod tests {
             let (acc, tok) = spec_accept(&p, &p, x, &mut rng);
             assert!(acc);
             assert_eq!(tok, x);
+        }
+    }
+
+    #[test]
+    fn spec_accept_t0_one_hots_reduce_to_greedy() {
+        // The identity the engine-level suite relies on: with exact
+        // one-hot p and q (temperature 0), spec_accept accepts iff the
+        // candidate equals the target argmax, and a rejection's
+        // residual resample IS the target argmax — token-for-token
+        // greedy, regardless of rng draws.
+        let mut rng = Rng::new(41);
+        let hot = |i: usize| {
+            let mut v = vec![0.0f32; 4];
+            v[i] = 1.0;
+            v
+        };
+        for _ in 0..200 {
+            // agree: accept
+            let (acc, tok) =
+                spec_accept(&hot(2), &hot(2), 2, &mut rng);
+            assert!(acc);
+            assert_eq!(tok, 2);
+            // disagree: reject, residual = target one-hot
+            let (acc, tok) =
+                spec_accept(&hot(1), &hot(2), 2, &mut rng);
+            assert!(!acc);
+            assert_eq!(tok, 1);
         }
     }
 }

@@ -8,6 +8,8 @@
 //!   model's cache has consumed; the gap is re-fed on the next draft call
 //!   (PARD's "re-feed accepted reals over stale mask slots").
 
+use crate::substrate::rng::Rng;
+
 #[derive(Debug, Clone, Default)]
 pub struct Sequence {
     pub prompt_len: usize,
@@ -26,6 +28,11 @@ pub struct Sequence {
     pub pending_hidden: Option<Vec<f32>>,
     /// EAGLE: (token, position, hidden) pairs not yet in the head cache.
     pub eagle_backlog: Vec<(i32, i32, Vec<f32>)>,
+    /// Stochastic decoding: this sequence's private sampling stream,
+    /// seeded from (sample_seed, admission ordinal) so sampled output
+    /// is invariant to batch size and slot assignment (DESIGN.md §6).
+    /// None under greedy decoding.
+    pub rng: Option<Rng>,
 }
 
 impl Sequence {
@@ -41,6 +48,7 @@ impl Sequence {
             max_new,
             pending_hidden: None,
             eagle_backlog: Vec::new(),
+            rng: None,
         }
     }
 

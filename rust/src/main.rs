@@ -3,7 +3,8 @@
 //! Subcommands (hand-rolled parsing; clap is not vendored offline):
 //!   eval   --engine pard --target target-l [--task code] [--k 8]
 //!          [--batch 1] [--prompts N] [--max-new N] [--draft NAME]
-//!          [--kv-blocks N] [--prefix-cache]
+//!          [--kv-blocks N] [--prefix-cache] [--temperature T]
+//!          [--top-p P] [--sample-seed N]
 //!   serve  --engine pard --target target-l [--n N] [--rate R]
 //!          [--kv-blocks N] [--virtual-tick S] [--prefix-cache]
 //!          [--shared-prefix N] [--prefix-len L]
@@ -33,12 +34,17 @@
 //! distinct system prompts of `--prefix-len L` tokens (default 32)
 //! prepended round-robin to the task prompts.  `bench --compare
 //! OLD.json` fails on any >10% tokens/s regression against an older
-//! report.
+//! report.  `--temperature T` switches every engine from greedy argmax
+//! to seeded stochastic decoding (speculative engines verify with the
+//! lossless accept/residual correction); `--top-p P` adds nucleus
+//! filtering and `--sample-seed N` keys the per-sequence rng streams —
+//! same seed, same output, at any batch size.  Temperature 0 is exact
+//! greedy (DESIGN.md §6).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
-use pard::coordinator::engines::{EngineConfig, EngineKind};
+use pard::coordinator::engines::{EngineConfig, EngineKind, SamplingCfg};
 use pard::coordinator::evaluate::run_eval;
 use pard::coordinator::router::default_draft;
 use pard::coordinator::batcher::{serve_trace, serve_trace_virtual};
@@ -167,6 +173,46 @@ fn kv_blocks_opt(args: &Args) -> Result<Option<usize>> {
     }
 }
 
+/// `--temperature T [--top-p P] [--sample-seed N]` (stochastic
+/// decoding).  `None` without `--temperature` — the greedy default; the
+/// companion flags alone are an error, not silently ignored knobs.
+/// Values that don't parse or are out of range error instead of falling
+/// through to a default.
+fn sampling_opt(args: &Args) -> Result<Option<SamplingCfg>> {
+    let Some(tv) = args.opts.get("temperature") else {
+        anyhow::ensure!(
+            args.opts.get("top-p").is_none()
+                && args.opts.get("sample-seed").is_none(),
+            "--top-p/--sample-seed require --temperature"
+        );
+        return Ok(None);
+    };
+    let temperature: f32 = tv.parse().map_err(|_| {
+        anyhow::anyhow!("--temperature wants a number >= 0, got `{tv}`")
+    })?;
+    anyhow::ensure!(temperature >= 0.0 && temperature.is_finite(),
+                    "--temperature must be finite and >= 0");
+    let top_p = match args.opts.get("top-p") {
+        None => 1.0,
+        Some(v) => {
+            let p: f32 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--top-p wants a number in (0, 1], \
+                                 got `{v}`")
+            })?;
+            anyhow::ensure!(p > 0.0 && p <= 1.0,
+                            "--top-p must be in (0, 1]");
+            p
+        }
+    };
+    let seed = match args.opts.get("sample-seed") {
+        None => 0,
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("--sample-seed wants an integer, got `{v}`")
+        })?,
+    };
+    Ok(Some(SamplingCfg { temperature, top_p, seed }))
+}
+
 fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
     let kind = EngineKind::parse(&args.get("engine", "pard"))?;
     let target = args.get("target", "target-l");
@@ -184,6 +230,7 @@ fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
         shared_mask: !args.flag("distinct-mask"),
         kv_blocks: kv_blocks_opt(args)?,
         prefix_cache: args.flag("prefix-cache"),
+        sampling: sampling_opt(args)?,
     })
 }
 
@@ -210,6 +257,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
     };
     println!("1-α={:.3} 4-α={:.3} 8-α={:.3}  ref-agreement={ref_agree}",
              m.k_alpha(1), m.k_alpha(4), m.k_alpha(8));
+    if let Some(s) = &cfg.sampling {
+        println!("sampling: temperature={} top-p={} seed={}  \
+                  residual-resamples={} bonus-samples={}",
+                 s.temperature, s.top_p, s.seed,
+                 m.residual_resamples, m.bonus_samples);
+    }
     if args.flag("show") {
         for (i, out) in r.outputs.iter().take(3).enumerate() {
             println!("[{i}] {}", rt.tokenizer.detok(out));

@@ -121,6 +121,7 @@ fn sweep(rt: &Runtime, o: &BenchOpts) -> Result<Vec<RunRow>> {
                     shared_mask: true,
                     kv_blocks: None,
                     prefix_cache: false,
+                    sampling: None,
                 };
                 let prompts = rt.prompts(&o.task)?.take(o.n_prompts);
                 let r = run_eval(rt, &cfg, &prompts, o.max_new, &o.task)?;
@@ -236,6 +237,7 @@ fn serving_prefix_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
             shared_mask: true,
             kv_blocks: Some(kv_blocks),
             prefix_cache: share,
+            sampling: None,
         };
         let mut engine = build_engine(rt, &cfg)?;
         engine.warmup()?;

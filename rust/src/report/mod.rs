@@ -59,6 +59,7 @@ pub fn cell(rt: &Runtime, kind: EngineKind, target: &str, task: &str,
         shared_mask: true,
         kv_blocks: None,
         prefix_cache: false,
+        sampling: None,
     };
     let prompts = rt.prompts(task)?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, task)
@@ -430,6 +431,7 @@ fn pard_cell(rt: &Runtime, variant: &str, target: &str, k: usize,
         shared_mask: shared,
         kv_blocks: None,
         prefix_cache: false,
+        sampling: None,
     };
     let prompts = rt.prompts("math")?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, "math")

@@ -23,6 +23,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         shared_mask: true,
         kv_blocks: None,
         prefix_cache: false,
+        sampling: None,
     }
 }
 

@@ -27,6 +27,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         shared_mask: true,
         kv_blocks,
         prefix_cache: false,
+        sampling: None,
     }
 }
 
@@ -114,6 +115,7 @@ fn paged_pool_admits_more_than_dense_budget() {
         shared_mask: true,
         kv_blocks: Some(kv_blocks),
         prefix_cache: false,
+        sampling: None,
     };
     let mut e = build_engine(&rt, &c).unwrap();
     e.warmup().unwrap();
@@ -151,6 +153,7 @@ fn engine_pool_backpressure_serializes_and_completes() {
         shared_mask: true,
         kv_blocks: Some(3),
         prefix_cache: false,
+        sampling: None,
     };
     let mut e = build_engine(&rt, &c).unwrap();
     e.warmup().unwrap();

@@ -32,6 +32,7 @@ fn cfg(rt: &Runtime, knobs: Knobs) -> EngineConfig {
         shared_mask: true,
         kv_blocks,
         prefix_cache: share,
+        sampling: None,
     }
 }
 

@@ -1,0 +1,201 @@
+//! Distribution-level equivalence suite for stochastic decoding on the
+//! deterministic reference backend — runs in plain `cargo test` with NO
+//! Python/XLA artifacts.
+//!
+//! Two properties anchor the tier (DESIGN.md §6):
+//!
+//! * temperature → 0 identity: with `--temperature 0` every engine's
+//!   sampled output is token-identical to greedy decoding — processed
+//!   distributions collapse to exact first-max one-hots, so accept
+//!   ratios are exactly 1.0 on matches and residuals collapse onto the
+//!   target argmax, regardless of the rng draws.
+//! * losslessness at t > 0: the accept/residual correction makes
+//!   speculative sampled output follow the target distribution.  Its
+//!   exact-testable corollaries: AR (full recompute) and AR+ (cached)
+//!   consume identical per-sequence draw streams and must agree
+//!   token-for-token at ANY temperature, and a self-drafting VSD has
+//!   q == p bitwise, so every candidate is accepted with probability
+//!   exactly 1.0.
+//!
+//! All assertions are exact or seed-deterministic — nothing here can
+//! flake.
+
+use pard::coordinator::engines::{build_engine, generate, EngineConfig,
+                                 EngineKind, SamplingCfg};
+use pard::coordinator::router::default_draft;
+use pard::Runtime;
+
+fn rt() -> Runtime {
+    Runtime::reference(7)
+}
+
+fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
+       batch: usize, sampling: Option<SamplingCfg>) -> EngineConfig {
+    EngineConfig {
+        kind,
+        target: target.to_string(),
+        draft: default_draft(&rt.manifest, kind, target).unwrap(),
+        batch,
+        k,
+        max_new: 16,
+        shared_mask: true,
+        kv_blocks: None,
+        prefix_cache: false,
+        sampling,
+    }
+}
+
+fn samp(temperature: f32, top_p: f32, seed: u64) -> Option<SamplingCfg> {
+    Some(SamplingCfg { temperature, top_p, seed })
+}
+
+fn gen(rt: &Runtime, c: &EngineConfig, prompts: &[Vec<i32>])
+       -> Vec<Vec<i32>> {
+    let mut e = build_engine(rt, c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), prompts, c.max_new).unwrap()
+}
+
+fn some_prompts(rt: &Runtime, n: usize) -> Vec<Vec<i32>> {
+    rt.prompts("code")
+        .unwrap()
+        .take(n)
+        .into_iter()
+        .map(|p| p.prompt)
+        .collect()
+}
+
+/// The acceptance criterion: `--temperature 0` must be token-identical
+/// to greedy for ALL FIVE engines — including with a top-p filter
+/// configured, which the exact-greedy limit ignores by definition.
+#[test]
+fn temperature_zero_is_token_identical_to_greedy_for_all_engines() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 3);
+    let base = gen(&rt,
+                   &cfg(&rt, EngineKind::ArPlus, "target-l", 4, 1, None),
+                   &prompts);
+    assert!(base.iter().all(|o| !o.is_empty()), "base generated nothing");
+    for kind in [EngineKind::Ar, EngineKind::ArPlus, EngineKind::Vsd,
+                 EngineKind::Pard, EngineKind::Eagle] {
+        for sampling in [samp(0.0, 1.0, 5), samp(0.0, 0.5, 99)] {
+            let out = gen(&rt,
+                          &cfg(&rt, kind, "target-l", 4, 1, sampling),
+                          &prompts);
+            assert_eq!(base, out,
+                       "{kind:?} sampled at t=0 ({sampling:?}) \
+                        diverged from greedy");
+        }
+    }
+}
+
+/// AR and AR+ sample the same per-sequence draw stream (one draw per
+/// generated token, streams keyed by admission ordinal), and the
+/// reference backend is bit-exact across call shapes — so cached and
+/// full-recompute sampled decoding must agree EXACTLY at any
+/// temperature, with and without a nucleus filter.
+#[test]
+fn sampled_ar_uncached_matches_ar_plus_exactly() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 3);
+    for sampling in [samp(0.8, 1.0, 11), samp(1.2, 0.9, 3)] {
+        let a = gen(&rt,
+                    &cfg(&rt, EngineKind::Ar, "target-m", 4, 1, sampling),
+                    &prompts);
+        let b = gen(&rt,
+                    &cfg(&rt, EngineKind::ArPlus, "target-m", 4, 1,
+                         sampling),
+                    &prompts);
+        assert_eq!(a, b,
+                   "sampled KV-cached decode must equal full recompute \
+                    ({sampling:?})");
+    }
+}
+
+/// draft == target ⇒ q == p bitwise at every position (same weights,
+/// same committed content, per-position-independent compute), so the
+/// accept ratio is exactly 1.0: a sampled self-draft must never
+/// residual-resample and must accept every candidate, committing K+1
+/// tokens per iteration — the stochastic mirror of the greedy
+/// accept-everything test.
+#[test]
+fn self_draft_vsd_sampled_accepts_every_candidate() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 2);
+    let mut c = cfg(&rt, EngineKind::Vsd, "draft-s", 4, 1,
+                    samp(0.7, 1.0, 13));
+    c.draft = Some("draft-s".to_string());
+    let mut e = build_engine(&rt, &c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), &prompts, c.max_new).unwrap();
+    let m = e.metrics();
+    assert!(m.generated > 0);
+    assert_eq!(m.residual_resamples, 0,
+               "q == p must never reject a candidate");
+    assert_eq!(m.k_alpha(4), 1.0, "self-draft must accept everything");
+    assert!(m.bonus_samples > 0,
+            "full acceptance must commit bonus samples");
+    assert!(m.tokens_per_iter() > 3.0,
+            "accept-all should commit ~K+1/iter, got {}",
+            m.tokens_per_iter());
+}
+
+/// Same (seed, temperature) ⇒ identical sampled output run-to-run;
+/// changing the seed must actually change what is sampled.
+#[test]
+fn sampled_output_is_seed_deterministic() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 3);
+    let c = cfg(&rt, EngineKind::Pard, "target-m", 4, 1,
+                samp(0.9, 1.0, 21));
+    let a = gen(&rt, &c, &prompts);
+    let b = gen(&rt, &c, &prompts);
+    assert_eq!(a, b, "same seed must reproduce sampled output exactly");
+    let other = gen(&rt,
+                    &cfg(&rt, EngineKind::Pard, "target-m", 4, 1,
+                         samp(0.9, 1.0, 22)),
+                    &prompts);
+    assert_ne!(a, other, "a different seed must sample differently");
+}
+
+/// Per-sequence rng streams are keyed by FCFS admission ordinal, not by
+/// slot: sampled output must be invariant to batch size, exactly like
+/// the greedy suite's batch-invariance property.
+#[test]
+fn batch_size_does_not_change_sampled_outputs() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 6);
+    let sampling = samp(0.8, 1.0, 2);
+    let base = gen(&rt,
+                   &cfg(&rt, EngineKind::Pard, "target-m", 4, 1,
+                        sampling),
+                   &prompts);
+    for bs in [2usize, 4] {
+        let out = gen(&rt,
+                      &cfg(&rt, EngineKind::Pard, "target-m", 4, bs,
+                           sampling),
+                      &prompts);
+        assert_eq!(base, out, "PARD sampled batch={bs} changed outputs");
+    }
+}
+
+/// A real draft at t=1 must exercise BOTH stochastic verify outcomes:
+/// every verify row ends in exactly one residual resample or one bonus
+/// sample, so their sum bounds the iteration count from below, and a
+/// disagreeing draft must get rejected at least occasionally.
+#[test]
+fn stochastic_verify_counters_accumulate_under_sampling() {
+    let rt = rt();
+    let prompts = some_prompts(&rt, 3);
+    let c = cfg(&rt, EngineKind::Pard, "target-m", 4, 1,
+                samp(1.0, 1.0, 17));
+    let mut e = build_engine(&rt, &c).unwrap();
+    e.warmup().unwrap();
+    generate(e.as_mut(), &prompts, c.max_new).unwrap();
+    let m = e.metrics();
+    assert!(m.generated > 0);
+    assert!(m.residual_resamples > 0,
+            "a non-self draft at t=1 must see rejections");
+    assert!(m.residual_resamples + m.bonus_samples >= m.iterations,
+            "every verify row ends in a residual or a bonus commit");
+}

@@ -19,6 +19,7 @@ fn cfg() -> EngineConfig {
         shared_mask: true,
         kv_blocks: None,
         prefix_cache: false,
+        sampling: None,
     }
 }
 

@@ -3,17 +3,26 @@
 //! test script, not from any model, so these pin down the acceptance
 //! arithmetic and the (tokens, pos, commit_pos) garbage-slot protocol
 //! independent of PJRT and of the reference transformer.
+//!
+//! Covers both verdict paths: greedy prefix acceptance and the
+//! stochastic accept/residual path (`VerifySpec::sampling` set), whose
+//! scripted cases mirror the greedy ones — all-accept with a bonus
+//! sample, first-reject with a residual resample, and the K=2 window
+//! edge — plus a per-position acceptance-rate check against the
+//! analytic expectation alpha = sum_x min(p(x), q(x)).
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
 
 use anyhow::Result;
 use pard::coordinator::engines::{apply_verdict, verify_and_commit,
-                                 RowVerdict};
+                                 RowVerdict, SamplingCfg, VerifySpec};
 use pard::coordinator::metrics::Metrics;
+use pard::coordinator::sampling::sample;
 use pard::coordinator::sequence::Sequence;
 use pard::runtime::{Backend, FwdOut, KvCache, KvStage, ModelCfg,
                     ModelKind};
+use pard::substrate::rng::Rng;
 
 const VOCAB: usize = 32;
 const PAD: i32 = 2;
@@ -129,6 +138,35 @@ fn mid_seq(plen: usize, pending: i32, max_new: usize) -> Sequence {
     s
 }
 
+/// Same, with a seeded per-row sampling stream (the state engines put
+/// rows in under stochastic decoding).
+fn mid_seq_rng(plen: usize, pending: i32, max_new: usize, stream: u64)
+               -> Sequence {
+    let mut s = mid_seq(plen, pending, max_new);
+    s.rng = Some(Rng::new_stream(7, stream));
+    s
+}
+
+fn greedy_spec(k: usize) -> VerifySpec<'static> {
+    VerifySpec { k, pad: PAD, sampling: None, qdists: &[] }
+}
+
+fn stoch_spec(k: usize, temperature: f32, qdists: &[Vec<Vec<f32>>])
+              -> VerifySpec<'_> {
+    VerifySpec {
+        k,
+        pad: PAD,
+        sampling: Some(SamplingCfg { temperature, top_p: 1.0, seed: 7 }),
+        qdists,
+    }
+}
+
+fn one_hot(tok: i32) -> Vec<f32> {
+    let mut p = vec![0f32; VOCAB];
+    p[tok as usize] = 1.0;
+    p
+}
+
 #[test]
 fn verify_accepts_longest_prefix_and_routes_rejects_to_garbage() {
     let k = 3;
@@ -137,16 +175,16 @@ fn verify_accepts_longest_prefix_and_routes_rejects_to_garbage() {
     let plan = vec![5, 6, 9, 21, 8, 22, 23, 24];
     let be = Scripted::new(vec![plan]);
     let mut cache = be.new_cache(2).unwrap();
-    let seqs =
+    let mut seqs =
         vec![mid_seq(4, 30, 16), mid_seq(4, 31, 16)];
     let base = seqs[0].target_len as i32; // == 4
     cache.cur_len[0] = base as u32;
     cache.cur_len[1] = base as u32;
     let cands = vec![vec![5, 6, 7], vec![4, 4, 4]];
     let mut m = Metrics::default();
-    let verdicts =
-        verify_and_commit(&be, &mut cache, &seqs, &cands, k, PAD, &mut m)
-            .unwrap();
+    let verdicts = verify_and_commit(&be, &mut cache, &mut seqs, &cands,
+                                     &greedy_spec(k), &mut m)
+        .unwrap();
 
     let v0 = verdicts[0].as_ref().unwrap();
     assert_eq!(v0.accepted, 2);
@@ -190,9 +228,9 @@ fn verify_skips_parked_rows() {
     seqs[1].active = false; // parked slot
     let cands = vec![vec![7, 8], vec![9, 9]];
     let mut m = Metrics::default();
-    let verdicts =
-        verify_and_commit(&be, &mut cache, &seqs, &cands, k, PAD, &mut m)
-            .unwrap();
+    let verdicts = verify_and_commit(&be, &mut cache, &mut seqs, &cands,
+                                     &greedy_spec(k), &mut m)
+        .unwrap();
     assert!(verdicts[0].is_some());
     assert!(verdicts[1].is_none(), "parked row must yield no verdict");
     // Parked rows own NO storage under the paged cache: their garbage
@@ -212,16 +250,187 @@ fn full_accept_commits_k_plus_one() {
     let plan = vec![5, 6, 7, 9];
     let be = Scripted::new(vec![plan]);
     let mut cache = be.new_cache(1).unwrap();
-    let seqs = vec![mid_seq(4, 30, 16)];
+    let mut seqs = vec![mid_seq(4, 30, 16)];
     let cands = vec![vec![5, 6, 7]];
     let mut m = Metrics::default();
-    let v = verify_and_commit(&be, &mut cache, &seqs, &cands, k, PAD,
-                              &mut m)
+    let v = verify_and_commit(&be, &mut cache, &mut seqs, &cands,
+                              &greedy_spec(k), &mut m)
         .unwrap();
     let v0 = v[0].as_ref().unwrap();
     assert_eq!(v0.accepted, 3);
     assert_eq!(v0.committed, vec![5, 6, 7, 9]);
     assert_eq!(m.accept_hist, vec![0, 0, 0, 1]);
+}
+
+#[test]
+fn stochastic_t0_all_accept_commits_bonus_sample() {
+    // Temperature 0 turns every target row into an exact one-hot; with
+    // one-hot draft distributions on matching candidates the accept
+    // ratio is exactly 1.0, so the row fully accepts and commits a
+    // bonus token sampled from the (one-hot) K-th target row —
+    // deterministic regardless of the rng draws.
+    let k = 3;
+    let plan = vec![5, 6, 7, 9];
+    let be = Scripted::new(vec![plan]);
+    let mut cache = be.new_cache(1).unwrap();
+    let mut seqs = vec![mid_seq_rng(4, 30, 16, 0)];
+    let cands = vec![vec![5, 6, 7]];
+    let q = vec![vec![one_hot(5), one_hot(6), one_hot(7)]];
+    let mut m = Metrics::default();
+    let v = verify_and_commit(&be, &mut cache, &mut seqs, &cands,
+                              &stoch_spec(k, 0.0, &q), &mut m)
+        .unwrap();
+    let v0 = v[0].as_ref().unwrap();
+    assert_eq!(v0.accepted, 3);
+    assert_eq!(v0.committed, vec![5, 6, 7, 9]);
+    assert_eq!(m.bonus_samples, 1);
+    assert_eq!(m.residual_resamples, 0);
+    assert_eq!(m.accept_hist, vec![0, 0, 0, 1]);
+}
+
+#[test]
+fn stochastic_first_reject_commits_residual_resample() {
+    // Candidate 5 was "drafted" from a one-hot at 5, but the target
+    // one-hot sits at 8: accept probability p[5]/q[5] = 0, so the row
+    // must reject and resample from the residual max(p-q, 0)⁺ — which
+    // is the target one-hot, i.e. token 8, deterministically.
+    let k = 1;
+    let plan = vec![8, 21];
+    let be = Scripted::new(vec![plan]);
+    let mut cache = be.new_cache(1).unwrap();
+    let mut seqs = vec![mid_seq_rng(4, 30, 16, 0)];
+    let cands = vec![vec![5]];
+    let q = vec![vec![one_hot(5)]];
+    let mut m = Metrics::default();
+    let v = verify_and_commit(&be, &mut cache, &mut seqs, &cands,
+                              &stoch_spec(k, 0.0, &q), &mut m)
+        .unwrap();
+    let v0 = v[0].as_ref().unwrap();
+    assert_eq!(v0.accepted, 0);
+    assert_eq!(v0.committed, vec![8]);
+    assert_eq!(m.residual_resamples, 1);
+    assert_eq!(m.bonus_samples, 0);
+}
+
+#[test]
+fn stochastic_k2_window_edge_mirrors_greedy_protocol() {
+    // K=2 mirror of the greedy garbage-slot case: row 0 fully accepts
+    // (both candidate columns commit live, bonus token appended);
+    // row 1 rejects at position 0 (both candidate columns go to the
+    // garbage slot, residual replaces the candidate).
+    let k = 2;
+    let plan = vec![5, 6, 9, 8, 22, 23];
+    let be = Scripted::new(vec![plan]);
+    let mut cache = be.new_cache(2).unwrap();
+    let mut seqs =
+        vec![mid_seq_rng(4, 30, 16, 0), mid_seq_rng(4, 31, 16, 1)];
+    let base = seqs[0].target_len as i32; // == 4
+    cache.cur_len[0] = base as u32;
+    cache.cur_len[1] = base as u32;
+    let cands = vec![vec![5, 6], vec![4, 4]];
+    let q = vec![vec![one_hot(5), one_hot(6)],
+                 vec![one_hot(4), one_hot(4)]];
+    let mut m = Metrics::default();
+    let verdicts = verify_and_commit(&be, &mut cache, &mut seqs, &cands,
+                                     &stoch_spec(k, 0.0, &q), &mut m)
+        .unwrap();
+
+    let v0 = verdicts[0].as_ref().unwrap();
+    assert_eq!(v0.accepted, 2);
+    assert_eq!(v0.committed, vec![5, 6, 9]);
+    let v1 = verdicts[1].as_ref().unwrap();
+    assert_eq!(v1.accepted, 0);
+    assert_eq!(v1.committed, vec![8]);
+    assert_eq!(m.bonus_samples, 1);
+    assert_eq!(m.residual_resamples, 1);
+    assert_eq!(m.offered_pos, vec![2, 2]);
+    assert_eq!(m.accept_pos, vec![1, 1]);
+
+    // identical cache protocol to the greedy path: pending + accepted
+    // columns live, rejected columns at the garbage slot.
+    let g = cache.garbage_slot() as usize;
+    let b = base as usize;
+    assert_eq!(cache.host_kv(0, 0, 0, b).unwrap()[0], marker(0, 0));
+    assert_eq!(cache.host_kv(0, 0, 0, b + 1).unwrap()[0], marker(0, 1));
+    assert_eq!(cache.host_kv(0, 0, 0, b + 2).unwrap()[0], marker(0, 2));
+    assert_eq!(cache.host_kv(0, 0, 1, b).unwrap()[0], marker(1, 0));
+    assert_eq!(cache.host_kv(0, 0, 1, b + 1).unwrap()[0], 0.0);
+    assert_eq!(cache.host_kv(0, 0, 1, g).unwrap()[0], marker(1, 2));
+}
+
+#[test]
+fn stochastic_t0_verdicts_match_greedy_exactly() {
+    // The same scripted plan through both verdict paths: at
+    // temperature 0 the stochastic path must produce identical
+    // (accepted, committed) per row — including the partial-accept
+    // case, where the residual distribution collapses onto the target
+    // argmax.
+    let k = 3;
+    let plan = vec![5, 6, 9, 21, 8, 22, 23, 24];
+    let cands = vec![vec![5, 6, 7], vec![4, 4, 4]];
+
+    let be_g = Scripted::new(vec![plan.clone()]);
+    let mut cache_g = be_g.new_cache(2).unwrap();
+    let mut seqs_g = vec![mid_seq(4, 30, 16), mid_seq(4, 31, 16)];
+    let mut mg = Metrics::default();
+    let vg = verify_and_commit(&be_g, &mut cache_g, &mut seqs_g, &cands,
+                               &greedy_spec(k), &mut mg)
+        .unwrap();
+
+    let be_s = Scripted::new(vec![plan]);
+    let mut cache_s = be_s.new_cache(2).unwrap();
+    let mut seqs_s =
+        vec![mid_seq_rng(4, 30, 16, 0), mid_seq_rng(4, 31, 16, 1)];
+    let q: Vec<Vec<Vec<f32>>> = cands
+        .iter()
+        .map(|row| row.iter().map(|&c| one_hot(c)).collect())
+        .collect();
+    let mut ms = Metrics::default();
+    let vs = verify_and_commit(&be_s, &mut cache_s, &mut seqs_s, &cands,
+                               &stoch_spec(k, 0.0, &q), &mut ms)
+        .unwrap();
+
+    for (g, s) in vg.iter().zip(vs.iter()) {
+        let (g, s) = (g.as_ref().unwrap(), s.as_ref().unwrap());
+        assert_eq!(g.accepted, s.accepted);
+        assert_eq!(g.committed, s.committed);
+    }
+    assert_eq!(mg.offered_pos, ms.offered_pos);
+    assert_eq!(mg.accept_pos, ms.accept_pos);
+}
+
+#[test]
+fn stochastic_acceptance_rate_matches_analytic_expectation() {
+    // K=1 at temperature 1: the scripted target row is a one-peak
+    // softmax over VOCAB=32 (logit 1 at the peak, 0 elsewhere), the
+    // draft q is uniform.  With the candidate drawn from q, the accept
+    // probability is alpha = sum_x min(p(x), q(x))
+    //   = 1/32 + 31/(e+31)   (peak capped by q, tail capped by p)
+    // and `Metrics::k_alpha(1)` over many trials must converge to it.
+    // Fixed seeds make this exact-reproducible, not flaky.
+    let trials = 4000;
+    let uniform = vec![1.0f32 / VOCAB as f32; VOCAB];
+    let mut crng = Rng::new_stream(123, 9); // candidate draws, x ~ q
+    let mut m = Metrics::default();
+    for trial in 0..trials {
+        let peak = (trial % VOCAB) as i32;
+        let plan = vec![peak, 0];
+        let be = Scripted::new(vec![plan]);
+        let mut cache = be.new_cache(1).unwrap();
+        let mut seqs = vec![mid_seq_rng(4, 30, 16, trial as u64)];
+        let cands = vec![vec![sample(&uniform, &mut crng)]];
+        let q = vec![vec![uniform.clone()]];
+        verify_and_commit(&be, &mut cache, &mut seqs, &cands,
+                          &stoch_spec(1, 1.0, &q), &mut m)
+            .unwrap();
+    }
+    let e = std::f64::consts::E;
+    let alpha = 1.0 / 32.0 + 31.0 / (e + 31.0);
+    let got = m.k_alpha(1);
+    assert!((got - alpha).abs() < 0.02,
+            "empirical acceptance {got:.4} vs analytic {alpha:.4}");
+    // every trial ends in exactly one residual or bonus commit
+    assert_eq!(m.residual_resamples + m.bonus_samples, trials as u64);
 }
 
 #[test]

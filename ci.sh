@@ -20,9 +20,13 @@
 #
 # Python mirror gate: when python3 exists, the executable
 # layout-equality mirror (python/refsim/hostsim.py, which also replays
-# the paged block table, prefix-sharing/COW layout, and the stochastic
-# sampling accept/residual math of coordinator/sampling.rs) must pass —
-# auto-skipped only when python3 is not installed at all.
+# the paged block table, prefix-sharing/COW layout, the stochastic
+# sampling accept/residual math of coordinator/sampling.rs, and the
+# adaptive speculation-policy gates of coordinator/policy.rs — the
+# integer K rule, windowed accounting, and the strict-win/dual-mode
+# replays from rust/tests/adaptive_policy.rs on the work-costed
+# virtual clock) must pass — auto-skipped only when python3 is not
+# installed at all.
 #
 # Usage: ./ci.sh            # build + test + stub typecheck + doc gate
 #                           # + whole-crate fmt/clippy hard gates

@@ -37,6 +37,15 @@ and asserts they cannot change a live output:
                             and the spec_accept/residual construction
                             preserving the target distribution with
                             the zero-mass-proposal reject guard.
+  9. speculation policy    — mirror of coordinator/policy.rs + the
+                            work-costed batcher clock (DESIGN.md §9):
+                            the integer K rule bit for bit, the
+                            windowed accounting (zero-offered skip,
+                            admit clear, pinned == fixed collapse),
+                            and a line-for-line replay of the
+                            rust/tests/adaptive_policy.rs strict-win
+                            and dual-mode gates — same mixed trace,
+                            same scripted engine, same numbers.
 
 Both mirrors use the same numpy primitives over the same values, so
 equality here is exact (==), not approximate.  As with sim.py this
@@ -754,6 +763,274 @@ def check_sampling_accept_residual(trials=40_000):
           f"(alpha={alpha:.3f}, {trials} trials); t=0 reduces to greedy")
 
 
+# ---------------------------------------------------------------------------
+# Speculation-policy mirror (coordinator/policy.rs + batcher.rs, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# The Rust controller is a pure function of integer acceptance history
+# plus batch occupancy — no wall clock, no floats in the K rule — so
+# this mirror is exact, not approximate.  It replays the two
+# rust/tests/adaptive_policy.rs gates (strict win over both fixed-K
+# corners on the work-costed clock; dual-mode switch in and back out)
+# through the same mixed trace, the same scripted-acceptance engine,
+# and the same serve loop, token for token and second for second.
+
+POL_K_LIMIT = 16  # mirrors policy.rs K_LIMIT
+
+# scripted-engine constants (mirrors rust/tests/adaptive_policy.rs)
+POL_DRAFT_UNITS = 1
+POL_TARGET_UNITS = 8
+POL_PASS_S = 1.0
+POL_COL_S = 0.05
+
+
+def pol_k_for_rate(acc, off, k_min, k_max, k_init):
+    """Exact mirror of policy.rs k_for_rate: k_min plus the
+    rate-proportional share of the span, round-half-up, all in
+    (arbitrary-precision, hence u64-exact) integer arithmetic."""
+    if off == 0:
+        return min(max(k_init, k_min), k_max)
+    span = k_max - k_min
+    return k_min + (span * 2 * acc + off) // (2 * off)
+
+
+class PolicyMirror:
+    """Mirror of policy.rs SpecPolicy: per-slot sliding windows of
+    (offered, accepted), the occupancy-driven dual-mode flag, and the
+    plan() decision order (dual check, then per-slot K, then the K
+    histogram)."""
+
+    def __init__(self, adaptive, k_min, k_max, window, tau, k_init,
+                 batch):
+        assert 1 <= k_min <= k_max <= POL_K_LIMIT and window >= 1
+        self.adaptive = adaptive
+        self.k_min, self.k_max = k_min, k_max
+        self.window = window
+        self.tau = tau
+        self.k_init = k_init
+        self.windows = [[] for _ in range(batch)]
+        self.dual_mode = False
+        self.mode_switches = 0
+        self.dual_mode_iters = 0
+        self.k_hist = {}
+
+    def on_admit(self, slot):
+        self.windows[slot] = []
+
+    def on_acceptance(self, slot, offered, accepted):
+        if offered == 0:  # AR+ step, not an acceptance observation
+            return
+        w = self.windows[slot]
+        w.append((offered, accepted))
+        del w[:max(0, len(w) - self.window)]
+
+    def k_for_slot(self, slot):
+        if not self.adaptive:
+            return self.k_init
+        off = sum(o for o, _ in self.windows[slot])
+        acc = sum(a for _, a in self.windows[slot])
+        return pol_k_for_rate(acc, off, self.k_min, self.k_max,
+                              self.k_init)
+
+    def plan(self, live):
+        n_live = sum(live)
+        dual = (self.adaptive and self.tau is not None
+                and n_live >= self.tau * len(live))
+        if dual != self.dual_mode:
+            self.dual_mode = dual
+            self.mode_switches += 1
+        if dual:
+            self.dual_mode_iters += 1
+        ks = [0 if (not live[s] or dual) else self.k_for_slot(s)
+              for s in range(len(live))]
+        for s, k in enumerate(ks):
+            if live[s]:
+                self.k_hist[k] = self.k_hist.get(k, 0) + 1
+        return ks
+
+
+def check_policy_k_rule():
+    """Exhaustive integer checks of the K rule over the same ranges as
+    the policy.rs unit tests: bounds, endpoints, monotonicity, and the
+    empty-history clamp."""
+    for k_min in range(1, 5):
+        for k_max in range(k_min, POL_K_LIMIT + 1):
+            for off in range(1, 25):
+                prev = 0
+                for acc in range(off + 1):
+                    k = pol_k_for_rate(acc, off, k_min, k_max, 8)
+                    assert k_min <= k <= k_max, "K escaped its bounds"
+                    assert k >= prev, "K not monotone in acceptance"
+                    prev = k
+                assert pol_k_for_rate(0, off, k_min, k_max, 8) == k_min
+                assert pol_k_for_rate(off, off, k_min, k_max, 8) == k_max
+            assert (pol_k_for_rate(0, 0, k_min, k_max, 8)
+                    == min(max(8, k_min), k_max)), "cold start must clamp"
+    # the documented round-half-up identity at a concrete point
+    assert pol_k_for_rate(1, 2, 1, 16, 4) == 1 + (15 * 2 * 1 + 2) // 4
+    print("  K rule: bounds/endpoints/monotone exhaustively verified")
+
+
+def check_policy_windowing():
+    """Windowed accounting mirror of the policy.rs unit tests: the
+    sliding window ages records out, zero-offered steps are skipped,
+    admit clears history, and a pinned controller collapses to
+    fixed-K under ANY history."""
+    p = PolicyMirror(True, 1, 16, 2, None, 4, 1)
+    assert p.plan([True]) == [4], "cold start must plan k_init"
+    p.on_acceptance(0, 4, 4)
+    assert p.plan([True]) == [16], "full acceptance must reach k_max"
+    p.on_acceptance(0, 16, 0)
+    assert p.plan([True]) == [4], "mixed window: 4/20 -> 1 + round(3.0)"
+    p.on_acceptance(0, 4, 0)
+    assert p.plan([True]) == [1], "good record aged out -> k_min"
+    p.on_acceptance(0, 0, 0)  # AR+ step: must not be an observation
+    assert p.plan([True]) == [1] and len(p.windows[0]) == 2
+    p.on_admit(0)
+    assert p.plan([True]) == [4], "re-admission must clear history"
+    # pinned == fixed for arbitrary histories and live masks
+    rng = sim.Rng(99)
+    pin = PolicyMirror(True, 5, 5, 4, None, 5, 3)
+    fix = PolicyMirror(False, 1, POL_K_LIMIT, 8, None, 5, 3)
+    for _ in range(40):
+        live = [rng.below(4) > 0 for _ in range(3)]
+        ks_p, ks_f = pin.plan(live), fix.plan(live)
+        assert ks_p == ks_f, "pinned adaptive must collapse to fixed"
+        for s, k in enumerate(ks_p):
+            if live[s] and k > 0:
+                pin.on_acceptance(s, k, rng.below(k + 1))
+    assert pin.mode_switches == 0 and fix.mode_switches == 0
+    print("  windowed accounting: aging, zero-offered skip, admit "
+          "clear, pinned==fixed")
+
+
+def pol_mixed_trace(n, seed):
+    """Mirror of substrate/workload.rs build_mixed_trace over the
+    adaptive_policy.rs base prompts ([0, 12+i] for i in 0..3): Closed
+    arrivals, even requests easy (one repeated body token), odd hard
+    (distinct-alphabet cycle).  Returns the prompt list."""
+    rng = sim.Rng(seed ^ 0x4D49584544)  # "MIXED"
+    alphabet = [12, 13, 14]   # base prompts' non-BOS tokens, in order
+    distinct = [12, 13, 14]   # already sorted + deduped
+    prompts = []
+    for i in range(n):
+        length = 4 + rng.below(6)
+        prompt = [0]
+        if i % 2 == 0:
+            prompt += [alphabet[rng.below(len(alphabet))]] * length
+        else:
+            start = rng.below(len(distinct))
+            prompt += [distinct[(start + j) % len(distinct)]
+                       for j in range(length)]
+        prompts.append(prompt)
+    return prompts
+
+
+def pol_serve_costed(prompts, max_new, batch, policy):
+    """Mirror of batcher.rs serve_trace_virtual_costed driving the
+    adaptive_policy.rs ScriptedSpecEngine: FCFS refill after harvest,
+    one draft pass over all planned columns (skipped when nobody
+    drafts), one verify pass over K+1 columns per live row, scripted
+    acceptance (easy rows take everything, hard rows nothing), and
+    dt = PASS_S * d(pass units) + COL_S * d(column units) per
+    iteration.  Admission commits one token and charges no work,
+    exactly like the Rust engine."""
+    queue = list(range(len(prompts)))
+    slots = [None] * batch       # request index per busy slot
+    remaining = [0] * batch      # tokens still to commit per slot
+    easy = [False] * batch
+    now, wp, wc = 0.0, 0, 0
+    generated, completed = 0, 0
+    while True:
+        for slot in range(batch):
+            if slots[slot] is not None and remaining[slot] == 0:
+                slots[slot] = None
+                completed += 1
+            if slots[slot] is None and queue:
+                ri = queue.pop(0)
+                body = prompts[ri][1:]
+                easy[slot] = all(a == b
+                                 for a, b in zip(body, body[1:]))
+                policy.on_admit(slot)
+                remaining[slot] = max_new - 1  # admit commits 1 token
+                generated += 1
+                slots[slot] = ri
+        live = [slots[s] is not None for s in range(batch)]
+        if not any(live):
+            break  # Closed arrivals: empty batch means empty queue
+        ks = policy.plan(live)
+        wp0, wc0 = wp, wc
+        draft_cols = sum(ks)
+        if draft_cols > 0:
+            wp += POL_DRAFT_UNITS
+            wc += POL_DRAFT_UNITS * draft_cols
+        ver_cols = sum(k + 1 for s, k in enumerate(ks) if live[s])
+        wp += POL_TARGET_UNITS
+        wc += POL_TARGET_UNITS * ver_cols
+        for row in range(batch):
+            if not live[row]:
+                continue
+            offered = ks[row]
+            accepted = offered if easy[row] else 0
+            policy.on_acceptance(row, offered, accepted)
+            taken = min(accepted + 1, remaining[row])
+            remaining[row] -= taken
+            generated += taken
+        now += (POL_PASS_S * (wp - wp0) + POL_COL_S * (wc - wc0))
+    tps = generated / now if now > 0.0 else 0.0
+    return {"completed": completed, "generated": generated,
+            "wall_s": now, "tps": tps}
+
+
+def check_policy_strict_win():
+    """Replay of adaptive_strictly_beats_fixed_k2_and_k16: on the
+    seed-7 mixed trace (16 requests, max_new 32, batch 4) every policy
+    serves the same 512 tokens, but the adaptive controller is
+    strictly faster than BOTH fixed corners on the costed clock —
+    under-speculation loses on easy rows, over-speculation on hard."""
+    prompts = pol_mixed_trace(16, 7)
+    fixed = lambda k: PolicyMirror(False, 1, POL_K_LIMIT, 8, None, k, 4)
+    s2 = pol_serve_costed(prompts, 32, 4, fixed(2))
+    s16 = pol_serve_costed(prompts, 32, 4, fixed(16))
+    pa = PolicyMirror(True, 1, 16, 4, None, 4, 4)
+    sa = pol_serve_costed(prompts, 32, 4, pa)
+    for s in (s2, s16, sa):
+        assert s["completed"] == 16, "all requests must complete"
+        assert s["generated"] == 16 * 32, "tokens are policy-invariant"
+    assert sa["tps"] > s2["tps"], \
+        f"adaptive {sa['tps']:.3f} must beat fixed K=2 {s2['tps']:.3f}"
+    assert sa["tps"] > s16["tps"], \
+        f"adaptive {sa['tps']:.3f} must beat fixed K=16 {s16['tps']:.3f}"
+    assert max(pa.k_hist) >= 2, "the controller must visit K > 1"
+    # replay-exact: same trace, same policy, same seconds
+    sb = pol_serve_costed(prompts, 32, 4,
+                          PolicyMirror(True, 1, 16, 4, None, 4, 4))
+    assert sb == sa, "costed serve must replay bit-for-bit"
+    print(f"  strict win: adaptive {sa['tps']:.3f} tok/s > "
+          f"fixed-2 {s2['tps']:.3f} and fixed-16 {s16['tps']:.3f} "
+          f"({sa['tps'] / s2['tps']:.3f}x / {sa['tps'] / s16['tps']:.3f}x)")
+
+
+def check_policy_dual_mode():
+    """Replay of dual_mode_degrades_to_ar_plus_and_switches_back: 13
+    requests over 4 slots at tau=0.75 run three full waves in dual
+    mode (K=0 everywhere) and a final 1-wide wave drafting again —
+    exactly one switch in and one back out, with no tokens lost."""
+    prompts = pol_mixed_trace(13, 7)
+    pd = PolicyMirror(True, 1, 16, 4, 0.75, 4, 4)
+    sd = pol_serve_costed(prompts, 16, 4, pd)
+    assert sd["completed"] == 13 and sd["generated"] == 13 * 16
+    assert pd.mode_switches == 2, "one switch in, one back out"
+    assert pd.dual_mode_iters > 0 and pd.k_hist.get(0, 0) > 0
+    pf = PolicyMirror(True, 1, 16, 4, None, 4, 4)
+    sf = pol_serve_costed(prompts, 16, 4, pf)
+    assert sf["generated"] == sd["generated"], \
+        "dual mode commits one token per row, nothing is lost"
+    assert pf.mode_switches == 0, "no threshold, no switching"
+    print(f"  dual mode: {pd.dual_mode_iters} AR+ iterations, "
+          f"2 switches, tokens preserved ({sd['generated']})")
+
+
 def main(seed=7):
     for name in ["draft-s", "target-m", "target-l"]:
         print(f"{name}:")
@@ -770,6 +1047,11 @@ def main(seed=7):
     print("sampling:")
     check_sampling_t0_and_cdf()
     check_sampling_accept_residual()
+    print("policy:")
+    check_policy_k_rule()
+    check_policy_windowing()
+    check_policy_strict_win()
+    check_policy_dual_mode()
     print("ALL HOST-PATH EQUIVALENCE CHECKS PASSED")
 
 

@@ -15,6 +15,7 @@
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
+use pard::coordinator::policy::PolicyCfg;
 use pard::runtime::Backend;
 use pard::substrate::bench::{BenchStats, Bencher};
 use pard::Runtime;
@@ -168,6 +169,7 @@ fn main() -> anyhow::Result<()> {
             kv_blocks: None,
             prefix_cache: false,
             sampling: None,
+            policy: PolicyCfg::default(),
         };
         let mut engine = build_engine(&rt, &cfg)?;
         engine.warmup()?;

@@ -17,6 +17,14 @@
 //! per decode iteration and jumps idle gaps instantly — batcher tests
 //! and serving benches run deterministically, with no 200µs idle
 //! sleeps and no dependence on host scheduling.
+//!
+//! A third mode, [`serve_trace_virtual_costed`], prices each iteration
+//! from the engine's work-unit ledger (`Metrics::record_work`):
+//! `dt = pass_s·Δpass_units + col_s·Δcol_units`, i.e. a bandwidth
+//! term per forward pass plus a compute term per token column.  Unlike
+//! the fixed tick — under which a K=16 iteration costs the same as a
+//! K=1 iteration — this clock makes over-speculation visible, which is
+//! what the adaptive-policy win gates measure (DESIGN.md §9).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -55,6 +63,9 @@ pub struct ServeStats {
 enum ServeClock {
     Wall(Instant),
     Virtual { now: f64, tick: f64 },
+    /// Work-costed virtual time: each iteration is priced from the
+    /// engine's work deltas (`Δpass_units`, `Δcol_units`).
+    VirtualCosted { now: f64, pass_s: f64, col_s: f64 },
 }
 
 impl ServeClock {
@@ -62,13 +73,22 @@ impl ServeClock {
         match self {
             ServeClock::Wall(t0) => t0.elapsed().as_secs_f64(),
             ServeClock::Virtual { now, .. } => *now,
+            ServeClock::VirtualCosted { now, .. } => *now,
         }
     }
 
-    /// Charge one decode iteration.
-    fn on_iteration(&mut self) {
-        if let ServeClock::Virtual { now, tick } = self {
-            *now += *tick;
+    /// Charge one decode iteration.  `dwp`/`dwc` are the iteration's
+    /// work-unit deltas (forward-pass units, token-column units) —
+    /// only the costed clock reads them.
+    fn on_iteration(&mut self, dwp: f64, dwc: f64) {
+        match self {
+            ServeClock::Wall(_) => {}
+            ServeClock::Virtual { now, tick } => {
+                *now += *tick;
+            }
+            ServeClock::VirtualCosted { now, pass_s, col_s } => {
+                *now += *pass_s * dwp + *col_s * dwc;
+            }
         }
     }
 
@@ -79,7 +99,8 @@ impl ServeClock {
             ServeClock::Wall(_) => {
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
-            ServeClock::Virtual { now, .. } => {
+            ServeClock::Virtual { now, .. }
+            | ServeClock::VirtualCosted { now, .. } => {
                 *now = now.max(arrival_s);
             }
         }
@@ -108,6 +129,24 @@ pub fn serve_trace_virtual(engine: &mut dyn Engine, trace: &Trace,
                     "virtual tick must be a finite non-negative time");
     serve_trace_impl(engine, trace,
                      ServeClock::Virtual { now: 0.0, tick: tick_s })
+}
+
+/// [`serve_trace`] on a deterministic WORK-COSTED virtual clock: each
+/// decode iteration charges `pass_s` per forward-pass work unit plus
+/// `col_s` per token-column work unit (deltas of the engine's
+/// `Metrics` work ledger over the iteration), and idle gaps are
+/// skipped instantly.  This is the clock the adaptive-policy win
+/// gates run on: it prices speculation, so drafting 16 tokens that
+/// all get rejected is strictly slower than drafting none.
+pub fn serve_trace_virtual_costed(engine: &mut dyn Engine, trace: &Trace,
+                                  pass_s: f64, col_s: f64)
+                                  -> Result<ServeStats> {
+    anyhow::ensure!(pass_s >= 0.0 && pass_s.is_finite()
+                        && col_s >= 0.0 && col_s.is_finite(),
+                    "work-cost rates must be finite non-negative times");
+    serve_trace_impl(engine, trace,
+                     ServeClock::VirtualCosted { now: 0.0, pass_s,
+                                                 col_s })
 }
 
 fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
@@ -207,9 +246,12 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
         occupancy_sum += live;
         peak_occupancy = peak_occupancy.max(live);
         iters += 1;
+        let (wp0, wc0) = (engine.metrics().work_pass_units,
+                          engine.metrics().work_col_units);
         engine.step()?;
         engine.metrics_mut().iterations += 1;
-        clock.on_iteration();
+        clock.on_iteration(engine.metrics().work_pass_units - wp0,
+                           engine.metrics().work_col_units - wc0);
     }
 
     // Final harvest (defensive: the loop only exits once every slot has
@@ -232,7 +274,8 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
     // below still report the virtual window).
     match &clock {
         ServeClock::Wall(_) => engine.metrics_mut().wall_s += wall,
-        ServeClock::Virtual { .. } => {
+        ServeClock::Virtual { .. }
+        | ServeClock::VirtualCosted { .. } => {
             engine.metrics_mut().virtual_s += wall;
         }
     }

@@ -66,8 +66,10 @@ impl ArEngine {
         let b = self.cache.batch;
         let garbage = self.cache.garbage_slot();
         let mut buf = CallBuf::parked(b, 1, self.pad, garbage);
+        let mut cols = 0usize;
         for (row, seq) in self.seqs.iter().enumerate() {
             if seq.active && !seq.done {
+                cols += 1;
                 buf.set(row, 0, seq.pending(), seq.target_len as i32, true);
             }
         }
@@ -75,6 +77,7 @@ impl ArEngine {
         let out =
             self.target.fwd(b, 1, &buf.tokens, &buf.pos, None, &self.cache)?;
         self.metrics.record_fwd(&out);
+        self.metrics.record_work(self.target.n_params(), cols);
         self.metrics.commit_s +=
             self.target.commit(b, 1, &out, &buf.cpos, &mut self.cache)?;
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
@@ -118,10 +121,12 @@ impl ArEngine {
         let t = self.target.pick_t(b, need)?;
         let garbage = self.cache.garbage_slot();
         let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        let mut cols = 0usize;
         for (row, seq) in self.seqs.iter().enumerate() {
             if !seq.active || seq.done {
                 continue;
             }
+            cols += seq.stream.len();
             for (i, &tok) in seq.stream.iter().enumerate() {
                 buf.set(row, i, tok, i as i32, false);
             }
@@ -130,6 +135,7 @@ impl ArEngine {
         let out =
             self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.cache)?;
         self.metrics.record_fwd(&out);
+        self.metrics.record_work(self.target.n_params(), cols);
         self.metrics.verify_s += t0.elapsed().as_secs_f64();
         self.metrics.target_passes += 1;
         let vocab = self.target.cfg().vocab;

@@ -23,6 +23,7 @@ use super::{apply_verdict, draft_token, next_token, reserve_len,
             seed_sequence_rng, verify_and_commit, CallBuf, Engine,
             EngineConfig, EngineKind, VerifySpec};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::SpecPolicy;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
 
@@ -40,10 +41,14 @@ pub struct EagleEngine {
     d_model: usize,
     /// FCFS admission counter — keys per-sequence sampling streams.
     admitted: u64,
+    /// Speculation controller: plans each row's K per step
+    /// (DESIGN.md §9); reservations/warmup are sized by its k_cap.
+    policy: SpecPolicy,
 }
 
 impl EagleEngine {
-    pub fn new(rt: &Runtime, cfg: &EngineConfig) -> Result<Self> {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig, policy: SpecPolicy)
+               -> Result<Self> {
         // the hidden-exporting variant of the target
         let tname = format!("{}_h", cfg.target);
         let target = rt.model(&tname)?;
@@ -74,6 +79,7 @@ impl EagleEngine {
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
             admitted: 0,
+            policy,
         })
     }
 
@@ -88,15 +94,21 @@ impl EagleEngine {
             self.tcache.cow_copies());
     }
 
-    /// Draft K candidates: one catch-up pass over the backlog pairs, then
-    /// K-1 feature-chained singles.  Returns per-row candidates plus,
+    /// Draft `ks[row]` candidates per row the policy planned K >= 1
+    /// for: one catch-up pass over the backlog pairs, then
+    /// feature-chained singles.  Returns per-row candidates plus,
     /// under stochastic decoding, the head distribution each was
     /// sampled from (rows stay empty under greedy).
+    ///
+    /// Rows with `ks[row] == 0` (dual-mode AR+ degrade) skip drafting
+    /// AND keep their backlog: the pairs not yet fed to the head cache
+    /// must survive until the row drafts again (`step` extends the
+    /// backlog with newly committed pairs).  If no row drafts, no head
+    /// pass runs at all.
     #[allow(clippy::type_complexity)]
-    fn draft_candidates(&mut self)
+    fn draft_candidates(&mut self, ks: &[usize])
                         -> Result<(Vec<Vec<i32>>, Vec<Vec<Vec<f32>>>)> {
         let b = self.ecache.batch;
-        let k = self.cfg.k;
         let sp = self.cfg.sampling;
         let d = self.d_model;
         let garbage = self.ecache.garbage_slot();
@@ -106,22 +118,28 @@ impl EagleEngine {
         // chained state per row: (token, pos, hidden)
         let mut chain: Vec<Option<(i32, i32, Vec<f32>)>> = vec![None; b];
 
+        let drafting =
+            |row: usize, s: &Sequence| s.active && !s.done && ks[row] > 0;
         // (1) catch-up over backlog pairs.
         let need = self
             .seqs
             .iter()
-            .filter(|s| s.active && !s.done)
-            .map(|s| s.eagle_backlog.len())
-            .max()
-            .unwrap_or(1)
-            .max(1);
-        let t = self.head.pick_t(b, need)?;
+            .enumerate()
+            .filter(|(row, s)| drafting(*row, s))
+            .map(|(_, s)| s.eagle_backlog.len())
+            .max();
+        let Some(need) = need else {
+            return Ok((cands, qdists));
+        };
+        let t = self.head.pick_t(b, need.max(1))?;
         let mut buf = CallBuf::parked(b, t, self.pad, garbage);
         let mut hidden_in = vec![0f32; b * t * d];
+        let mut cols = 0usize;
         for (row, seq) in self.seqs.iter().enumerate() {
-            if !seq.active || seq.done {
+            if !drafting(row, seq) {
                 continue;
             }
+            cols += seq.eagle_backlog.len();
             for (i, (tok, p, h)) in seq.eagle_backlog.iter().enumerate() {
                 buf.set(row, i, *tok, *p, true);
                 hidden_in[(row * t + i) * d..(row * t + i + 1) * d]
@@ -132,6 +150,7 @@ impl EagleEngine {
         let out = self.head.fwd(b, t, &buf.tokens, &buf.pos,
                                 Some(&hidden_in), &self.ecache)?;
         self.metrics.record_fwd(&out);
+        self.metrics.record_work(self.head.n_params(), cols);
         self.metrics.commit_s +=
             self.head.commit(b, t, &out, &buf.cpos, &mut self.ecache)?;
         self.metrics.draft_passes += 1;
@@ -140,7 +159,7 @@ impl EagleEngine {
             .as_ref()
             .expect("eagle head exports hidden");
         for (row, seq) in self.seqs.iter_mut().enumerate() {
-            if !seq.active || seq.done {
+            if !(seq.active && !seq.done && ks[row] > 0) {
                 continue;
             }
             let fed = seq.eagle_backlog.len();
@@ -157,15 +176,19 @@ impl EagleEngine {
             seq.eagle_backlog.clear();
         }
 
-        // (2) feature-chained singles.
-        for _j in 1..k {
+        // (2) feature-chained singles: pass j only carries the rows
+        // still short of their planned K.
+        let max_k = ks.iter().copied().max().unwrap_or(0);
+        for j in 1..max_k {
             let mut buf = CallBuf::parked(b, 1, self.pad, garbage);
             let mut hidden_in = vec![0f32; b * d];
+            let mut cols = 0usize;
             for (row, seq) in self.seqs.iter().enumerate() {
-                if !seq.active || seq.done {
+                if !drafting(row, seq) || ks[row] <= j {
                     continue;
                 }
                 if let Some((tok, p, h)) = &chain[row] {
+                    cols += 1;
                     buf.set(row, 0, *tok, *p, true);
                     hidden_in[row * d..(row + 1) * d].copy_from_slice(h);
                 }
@@ -173,13 +196,14 @@ impl EagleEngine {
             let out = self.head.fwd(b, 1, &buf.tokens, &buf.pos,
                                     Some(&hidden_in), &self.ecache)?;
             self.metrics.record_fwd(&out);
+            self.metrics.record_work(self.head.n_params(), cols);
             self.metrics.commit_s +=
                 self.head.commit(b, 1, &out, &buf.cpos,
                                  &mut self.ecache)?;
             self.metrics.draft_passes += 1;
             let hh = out.hidden.as_ref().unwrap();
             for (row, seq) in self.seqs.iter_mut().enumerate() {
-                if !seq.active || seq.done {
+                if !(seq.active && !seq.done && ks[row] > j) {
                     continue;
                 }
                 let c = draft_token(
@@ -208,9 +232,10 @@ impl Engine for EagleEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        let need = reserve_len(prompt.len(), max_new, self.policy.k_cap());
         let t_hit = self.tcache.reserve_row_prefixed(slot, prompt, need)?;
         self.ecache.reserve_row(slot, need)?;
+        self.policy.on_admit(slot);
         let mut seq = Sequence::start(prompt, max_new);
         seed_sequence_rng(&mut seq, self.cfg.sampling.as_ref(),
                           self.admitted);
@@ -233,6 +258,7 @@ impl Engine for EagleEngine {
         let out =
             self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.tcache)?;
         self.metrics.record_fwd(&out);
+        self.metrics.record_work(self.target.n_params(), prompt.len());
         self.metrics.commit_s +=
             self.target.commit(b, t, &out, &buf.cpos, &mut self.tcache)?;
         self.metrics.prefill_s += t0.elapsed().as_secs_f64();
@@ -273,8 +299,15 @@ impl Engine for EagleEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let (cands, qdists) = self.draft_candidates()?;
-        let spec = VerifySpec { k: self.cfg.k, pad: self.pad,
+        let live: Vec<bool> = self
+            .seqs
+            .iter()
+            .map(|s| s.active && !s.done)
+            .collect();
+        let ks = self.policy.plan(&live, &mut self.metrics);
+        let (cands, qdists) = self.draft_candidates(&ks)?;
+        let spec = VerifySpec { k: ks.iter().copied().max().unwrap_or(0),
+                                pad: self.pad,
                                 sampling: self.cfg.sampling,
                                 qdists: &qdists };
         let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
@@ -282,10 +315,12 @@ impl Engine for EagleEngine {
                                          &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {
             let Some(v) = v else { continue };
+            self.policy.on_acceptance(row, cands[row].len(), v.accepted);
             let seq = &mut self.seqs[row];
             let pre_len = seq.stream.len(); // before commit
-            apply_verdict(seq, &mut self.tcache, row, v, self.cfg.k,
-                          self.eos, &mut self.metrics);
+            apply_verdict(seq, &mut self.tcache, row, v,
+                          self.policy.k_cap(), self.eos,
+                          &mut self.metrics);
             if seq.done {
                 continue;
             }
@@ -305,14 +340,18 @@ impl Engine for EagleEngine {
                 let hrow = i;
                 backlog.push((tok, p, rows[hrow].clone()));
             }
-            seq.eagle_backlog = backlog;
+            // Extend, don't replace: a row the policy planned K=0 for
+            // skipped catch-up, so its unfed pairs must survive.  For
+            // drafting rows catch-up cleared the backlog, making this
+            // an exact replace.
+            seq.eagle_backlog.extend(backlog);
         }
         self.note_kv();
         Ok(())
     }
 
     fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
-        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        let need = reserve_len(prompt.len(), max_new, self.policy.k_cap());
         self.tcache.can_reserve_prefixed(prompt, need)
             && self.ecache.can_reserve(need)
     }
@@ -344,7 +383,7 @@ impl Engine for EagleEngine {
     fn warmup(&mut self) -> Result<()> {
         let b = self.cfg.batch;
         let pf_t = self.target.pick_t(b, super::PREFILL_T)?;
-        let ver_t = self.target.pick_t(b, self.cfg.k + 1)?;
+        let ver_t = self.target.pick_t(b, self.policy.k_cap() + 1)?;
         self.target.warmup(b, &[pf_t, ver_t])?;
         // backlog catch-up: the head only exports T in {1, 32}
         let bk_t = self.head.pick_t(b, super::PREFILL_T)?;

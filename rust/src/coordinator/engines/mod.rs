@@ -31,6 +31,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::PolicyCfg;
 use crate::coordinator::sampling::{argmax, dist, sample, spec_accept};
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
@@ -71,6 +72,14 @@ pub struct EngineConfig {
     /// Leviathan accept/residual correction — losslessly, and token-
     /// identical to greedy at temperature 0 (DESIGN.md §6).
     pub sampling: Option<SamplingCfg>,
+    /// Speculation policy (`--policy`/`--k-min`/`--k-max`/
+    /// `--policy-window`/`--dual-mode-occupancy`, DESIGN.md §9).  The
+    /// default fixed policy drafts exactly `k` every step — the
+    /// pre-policy behavior, token for token.  The adaptive policy
+    /// retunes each row's K from its windowed accept rate and can
+    /// degrade the whole batch to AR+ under high occupancy; inert for
+    /// AR/AR+ (see `router::build_policy`).
+    pub policy: PolicyCfg,
 }
 
 /// Stochastic-decoding knobs, shared by draft and verify: both sides
@@ -203,15 +212,24 @@ pub trait Engine {
 pub fn build_engine(rt: &Runtime, cfg: &EngineConfig)
                     -> Result<Box<dyn Engine>> {
     anyhow::ensure!(cfg.k >= 1 && cfg.k <= 16, "k must be in 1..=16");
+    // Bind the speculation policy up front: knobs are validated for
+    // every kind, AR kinds get the inert fixed policy (they never
+    // draft), and the drafting engines size their reservations and
+    // warmup shapes by the policy's k_cap.
+    let policy = crate::coordinator::router::build_policy(cfg)?;
     match cfg.kind {
         EngineKind::Ar => Ok(Box::new(ar::ArEngine::new(rt, cfg, false)?)),
         EngineKind::ArPlus => {
             Ok(Box::new(ar::ArEngine::new(rt, cfg, true)?))
         }
-        EngineKind::Vsd => Ok(Box::new(vsd::VsdEngine::new(rt, cfg)?)),
-        EngineKind::Pard => Ok(Box::new(pard::PardEngine::new(rt, cfg)?)),
+        EngineKind::Vsd => {
+            Ok(Box::new(vsd::VsdEngine::new(rt, cfg, policy)?))
+        }
+        EngineKind::Pard => {
+            Ok(Box::new(pard::PardEngine::new(rt, cfg, policy)?))
+        }
         EngineKind::Eagle => {
-            Ok(Box::new(eagle::EagleEngine::new(rt, cfg)?))
+            Ok(Box::new(eagle::EagleEngine::new(rt, cfg, policy)?))
         }
     }
 }
@@ -268,6 +286,7 @@ pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
     let t0 = Instant::now();
     let out = model.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
     metrics.record_fwd(&out);
+    metrics.record_work(model.n_params(), suffix.len());
     metrics.commit_s += model.commit(b, t, &out, &buf.cpos, cache)?;
     metrics.prefill_s += t0.elapsed().as_secs_f64();
     metrics.target_passes += 1;
@@ -397,12 +416,14 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
     let t = target.pick_t(b, spec.k + 1)?;
     let garbage = cache.garbage_slot();
     let mut buf = CallBuf::parked(b, t, spec.pad, garbage);
+    let mut cols = 0usize;
     for (row, seq) in seqs.iter().enumerate() {
         if !seq.active || seq.done {
             continue;
         }
         let base = seq.target_len as i32;
         buf.set(row, 0, seq.pending(), base, true);
+        cols += 1 + cands[row].len();
         for (j, &c) in cands[row].iter().enumerate() {
             // tentative: commit decided after acceptance
             buf.set(row, 1 + j, c, base + 1 + j as i32, false);
@@ -411,6 +432,7 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
     let t0 = Instant::now();
     let out = target.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
     metrics.record_fwd(&out);
+    metrics.record_work(target.n_params(), cols);
     metrics.target_passes += 1;
 
     let vocab = target.cfg().vocab;

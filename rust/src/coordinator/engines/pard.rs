@@ -23,6 +23,7 @@ use super::{apply_verdict, draft_token, next_token, prefill_slot,
             reserve_len, seed_sequence_rng, verify_and_commit, CallBuf,
             Engine, EngineConfig, EngineKind, VerifySpec};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::SpecPolicy;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
 
@@ -40,10 +41,14 @@ pub struct PardEngine {
     distinct_masks: Vec<i32>,
     /// FCFS admission counter — keys per-sequence sampling streams.
     admitted: u64,
+    /// Speculation controller: plans each row's K per step
+    /// (DESIGN.md §9); reservations/warmup are sized by its k_cap.
+    policy: SpecPolicy,
 }
 
 impl PardEngine {
-    pub fn new(rt: &Runtime, cfg: &EngineConfig) -> Result<Self> {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig, policy: SpecPolicy)
+               -> Result<Self> {
         let target = rt.model(&cfg.target)?;
         let draft_name = cfg.draft.clone().unwrap_or_else(|| {
             rt.manifest.main_pard.clone()
@@ -66,6 +71,7 @@ impl PardEngine {
             mask: rt.manifest.mask,
             distinct_masks: rt.manifest.distinct_masks.clone(),
             admitted: 0,
+            policy,
         })
     }
 
@@ -92,45 +98,57 @@ impl PardEngine {
         }
     }
 
-    /// ONE parallel draft pass for all rows.  Returns per-row
-    /// candidates plus, under stochastic decoding, the draft
-    /// distribution each was sampled from (rows stay empty under
-    /// greedy).  PARD's candidates condition on mask tokens rather than
-    /// earlier samples — the verify step only needs q to BE the
-    /// distribution the candidate was drawn from, which holds either
-    /// way.
+    /// ONE parallel draft pass for all rows the policy planned K >= 1
+    /// for (`ks[row]`).  Returns per-row candidates plus, under
+    /// stochastic decoding, the draft distribution each was sampled
+    /// from (rows stay empty under greedy).  PARD's candidates
+    /// condition on mask tokens rather than earlier samples — the
+    /// verify step only needs q to BE the distribution the candidate
+    /// was drawn from, which holds either way.
+    ///
+    /// Rows with `ks[row] == 0` (dual-mode AR+ degrade) skip the pass
+    /// entirely; their `draft_len` lags and the catch-up reals bring
+    /// the draft cache current when the row next drafts.  If no row
+    /// drafts, the whole pass is skipped — that is what makes dual
+    /// mode cost AR+.
     #[allow(clippy::type_complexity)]
-    fn draft_candidates(&mut self)
+    fn draft_candidates(&mut self, ks: &[usize])
                         -> Result<(Vec<Vec<i32>>, Vec<Vec<Vec<f32>>>)> {
         let b = self.dcache.batch;
-        let k = self.cfg.k;
         let sp = self.cfg.sampling;
         let garbage = self.dcache.garbage_slot();
         let vocab = self.draft.cfg().vocab;
         let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
         let mut qdists: Vec<Vec<Vec<f32>>> = vec![Vec::new(); b];
 
+        let drafting =
+            |row: usize, s: &Sequence| s.active && !s.done && ks[row] > 0;
         // T = reals (catch-up incl pending) + K-1 masks.
         let need = self
             .seqs
             .iter()
-            .filter(|s| s.active && !s.done)
-            .map(|s| s.stream.len() - s.draft_len + k - 1)
-            .max()
-            .unwrap_or(k);
+            .enumerate()
+            .filter(|(row, s)| drafting(*row, s))
+            .map(|(row, s)| s.stream.len() - s.draft_len + ks[row] - 1)
+            .max();
+        let Some(need) = need else {
+            return Ok((cands, qdists));
+        };
         let t = self.draft.pick_t(b, need)?;
         let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        let mut cols = 0usize;
         for (row, seq) in self.seqs.iter().enumerate() {
-            if !seq.active || seq.done {
+            if !drafting(row, seq) {
                 continue;
             }
             let reals = &seq.stream[seq.draft_len..];
+            cols += reals.len() + ks[row] - 1;
             for (i, &tok) in reals.iter().enumerate() {
                 // reals commit at their true positions
                 buf.set(row, i, tok, (seq.draft_len + i) as i32, true);
             }
             let base = seq.stream.len() as i32; // first mask position
-            for j in 0..k - 1 {
+            for j in 0..ks[row] - 1 {
                 // masks attend in-flight, never commit
                 buf.set(row, reals.len() + j, self.mask_id(j),
                         base + j as i32, false);
@@ -140,17 +158,18 @@ impl PardEngine {
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
         self.metrics.record_fwd(&out);
+        self.metrics.record_work(self.draft.n_params(), cols);
         self.metrics.commit_s +=
             self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
         self.metrics.draft_s += t0.elapsed().as_secs_f64();
         self.metrics.draft_passes += 1;
 
         for (row, seq) in self.seqs.iter_mut().enumerate() {
-            if !seq.active || seq.done {
+            if !(seq.active && !seq.done && ks[row] > 0) {
                 continue;
             }
             let fed = seq.stream.len() - seq.draft_len;
-            for j in 0..k {
+            for j in 0..ks[row] {
                 // row fed-1 = last real (c_0); fed-1+j = mask j-1
                 let i = fed - 1 + j;
                 let lg =
@@ -177,7 +196,9 @@ impl Engine for PardEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        // Reserve for the policy's worst-case K so an adaptive row can
+        // never outgrow its reservation mid-decode.
+        let need = reserve_len(prompt.len(), max_new, self.policy.k_cap());
         // Prefix hits map cached blocks into the row; each cache
         // prefills only its own uncached suffix (hits may differ —
         // target and draft keep independent content indexes).
@@ -206,13 +227,18 @@ impl Engine for PardEngine {
         self.tcache.cur_len[slot] = seq.target_len as u32;
         self.dcache.cur_len[slot] = seq.draft_len as u32;
         self.seqs[slot] = seq;
+        self.policy.on_admit(slot);
         self.note_kv();
         Ok(())
     }
 
     fn step(&mut self) -> Result<()> {
-        let (cands, qdists) = self.draft_candidates()?;
-        let spec = VerifySpec { k: self.cfg.k, pad: self.pad,
+        let live: Vec<bool> =
+            self.seqs.iter().map(|s| s.active && !s.done).collect();
+        let ks = self.policy.plan(&live, &mut self.metrics);
+        let (cands, qdists) = self.draft_candidates(&ks)?;
+        let spec = VerifySpec { k: ks.iter().copied().max().unwrap_or(0),
+                                pad: self.pad,
                                 sampling: self.cfg.sampling,
                                 qdists: &qdists };
         let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
@@ -220,8 +246,11 @@ impl Engine for PardEngine {
                                          &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {
             if let Some(v) = v {
+                self.policy.on_acceptance(row, cands[row].len(),
+                                          v.accepted);
                 apply_verdict(&mut self.seqs[row], &mut self.tcache, row, v,
-                              self.cfg.k, self.eos, &mut self.metrics);
+                              self.policy.k_cap(), self.eos,
+                              &mut self.metrics);
             }
         }
         self.note_kv();
@@ -229,7 +258,7 @@ impl Engine for PardEngine {
     }
 
     fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
-        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        let need = reserve_len(prompt.len(), max_new, self.policy.k_cap());
         self.tcache.can_reserve_prefixed(prompt, need)
             && self.dcache.can_reserve_prefixed(prompt, need)
     }
@@ -260,7 +289,10 @@ impl Engine for PardEngine {
 
     fn warmup(&mut self) -> Result<()> {
         let b = self.cfg.batch;
-        let k = self.cfg.k;
+        // Warm the policy's worst-case shapes (== cfg.k when fixed).
+        // Adaptive runs use smaller K too; those land in smaller
+        // T buckets, exact-T (free) on the host/reference backends.
+        let k = self.policy.k_cap();
         let pf_t = self.target.pick_t(b, super::PREFILL_T)?;
         let ver_t = self.target.pick_t(b, k + 1)?;
         self.target.warmup(b, &[pf_t, ver_t])?;

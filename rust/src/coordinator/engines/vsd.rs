@@ -16,6 +16,7 @@ use super::{apply_verdict, draft_token, next_token, prefill_slot,
             reserve_len, seed_sequence_rng, verify_and_commit, CallBuf,
             Engine, EngineConfig, EngineKind, VerifySpec};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::SpecPolicy;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
 
@@ -31,10 +32,14 @@ pub struct VsdEngine {
     eos: i32,
     /// FCFS admission counter — keys per-sequence sampling streams.
     admitted: u64,
+    /// Speculation controller: plans each row's K per step
+    /// (DESIGN.md §9); reservations/warmup are sized by its k_cap.
+    policy: SpecPolicy,
 }
 
 impl VsdEngine {
-    pub fn new(rt: &Runtime, cfg: &EngineConfig) -> Result<Self> {
+    pub fn new(rt: &Runtime, cfg: &EngineConfig, policy: SpecPolicy)
+               -> Result<Self> {
         let target = rt.model(&cfg.target)?;
         let draft_name = cfg
             .draft
@@ -56,6 +61,7 @@ impl VsdEngine {
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
             admitted: 0,
+            policy,
         })
     }
 
@@ -71,35 +77,46 @@ impl VsdEngine {
             self.tcache.cow_copies() + self.dcache.cow_copies());
     }
 
-    /// Draft K candidates for every active row: one catch-up pass plus
-    /// K-1 chained singles.  Returns per-row candidates plus, under
+    /// Draft `ks[row]` candidates for every row the policy planned
+    /// K >= 1 for: one catch-up pass plus chained singles until each
+    /// row has its K.  Returns per-row candidates plus, under
     /// stochastic decoding, the draft distribution each was sampled
     /// from (rows stay empty under greedy).
+    ///
+    /// Rows with `ks[row] == 0` (dual-mode AR+ degrade) skip drafting;
+    /// their `draft_len` lags and the next catch-up brings the draft
+    /// cache current.  If no row drafts, no draft pass runs at all.
     #[allow(clippy::type_complexity)]
-    fn draft_candidates(&mut self)
+    fn draft_candidates(&mut self, ks: &[usize])
                         -> Result<(Vec<Vec<i32>>, Vec<Vec<Vec<f32>>>)> {
         let b = self.dcache.batch;
-        let k = self.cfg.k;
         let sp = self.cfg.sampling;
         let garbage = self.dcache.garbage_slot();
         let vocab = self.draft.cfg().vocab;
         let mut cands: Vec<Vec<i32>> = vec![Vec::new(); b];
         let mut qdists: Vec<Vec<Vec<f32>>> = vec![Vec::new(); b];
 
+        let drafting =
+            |row: usize, s: &Sequence| s.active && !s.done && ks[row] > 0;
         // (1) catch-up: feed stream[draft_len..] (includes pending).
         let need = self
             .seqs
             .iter()
-            .filter(|s| s.active && !s.done)
-            .map(|s| s.stream.len() - s.draft_len)
-            .max()
-            .unwrap_or(1);
+            .enumerate()
+            .filter(|(row, s)| drafting(*row, s))
+            .map(|(_, s)| s.stream.len() - s.draft_len)
+            .max();
+        let Some(need) = need else {
+            return Ok((cands, qdists));
+        };
         let t = self.draft.pick_t(b, need)?;
         let mut buf = CallBuf::parked(b, t, self.pad, garbage);
+        let mut cols = 0usize;
         for (row, seq) in self.seqs.iter().enumerate() {
-            if !seq.active || seq.done {
+            if !drafting(row, seq) {
                 continue;
             }
+            cols += seq.stream.len() - seq.draft_len;
             for (i, &tok) in seq.stream[seq.draft_len..].iter().enumerate() {
                 buf.set(row, i, tok, (seq.draft_len + i) as i32, true);
             }
@@ -108,11 +125,12 @@ impl VsdEngine {
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
         self.metrics.record_fwd(&out);
+        self.metrics.record_work(self.draft.n_params(), cols);
         self.metrics.commit_s +=
             self.draft.commit(b, t, &out, &buf.cpos, &mut self.dcache)?;
         self.metrics.draft_passes += 1;
         for (row, seq) in self.seqs.iter_mut().enumerate() {
-            if !seq.active || seq.done {
+            if !(seq.active && !seq.done && ks[row] > 0) {
                 continue;
             }
             let fed = seq.stream.len() - seq.draft_len;
@@ -125,27 +143,32 @@ impl VsdEngine {
             self.dcache.cur_len[row] = seq.draft_len as u32;
         }
 
-        // (2) chain: K-1 sequential single-token draft passes.  The
+        // (2) chain: sequential single-token draft passes; pass j only
+        // carries the rows still short of their planned K.  The
         // candidate KVs land past draft_len; they are tentative and get
         // overwritten by the next catch-up (slot contract).
-        for j in 1..k {
+        let max_k = ks.iter().copied().max().unwrap_or(0);
+        for j in 1..max_k {
             let mut buf = CallBuf::parked(b, 1, self.pad, garbage);
+            let mut cols = 0usize;
             for (row, seq) in self.seqs.iter().enumerate() {
-                if !seq.active || seq.done {
+                if !drafting(row, seq) || ks[row] <= j {
                     continue;
                 }
+                cols += 1;
                 let p = (seq.draft_len + j - 1) as i32;
                 buf.set(row, 0, cands[row][j - 1], p, true);
             }
             let out = self.draft.fwd(b, 1, &buf.tokens, &buf.pos, None,
                                      &self.dcache)?;
             self.metrics.record_fwd(&out);
+            self.metrics.record_work(self.draft.n_params(), cols);
             self.metrics.commit_s +=
                 self.draft.commit(b, 1, &out, &buf.cpos,
                                   &mut self.dcache)?;
             self.metrics.draft_passes += 1;
             for (row, seq) in self.seqs.iter_mut().enumerate() {
-                if !seq.active || seq.done {
+                if !(seq.active && !seq.done && ks[row] > j) {
                     continue;
                 }
                 cands[row].push(draft_token(
@@ -169,7 +192,9 @@ impl Engine for VsdEngine {
 
     fn admit(&mut self, slot: usize, prompt: &[i32], max_new: usize)
              -> Result<()> {
-        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        // Reserve for the policy's worst-case K so an adaptive row can
+        // never outgrow its reservation mid-decode.
+        let need = reserve_len(prompt.len(), max_new, self.policy.k_cap());
         // Prefix hits map cached blocks in; only the uncached suffix
         // of each cache is prefilled (hits may differ per cache).
         let t_hit = self.tcache.reserve_row_prefixed(slot, prompt, need)?;
@@ -198,13 +223,18 @@ impl Engine for VsdEngine {
         self.tcache.cur_len[slot] = seq.target_len as u32;
         self.dcache.cur_len[slot] = seq.draft_len as u32;
         self.seqs[slot] = seq;
+        self.policy.on_admit(slot);
         self.note_kv();
         Ok(())
     }
 
     fn step(&mut self) -> Result<()> {
-        let (cands, qdists) = self.draft_candidates()?;
-        let spec = VerifySpec { k: self.cfg.k, pad: self.pad,
+        let live: Vec<bool> =
+            self.seqs.iter().map(|s| s.active && !s.done).collect();
+        let ks = self.policy.plan(&live, &mut self.metrics);
+        let (cands, qdists) = self.draft_candidates(&ks)?;
+        let spec = VerifySpec { k: ks.iter().copied().max().unwrap_or(0),
+                                pad: self.pad,
                                 sampling: self.cfg.sampling,
                                 qdists: &qdists };
         let verdicts = verify_and_commit(&*self.target, &mut self.tcache,
@@ -212,8 +242,11 @@ impl Engine for VsdEngine {
                                          &mut self.metrics)?;
         for (row, v) in verdicts.iter().enumerate() {
             if let Some(v) = v {
+                self.policy.on_acceptance(row, cands[row].len(),
+                                          v.accepted);
                 apply_verdict(&mut self.seqs[row], &mut self.tcache, row, v,
-                              self.cfg.k, self.eos, &mut self.metrics);
+                              self.policy.k_cap(), self.eos,
+                              &mut self.metrics);
             }
         }
         self.note_kv();
@@ -221,7 +254,7 @@ impl Engine for VsdEngine {
     }
 
     fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
-        let need = reserve_len(prompt.len(), max_new, self.cfg.k);
+        let need = reserve_len(prompt.len(), max_new, self.policy.k_cap());
         self.tcache.can_reserve_prefixed(prompt, need)
             && self.dcache.can_reserve_prefixed(prompt, need)
     }
@@ -252,11 +285,15 @@ impl Engine for VsdEngine {
 
     fn warmup(&mut self) -> Result<()> {
         let b = self.cfg.batch;
+        // Warm the policy's worst-case shapes (== cfg.k when fixed);
+        // smaller adaptive K lands in smaller T buckets, exact-T
+        // (free) on the host/reference backends.
+        let k = self.policy.k_cap();
         let pf_t = self.target.pick_t(b, super::PREFILL_T)?;
-        let ver_t = self.target.pick_t(b, self.cfg.k + 1)?;
+        let ver_t = self.target.pick_t(b, k + 1)?;
         self.target.warmup(b, &[pf_t, ver_t])?;
         // catch-up feeds 1..=K+2 reals depending on last acceptance
-        self.draft.warmup_range(b, 1, self.cfg.k + 2)?;
+        self.draft.warmup_range(b, 1, k + 2)?;
         self.draft
             .warmup(b, &[self.draft.pick_t(b, super::PREFILL_T)?])?;
         Ok(())

@@ -6,7 +6,14 @@
 //! for Tables 6-7), and the per-op forward breakdown the host backend
 //! reports (`fwd_ops` in `BENCH_hotpath.json`, DESIGN.md §8).
 
+use std::collections::VecDeque;
+
 use crate::runtime::{FwdOps, FwdOut};
+
+/// Verify records kept for the windowed accept-rate view
+/// (`accept_rate_k`); bounds memory on long serving runs while staying
+/// far larger than any policy window.
+pub const ACCEPT_RECENT_CAP: usize = 256;
 
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
@@ -85,6 +92,28 @@ pub struct Metrics {
     /// Stochastic verification: bonus tokens sampled from the target at
     /// fully-accepting verify rows (0 under greedy decoding).
     pub bonus_samples: u64,
+    /// Most recent `(offered, accepted)` verify records, newest last,
+    /// capped at [`ACCEPT_RECENT_CAP`]; zero-offered verifies (AR+
+    /// mode) are not observations and are never recorded.  Feeds the
+    /// windowed `accept_rate_k` view.
+    pub accept_recent: VecDeque<(u32, u32)>,
+    /// k_hist[k] = live rows the speculation policy planned K=k for
+    /// (K=0 counts dual-mode AR+ degrades).  Empty for engines that
+    /// never consult a policy (AR, AR+).
+    pub k_hist: Vec<u64>,
+    /// Draft/AR+ dual-mode transitions (either direction).
+    pub mode_switches: u64,
+    /// Decode iterations planned in dual (AR+-degraded) mode.
+    pub dual_mode_iters: u64,
+    /// Work-unit ledger for the costed virtual clock (DESIGN.md §9):
+    /// one pass unit per forward call, weighted by the model's
+    /// parameter count — the weight-read (bandwidth) cost a decode
+    /// step pays regardless of batch width.
+    pub work_pass_units: f64,
+    /// Parameter count × live (fed) columns, summed over forward
+    /// calls — the compute cost that scales with batch occupancy and
+    /// draft length.
+    pub work_col_units: f64,
 }
 
 impl Metrics {
@@ -116,6 +145,17 @@ impl Metrics {
     }
 
     pub fn record_acceptance(&mut self, offered: usize, accepted: usize) {
+        // A zero-candidate verify is an AR+-mode step, not an
+        // acceptance observation: recording it would add a phantom
+        // zero-length entry to accept_hist (dragging mean_accept_len
+        // down) and a (0, 0) record to the windowed rate.
+        if offered == 0 {
+            return;
+        }
+        self.accept_recent.push_back((offered as u32, accepted as u32));
+        while self.accept_recent.len() > ACCEPT_RECENT_CAP {
+            self.accept_recent.pop_front();
+        }
         if self.offered_pos.len() < offered {
             self.offered_pos.resize(offered, 0);
             self.accept_pos.resize(offered, 0);
@@ -130,6 +170,45 @@ impl Metrics {
             self.accept_hist.resize(accepted + 1, 0);
         }
         self.accept_hist[accepted] += 1;
+    }
+
+    /// Windowed acceptance rate over the first `k` draft positions:
+    /// accepted / offered among positions `< k` in the last `window`
+    /// verify records.  The speculation controller consumes the same
+    /// shape of number per sequence, so the edge cases are pinned by
+    /// tests: no records (or only zero-offered verifies, which are
+    /// never recorded) → 0.0; `accepted == offered` everywhere → 1.0;
+    /// `window` larger than history → uses all of it; `k` larger than
+    /// any offered length → the full-length rate.
+    pub fn accept_rate_k(&self, k: usize, window: usize) -> f64 {
+        let (mut num, mut den) = (0u64, 0u64);
+        let skip = self.accept_recent.len().saturating_sub(window);
+        for &(off, acc) in self.accept_recent.iter().skip(skip) {
+            den += u64::from(off).min(k as u64);
+            num += u64::from(acc).min(k as u64);
+        }
+        if den == 0 {
+            0.0
+        } else {
+            num as f64 / den as f64
+        }
+    }
+
+    /// Account one planned per-row K choice (speculation policy).
+    pub fn record_k_choice(&mut self, k: usize) {
+        if self.k_hist.len() <= k {
+            self.k_hist.resize(k + 1, 0);
+        }
+        self.k_hist[k] += 1;
+    }
+
+    /// Account one forward call in the work-unit ledger: `n_params`
+    /// pass units (weight reads) and `n_params * cols` column units,
+    /// where `cols` is the number of live (actually fed) cells in the
+    /// call.  Drives `serve_trace_virtual_costed`.
+    pub fn record_work(&mut self, n_params: usize, cols: usize) {
+        self.work_pass_units += n_params as f64;
+        self.work_col_units += n_params as f64 * cols as f64;
     }
 
     /// Mean acceptance rate over the first `k` draft positions — the
@@ -227,6 +306,20 @@ impl Metrics {
         self.cow_copies += o.cow_copies;
         self.residual_resamples += o.residual_resamples;
         self.bonus_samples += o.bonus_samples;
+        self.accept_recent.extend(o.accept_recent.iter().copied());
+        while self.accept_recent.len() > ACCEPT_RECENT_CAP {
+            self.accept_recent.pop_front();
+        }
+        if self.k_hist.len() < o.k_hist.len() {
+            self.k_hist.resize(o.k_hist.len(), 0);
+        }
+        for (i, c) in o.k_hist.iter().enumerate() {
+            self.k_hist[i] += c;
+        }
+        self.mode_switches += o.mode_switches;
+        self.dual_mode_iters += o.dual_mode_iters;
+        self.work_pass_units += o.work_pass_units;
+        self.work_col_units += o.work_col_units;
         if self.offered_pos.len() < o.offered_pos.len() {
             self.offered_pos.resize(o.offered_pos.len(), 0);
             self.accept_pos.resize(o.accept_pos.len(), 0);
@@ -349,5 +442,91 @@ mod tests {
         assert_eq!(m.tps(), 0.0);
         assert_eq!(m.k_alpha(4), 0.0);
         assert_eq!(m.pos_alpha(9), 0.0);
+        assert_eq!(m.accept_rate_k(4, 8), 0.0);
+    }
+
+    #[test]
+    fn zero_offered_acceptance_is_a_noop() {
+        let mut m = Metrics::default();
+        m.record_acceptance(0, 0);
+        assert!(m.offered_pos.is_empty());
+        assert!(m.accept_pos.is_empty());
+        assert!(m.accept_hist.is_empty(),
+                "a zero-offered verify must not add a phantom \
+                 zero-length accept_hist entry");
+        assert!(m.accept_recent.is_empty());
+        assert_eq!(m.mean_accept_len(), 0.0);
+        assert_eq!(m.accept_rate_k(4, 8), 0.0);
+        // and it must not dilute real observations either
+        m.record_acceptance(4, 4);
+        m.record_acceptance(0, 0);
+        assert!((m.mean_accept_len() - 4.0).abs() < 1e-12);
+        assert!((m.accept_rate_k(4, 8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_acceptance_rates_one() {
+        let mut m = Metrics::default();
+        m.record_acceptance(3, 3);
+        m.record_acceptance(7, 7);
+        assert!((m.accept_rate_k(7, 8) - 1.0).abs() < 1e-12);
+        assert!((m.accept_rate_k(2, 8) - 1.0).abs() < 1e-12);
+        assert!((m.k_alpha(7) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_larger_than_history_uses_all_of_it() {
+        let mut m = Metrics::default();
+        m.record_acceptance(4, 2);
+        m.record_acceptance(4, 0);
+        // window 1000 >> 2 records: (2+0)/(4+4)
+        assert!((m.accept_rate_k(4, 1000) - 0.25).abs() < 1e-12);
+        // window 1 sees only the newest record
+        assert_eq!(m.accept_rate_k(4, 1), 0.0);
+    }
+
+    #[test]
+    fn k_larger_than_any_offered_length() {
+        let mut m = Metrics::default();
+        m.record_acceptance(2, 1);
+        m.record_acceptance(3, 3);
+        // k=16 caps nothing: (1+3)/(2+3)
+        assert!((m.accept_rate_k(16, 8) - 0.8).abs() < 1e-12);
+        // k=1 truncates every record to its first position
+        assert!((m.accept_rate_k(1, 8) - 1.0).abs() < 1e-12);
+        // positions beyond anything offered contribute nothing
+        assert_eq!(m.accept_rate_k(16, 8), m.accept_rate_k(3, 8));
+    }
+
+    #[test]
+    fn accept_recent_is_capped() {
+        let mut m = Metrics::default();
+        for i in 0..(ACCEPT_RECENT_CAP + 10) {
+            m.record_acceptance(2, (i % 3 == 0) as usize);
+        }
+        assert_eq!(m.accept_recent.len(), ACCEPT_RECENT_CAP);
+    }
+
+    #[test]
+    fn policy_counters_merge() {
+        let mut a = Metrics::default();
+        a.record_k_choice(2);
+        a.record_k_choice(2);
+        a.record_k_choice(0);
+        a.mode_switches = 1;
+        a.dual_mode_iters = 3;
+        a.record_work(10, 4);
+        let mut b = Metrics::default();
+        b.record_k_choice(5);
+        b.mode_switches = 2;
+        b.record_work(10, 1);
+        b.record_acceptance(4, 2);
+        a.merge(&b);
+        assert_eq!(a.k_hist, vec![1, 0, 2, 0, 0, 1]);
+        assert_eq!(a.mode_switches, 3);
+        assert_eq!(a.dual_mode_iters, 3);
+        assert_eq!(a.work_pass_units, 20.0);
+        assert_eq!(a.work_col_units, 50.0);
+        assert_eq!(a.accept_recent, vec![(4, 2)]);
     }
 }

@@ -7,6 +7,7 @@ pub mod batcher;
 pub mod engines;
 pub mod evaluate;
 pub mod metrics;
+pub mod policy;
 pub mod router;
 pub mod sampling;
 pub mod sequence;
@@ -15,4 +16,5 @@ pub use engines::{build_engine, generate, Engine, EngineConfig,
                   EngineKind};
 pub use evaluate::{run_eval, speedup, EvalResult};
 pub use metrics::Metrics;
+pub use policy::{PolicyCfg, SpecPolicy};
 pub use sequence::Sequence;

@@ -1,0 +1,378 @@
+//! Speculation policy: a windowed accept-rate K controller with a
+//! batch-level dual-mode draft/AR+ switch (DESIGN.md §9).
+//!
+//! The controller is deliberately a *pure function of observable
+//! state*: per-sequence acceptance history (what `verify_and_commit`
+//! reported for that row) and batch occupancy (how many rows are
+//! live).  No wall clock, no randomness — so a policy run is
+//! deterministic, replayable on the virtual clock, and exactly
+//! mirrorable by `python/refsim/hostsim.py` (which ci.sh gates on).
+//!
+//! Two decisions are made per step, in `SpecPolicy::plan`:
+//!
+//! 1. **Per-sequence K.**  Each live row keeps a sliding window of the
+//!    last `window` verify outcomes `(offered, accepted)`.  The next K
+//!    for that row is a rate-proportional interpolation between
+//!    `k_min` and `k_max`, computed in integer arithmetic
+//!    (round-half-up) so the Python mirror can reproduce it exactly —
+//!    see [`k_for_rate`].  An empty window (fresh sequence) falls back
+//!    to the configured `--k`, clamped into `[k_min, k_max]`.
+//! 2. **Dual mode.**  When `dual_mode_occupancy` is set and the
+//!    fraction of live rows reaches it, every row gets K=0: the
+//!    engines skip the draft pass entirely and verify with zero
+//!    candidates, which commits exactly one token per row — AR+
+//!    behavior with AR+ cost and (stochastically) AR+'s draw
+//!    sequence.  When occupancy drops back below the threshold the
+//!    batch switches back to drafting.  This is PARD-2's dual-mode
+//!    argument: speculation stops paying once the batch is
+//!    compute-saturated, because the verify pass already multiplies
+//!    its column count by K+1 for every live row.
+//!
+//! **Why pinned ≡ fixed-K:** with `k_min == k_max == K` and dual mode
+//! off, `plan` returns K for every live row on every step (the window
+//! interpolation collapses to the single point K), `k_cap()` equals K,
+//! and zero-offered observations never occur — so reservation sizes,
+//! call-buffer layouts, T buckets, and per-sequence draw sequences are
+//! identical to a fixed-K run, token for token.  `--policy fixed`
+//! ignores the bounds entirely and always returns the configured K.
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use super::metrics::Metrics;
+
+/// Largest K any engine accepts (`build_engine` enforces the same
+/// bound on `--k`); adaptive bounds must fit under it because cache
+/// reservations and headroom guards are sized by `k_cap()`.
+pub const K_LIMIT: usize = 16;
+
+/// Speculation-policy knobs (CLI: `--policy`, `--k-min`, `--k-max`,
+/// `--policy-window`, `--dual-mode-occupancy`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyCfg {
+    /// `--policy adaptive`; `false` is the fixed-K policy, which
+    /// always drafts the configured `--k` and never enters dual mode.
+    pub adaptive: bool,
+    /// Lower K bound for the adaptive controller (>= 1).
+    pub k_min: usize,
+    /// Upper K bound for the adaptive controller (<= [`K_LIMIT`]).
+    pub k_max: usize,
+    /// Sliding-window length, in verify steps, of the per-sequence
+    /// acceptance history the controller reads.
+    pub window: usize,
+    /// Batch-occupancy fraction in `(0, 1]` at which the whole batch
+    /// degrades to AR+ (K=0); `None` disables dual mode.
+    pub dual_mode_occupancy: Option<f64>,
+}
+
+impl Default for PolicyCfg {
+    fn default() -> Self {
+        PolicyCfg {
+            adaptive: false,
+            k_min: 1,
+            k_max: K_LIMIT,
+            window: 8,
+            dual_mode_occupancy: None,
+        }
+    }
+}
+
+/// Next K for a window holding `acc` accepted out of `off` offered
+/// candidates: `k_min` plus the rate-proportional share of the span,
+/// rounded half-up, all in integer arithmetic (bit-for-bit mirrorable
+/// in Python).  `off == 0` (no history yet) falls back to `k_init`
+/// clamped into the bounds.  `acc == off` maps to `k_max`, `acc == 0`
+/// to `k_min`, and the result is monotone in `acc`.
+pub fn k_for_rate(acc: u64, off: u64, k_min: usize, k_max: usize,
+                  k_init: usize) -> usize {
+    debug_assert!(k_min <= k_max && acc <= off);
+    if off == 0 {
+        return k_init.clamp(k_min, k_max);
+    }
+    let span = (k_max - k_min) as u64;
+    k_min + ((span * 2 * acc + off) / (2 * off)) as usize
+}
+
+/// Per-engine speculation controller.  Construct via
+/// [`crate::coordinator::router::build_policy`], which validates the
+/// knobs and pins AR engines to the inert fixed policy.
+#[derive(Debug, Clone)]
+pub struct SpecPolicy {
+    cfg: PolicyCfg,
+    /// The configured `--k`: the fixed policy's constant answer and
+    /// the adaptive controller's cold-start K.
+    k_init: usize,
+    /// Per-slot acceptance windows, `(offered, accepted)` per verify.
+    windows: Vec<VecDeque<(u32, u32)>>,
+    /// Currently degraded to AR+ by the occupancy rule?
+    dual_mode: bool,
+}
+
+impl SpecPolicy {
+    pub fn new(cfg: &PolicyCfg, k_init: usize, batch: usize)
+               -> Result<Self> {
+        ensure!(cfg.k_min >= 1, "policy k_min must be >= 1");
+        ensure!(cfg.k_min <= cfg.k_max,
+                "policy k_min {} > k_max {}", cfg.k_min, cfg.k_max);
+        ensure!(cfg.k_max <= K_LIMIT,
+                "policy k_max {} > {K_LIMIT}", cfg.k_max);
+        ensure!(cfg.window >= 1, "policy window must be >= 1");
+        if let Some(tau) = cfg.dual_mode_occupancy {
+            ensure!(tau > 0.0 && tau <= 1.0,
+                    "dual-mode occupancy {tau} outside (0, 1]");
+        }
+        Ok(SpecPolicy {
+            cfg: cfg.clone(),
+            k_init,
+            windows: vec![VecDeque::new(); batch],
+            dual_mode: false,
+        })
+    }
+
+    pub fn cfg(&self) -> &PolicyCfg {
+        &self.cfg
+    }
+
+    pub fn in_dual_mode(&self) -> bool {
+        self.dual_mode
+    }
+
+    /// Worst-case K this policy can ever request: cache reservations,
+    /// headroom guards, and warmup shapes are sized by this, so
+    /// admission stays preemption-free under any K trajectory.
+    pub fn k_cap(&self) -> usize {
+        if self.cfg.adaptive {
+            self.cfg.k_max
+        } else {
+            self.k_init
+        }
+    }
+
+    /// A slot was (re)admitted: its acceptance history belongs to the
+    /// previous occupant, so drop it.
+    pub fn on_admit(&mut self, slot: usize) {
+        self.windows[slot].clear();
+    }
+
+    /// Record one verify outcome for `slot`.  A zero-offered verify is
+    /// an AR+-mode step, not an acceptance observation — recording it
+    /// would drag the windowed rate toward `k_min` while the row isn't
+    /// drafting at all — so it is skipped, matching
+    /// `Metrics::record_acceptance`.
+    pub fn on_acceptance(&mut self, slot: usize, offered: usize,
+                         accepted: usize) {
+        if offered == 0 {
+            return;
+        }
+        let w = &mut self.windows[slot];
+        w.push_back((offered as u32, accepted as u32));
+        while w.len() > self.cfg.window {
+            w.pop_front();
+        }
+    }
+
+    /// The K `plan` would hand `slot` outside dual mode.
+    pub fn k_for_slot(&self, slot: usize) -> usize {
+        if !self.cfg.adaptive {
+            return self.k_init;
+        }
+        let (mut acc, mut off) = (0u64, 0u64);
+        for &(o, a) in &self.windows[slot] {
+            off += u64::from(o);
+            acc += u64::from(a);
+        }
+        k_for_rate(acc, off, self.cfg.k_min, self.cfg.k_max, self.k_init)
+    }
+
+    /// Decide this step's per-slot K vector from the live mask.
+    /// Non-live slots get 0; dual mode forces 0 everywhere (AR+
+    /// degrade).  Records the K histogram, mode switches, and
+    /// dual-mode iteration count into `metrics`.
+    pub fn plan(&mut self, live: &[bool], metrics: &mut Metrics)
+                -> Vec<usize> {
+        debug_assert_eq!(live.len(), self.windows.len());
+        let n_live = live.iter().filter(|&&l| l).count();
+        let dual = self.cfg.adaptive
+            && self
+                .cfg
+                .dual_mode_occupancy
+                .map(|tau| n_live as f64 >= tau * live.len() as f64)
+                .unwrap_or(false);
+        if dual != self.dual_mode {
+            self.dual_mode = dual;
+            metrics.mode_switches += 1;
+        }
+        if dual {
+            metrics.dual_mode_iters += 1;
+        }
+        let ks: Vec<usize> = (0..live.len())
+            .map(|slot| {
+                if !live[slot] || dual {
+                    0
+                } else {
+                    self.k_for_slot(slot)
+                }
+            })
+            .collect();
+        for (slot, &k) in ks.iter().enumerate() {
+            if live[slot] {
+                metrics.record_k_choice(k);
+            }
+        }
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adaptive(k_min: usize, k_max: usize, window: usize,
+                tau: Option<f64>) -> PolicyCfg {
+        PolicyCfg { adaptive: true, k_min, k_max, window,
+                    dual_mode_occupancy: tau }
+    }
+
+    #[test]
+    fn k_for_rate_endpoints_and_bounds() {
+        for k_min in 1..=4 {
+            for k_max in k_min..=16 {
+                for off in 1..=24u64 {
+                    for acc in 0..=off {
+                        let k = k_for_rate(acc, off, k_min, k_max, 8);
+                        assert!((k_min..=k_max).contains(&k));
+                    }
+                    assert_eq!(k_for_rate(0, off, k_min, k_max, 8),
+                               k_min);
+                    assert_eq!(k_for_rate(off, off, k_min, k_max, 8),
+                               k_max);
+                }
+                // empty history: clamped k_init
+                assert_eq!(k_for_rate(0, 0, k_min, k_max, 8),
+                           8usize.clamp(k_min, k_max));
+            }
+        }
+    }
+
+    #[test]
+    fn k_for_rate_is_monotone_in_acceptance() {
+        for off in 1..=20u64 {
+            let mut prev = 0;
+            for acc in 0..=off {
+                let k = k_for_rate(acc, off, 1, 16, 4);
+                assert!(k >= prev, "not monotone at acc={acc}/{off}");
+                prev = k;
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_policy_always_returns_k() {
+        let mut p =
+            SpecPolicy::new(&adaptive(5, 5, 4, None), 5, 3).unwrap();
+        let mut m = Metrics::default();
+        for _ in 0..4 {
+            assert_eq!(p.plan(&[true, true, false], &mut m),
+                       vec![5, 5, 0]);
+            p.on_acceptance(0, 5, 0); // terrible rate; still pinned
+            p.on_acceptance(1, 5, 5);
+        }
+        assert_eq!(p.k_cap(), 5);
+        assert_eq!(m.mode_switches, 0);
+        assert_eq!(m.k_hist.get(5), Some(&8));
+    }
+
+    #[test]
+    fn fixed_policy_ignores_bounds_and_history() {
+        let cfg = PolicyCfg::default();
+        let mut p = SpecPolicy::new(&cfg, 7, 2).unwrap();
+        let mut m = Metrics::default();
+        p.on_acceptance(0, 7, 0);
+        assert_eq!(p.plan(&[true, true], &mut m), vec![7, 7]);
+        assert_eq!(p.k_cap(), 7);
+    }
+
+    #[test]
+    fn adaptive_tracks_the_window() {
+        let mut p =
+            SpecPolicy::new(&adaptive(1, 16, 2, None), 4, 1).unwrap();
+        let mut m = Metrics::default();
+        // cold start: k_init
+        assert_eq!(p.plan(&[true], &mut m), vec![4]);
+        // full acceptance drives K to k_max...
+        p.on_acceptance(0, 4, 4);
+        assert_eq!(p.plan(&[true], &mut m), vec![16]);
+        // ...zero acceptance drags it down; window=2 keeps one good
+        // record so the rate is 4/20 -> 1 + round(15*0.2) = 4
+        p.on_acceptance(0, 16, 0);
+        assert_eq!(p.plan(&[true], &mut m), vec![4]);
+        // the good record ages out: rate 0 -> k_min
+        p.on_acceptance(0, 4, 0);
+        assert_eq!(p.plan(&[true], &mut m), vec![1]);
+        // re-admission clears history back to cold start
+        p.on_admit(0);
+        assert_eq!(p.plan(&[true], &mut m), vec![4]);
+    }
+
+    #[test]
+    fn zero_offered_is_not_an_observation() {
+        let mut p =
+            SpecPolicy::new(&adaptive(1, 16, 4, None), 4, 1).unwrap();
+        p.on_acceptance(0, 4, 4);
+        p.on_acceptance(0, 0, 0); // AR+ step: must not dilute the rate
+        assert_eq!(p.k_for_slot(0), 16);
+    }
+
+    #[test]
+    fn dual_mode_follows_occupancy() {
+        let mut p =
+            SpecPolicy::new(&adaptive(1, 16, 4, Some(0.75)), 4, 4)
+                .unwrap();
+        let mut m = Metrics::default();
+        // 2/4 live: below threshold, drafting
+        assert_eq!(p.plan(&[true, true, false, false], &mut m),
+                   vec![4, 4, 0, 0]);
+        assert!(!p.in_dual_mode());
+        // 3/4 live: at threshold, AR+ degrade
+        assert_eq!(p.plan(&[true, true, true, false], &mut m),
+                   vec![0, 0, 0, 0]);
+        assert!(p.in_dual_mode());
+        assert_eq!(m.mode_switches, 1);
+        assert_eq!(m.dual_mode_iters, 1);
+        // drops back: switch back to drafting
+        assert_eq!(p.plan(&[true, false, false, false], &mut m),
+                   vec![4, 0, 0, 0]);
+        assert!(!p.in_dual_mode());
+        assert_eq!(m.mode_switches, 2);
+        // k histogram saw both the drafted and the degraded choices
+        assert!(m.k_hist[0] > 0 && m.k_hist[4] > 0);
+    }
+
+    #[test]
+    fn fixed_policy_never_enters_dual_mode() {
+        // dual_mode_occupancy is an adaptive-only knob; the fixed
+        // policy ignores it even if set programmatically.
+        let cfg = PolicyCfg { dual_mode_occupancy: Some(0.5),
+                              ..PolicyCfg::default() };
+        let mut p = SpecPolicy::new(&cfg, 3, 2).unwrap();
+        let mut m = Metrics::default();
+        assert_eq!(p.plan(&[true, true], &mut m), vec![3, 3]);
+        assert!(!p.in_dual_mode());
+        assert_eq!(m.mode_switches, 0);
+    }
+
+    #[test]
+    fn bad_knobs_are_rejected() {
+        for cfg in [
+            adaptive(0, 4, 4, None),
+            adaptive(5, 4, 4, None),
+            adaptive(1, 17, 4, None),
+            adaptive(1, 4, 0, None),
+            adaptive(1, 4, 4, Some(0.0)),
+            adaptive(1, 4, 4, Some(1.5)),
+        ] {
+            assert!(SpecPolicy::new(&cfg, 4, 2).is_err(), "{cfg:?}");
+        }
+    }
+}

@@ -1,13 +1,19 @@
 //! Model routing: which draft accelerates which target (model family
-//! per DESIGN.md §6).
+//! per DESIGN.md §6), and which speculation policy drives the pair at
+//! runtime (DESIGN.md §9).
 //!
 //! The paper's target-independence property (Table 2) means ONE draft
 //! serves the whole family; the router encodes that policy plus the
 //! target-dependent exception (EAGLE heads bind to a single target).
+//! `build_policy` promotes the static lookup into a runtime object:
+//! every engine gets a validated [`SpecPolicy`], with the AR kinds —
+//! which never draft — pinned to the inert fixed policy no matter
+//! what the CLI asked for.
 
 use anyhow::Result;
 
-use super::engines::EngineKind;
+use super::engines::{EngineConfig, EngineKind};
+use super::policy::{PolicyCfg, SpecPolicy};
 use crate::runtime::Manifest;
 
 /// Family targets in ascending size (Table 2 rows).  The draft itself is
@@ -38,6 +44,21 @@ pub fn default_draft(manifest: &Manifest, kind: EngineKind, target: &str)
     })
 }
 
+/// Speculation controller for an engine under construction.  The
+/// knobs are validated for every kind — a bad `--k-min/--k-max` fails
+/// fast even on an AR run — but AR/AR+ get the inert fixed policy:
+/// they never draft, so an adaptive controller (and in particular the
+/// dual-mode AR+ degrade) has nothing to act on.
+pub fn build_policy(cfg: &EngineConfig) -> Result<SpecPolicy> {
+    SpecPolicy::new(&cfg.policy, cfg.k, cfg.batch)?;
+    match cfg.kind {
+        EngineKind::Ar | EngineKind::ArPlus => {
+            SpecPolicy::new(&PolicyCfg::default(), cfg.k, cfg.batch)
+        }
+        _ => SpecPolicy::new(&cfg.policy, cfg.k, cfg.batch),
+    }
+}
+
 /// Targets an engine can serve without further training.
 pub fn reachable_targets(manifest: &Manifest, kind: EngineKind)
                          -> Vec<String> {
@@ -57,17 +78,34 @@ pub fn reachable_targets(manifest: &Manifest, kind: EngineKind)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
-    use std::path::Path;
 
-    fn manifest() -> Option<Manifest> {
-        let p = Path::new("artifacts");
-        Manifest::load(p).ok()
+    // The synthetic in-memory manifest the reference backend ships:
+    // same family layout as a trained artifacts/ directory, so these
+    // tests run everywhere — they used to silently pass (`let Some(m)
+    // = ... else { return }`) on hosts without artifacts.
+    fn manifest() -> Manifest {
+        crate::runtime::reference::reference_manifest()
+    }
+
+    fn cfg(kind: EngineKind, policy: PolicyCfg) -> EngineConfig {
+        EngineConfig {
+            kind,
+            target: "target-m".into(),
+            draft: None,
+            batch: 2,
+            k: 4,
+            max_new: 8,
+            shared_mask: true,
+            kv_blocks: None,
+            prefix_cache: false,
+            sampling: None,
+            policy,
+        }
     }
 
     #[test]
     fn pard_single_draft_for_all_targets() {
-        let Some(m) = manifest() else { return };
+        let m = manifest();
         let drafts: Vec<_> = FAMILY_TARGETS
             .iter()
             .map(|t| default_draft(&m, EngineKind::Pard, t).unwrap())
@@ -78,15 +116,52 @@ mod tests {
 
     #[test]
     fn eagle_bound_to_trained_target() {
-        let Some(m) = manifest() else { return };
+        let m = manifest();
         assert!(default_draft(&m, EngineKind::Eagle, "target-l").is_ok());
         assert!(default_draft(&m, EngineKind::Eagle, "target-m").is_err());
     }
 
     #[test]
     fn ar_needs_no_draft() {
-        let Some(m) = manifest() else { return };
+        let m = manifest();
         assert_eq!(default_draft(&m, EngineKind::Ar, "target-l").unwrap(),
                    None);
+    }
+
+    #[test]
+    fn reachable_targets_follow_the_manifest() {
+        let m = manifest();
+        let pard = reachable_targets(&m, EngineKind::Pard);
+        assert_eq!(pard, vec!["draft-s", "target-m", "target-l",
+                              "target-xl"]);
+        // EAGLE reaches only its trained target
+        assert_eq!(reachable_targets(&m, EngineKind::Eagle),
+                   vec!["target-l"]);
+    }
+
+    #[test]
+    fn build_policy_pins_ar_kinds_to_fixed() {
+        let adaptive = PolicyCfg { adaptive: true, k_min: 2, k_max: 8,
+                                   ..PolicyCfg::default() };
+        let p = build_policy(&cfg(EngineKind::Pard, adaptive.clone()))
+            .unwrap();
+        assert_eq!(p.k_cap(), 8);
+        for kind in [EngineKind::Ar, EngineKind::ArPlus] {
+            let p =
+                build_policy(&cfg(kind, adaptive.clone())).unwrap();
+            assert!(!p.cfg().adaptive, "AR kinds never draft");
+            assert_eq!(p.k_cap(), 4);
+        }
+    }
+
+    #[test]
+    fn build_policy_rejects_bad_knobs_for_every_kind() {
+        let bad = PolicyCfg { adaptive: true, k_min: 9, k_max: 2,
+                              ..PolicyCfg::default() };
+        for kind in [EngineKind::Ar, EngineKind::ArPlus,
+                     EngineKind::Vsd, EngineKind::Pard,
+                     EngineKind::Eagle] {
+            assert!(build_policy(&cfg(kind, bad.clone())).is_err());
+        }
     }
 }

@@ -4,10 +4,14 @@
 //!   eval   --engine pard --target target-l [--task code] [--k 8]
 //!          [--batch 1] [--prompts N] [--max-new N] [--draft NAME]
 //!          [--kv-blocks N] [--prefix-cache] [--temperature T]
-//!          [--top-p P] [--sample-seed N]
+//!          [--top-p P] [--sample-seed N] [--policy fixed|adaptive]
+//!          [--k-min N] [--k-max N] [--policy-window N]
+//!          [--dual-mode-occupancy F]
 //!   serve  --engine pard --target target-l [--n N] [--rate R]
-//!          [--kv-blocks N] [--virtual-tick S] [--prefix-cache]
-//!          [--shared-prefix N] [--prefix-len L]
+//!          [--kv-blocks N] [--virtual-tick S] [--virtual-cost P,C]
+//!          [--prefix-cache] [--shared-prefix N] [--prefix-len L]
+//!          [--policy fixed|adaptive] [--k-min N] [--k-max N]
+//!          [--policy-window N] [--dual-mode-occupancy F]
 //!   bench  [--k 2,4,8] [--batch 1,4] [--prompts N] [--max-new N]
 //!          [--task code] [--target target-l] [--seed N] [--no-oracle]
 //!          [--out BENCH_hotpath.json] [--compare OLD.json]
@@ -39,15 +43,26 @@
 //! lossless accept/residual correction); `--top-p P` adds nucleus
 //! filtering and `--sample-seed N` keys the per-sequence rng streams —
 //! same seed, same output, at any batch size.  Temperature 0 is exact
-//! greedy (DESIGN.md §6).
+//! greedy (DESIGN.md §6).  `--policy adaptive` turns on the windowed
+//! accept-rate K controller (DESIGN.md §9): each sequence's draft
+//! length is retuned every step within `[--k-min, --k-max]` from its
+//! last `--policy-window` verify outcomes, and
+//! `--dual-mode-occupancy F` degrades the whole batch to AR+ (K=0)
+//! while live slots >= F x batch; `--k` stays the initial/default K.
+//! `serve --virtual-cost PASS,COL` runs the batcher on the
+//! work-costed virtual clock (PASS seconds per forward-pass unit +
+//! COL per token-column unit), which prices speculation instead of
+//! charging every iteration a flat tick.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 use pard::coordinator::engines::{EngineConfig, EngineKind, SamplingCfg};
 use pard::coordinator::evaluate::run_eval;
+use pard::coordinator::policy::PolicyCfg;
 use pard::coordinator::router::default_draft;
-use pard::coordinator::batcher::{serve_trace, serve_trace_virtual};
+use pard::coordinator::batcher::{serve_trace, serve_trace_virtual,
+                                 serve_trace_virtual_costed};
 use pard::report::bench::{compare_reports, hotpath_report, write_report,
                           BenchOpts, BENCH_FILE, COMPARE_TOL};
 use pard::report::{self, RunScale};
@@ -213,6 +228,57 @@ fn sampling_opt(args: &Args) -> Result<Option<SamplingCfg>> {
     Ok(Some(SamplingCfg { temperature, top_p, seed }))
 }
 
+/// `--policy fixed|adaptive [--k-min N] [--k-max N]
+/// [--policy-window N] [--dual-mode-occupancy F]` (speculation
+/// controller, DESIGN.md §9).  The companion knobs without `--policy
+/// adaptive` are an error, not silently ignored; values out of range
+/// fail here AND again inside `SpecPolicy::new` (belt and braces).
+fn policy_opt(args: &Args) -> Result<PolicyCfg> {
+    let adaptive = match args.get("policy", "fixed").as_str() {
+        "fixed" => false,
+        "adaptive" => true,
+        other => anyhow::bail!("unknown policy `{other}` \
+                                (fixed|adaptive)"),
+    };
+    if !adaptive {
+        anyhow::ensure!(
+            args.opts.get("k-min").is_none()
+                && args.opts.get("k-max").is_none()
+                && args.opts.get("policy-window").is_none()
+                && args.opts.get("dual-mode-occupancy").is_none(),
+            "--k-min/--k-max/--policy-window/--dual-mode-occupancy \
+             require --policy adaptive"
+        );
+        return Ok(PolicyCfg::default());
+    }
+    let uint = |key: &str, default: usize| -> Result<usize> {
+        match args.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{key} wants a positive integer, \
+                                 got `{v}`")
+            }),
+        }
+    };
+    let dual = match args.opts.get("dual-mode-occupancy") {
+        None => None,
+        Some(v) => {
+            let f: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--dual-mode-occupancy wants a number \
+                                 in (0, 1], got `{v}`")
+            })?;
+            Some(f)
+        }
+    };
+    Ok(PolicyCfg {
+        adaptive: true,
+        k_min: uint("k-min", 1)?,
+        k_max: uint("k-max", 16)?,
+        window: uint("policy-window", 8)?,
+        dual_mode_occupancy: dual,
+    })
+}
+
 fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
     let kind = EngineKind::parse(&args.get("engine", "pard"))?;
     let target = args.get("target", "target-l");
@@ -231,6 +297,7 @@ fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
         kv_blocks: kv_blocks_opt(args)?,
         prefix_cache: args.flag("prefix-cache"),
         sampling: sampling_opt(args)?,
+        policy: policy_opt(args)?,
     })
 }
 
@@ -262,6 +329,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
                   residual-resamples={} bonus-samples={}",
                  s.temperature, s.top_p, s.seed,
                  m.residual_resamples, m.bonus_samples);
+    }
+    if cfg.policy.adaptive {
+        let hist: Vec<String> = m
+            .k_hist
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| **n > 0)
+            .map(|(k, n)| format!("{k}:{n}"))
+            .collect();
+        println!("policy: adaptive k=[{}..{}] window={}  \
+                  k-hist {{{}}}  mode-switches={} dual-mode-iters={}",
+                 cfg.policy.k_min, cfg.policy.k_max, cfg.policy.window,
+                 hist.join(" "), m.mode_switches, m.dual_mode_iters);
     }
     if args.flag("show") {
         for (i, out) in r.outputs.iter().take(3).enumerate() {
@@ -295,15 +375,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pard::coordinator::engines::build_engine(&rt, &cfg)?;
     engine.warmup()?;
     // --virtual-tick S: deterministic virtual clock (S seconds per
-    // decode iteration) instead of the wall clock.
-    let stats = match args.opts.get("virtual-tick") {
-        Some(v) => {
+    // decode iteration); --virtual-cost PASS,COL: work-costed virtual
+    // clock (seconds per forward-pass unit, per token-column unit).
+    anyhow::ensure!(
+        args.opts.get("virtual-tick").is_none()
+            || args.opts.get("virtual-cost").is_none(),
+        "--virtual-tick and --virtual-cost are mutually exclusive"
+    );
+    let stats = match (args.opts.get("virtual-tick"),
+                       args.opts.get("virtual-cost")) {
+        (Some(v), _) => {
             let tick: f64 = v.parse().map_err(|_| {
                 anyhow::anyhow!("--virtual-tick wants seconds, got `{v}`")
             })?;
             serve_trace_virtual(engine.as_mut(), &trace, tick)?
         }
-        None => serve_trace(engine.as_mut(), &trace)?,
+        (_, Some(v)) => {
+            let bad = || {
+                anyhow::anyhow!("--virtual-cost wants PASS_S,COL_S \
+                                 seconds, got `{v}`")
+            };
+            let (p, c) = v.split_once(',').ok_or_else(bad)?;
+            let pass_s: f64 = p.trim().parse().map_err(|_| bad())?;
+            let col_s: f64 = c.trim().parse().map_err(|_| bad())?;
+            serve_trace_virtual_costed(engine.as_mut(), &trace, pass_s,
+                                       col_s)?
+        }
+        (None, None) => serve_trace(engine.as_mut(), &trace)?,
     };
     println!("engine={} batch={} completed={} wall={:.2}s",
              cfg.kind.label(), cfg.batch, stats.completed, stats.wall_s);
@@ -316,6 +414,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = engine.metrics();
     println!("kv: peak blocks={}  admission stalls={}",
              m.kv_peak_blocks, stats.admission_stalls);
+    if cfg.policy.adaptive {
+        println!("policy: adaptive  mode-switches={}  \
+                  dual-mode-iters={}",
+                 m.mode_switches, m.dual_mode_iters);
+    }
     if cfg.prefix_cache {
         println!("prefix cache: hit tokens={}  peak shared blocks={}  \
                   cow copies={}",

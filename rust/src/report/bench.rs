@@ -23,6 +23,7 @@ use anyhow::Result;
 
 use crate::coordinator::engines::{EngineConfig, EngineKind};
 use crate::coordinator::evaluate::{run_eval, EvalResult};
+use crate::coordinator::policy::PolicyCfg;
 use crate::coordinator::router::default_draft;
 use crate::substrate::json::Json;
 use crate::Runtime;
@@ -122,6 +123,7 @@ fn sweep(rt: &Runtime, o: &BenchOpts) -> Result<Vec<RunRow>> {
                     kv_blocks: None,
                     prefix_cache: false,
                     sampling: None,
+                    policy: PolicyCfg::default(),
                 };
                 let prompts = rt.prompts(&o.task)?.take(o.n_prompts);
                 let r = run_eval(rt, &cfg, &prompts, o.max_new, &o.task)?;
@@ -178,6 +180,19 @@ fn row_json(row: &RunRow, base_tps: f64) -> Json {
             ("prefix_hit_tokens", num(m.prefix_hit_tokens as f64)),
             ("blocks_shared", num(m.kv_blocks_shared as f64)),
             ("cow_copies", num(m.cow_copies as f64)),
+        ])),
+        // Speculation-policy record (DESIGN.md §9).  The sweep pins
+        // every engine to the fixed policy, so `mode` is "fixed" and
+        // `k_hist` collapses to one bucket — the fields exist so the
+        // schema already fits adaptive runs.  Additive v1 fields.
+        ("policy", obj(vec![
+            ("mode", Json::Str("fixed".to_string())),
+            ("k_hist", Json::Arr(
+                m.k_hist.iter().map(|&n| num(n as f64)).collect())),
+            ("mode_switches", num(m.mode_switches as f64)),
+            ("dual_mode_iters", num(m.dual_mode_iters as f64)),
+            ("work_pass_units", num(m.work_pass_units)),
+            ("work_col_units", num(m.work_col_units)),
         ])),
         ("draft_s", num(m.draft_s)),
         ("verify_s", num(m.verify_s)),
@@ -238,6 +253,7 @@ fn serving_prefix_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
             kv_blocks: Some(kv_blocks),
             prefix_cache: share,
             sampling: None,
+            policy: PolicyCfg::default(),
         };
         let mut engine = build_engine(rt, &cfg)?;
         engine.warmup()?;
@@ -262,6 +278,74 @@ fn serving_prefix_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
         ("n_requests", num(n_req as f64)),
         ("shared_prefixes", num(n_prefixes as f64)),
         ("prefix_len", num(prefix_len as f64)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
+/// Adaptive-policy serving rows (`policy_mixed` in the report): a
+/// mixed easy/hard trace served through PARD on the WORK-COSTED
+/// virtual clock (DESIGN.md §9) under fixed K=2, fixed K=16, and the
+/// adaptive controller.  Reported, not gated — the strict-win gate
+/// lives in `tests/adaptive_policy.rs` (and its hostsim mirror) on a
+/// scripted-acceptance engine where the win is provable; here real
+/// accept dynamics decide, and the three rows document them.
+fn policy_mixed_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
+    use crate::coordinator::batcher::serve_trace_virtual_costed;
+    use crate::coordinator::engines::build_engine;
+    use crate::substrate::workload::{build_mixed_trace, Arrival};
+    let (n_req, batch, max_new) = (8usize, 4usize, o.max_new.min(16));
+    let (pass_s, col_s) = (1.0, 0.05);
+    let prompts = rt.prompts(&o.task)?.prompts;
+    let trace = build_mixed_trace(&prompts, n_req, Arrival::Closed,
+                                  max_new, o.seed);
+    let adaptive = PolicyCfg { adaptive: true, k_min: 1, k_max: 16,
+                               window: 4, dual_mode_occupancy: None };
+    let variants: [(&str, usize, PolicyCfg); 3] = [
+        ("fixed-k2", 2, PolicyCfg::default()),
+        ("fixed-k16", 16, PolicyCfg::default()),
+        ("adaptive", 4, adaptive),
+    ];
+    let mut rows = Vec::new();
+    for (label, k, policy) in variants {
+        let cfg = EngineConfig {
+            kind: EngineKind::Pard,
+            target: o.target.clone(),
+            draft: default_draft(&rt.manifest, EngineKind::Pard,
+                                 &o.target)?,
+            batch,
+            k,
+            max_new,
+            shared_mask: true,
+            kv_blocks: None,
+            prefix_cache: false,
+            sampling: None,
+            policy,
+        };
+        let mut engine = build_engine(rt, &cfg)?;
+        engine.warmup()?;
+        let stats = serve_trace_virtual_costed(engine.as_mut(), &trace,
+                                               pass_s, col_s)?;
+        let m = engine.metrics();
+        rows.push(obj(vec![
+            ("policy", Json::Str(label.to_string())),
+            ("k", num(k as f64)),
+            ("completed", num(stats.completed as f64)),
+            ("generated", num(stats.generated as f64)),
+            ("tokens_per_s", num(stats.throughput_tps)),
+            ("virtual_s", num(stats.wall_s)),
+            ("k_hist", Json::Arr(
+                m.k_hist.iter().map(|&n| num(n as f64)).collect())),
+            ("mode_switches", num(m.mode_switches as f64)),
+            ("dual_mode_iters", num(m.dual_mode_iters as f64)),
+        ]));
+    }
+    Ok(obj(vec![
+        ("engine", Json::Str("PARD".to_string())),
+        ("batch", num(batch as f64)),
+        ("n_requests", num(n_req as f64)),
+        ("max_new", num(max_new as f64)),
+        ("pass_s", num(pass_s)),
+        ("col_s", num(col_s)),
         ("rows", Json::Arr(rows)),
     ]))
 }
@@ -298,6 +382,7 @@ pub fn hotpath_report(opts: &BenchOpts) -> Result<Json> {
         ])),
         ("runs", rows_json(&host_rows)),
         ("serving_prefix", serving_prefix_json(&host_rt, opts)?),
+        ("policy_mixed", policy_mixed_json(&host_rt, opts)?),
     ];
 
     if opts.oracle {

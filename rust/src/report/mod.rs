@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::coordinator::engines::{EngineConfig, EngineKind};
 use crate::coordinator::evaluate::{run_eval, EvalResult};
+use crate::coordinator::policy::PolicyCfg;
 use crate::coordinator::router::default_draft;
 use crate::runtime::Backend;
 use crate::substrate::bench::Table;
@@ -60,6 +61,7 @@ pub fn cell(rt: &Runtime, kind: EngineKind, target: &str, task: &str,
         kv_blocks: None,
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     };
     let prompts = rt.prompts(task)?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, task)
@@ -432,6 +434,7 @@ fn pard_cell(rt: &Runtime, variant: &str, target: &str, k: usize,
         kv_blocks: None,
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     };
     let prompts = rt.prompts("math")?.take(scale.n_prompts);
     run_eval(rt, &cfg, &prompts, scale.max_new, "math")

@@ -106,6 +106,65 @@ pub fn build_shared_prefix_trace(prompts: &[Prompt], n: usize,
     Trace { requests }
 }
 
+/// [`build_trace`] over a mixed easy/hard workload for the adaptive
+/// speculation policy experiments (DESIGN.md §9): even requests are
+/// "easy" (BOS followed by one token repeated — a maximally
+/// predictable continuation, where a draft accepts nearly everything
+/// and big K pays), odd requests are "hard" (BOS followed by a cycle
+/// of pairwise-adjacent-distinct tokens — where drafts miss and big K
+/// burns verify columns).  A fixed K is wrong for one half or the
+/// other; a per-sequence adaptive K can be right for both, which is
+/// exactly the contrast the strict-win gate measures.  Tokens are
+/// drawn from the alphabet the base prompts already use, so every
+/// request stays a valid model input; the trace is a pure function of
+/// `seed`.
+pub fn build_mixed_trace(prompts: &[Prompt], n: usize, arrival: Arrival,
+                         max_new: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x4d49_5845_44); // "MIXED"
+    let bos = prompts[0].prompt[0];
+    let alphabet: Vec<i32> = prompts
+        .iter()
+        .flat_map(|p| p.prompt[1..].iter().copied())
+        .collect();
+    let mut distinct = alphabet.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    assert!(distinct.len() >= 2,
+            "mixed traces need at least two distinct prompt tokens");
+    let mut t = 0.0f64;
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        if let Arrival::Poisson { rate } = arrival {
+            t += rng.exp(rate);
+        }
+        let len = 4 + rng.below(6); // prompt body of 4..=9 tokens
+        let mut prompt = Vec::with_capacity(len + 1);
+        prompt.push(bos);
+        let task = if i % 2 == 0 {
+            // easy: one token, repeated
+            let tok = alphabet[rng.below(alphabet.len())];
+            prompt.extend(std::iter::repeat(tok).take(len));
+            "easy"
+        } else {
+            // hard: cycle through the distinct alphabet so adjacent
+            // tokens always differ
+            let start = rng.below(distinct.len());
+            prompt.extend(
+                (0..len).map(|j| distinct[(start + j) % distinct.len()]));
+            "hard"
+        };
+        requests.push(Request {
+            id: i as u64,
+            arrival_s: t,
+            prompt,
+            reference: Vec::new(),
+            task: task.to_string(),
+            max_new,
+        });
+    }
+    Trace { requests }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +220,34 @@ mod tests {
         for (a, b) in t.requests.iter().zip(&u.requests) {
             assert_eq!(a.prompt, b.prompt);
         }
+    }
+
+    #[test]
+    fn mixed_trace_alternates_easy_and_hard() {
+        let t = build_mixed_trace(&prompts(), 8, Arrival::Closed, 16, 3);
+        assert_eq!(t.requests.len(), 8);
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.prompt[0], 0, "mixed trace keeps the BOS head");
+            assert!(r.prompt.len() >= 5 && r.prompt.len() <= 10);
+            let body = &r.prompt[1..];
+            if i % 2 == 0 {
+                assert_eq!(r.task, "easy");
+                assert!(body.windows(2).all(|w| w[0] == w[1]));
+            } else {
+                assert_eq!(r.task, "hard");
+                assert!(body.windows(2).all(|w| w[0] != w[1]));
+            }
+        }
+        // deterministic in the seed
+        let u = build_mixed_trace(&prompts(), 8, Arrival::Closed, 16, 3);
+        for (a, b) in t.requests.iter().zip(&u.requests) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.task, b.task);
+        }
+        // a different seed moves the bodies
+        let v = build_mixed_trace(&prompts(), 8, Arrival::Closed, 16, 4);
+        assert!(t.requests.iter().zip(&v.requests)
+                    .any(|(a, b)| a.prompt != b.prompt));
     }
 
     #[test]

@@ -33,8 +33,8 @@ fn schema_v1_fields_are_stable() {
                Some(BENCH_SCHEMA));
     assert_eq!(report.get("backend").unwrap().as_str(), Some("host"));
     for key in ["threads", "seed", "task", "target", "n_prompts",
-                "max_new", "sweep", "runs", "serving_prefix", "oracle",
-                "host_vs_reference"] {
+                "max_new", "sweep", "runs", "serving_prefix",
+                "policy_mixed", "oracle", "host_vs_reference"] {
         assert!(report.get(key).is_some(), "missing top-level `{key}`");
     }
     assert!(report.get("threads").unwrap().as_f64().unwrap() >= 1.0,
@@ -51,12 +51,27 @@ fn schema_v1_fields_are_stable() {
     for run in runs {
         for key in ["engine", "k", "batch", "tokens_per_s",
                     "tokens_per_iter", "mean_accept_len", "fwd_s",
-                    "commit_s", "fwd_ops", "kv", "draft_s", "verify_s",
-                    "prefill_s", "wall_s", "generated", "iterations",
-                    "speedup_vs_ar_plus"] {
+                    "commit_s", "fwd_ops", "kv", "policy", "draft_s",
+                    "verify_s", "prefill_s", "wall_s", "generated",
+                    "iterations", "speedup_vs_ar_plus"] {
             assert!(run.get(key).is_some(),
                     "run missing field `{key}`");
         }
+        // speculation-policy record (additive v1 fields): the sweep
+        // pins fixed mode, so no dual-mode activity can appear
+        let pol = run.get("policy").unwrap();
+        for key in ["mode", "k_hist", "mode_switches",
+                    "dual_mode_iters", "work_pass_units",
+                    "work_col_units"] {
+            assert!(pol.get(key).is_some(),
+                    "policy missing field `{key}`");
+        }
+        assert_eq!(pol.get("mode").unwrap().as_str(), Some("fixed"));
+        assert_eq!(pol.get("mode_switches").unwrap().as_f64(),
+                   Some(0.0), "fixed sweeps never switch modes");
+        assert!(pol.get("work_pass_units").unwrap().as_f64().unwrap()
+                > 0.0,
+                "every engine must charge forward-pass work units");
         assert!(run.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0,
                 "every cell must have measured throughput");
         assert!(run.get("generated").unwrap().as_f64().unwrap() > 0.0);
@@ -128,6 +143,38 @@ fn serving_prefix_section_shows_the_hit_rate_win() {
             "the shared-prefix trace must hit the cache");
     assert!(f(on, "peak_occupancy") >= f(off, "peak_occupancy"),
             "sharing must not reduce concurrency");
+}
+
+#[test]
+fn policy_mixed_section_reports_all_three_policies() {
+    let report = smoke_report();
+    let pm = report.get("policy_mixed").unwrap();
+    for key in ["engine", "batch", "n_requests", "max_new", "pass_s",
+                "col_s", "rows"] {
+        assert!(pm.get(key).is_some(),
+                "policy_mixed missing field `{key}`");
+    }
+    let rows = pm.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 3, "fixed-k2, fixed-k16, adaptive");
+    let labels: Vec<&str> = rows
+        .iter()
+        .map(|r| r.get("policy").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(labels, ["fixed-k2", "fixed-k16", "adaptive"]);
+    let f = |r: &Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+    let completed = f(&rows[0], "completed");
+    for r in rows {
+        for key in ["policy", "k", "completed", "generated",
+                    "tokens_per_s", "virtual_s", "k_hist",
+                    "mode_switches", "dual_mode_iters"] {
+            assert!(r.get(key).is_some(),
+                    "policy_mixed row missing field `{key}`");
+        }
+        assert!(f(r, "tokens_per_s") > 0.0,
+                "costed-clock throughput must be measured");
+        assert_eq!(f(r, "completed"), completed,
+                   "every policy must serve the whole mixed trace");
+    }
 }
 
 #[test]

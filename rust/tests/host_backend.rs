@@ -7,6 +7,7 @@
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
+use pard::coordinator::policy::PolicyCfg;
 use pard::coordinator::router::default_draft;
 use pard::runtime::Backend;
 use pard::Runtime;
@@ -24,6 +25,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         kv_blocks: None,
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     }
 }
 

@@ -12,6 +12,7 @@ use std::path::Path;
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
+use pard::coordinator::policy::PolicyCfg;
 use pard::coordinator::router::default_draft;
 use pard::Runtime;
 
@@ -37,6 +38,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         kv_blocks: None,
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     }
 }
 

@@ -10,6 +10,7 @@
 use pard::coordinator::batcher::serve_trace_virtual;
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
+use pard::coordinator::policy::PolicyCfg;
 use pard::coordinator::router::default_draft;
 use pard::runtime::{Backend, KvStage, KV_BLOCK};
 use pard::substrate::workload::{build_trace, Arrival};
@@ -28,6 +29,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         kv_blocks,
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     }
 }
 
@@ -116,6 +118,7 @@ fn paged_pool_admits_more_than_dense_budget() {
         kv_blocks: Some(kv_blocks),
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     };
     let mut e = build_engine(&rt, &c).unwrap();
     e.warmup().unwrap();
@@ -154,6 +157,7 @@ fn engine_pool_backpressure_serializes_and_completes() {
         kv_blocks: Some(3),
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     };
     let mut e = build_engine(&rt, &c).unwrap();
     e.warmup().unwrap();

@@ -11,6 +11,7 @@ use pard::coordinator::batcher::serve_trace_virtual;
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
 use pard::coordinator::metrics::Metrics;
+use pard::coordinator::policy::PolicyCfg;
 use pard::coordinator::router::default_draft;
 use pard::substrate::workload::{build_shared_prefix_trace, Arrival};
 use pard::Runtime;
@@ -33,6 +34,7 @@ fn cfg(rt: &Runtime, knobs: Knobs) -> EngineConfig {
         kv_blocks,
         prefix_cache: share,
         sampling: None,
+        policy: PolicyCfg::default(),
     }
 }
 

@@ -22,6 +22,7 @@
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind, SamplingCfg};
+use pard::coordinator::policy::PolicyCfg;
 use pard::coordinator::router::default_draft;
 use pard::Runtime;
 
@@ -42,6 +43,7 @@ fn cfg(rt: &Runtime, kind: EngineKind, target: &str, k: usize,
         kv_blocks: None,
         prefix_cache: false,
         sampling,
+        policy: PolicyCfg::default(),
     }
 }
 

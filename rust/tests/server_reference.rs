@@ -4,6 +4,7 @@
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
+use pard::coordinator::policy::PolicyCfg;
 use pard::runtime::RuntimeSpec;
 use pard::server::{GenRequest, Server};
 use pard::Runtime;
@@ -20,6 +21,7 @@ fn cfg() -> EngineConfig {
         kv_blocks: None,
         prefix_cache: false,
         sampling: None,
+        policy: PolicyCfg::default(),
     }
 }
 

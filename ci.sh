@@ -25,8 +25,12 @@
 # adaptive speculation-policy gates of coordinator/policy.rs — the
 # integer K rule, windowed accounting, and the strict-win/dual-mode
 # replays from rust/tests/adaptive_policy.rs on the work-costed
-# virtual clock) must pass — auto-skipped only when python3 is not
-# installed at all.
+# virtual clock — plus the fault-plan mirror of substrate/fault.rs:
+# the seeded chaos schedule replays bit-for-bit, the scripted chaos
+# serve keeps survivors bit-identical with counters matching the plan
+# replay exactly, and budget-0 deadlines expire everything typed,
+# mirroring rust/tests/fault_injection.rs) must pass — auto-skipped
+# only when python3 is not installed at all.
 #
 # Usage: ./ci.sh            # build + test + stub typecheck + doc gate
 #                           # + whole-crate fmt/clippy hard gates

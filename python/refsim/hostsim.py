@@ -1031,6 +1031,338 @@ def check_policy_dual_mode():
           f"2 switches, tokens preserved ({sd['generated']})")
 
 
+# ---------------------------------------------------------------------------
+# Fault-plan mirror (substrate/fault.rs + batcher.rs chaos paths,
+# DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# Mirrors the seeded fault schedule and the serving loop's recovery
+# semantics: one decorrelated rng stream per spec, exactly one
+# Bernoulli draw per spec per iteration-that-steps-a-live-batch, and
+# the fault_prologue paths (worker panic caught + clean retry, bounded
+# target retries then a single victim row failed, draft faults
+# degrading to K=0 under greedy / holding under sampling).  The gate is
+# the same as rust/tests/fault_injection.rs: non-faulted requests'
+# token streams are bit-identical to a fault-free serve, and every
+# robustness counter is predicted EXACTLY by replaying a clone of the
+# plan — the schedule is a pure function of (specs, draw index).
+
+FAULT_STREAMS = {"draft": 1, "target": 2, "pool": 3, "worker": 4}
+FAULT_MAX_TARGET_RETRIES = 2  # mirrors fault.rs MAX_TARGET_RETRIES
+
+# scripted chaos-engine constants (arbitrary but fixed work prices)
+FI_DRAFT_UNITS = 1
+FI_TARGET_UNITS = 8
+FI_K = 4
+FI_PASS_S = 1.0
+FI_COL_S = 0.05
+
+
+def rng_stream(seed, stream):
+    """Mirror of rng.rs Rng::new_stream: both words pass through
+    splitmix64 before seeding the xoshiro state, so adjacent stream
+    ids decorrelate."""
+    _, base = sim.splitmix64(seed & sim.M)
+    y = (base ^ (stream * 0x9E3779B97F4A7C15)) & sim.M
+    r = sim.Rng(0)
+    s = []
+    for _ in range(4):
+        y, z = sim.splitmix64(y)
+        s.append(z)
+    r.s = s
+    return r
+
+
+class FaultPlanMirror:
+    """Line-for-line mirror of fault.rs FaultPlan.  `specs` is a list
+    of (kind, rate, seed); scripted one-shots fire by draw index, with
+    scripted target faults persistent (fails = retries + 1, victim =
+    iteration)."""
+
+    def __init__(self, specs):
+        self.specs = [(k, r, rng_stream(s, FAULT_STREAMS[k]))
+                      for k, r, s in specs]
+        self.scripted = []
+        self.iteration = 0
+        self.injected = 0
+
+    def script(self, kind, iteration):
+        self.scripted.append((kind, iteration))
+
+    def begin_iteration(self):
+        fs = {"injected": 0, "draft": False, "target": None,
+              "pool": False, "worker": False}
+        for kind, rate, rng in self.specs:
+            if not rng.f64() < rate:  # Rng::chance
+                continue
+            fs["injected"] += 1
+            if kind == "draft":
+                fs["draft"] = True
+            elif kind == "target":
+                fails = 1 + rng.below(3)
+                victim = rng.next_u64()
+                if fs["target"] is None:  # first firing wins
+                    fs["target"] = (fails, victim)
+            elif kind == "pool":
+                fs["pool"] = True
+            else:
+                fs["worker"] = True
+        it = self.iteration
+        for kind, when in self.scripted:
+            if when != it:
+                continue
+            fs["injected"] += 1
+            if kind == "draft":
+                fs["draft"] = True
+            elif kind == "target":
+                fs["target"] = (FAULT_MAX_TARGET_RETRIES + 1, it)
+            elif kind == "pool":
+                fs["pool"] = True
+            else:
+                fs["worker"] = True
+        self.iteration += 1
+        self.injected += fs["injected"]
+        return fs
+
+
+FI_STORM_SPECS = [("draft", 0.25, 11), ("target", 0.15, 13),
+                  ("pool", 0.10, 17)]
+
+
+def fi_storm_plan():
+    """The rust/tests/fault_injection.rs storm: every fault kind
+    rate-driven plus one scripted worker panic at draw 5."""
+    plan = FaultPlanMirror(FI_STORM_SPECS)
+    plan.script("worker", 5)
+    return plan
+
+
+def fi_stream(ri, n):
+    """Request ri's scripted token stream — a pure function of the
+    request, which is exactly the property chaos bit-identity rides
+    on (real engines get this from per-request prompts and
+    per-admission-ordinal sampling streams)."""
+    return [(ri * 97 + 11 * j) % 50_000 for j in range(n)]
+
+
+def fi_expected(plan, draws):
+    """Mirror of the Rust test's replay(): predict every robustness
+    counter from a fresh plan by walking `draws` fault sets through
+    the documented fault_prologue semantics."""
+    e = {"faults_injected": 0, "draft_fallbacks": 0, "row_retries": 0,
+         "rows_failed": 0, "pool_rebuilds": 0}
+    for _ in range(draws):
+        fs = plan.begin_iteration()
+        e["faults_injected"] += fs["injected"]
+        if fs["worker"]:
+            # prologue panics before any other fault takes effect; the
+            # armed set is consumed, so the one retry runs clean
+            e["pool_rebuilds"] += 1
+            continue
+        if fs["target"] is not None:
+            fails, _ = fs["target"]
+            if fails > FAULT_MAX_TARGET_RETRIES:
+                e["row_retries"] += FAULT_MAX_TARGET_RETRIES
+                e["rows_failed"] += 1
+                continue  # Skip: co-fired draft fault never lands
+            e["row_retries"] += fails
+        if fs["draft"]:
+            e["draft_fallbacks"] += 1
+    return e
+
+
+def fi_serve_chaos(n_req, max_new, batch, plan, sampled,
+                   deadline_budget=None):
+    """Mirror of batcher.rs serve_trace_impl's chaos paths over a
+    scripted speculation engine on the work-costed clock: deadline
+    sweep -> harvest -> fault draw (only when rows survived harvest,
+    so draws stay 1:1 with injected steps) -> admission (paused one
+    iteration by a pool fault) -> step under the fault_prologue
+    recovery semantics.  Closed arrivals at t=0; a clean iteration
+    commits K+1 tokens per live row."""
+    queue = list(range(n_req))
+    slots = [None] * batch      # request index per busy slot
+    committed = [0] * batch
+    failed_at = [False] * batch
+    outcomes = [None] * n_req
+    m = {"faults_injected": 0, "draft_fallbacks": 0, "row_retries": 0,
+         "rows_failed": 0, "pool_rebuilds": 0, "deadline_exceeded": 0}
+    now, wp, wc = 0.0, 0, 0
+    completed = failed = expired = 0
+    while True:
+        # deadline sweep (strict: now > deadline)
+        if deadline_budget is not None and now > deadline_budget:
+            for ri in queue:
+                outcomes[ri] = ("deadline",)
+                expired += 1
+                m["deadline_exceeded"] += 1
+            queue = []
+            for slot in range(batch):
+                # done rows (failed or finished) harvest below instead
+                if slots[slot] is not None and not failed_at[slot] \
+                        and committed[slot] < max_new:
+                    outcomes[slots[slot]] = ("deadline",)
+                    expired += 1
+                    m["deadline_exceeded"] += 1
+                    slots[slot] = None
+        # harvest finished rows (failed rows were marked done by the
+        # prologue and reap here, exactly like the Rust batcher)
+        for slot in range(batch):
+            if slots[slot] is None:
+                continue
+            ri = slots[slot]
+            if failed_at[slot]:
+                outcomes[ri] = ("failed",)
+                failed += 1
+                failed_at[slot] = False
+                slots[slot] = None
+            elif committed[slot] >= max_new:
+                outcomes[ri] = ("completed", fi_stream(ri, max_new))
+                completed += 1
+                slots[slot] = None
+        # fault draw: only when surviving rows guarantee a step below
+        live_before = sum(s is not None for s in slots)
+        if plan is not None and live_before > 0:
+            fs = plan.begin_iteration()
+            m["faults_injected"] += fs["injected"]
+        else:
+            fs = {"injected": 0, "draft": False, "target": None,
+                  "pool": False, "worker": False}
+        # admission: FCFS refill, paused for one iteration by a
+        # transient pool-exhaustion fault
+        if not fs["pool"]:
+            for slot in range(batch):
+                if slots[slot] is None and queue:
+                    slots[slot] = queue.pop(0)
+                    committed[slot] = 0
+        live = [s for s in range(batch) if slots[s] is not None]
+        if not live:
+            if not queue:
+                break
+            continue  # pool fault emptied admission; redraw next pass
+        # step: fault_prologue semantics, then scripted commits
+        wp0, wc0 = wp, wc
+        if fs["worker"]:
+            m["pool_rebuilds"] += 1
+            fs = {"injected": 0, "draft": False, "target": None,
+                  "pool": False, "worker": False}  # consumed; retry clean
+        skip = False
+        force_k0 = False
+        if fs["target"] is not None:
+            fails, victim = fs["target"]
+            if fails > FAULT_MAX_TARGET_RETRIES:
+                wp += (FAULT_MAX_TARGET_RETRIES + 1) * FI_TARGET_UNITS
+                m["row_retries"] += FAULT_MAX_TARGET_RETRIES
+                m["rows_failed"] += 1
+                failed_at[live[victim % len(live)]] = True
+                skip = True
+            else:
+                wp += fails * FI_TARGET_UNITS
+                m["row_retries"] += fails
+        if not skip and fs["draft"]:
+            m["draft_fallbacks"] += 1
+            wp += FI_DRAFT_UNITS  # the lost draft pass
+            if sampled:
+                skip = True  # hold: commit nothing, consume no rng
+            else:
+                force_k0 = True  # lossless AR+ commit
+        if not skip:
+            k = 0 if force_k0 else FI_K
+            if k > 0:
+                wp += FI_DRAFT_UNITS
+                wc += FI_DRAFT_UNITS * k * len(live)
+            wp += FI_TARGET_UNITS
+            wc += FI_TARGET_UNITS * (k + 1) * len(live)
+            for slot in live:
+                committed[slot] = min(committed[slot] + k + 1, max_new)
+        now += FI_PASS_S * (wp - wp0) + FI_COL_S * (wc - wc0)
+    return {"completed": completed, "failed": failed,
+            "expired": expired, "outcomes": outcomes, "wall_s": now,
+            "metrics": m,
+            "draws": plan.iteration if plan is not None else 0}
+
+
+def check_fault_plan_mirror():
+    """fault.rs unit semantics: clone-replay is bit-exact, rate-0/1
+    corners, and scripted one-shots fire exactly once (with persistent
+    target shape)."""
+    a = FaultPlanMirror([("draft", 0.3, 7), ("target", 0.2, 9),
+                         ("pool", 0.1, 5), ("worker", 0.05, 3)])
+    b = FaultPlanMirror([("draft", 0.3, 7), ("target", 0.2, 9),
+                         ("pool", 0.1, 5), ("worker", 0.05, 3)])
+    for _ in range(256):
+        assert a.begin_iteration() == b.begin_iteration(), \
+            "fault schedule must replay bit-for-bit"
+    assert a.injected == b.injected and a.injected > 0
+    p = FaultPlanMirror([("draft", 0.0, 1), ("pool", 1.0, 2)])
+    for _ in range(64):
+        fs = p.begin_iteration()
+        assert not fs["draft"] and fs["pool"] and fs["injected"] == 1
+    p = FaultPlanMirror([])
+    p.script("worker", 3)
+    p.script("target", 5)
+    for it in range(8):
+        fs = p.begin_iteration()
+        assert fs["worker"] == (it == 3)
+        if it == 5:
+            assert fs["target"] == (FAULT_MAX_TARGET_RETRIES + 1, 5), \
+                "scripted target faults are persistent"
+        else:
+            assert fs["target"] is None
+    assert p.injected == 2 and p.iteration == 8
+    print("  fault plan: replay bit-exact, rate corners, scripted "
+          "one-shots")
+
+
+def check_chaos_serve(sampled):
+    """The fault_injection.rs gate over the scripted engine: the storm
+    serve survives, non-faulted requests are bit-identical to the
+    fault-free run, failed rows end typed, and every counter equals
+    the plan replay's prediction."""
+    n_req, max_new, batch = 16, 16, 4
+    calm = fi_serve_chaos(n_req, max_new, batch, None, sampled)
+    assert calm["completed"] == n_req and calm["failed"] == 0
+    storm = fi_serve_chaos(n_req, max_new, batch, fi_storm_plan(),
+                           sampled)
+    assert storm["completed"] + storm["failed"] == n_req, \
+        "every request must end in exactly one typed outcome"
+    n_failed = 0
+    for ri in range(n_req):
+        s, c = storm["outcomes"][ri], calm["outcomes"][ri]
+        if s[0] == "failed":
+            n_failed += 1
+        else:
+            assert s == c, \
+                f"request {ri}: non-faulted stream diverged"
+    draws = storm["draws"]
+    assert draws > 5, "the serve must reach the scripted panic"
+    exp = fi_expected(fi_storm_plan(), draws)
+    got = {k: storm["metrics"][k] for k in exp}
+    assert got == exp, f"counters {got} != plan replay {exp}"
+    assert exp["pool_rebuilds"] == 1, "exactly the scripted panic"
+    assert n_failed == exp["rows_failed"]
+    assert exp["draft_fallbacks"] > 0, "a 25% draft rate must fire"
+    again = fi_serve_chaos(n_req, max_new, batch, fi_storm_plan(),
+                           sampled)
+    assert again["outcomes"] == storm["outcomes"] \
+        and again["wall_s"] == storm["wall_s"], \
+        "chaos serve must replay bit-for-bit"
+    mode = "sampled(hold)" if sampled else "greedy(K=0)"
+    print(f"  chaos serve [{mode}]: {storm['completed']} ok / "
+          f"{storm['failed']} failed over {draws} draws, counters "
+          f"exact, survivors bit-identical")
+
+
+def check_deadline_sweep():
+    """Budget-0 deadlines: everything expires typed (queued and
+    in-flight), nothing completes, and the counters are per-event."""
+    r = fi_serve_chaos(16, 16, 4, None, False, deadline_budget=0.0)
+    assert r["expired"] == 16 and r["completed"] == 0
+    assert all(o == ("deadline",) for o in r["outcomes"])
+    assert r["metrics"]["deadline_exceeded"] == 16
+    print("  deadline sweep: budget 0 expires all 16 requests typed")
+
+
 def main(seed=7):
     for name in ["draft-s", "target-m", "target-l"]:
         print(f"{name}:")
@@ -1052,6 +1384,11 @@ def main(seed=7):
     check_policy_windowing()
     check_policy_strict_win()
     check_policy_dual_mode()
+    print("faults:")
+    check_fault_plan_mirror()
+    check_chaos_serve(sampled=False)
+    check_chaos_serve(sampled=True)
+    check_deadline_sweep()
     print("ALL HOST-PATH EQUIVALENCE CHECKS PASSED")
 
 

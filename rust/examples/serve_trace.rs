@@ -1,0 +1,76 @@
+//! Typed request lifecycle demo (DESIGN.md §10): serve normal traffic
+//! through the engine-thread server on the artifact-free reference
+//! backend, alongside a cancelled request and one whose deadline has
+//! already passed — every caller gets exactly one typed `GenOutcome`.
+//!
+//! Run with: `cargo run --example serve_trace`
+
+use std::time::Duration;
+
+use anyhow::Result;
+use pard::coordinator::engines::{EngineConfig, EngineKind};
+use pard::coordinator::policy::PolicyCfg;
+use pard::runtime::RuntimeSpec;
+use pard::server::{GenOutcome, GenRequest, Server};
+use pard::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::reference(7);
+    let prompt = rt.prompts("code")?.prompts[0].prompt.clone();
+    let cfg = EngineConfig {
+        kind: EngineKind::Pard,
+        target: "target-m".into(),
+        draft: Some("pard-main".into()),
+        // batch 1 keeps the demo deterministic: requests 1..3 are
+        // still queued while request 0 decodes, so the cancel and the
+        // expired deadline land before their rows ever start.
+        batch: 1,
+        k: 4,
+        max_new: 12,
+        shared_mask: true,
+        kv_blocks: None,
+        prefix_cache: false,
+        sampling: None,
+        policy: PolicyCfg::default(),
+    };
+    let mut server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, cfg)?;
+
+    // Normal traffic…
+    let a = server.submit(GenRequest::new(0, prompt.clone(), 12))?;
+    let b = server.submit(GenRequest::new(1, prompt.clone(), 12))?;
+    // …a request we immediately regret…
+    let c = server.submit(GenRequest::new(2, prompt.clone(), 12))?;
+    c.cancel();
+    // …and one whose completion budget is already spent.
+    let mut late = GenRequest::new(3, prompt, 12);
+    late.deadline = Some(Duration::ZERO);
+    let d = server.submit(late)?;
+
+    for h in [a, b, c, d] {
+        match h.recv()? {
+            GenOutcome::Completed(r) => {
+                println!("request {}: completed — {} tokens in {:.3}s",
+                         r.id, r.tokens.len(), r.latency_s);
+            }
+            GenOutcome::Rejected { id, reason } => {
+                println!("request {id}: rejected — {reason}");
+            }
+            GenOutcome::Cancelled { id } => {
+                println!("request {id}: cancelled");
+            }
+            GenOutcome::DeadlineExceeded { id } => {
+                println!("request {id}: deadline exceeded");
+            }
+            GenOutcome::Failed { id, reason } => {
+                println!("request {id}: failed — {reason}");
+            }
+        }
+    }
+
+    let m = server.metrics()?;
+    println!("metrics: cancelled={} deadline_exceeded={}",
+             m.cancelled, m.deadline_exceeded);
+    server.shutdown()?;
+    Ok(())
+}

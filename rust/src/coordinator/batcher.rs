@@ -27,16 +27,38 @@
 //! what the adaptive-policy win gates measure (DESIGN.md §9).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::engines::Engine;
+use crate::substrate::fault::{FaultPlan, FaultSet, MAX_TARGET_RETRIES};
 use crate::substrate::workload::Trace;
+
+/// How one trace request ended (DESIGN.md §10).  `ServeStats.outcomes`
+/// holds one per request, in trace order, so chaos tests can compare
+/// token streams request-by-request against a fault-free run.
+#[derive(Debug, Clone)]
+pub enum RequestOutcome {
+    Completed { tokens: Vec<i32>, latency_s: f64 },
+    /// A persistent target-pass incident failed this row; its KV
+    /// blocks were released at harvest.
+    Failed { reason: String },
+    /// The request's `deadline_s` passed (queued or in flight) — the
+    /// slot's blocks were released immediately.
+    DeadlineExceeded,
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub completed: usize,
+    /// Requests failed by persistent target incidents.
+    pub failed: usize,
+    /// Requests expired by their deadline.
+    pub expired: usize,
+    /// Per-request outcome, in trace order.
+    pub outcomes: Vec<RequestOutcome>,
     pub wall_s: f64,
     /// Tokens generated within THIS serving window (not engine
     /// lifetime — the engine may have served earlier traces).
@@ -116,7 +138,19 @@ struct InFlight {
 /// refill between iterations, gated on free KV blocks.
 pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
                    -> Result<ServeStats> {
-    serve_trace_impl(engine, trace, ServeClock::Wall(Instant::now()))
+    serve_trace_impl(engine, trace, ServeClock::Wall(Instant::now()),
+                     None)
+}
+
+/// [`serve_trace`] with an armed [`FaultPlan`]: the batcher draws one
+/// [`FaultSet`] per decode iteration that steps an already-live batch,
+/// injects it into the engine, and recovers from the scripted worker
+/// panic (DESIGN.md §10).
+pub fn serve_trace_with_faults(engine: &mut dyn Engine, trace: &Trace,
+                               fault: &mut FaultPlan)
+                               -> Result<ServeStats> {
+    serve_trace_impl(engine, trace, ServeClock::Wall(Instant::now()),
+                     Some(fault))
 }
 
 /// [`serve_trace`] on a deterministic virtual clock: every decode
@@ -128,7 +162,20 @@ pub fn serve_trace_virtual(engine: &mut dyn Engine, trace: &Trace,
     anyhow::ensure!(tick_s >= 0.0 && tick_s.is_finite(),
                     "virtual tick must be a finite non-negative time");
     serve_trace_impl(engine, trace,
-                     ServeClock::Virtual { now: 0.0, tick: tick_s })
+                     ServeClock::Virtual { now: 0.0, tick: tick_s }, None)
+}
+
+/// [`serve_trace_virtual`] with an armed [`FaultPlan`] (see
+/// [`serve_trace_with_faults`]).
+pub fn serve_trace_virtual_with_faults(engine: &mut dyn Engine,
+                                       trace: &Trace, tick_s: f64,
+                                       fault: &mut FaultPlan)
+                                       -> Result<ServeStats> {
+    anyhow::ensure!(tick_s >= 0.0 && tick_s.is_finite(),
+                    "virtual tick must be a finite non-negative time");
+    serve_trace_impl(engine, trace,
+                     ServeClock::Virtual { now: 0.0, tick: tick_s },
+                     Some(fault))
 }
 
 /// [`serve_trace`] on a deterministic WORK-COSTED virtual clock: each
@@ -146,11 +193,30 @@ pub fn serve_trace_virtual_costed(engine: &mut dyn Engine, trace: &Trace,
                     "work-cost rates must be finite non-negative times");
     serve_trace_impl(engine, trace,
                      ServeClock::VirtualCosted { now: 0.0, pass_s,
-                                                 col_s })
+                                                 col_s },
+                     None)
+}
+
+/// [`serve_trace_virtual_costed`] with an armed [`FaultPlan`] (see
+/// [`serve_trace_with_faults`]) — the clock the chaos gates run on:
+/// held/retried iterations still charge their wasted pass units, so
+/// fault storms cost virtual time instead of deadlocking it.
+pub fn serve_trace_virtual_costed_with_faults(
+    engine: &mut dyn Engine, trace: &Trace, pass_s: f64, col_s: f64,
+    fault: &mut FaultPlan) -> Result<ServeStats> {
+    anyhow::ensure!(pass_s >= 0.0 && pass_s.is_finite()
+                        && col_s >= 0.0 && col_s.is_finite(),
+                    "work-cost rates must be finite non-negative times");
+    serve_trace_impl(engine, trace,
+                     ServeClock::VirtualCosted { now: 0.0, pass_s,
+                                                 col_s },
+                     Some(fault))
 }
 
 fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
-                    mut clock: ServeClock) -> Result<ServeStats> {
+                    mut clock: ServeClock,
+                    mut fault: Option<&mut FaultPlan>)
+                    -> Result<ServeStats> {
     let b = engine.batch();
     // Window accounting: tokens from BEFORE this trace must not count
     // toward this trace's throughput.
@@ -159,6 +225,10 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
     let mut next_arrival = 0usize;
     let mut slots: Vec<Option<InFlight>> = (0..b).map(|_| None).collect();
     let mut latencies: Vec<f64> = Vec::with_capacity(trace.requests.len());
+    let mut outcomes: Vec<Option<RequestOutcome>> =
+        vec![None; trace.requests.len()];
+    let mut failed = 0usize;
+    let mut expired = 0usize;
     let mut occupancy_sum = 0usize;
     let mut peak_occupancy = 0usize;
     let mut stalls = 0u64;
@@ -173,10 +243,47 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
             next_arrival += 1;
         }
 
+        // Deadline sweep (DESIGN.md §10): expired requests are dropped
+        // wherever they are.  Queued ones just leave the queue; live
+        // ones are abandoned mid-decode and release their KV blocks
+        // immediately, so an expired request can never pin pool space.
+        let mut dropped_queued = Vec::new();
+        queue.retain(|&ri| {
+            let req = &trace.requests[ri];
+            if req.deadline_s.is_some_and(|d| now > d) {
+                dropped_queued.push(ri);
+                false
+            } else {
+                true
+            }
+        });
+        for ri in dropped_queued {
+            outcomes[ri] = Some(RequestOutcome::DeadlineExceeded);
+            expired += 1;
+            engine.metrics_mut().deadline_exceeded += 1;
+        }
+        for slot in 0..b {
+            let hit = slots[slot].as_ref().is_some_and(|f| {
+                trace.requests[f.request_idx]
+                    .deadline_s
+                    .is_some_and(|d| now > d)
+                    && !engine.seqs()[slot].done
+            });
+            if hit {
+                let f = slots[slot].take().unwrap();
+                let seq = &mut engine.seqs_mut()[slot];
+                seq.done = true;
+                seq.active = false;
+                engine.release(slot);
+                outcomes[f.request_idx] =
+                    Some(RequestOutcome::DeadlineExceeded);
+                expired += 1;
+                engine.metrics_mut().deadline_exceeded += 1;
+            }
+        }
+
         // Harvest finished slots (returning their KV blocks to the
-        // pool), then refill from the queue — FCFS, gated on both a
-        // free slot and enough unreserved KV blocks.
-        let mut stalled = false;
+        // pool).
         for slot in 0..b {
             let finished = slots[slot]
                 .as_ref()
@@ -184,24 +291,67 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
                 .unwrap_or(false);
             if finished {
                 let f = slots[slot].take().unwrap();
+                let row_failed = engine.seqs()[slot].failed;
+                let tokens = engine.seqs()[slot].gen_tokens().to_vec();
                 engine.release(slot);
-                // request latency = completion - arrival (queueing incl.)
-                let lat = clock.now()
-                    - trace.requests[f.request_idx].arrival_s;
-                latencies.push(lat.max(0.0));
+                if row_failed {
+                    failed += 1;
+                    outcomes[f.request_idx] =
+                        Some(RequestOutcome::Failed {
+                            reason: format!(
+                                "target pass failed after \
+                                 {MAX_TARGET_RETRIES} retries"),
+                        });
+                } else {
+                    // latency = completion - arrival (queueing incl.)
+                    let lat = (clock.now()
+                        - trace.requests[f.request_idx].arrival_s)
+                        .max(0.0);
+                    latencies.push(lat);
+                    outcomes[f.request_idx] =
+                        Some(RequestOutcome::Completed { tokens,
+                                                         latency_s: lat });
+                }
             }
-            if slots[slot].is_none() && !stalled {
-                if let Some(&ri) = queue.front() {
-                    let req = &trace.requests[ri];
-                    if engine.can_admit(&req.prompt, req.max_new) {
-                        queue.pop_front();
-                        engine.admit(slot, &req.prompt, req.max_new)?;
-                        slots[slot] = Some(InFlight { request_idx: ri });
-                    } else {
-                        // Head-of-line waits for blocks; admitting a
-                        // smaller later request instead would starve
-                        // it (FCFS is the fairness contract).
-                        stalled = true;
+        }
+
+        // Fault draw: exactly one FaultSet per iteration that will step
+        // an already-live batch (rows survive harvest ⇒ a step is
+        // guaranteed below), keeping the plan's schedule 1:1 with
+        // injected steps so replaying the plan predicts every counter.
+        let live_before = slots.iter().filter(|s| s.is_some()).count();
+        let fs = match (&mut fault, live_before > 0) {
+            (Some(plan), true) => {
+                let fs = plan.begin_iteration();
+                engine.metrics_mut().faults_injected += fs.injected;
+                fs
+            }
+            _ => FaultSet::default(),
+        };
+
+        // Refill from the queue — FCFS, gated on both a free slot and
+        // enough unreserved KV blocks.  A transient pool-exhaustion
+        // fault pauses admission for this one iteration (modelling a
+        // pool with momentarily no unreserved blocks); it is a fault,
+        // not backpressure, so it does not count an admission stall.
+        let mut stalled = false;
+        if !fs.pool {
+            for slot in 0..b {
+                if slots[slot].is_none() && !stalled {
+                    if let Some(&ri) = queue.front() {
+                        let req = &trace.requests[ri];
+                        if engine.can_admit(&req.prompt, req.max_new) {
+                            queue.pop_front();
+                            engine.admit(slot, &req.prompt, req.max_new)?;
+                            slots[slot] =
+                                Some(InFlight { request_idx: ri });
+                        } else {
+                            // Head-of-line waits for blocks; admitting
+                            // a smaller later request instead would
+                            // starve it (FCFS is the fairness
+                            // contract).
+                            stalled = true;
+                        }
                     }
                 }
             }
@@ -248,7 +398,20 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
         iters += 1;
         let (wp0, wc0) = (engine.metrics().work_pass_units,
                           engine.metrics().work_col_units);
-        engine.step()?;
+        engine.inject_faults(fs);
+        // A worker-pool incident unwinds out of step() BEFORE the
+        // engine mutates any state (fault_prologue panics first), and
+        // the pool itself re-arms on the panicking dispatch
+        // (`WorkerPool` swaps its poisoned flag), so one clean retry
+        // is safe and sufficient.  A second panic is a real bug:
+        // propagate it.
+        match catch_unwind(AssertUnwindSafe(|| engine.step())) {
+            Ok(r) => r?,
+            Err(_) => {
+                engine.metrics_mut().pool_rebuilds += 1;
+                engine.step()?;
+            }
+        }
         engine.metrics_mut().iterations += 1;
         clock.on_iteration(engine.metrics().work_pass_units - wp0,
                            engine.metrics().work_col_units - wc0);
@@ -259,12 +422,30 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
     // in-loop accounting — arrival-based, queueing delay included).
     for slot in 0..b {
         if let Some(f) = slots[slot].take() {
+            let row_failed = engine.seqs()[slot].failed;
+            let tokens = engine.seqs()[slot].gen_tokens().to_vec();
             engine.release(slot);
-            let lat =
-                clock.now() - trace.requests[f.request_idx].arrival_s;
-            latencies.push(lat.max(0.0));
+            if row_failed {
+                failed += 1;
+                outcomes[f.request_idx] = Some(RequestOutcome::Failed {
+                    reason: format!("target pass failed after \
+                                     {MAX_TARGET_RETRIES} retries"),
+                });
+            } else {
+                let lat = (clock.now()
+                    - trace.requests[f.request_idx].arrival_s)
+                    .max(0.0);
+                latencies.push(lat);
+                outcomes[f.request_idx] =
+                    Some(RequestOutcome::Completed { tokens,
+                                                     latency_s: lat });
+            }
         }
     }
+    // Refresh the engine's KV gauges now that the last release landed,
+    // so `kv_blocks_in_use` reads 0 at drain (the chaos gate's leak
+    // check).
+    engine.observe_kv();
 
     let wall = clock.now();
     let generated = engine.metrics().generated - gen0;
@@ -279,7 +460,9 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
             engine.metrics_mut().virtual_s += wall;
         }
     }
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN latency (possible only if a clock misbehaves)
+    // must not panic the serve loop's accounting.
+    latencies.sort_by(f64::total_cmp);
     let n = latencies.len();
     let pct = |p: f64| -> f64 {
         if n == 0 {
@@ -290,6 +473,16 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
     };
     Ok(ServeStats {
         completed: n,
+        failed,
+        expired,
+        outcomes: outcomes
+            .into_iter()
+            .map(|o| {
+                o.unwrap_or(RequestOutcome::Failed {
+                    reason: "request was never served".into(),
+                })
+            })
+            .collect(),
         wall_s: wall,
         generated,
         latency_mean_s: latencies.iter().sum::<f64>() / n.max(1) as f64,

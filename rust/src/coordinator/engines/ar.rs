@@ -13,11 +13,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{next_token, prefill_slot, reserve_len, seed_sequence_rng,
-            CallBuf, Engine, EngineConfig, EngineKind};
+use super::{fault_prologue, next_token, prefill_slot, reserve_len,
+            seed_sequence_rng, CallBuf, Engine, EngineConfig,
+            EngineKind, FaultAction};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::fault::FaultSet;
 
 pub struct ArEngine {
     target: Rc<dyn Backend>,
@@ -30,6 +32,8 @@ pub struct ArEngine {
     eos: i32,
     /// FCFS admission counter — keys per-sequence sampling streams.
     admitted: u64,
+    /// Faults armed for the next step (DESIGN.md §10).
+    faults: FaultSet,
 }
 
 impl ArEngine {
@@ -50,6 +54,7 @@ impl ArEngine {
             pad: rt.manifest.pad,
             eos: rt.manifest.eos,
             admitted: 0,
+            faults: FaultSet::default(),
         })
     }
 
@@ -216,6 +221,17 @@ impl Engine for ArEngine {
     }
 
     fn step(&mut self) -> Result<()> {
+        // AR kinds have no draft path (`draft_params = None`), so the
+        // prologue only sees target incidents and injected worker
+        // panics.
+        let faults = std::mem::take(&mut self.faults);
+        if let FaultAction::Skip = fault_prologue(
+            faults, &mut self.seqs, self.cfg.sampling.is_some(), None,
+            self.target.n_params(), &mut self.metrics)
+        {
+            self.note_kv();
+            return Ok(());
+        }
         if self.cached {
             self.step_cached()?;
         } else {
@@ -252,6 +268,14 @@ impl Engine for ArEngine {
 
     fn metrics_mut(&mut self) -> &mut Metrics {
         &mut self.metrics
+    }
+
+    fn inject_faults(&mut self, faults: FaultSet) {
+        self.faults = faults;
+    }
+
+    fn observe_kv(&mut self) {
+        self.note_kv();
     }
 
     fn warmup(&mut self) -> Result<()> {

@@ -19,13 +19,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{apply_verdict, draft_token, next_token, reserve_len,
-            seed_sequence_rng, verify_and_commit, CallBuf, Engine,
-            EngineConfig, EngineKind, VerifySpec};
+use super::{apply_verdict, draft_token, fault_prologue, next_token,
+            reserve_len, seed_sequence_rng, verify_and_commit, CallBuf,
+            Engine, EngineConfig, EngineKind, FaultAction, VerifySpec};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::SpecPolicy;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::fault::FaultSet;
 
 pub struct EagleEngine {
     /// `_h` variant: exports hidden rows at verify/prefill.
@@ -44,6 +45,8 @@ pub struct EagleEngine {
     /// Speculation controller: plans each row's K per step
     /// (DESIGN.md §9); reservations/warmup are sized by its k_cap.
     policy: SpecPolicy,
+    /// Faults armed for the next step (DESIGN.md §10).
+    faults: FaultSet,
 }
 
 impl EagleEngine {
@@ -80,6 +83,7 @@ impl EagleEngine {
             eos: rt.manifest.eos,
             admitted: 0,
             policy,
+            faults: FaultSet::default(),
         })
     }
 
@@ -299,12 +303,28 @@ impl Engine for EagleEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let live: Vec<bool> = self
-            .seqs
-            .iter()
-            .map(|s| s.active && !s.done)
-            .collect();
-        let ks = self.policy.plan(&live, &mut self.metrics);
+        let faults = std::mem::take(&mut self.faults);
+        let force_k0 = match fault_prologue(
+            faults, &mut self.seqs, self.cfg.sampling.is_some(),
+            Some(self.head.n_params()), self.target.n_params(),
+            &mut self.metrics)
+        {
+            FaultAction::Skip => {
+                self.note_kv();
+                return Ok(());
+            }
+            FaultAction::Proceed { force_k0 } => force_k0,
+        };
+        let ks = if force_k0 {
+            vec![0; self.seqs.len()]
+        } else {
+            let live: Vec<bool> = self
+                .seqs
+                .iter()
+                .map(|s| s.active && !s.done)
+                .collect();
+            self.policy.plan(&live, &mut self.metrics)
+        };
         let (cands, qdists) = self.draft_candidates(&ks)?;
         let spec = VerifySpec { k: ks.iter().copied().max().unwrap_or(0),
                                 pad: self.pad,
@@ -378,6 +398,14 @@ impl Engine for EagleEngine {
 
     fn metrics_mut(&mut self) -> &mut Metrics {
         &mut self.metrics
+    }
+
+    fn inject_faults(&mut self, faults: FaultSet) {
+        self.faults = faults;
+    }
+
+    fn observe_kv(&mut self) {
+        self.note_kv();
     }
 
     fn warmup(&mut self) -> Result<()> {

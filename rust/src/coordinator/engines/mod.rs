@@ -35,6 +35,7 @@ use crate::coordinator::policy::PolicyCfg;
 use crate::coordinator::sampling::{argmax, dist, sample, spec_accept};
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::fault::{FaultSet, MAX_TARGET_RETRIES};
 use crate::substrate::rng::Rng;
 
 /// Shared inference-time configuration.
@@ -207,6 +208,20 @@ pub trait Engine {
     fn any_active(&self) -> bool {
         self.seqs().iter().any(|s| s.active && !s.done)
     }
+
+    /// Arm the next `step` with an injected fault set (DESIGN.md
+    /// §10).  The set is consumed by that step's prologue
+    /// ([`fault_prologue`]); the default ignores it, so fakes and
+    /// fault-free paths cost nothing.
+    fn inject_faults(&mut self, faults: FaultSet) {
+        let _ = faults;
+    }
+
+    /// Refresh the KV-occupancy gauges in `metrics`.  Engines with
+    /// paged caches override; the serving loops call this after the
+    /// final harvest so `kv_blocks_in_use` reflects the drained pool
+    /// rather than the last mid-step observation.
+    fn observe_kv(&mut self) {}
 }
 
 pub fn build_engine(rt: &Runtime, cfg: &EngineConfig)
@@ -237,6 +252,92 @@ pub fn build_engine(rt: &Runtime, cfg: &EngineConfig)
 // ---------------------------------------------------------------------------
 // Shared building blocks
 // ---------------------------------------------------------------------------
+
+/// What an engine's `step` does with its armed fault set.
+pub enum FaultAction {
+    /// Run the iteration.  `force_k0` degrades every row's drafting
+    /// to K=0 — the lossless AR+ commit path (DESIGN.md §9/§10).
+    Proceed { force_k0: bool },
+    /// Commit nothing this iteration: either a persistent target
+    /// incident just failed its victim row, or a sampled-mode draft
+    /// fault holds the batch so no per-row rng stream advances.
+    Skip,
+}
+
+/// Shared `step` prologue: resolve the iteration's injected faults
+/// BEFORE any engine state (rng streams, caches, sequences) mutates,
+/// so every recovery path is bit-safe for the surviving rows.
+///
+/// * worker fault — panic with the worker pool's own poison message.
+///   The pool catches task panics per-worker and re-raises at
+///   dispatch drain (`runtime::pool`), which is exactly this shape;
+///   the serving loop catches it, counts a rebuild, and retries the
+///   step (the armed set was already consumed, so the retry is
+///   clean).
+/// * target fault — `fails` attempts fail, each charged one wasted
+///   pass unit on the costed clock.  Within the retry budget
+///   ([`MAX_TARGET_RETRIES`]) the pass then succeeds (`row_retries`);
+///   past it the incident is persistent: the victim row (chosen by
+///   admission-order index modulo the live count, so batch-layout
+///   independent) is failed (`rows_failed`) and the iteration is
+///   skipped — innocent rows are merely delayed.
+/// * draft fault — the draft pass is lost (`draft_fallbacks`, one
+///   wasted draft pass unit).  Greedy decoding degrades to a K=0
+///   AR+ commit, which is token-identical by the dual-mode argument;
+///   sampled decoding instead HOLDS the iteration, because a K=0
+///   commit would consume different per-row rng draws than the
+///   fault-free run (DESIGN.md §10).
+///
+/// `draft_params` is `None` for engines without a draft path (AR,
+/// AR+), which therefore never see draft fallbacks.
+pub fn fault_prologue(faults: FaultSet, seqs: &mut [Sequence],
+                      sampled: bool, draft_params: Option<usize>,
+                      target_params: usize, metrics: &mut Metrics)
+                      -> FaultAction {
+    if faults.worker {
+        panic!("host worker-pool task panicked");
+    }
+    if let Some(t) = faults.target {
+        let live: Vec<usize> = seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.active && !s.done)
+            .map(|(i, _)| i)
+            .collect();
+        if !live.is_empty() {
+            if t.fails > MAX_TARGET_RETRIES {
+                // Persistent: the initial attempt plus every retry
+                // failed.  Fail the victim row only.
+                for _ in 0..=MAX_TARGET_RETRIES {
+                    metrics.record_work(target_params, 0);
+                }
+                metrics.row_retries += MAX_TARGET_RETRIES;
+                let victim =
+                    live[(t.victim % live.len() as u64) as usize];
+                let seq = &mut seqs[victim];
+                seq.failed = true;
+                seq.done = true;
+                seq.active = false;
+                metrics.rows_failed += 1;
+                return FaultAction::Skip;
+            }
+            // Transient: `fails` wasted attempts, then success.
+            for _ in 0..t.fails {
+                metrics.record_work(target_params, 0);
+            }
+            metrics.row_retries += t.fails;
+        }
+    }
+    if let (true, Some(dp)) = (faults.draft, draft_params) {
+        metrics.draft_fallbacks += 1;
+        metrics.record_work(dp, 0);
+        if sampled {
+            return FaultAction::Skip;
+        }
+        return FaultAction::Proceed { force_k0: true };
+    }
+    FaultAction::Proceed { force_k0: false }
+}
 
 /// Worst-case logical slots a sequence can commit across its lifetime:
 /// the full stream (`prompt + max_new` plus the pending token) and the

@@ -114,6 +114,24 @@ pub struct Metrics {
     /// calls — the compute cost that scales with batch occupancy and
     /// draft length.
     pub work_col_units: f64,
+    /// Faults the injection plan fired into this engine's iterations
+    /// (DESIGN.md §10); 0 outside chaos runs.
+    pub faults_injected: u64,
+    /// Iterations degraded losslessly because the draft pass failed
+    /// (greedy: K=0 AR+ commit; sampled: held iteration).
+    pub draft_fallbacks: u64,
+    /// Failed target-pass attempts absorbed by bounded retry.
+    pub row_retries: u64,
+    /// Rows failed after a persistent target incident — the row's KV
+    /// blocks are released and its caller gets a typed `Failed`.
+    pub rows_failed: u64,
+    /// Requests cancelled by their caller before completion.
+    pub cancelled: u64,
+    /// Requests expired by their deadline (wall or virtual clock).
+    pub deadline_exceeded: u64,
+    /// Worker-pool poison incidents recovered by rebuilding/reusing
+    /// the pool and retrying the iteration.
+    pub pool_rebuilds: u64,
 }
 
 impl Metrics {
@@ -320,6 +338,13 @@ impl Metrics {
         self.dual_mode_iters += o.dual_mode_iters;
         self.work_pass_units += o.work_pass_units;
         self.work_col_units += o.work_col_units;
+        self.faults_injected += o.faults_injected;
+        self.draft_fallbacks += o.draft_fallbacks;
+        self.row_retries += o.row_retries;
+        self.rows_failed += o.rows_failed;
+        self.cancelled += o.cancelled;
+        self.deadline_exceeded += o.deadline_exceeded;
+        self.pool_rebuilds += o.pool_rebuilds;
         if self.offered_pos.len() < o.offered_pos.len() {
             self.offered_pos.resize(o.offered_pos.len(), 0);
             self.accept_pos.resize(o.accept_pos.len(), 0);
@@ -505,6 +530,30 @@ mod tests {
             m.record_acceptance(2, (i % 3 == 0) as usize);
         }
         assert_eq!(m.accept_recent.len(), ACCEPT_RECENT_CAP);
+    }
+
+    #[test]
+    fn robustness_counters_merge() {
+        let mut a = Metrics::default();
+        a.faults_injected = 5;
+        a.draft_fallbacks = 2;
+        a.row_retries = 3;
+        a.rows_failed = 1;
+        a.cancelled = 1;
+        a.deadline_exceeded = 2;
+        a.pool_rebuilds = 1;
+        let mut b = Metrics::default();
+        b.faults_injected = 1;
+        b.row_retries = 2;
+        b.cancelled = 4;
+        a.merge(&b);
+        assert_eq!(a.faults_injected, 6);
+        assert_eq!(a.draft_fallbacks, 2);
+        assert_eq!(a.row_retries, 5);
+        assert_eq!(a.rows_failed, 1);
+        assert_eq!(a.cancelled, 5);
+        assert_eq!(a.deadline_exceeded, 2);
+        assert_eq!(a.pool_rebuilds, 1);
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub struct Sequence {
     pub fresh: Vec<i32>,
     pub done: bool,
     pub active: bool,
+    /// Set when a persistent target-pass incident failed this row
+    /// (DESIGN.md §10): the row is done without completing, its KV
+    /// blocks are released at harvest, and its caller gets a typed
+    /// `Failed` outcome instead of tokens.
+    pub failed: bool,
     pub max_new: usize,
     /// EAGLE: hidden state associated with the pending token (the
     /// feature row that produced it).
@@ -45,6 +50,7 @@ impl Sequence {
             fresh: Vec::new(),
             done: false,
             active: true,
+            failed: false,
             max_new,
             pending_hidden: None,
             eagle_backlog: Vec::new(),

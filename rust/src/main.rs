@@ -12,6 +12,7 @@
 //!          [--prefix-cache] [--shared-prefix N] [--prefix-len L]
 //!          [--policy fixed|adaptive] [--k-min N] [--k-max N]
 //!          [--policy-window N] [--dual-mode-occupancy F]
+//!          [--fault-spec KIND:RATE:SEED[,..]] [--deadline-ms MS]
 //!   bench  [--k 2,4,8] [--batch 1,4] [--prompts N] [--max-new N]
 //!          [--task code] [--target target-l] [--seed N] [--no-oracle]
 //!          [--out BENCH_hotpath.json] [--compare OLD.json]
@@ -53,6 +54,16 @@
 //! work-costed virtual clock (PASS seconds per forward-pass unit +
 //! COL per token-column unit), which prices speculation instead of
 //! charging every iteration a flat tick.
+//! `serve --fault-spec KIND:RATE:SEED[,..]` arms a deterministic
+//! fault plan (DESIGN.md §10): KIND ∈ draft|target|pool|worker, RATE
+//! the per-iteration firing probability, SEED its private rng stream —
+//! the serve loop degrades losslessly (draft → K=0 / held iteration,
+//! target → bounded retry then fail one row, pool → one-iteration
+//! admission pause, worker → caught panic + pool rebuild) instead of
+//! dying.  `serve --deadline-ms MS` gives every request an
+//! arrival+MS completion deadline; expired requests — queued or
+//! mid-decode — release their KV blocks and report a typed
+//! DeadlineExceeded outcome.
 
 use std::path::{Path, PathBuf};
 
@@ -61,8 +72,12 @@ use pard::coordinator::engines::{EngineConfig, EngineKind, SamplingCfg};
 use pard::coordinator::evaluate::run_eval;
 use pard::coordinator::policy::PolicyCfg;
 use pard::coordinator::router::default_draft;
-use pard::coordinator::batcher::{serve_trace, serve_trace_virtual,
-                                 serve_trace_virtual_costed};
+use pard::coordinator::batcher::{
+    serve_trace, serve_trace_virtual, serve_trace_virtual_costed,
+    serve_trace_virtual_costed_with_faults,
+    serve_trace_virtual_with_faults, serve_trace_with_faults,
+};
+use pard::substrate::fault::FaultPlan;
 use pard::report::bench::{compare_reports, hotpath_report, write_report,
                           BenchOpts, BENCH_FILE, COMPARE_TOL};
 use pard::report::{self, RunScale};
@@ -279,6 +294,34 @@ fn policy_opt(args: &Args) -> Result<PolicyCfg> {
     })
 }
 
+/// `--fault-spec KIND:RATE:SEED[,..]` (deterministic fault plan,
+/// DESIGN.md §10).  `None` when absent; a spec that doesn't parse is
+/// an error, not a silently fault-free serve.
+fn fault_opt(args: &Args) -> Result<Option<FaultPlan>> {
+    match args.opts.get("fault-spec") {
+        None => Ok(None),
+        Some(v) => Ok(Some(FaultPlan::parse(v)?)),
+    }
+}
+
+/// `--deadline-ms MS` (per-request completion budget).  `None` when
+/// absent; a value that doesn't parse as a positive number is an
+/// error, not a silently unbounded request.
+fn deadline_opt(args: &Args) -> Result<Option<f64>> {
+    match args.opts.get("deadline-ms") {
+        None => Ok(None),
+        Some(v) => {
+            let ms: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--deadline-ms wants a positive number \
+                                 of milliseconds, got `{v}`")
+            })?;
+            anyhow::ensure!(ms > 0.0 && ms.is_finite(),
+                            "--deadline-ms must be finite and > 0");
+            Ok(Some(ms / 1000.0))
+        }
+    }
+}
+
 fn engine_config(rt: &Runtime, args: &Args) -> Result<EngineConfig> {
     let kind = EngineKind::parse(&args.get("engine", "pard"))?;
     let target = args.get("target", "target-l");
@@ -365,12 +408,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --prefix-len tokens and prepend them round-robin (the workload
     // --prefix-cache exists for).
     let seed = args.usize("seed", 7) as u64;
-    let trace = match args.usize("shared-prefix", 0) {
+    let mut trace = match args.usize("shared-prefix", 0) {
         0 => build_trace(&prompts, n, arrival, cfg.max_new, seed),
         np => build_shared_prefix_trace(&prompts, n, np,
                                         args.usize("prefix-len", 32),
                                         arrival, cfg.max_new, seed),
     };
+    if let Some(budget_s) = deadline_opt(args)? {
+        trace = trace.with_deadline_budget(budget_s);
+    }
+    let mut fault = fault_opt(args)?;
     let mut engine =
         pard::coordinator::engines::build_engine(&rt, &cfg)?;
     engine.warmup()?;
@@ -388,7 +435,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let tick: f64 = v.parse().map_err(|_| {
                 anyhow::anyhow!("--virtual-tick wants seconds, got `{v}`")
             })?;
-            serve_trace_virtual(engine.as_mut(), &trace, tick)?
+            match &mut fault {
+                Some(plan) => serve_trace_virtual_with_faults(
+                    engine.as_mut(), &trace, tick, plan)?,
+                None => {
+                    serve_trace_virtual(engine.as_mut(), &trace, tick)?
+                }
+            }
         }
         (_, Some(v)) => {
             let bad = || {
@@ -398,10 +451,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let (p, c) = v.split_once(',').ok_or_else(bad)?;
             let pass_s: f64 = p.trim().parse().map_err(|_| bad())?;
             let col_s: f64 = c.trim().parse().map_err(|_| bad())?;
-            serve_trace_virtual_costed(engine.as_mut(), &trace, pass_s,
-                                       col_s)?
+            match &mut fault {
+                Some(plan) => serve_trace_virtual_costed_with_faults(
+                    engine.as_mut(), &trace, pass_s, col_s, plan)?,
+                None => serve_trace_virtual_costed(engine.as_mut(),
+                                                   &trace, pass_s,
+                                                   col_s)?,
+            }
         }
-        (None, None) => serve_trace(engine.as_mut(), &trace)?,
+        (None, None) => match &mut fault {
+            Some(plan) => {
+                serve_trace_with_faults(engine.as_mut(), &trace, plan)?
+            }
+            None => serve_trace(engine.as_mut(), &trace)?,
+        },
     };
     println!("engine={} batch={} completed={} wall={:.2}s",
              cfg.kind.label(), cfg.batch, stats.completed, stats.wall_s);
@@ -414,6 +477,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = engine.metrics();
     println!("kv: peak blocks={}  admission stalls={}",
              m.kv_peak_blocks, stats.admission_stalls);
+    if fault.is_some() || stats.failed > 0 || stats.expired > 0 {
+        println!("robustness: faults={} draft-fallbacks={} \
+                  row-retries={} rows-failed={} pool-rebuilds={}  \
+                  outcomes: completed={} failed={} expired={}",
+                 m.faults_injected, m.draft_fallbacks, m.row_retries,
+                 m.rows_failed, m.pool_rebuilds, stats.completed,
+                 stats.failed, stats.expired);
+    }
     if cfg.policy.adaptive {
         println!("policy: adaptive  mode-switches={}  \
                   dual-mode-iters={}",

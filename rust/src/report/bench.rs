@@ -350,6 +350,82 @@ fn policy_mixed_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
     ]))
 }
 
+/// Chaos serving rows (`robustness.serving_chaos` in the report): the
+/// same closed trace served through PARD on the WORK-COSTED virtual
+/// clock under a rising seeded fault storm (DESIGN.md §10) — draft +
+/// target + pool specs at each rate.  Every row completes the whole
+/// trace or fails rows typed-ly; the rate-0 row runs THROUGH the fault
+/// plumbing (a plan whose specs never fire) and matches a fault-free
+/// serve, documenting that the injection layer is pass-through.
+/// Reported, not gated — the bit-identity gate lives in
+/// `tests/fault_injection.rs` (and its hostsim mirror).
+fn serving_chaos_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
+    use crate::coordinator::batcher::serve_trace_virtual_costed_with_faults;
+    use crate::coordinator::engines::build_engine;
+    use crate::substrate::fault::{FaultKind, FaultPlan, FaultSpec};
+    use crate::substrate::workload::{build_trace, Arrival};
+    let (n_req, batch, max_new) = (8usize, 4usize, o.max_new.min(16));
+    let (pass_s, col_s) = (1.0, 0.05);
+    let k = o.ks.first().copied().unwrap_or(4);
+    let prompts = rt.prompts(&o.task)?.prompts;
+    let trace =
+        build_trace(&prompts, n_req, Arrival::Closed, max_new, o.seed);
+    let mut rows = Vec::new();
+    for rate in [0.0, 0.1, 0.3] {
+        let cfg = EngineConfig {
+            kind: EngineKind::Pard,
+            target: o.target.clone(),
+            draft: default_draft(&rt.manifest, EngineKind::Pard,
+                                 &o.target)?,
+            batch,
+            k,
+            max_new,
+            shared_mask: true,
+            kv_blocks: None,
+            prefix_cache: false,
+            sampling: None,
+            policy: PolicyCfg::default(),
+        };
+        let mut engine = build_engine(rt, &cfg)?;
+        engine.warmup()?;
+        let mut plan = FaultPlan::new(vec![
+            FaultSpec { kind: FaultKind::Draft, rate, seed: 11 },
+            FaultSpec { kind: FaultKind::Target, rate: rate * 0.5,
+                        seed: 13 },
+            FaultSpec { kind: FaultKind::Pool, rate: rate * 0.25,
+                        seed: 17 },
+        ]);
+        let stats = serve_trace_virtual_costed_with_faults(
+            engine.as_mut(), &trace, pass_s, col_s, &mut plan)?;
+        let m = engine.metrics();
+        rows.push(obj(vec![
+            ("rate", num(rate)),
+            ("completed", num(stats.completed as f64)),
+            ("failed", num(stats.failed as f64)),
+            ("generated", num(stats.generated as f64)),
+            ("tokens_per_s", num(stats.throughput_tps)),
+            ("virtual_s", num(stats.wall_s)),
+            ("faults_injected", num(m.faults_injected as f64)),
+            ("draft_fallbacks", num(m.draft_fallbacks as f64)),
+            ("row_retries", num(m.row_retries as f64)),
+            ("rows_failed", num(m.rows_failed as f64)),
+            ("pool_rebuilds", num(m.pool_rebuilds as f64)),
+            // Leak check: the pool must drain to 0 whatever fired.
+            ("kv_blocks_at_drain", num(m.kv_blocks_in_use as f64)),
+        ]));
+    }
+    Ok(obj(vec![
+        ("engine", Json::Str("PARD".to_string())),
+        ("k", num(k as f64)),
+        ("batch", num(batch as f64)),
+        ("n_requests", num(n_req as f64)),
+        ("max_new", num(max_new as f64)),
+        ("pass_s", num(pass_s)),
+        ("col_s", num(col_s)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
 /// Run the sweep and build the full report document.
 ///
 /// The host backend is always measured; with `opts.oracle` the scalar
@@ -383,6 +459,11 @@ pub fn hotpath_report(opts: &BenchOpts) -> Result<Json> {
         ("runs", rows_json(&host_rows)),
         ("serving_prefix", serving_prefix_json(&host_rt, opts)?),
         ("policy_mixed", policy_mixed_json(&host_rt, opts)?),
+        // Additive v1 object: `--compare` keys on runs[].tokens_per_s
+        // only, so older reports stay valid.
+        ("robustness", obj(vec![
+            ("serving_chaos", serving_chaos_json(&host_rt, opts)?),
+        ])),
     ];
 
     if opts.oracle {

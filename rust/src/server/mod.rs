@@ -14,23 +14,50 @@
 //! slot 0.  Finished slots release their blocks and reply on their
 //! caller's channel; [`Server::submit`] is the non-blocking entry
 //! ([`Server::generate`] is submit + wait).
+//!
+//! Request lifecycle (DESIGN.md §10): every request ends in exactly one
+//! typed [`GenOutcome`] on its reply channel — `Completed`, `Rejected`
+//! (oversized for the whole pool), `Cancelled`
+//! ([`SubmitHandle::cancel`]), `DeadlineExceeded`
+//! ([`GenRequest::deadline`], wall clock from intake), or `Failed`
+//! (persistent target-pass incident, or the engine died with this
+//! request in flight).  The engine thread itself never dies to an
+//! injected fault: worker-pool panics are caught and retried once per
+//! incident, and a fatal serve-loop error replies `Failed` to every
+//! in-flight caller and stashes its message where [`Server::metrics`]
+//! and [`Server::shutdown`] can surface it.
 
 use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::engines::{build_engine, Engine, EngineConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::RuntimeSpec;
+use crate::substrate::fault::{FaultPlan, FaultSet};
 
 #[derive(Debug)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Optional completion budget, measured on the WALL clock from the
+    /// instant the request reaches the engine thread.  Past it the
+    /// request is dropped — queued or mid-decode — its KV blocks are
+    /// released, and the caller gets [`GenOutcome::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
+        GenRequest { id, prompt, max_new, deadline: None }
+    }
 }
 
 #[derive(Debug)]
@@ -40,24 +67,90 @@ pub struct GenResponse {
     pub latency_s: f64,
 }
 
+/// How a submitted request ended (DESIGN.md §10).  Exactly one arrives
+/// on the reply channel per request, whatever happens.
+#[derive(Debug)]
+pub enum GenOutcome {
+    Completed(GenResponse),
+    /// Admission-impossible: the request needs more KV blocks than the
+    /// whole pool holds even when empty.
+    Rejected { id: u64, reason: String },
+    /// [`SubmitHandle::cancel`] reached the engine before completion.
+    Cancelled { id: u64 },
+    /// [`GenRequest::deadline`] elapsed before completion.
+    DeadlineExceeded { id: u64 },
+    /// A persistent target-pass incident failed this row, or the
+    /// engine thread hit a fatal error with this request in flight.
+    Failed { id: u64, reason: String },
+}
+
 enum Msg {
-    Generate(GenRequest, mpsc::Sender<GenResponse>),
+    Generate(GenRequest, mpsc::Sender<GenOutcome>),
+    Cancel(u64),
     Metrics(mpsc::Sender<Metrics>),
     Shutdown,
 }
 
-/// A queued or in-flight request with its reply channel and the
-/// instant it reached the engine thread (latency origin).
-struct Pending {
-    req: GenRequest,
-    reply: mpsc::Sender<GenResponse>,
-    t0: Instant,
+/// The server was shut down (or its engine thread is gone): no further
+/// messages can be delivered.  A concrete type — the vendored `anyhow`
+/// shim has no downcasting, so callers match on this directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerClosed;
+
+impl fmt::Display for ServerClosed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "server is shut down (engine thread gone)")
+    }
+}
+
+impl std::error::Error for ServerClosed {}
+
+/// Live handle to one submitted request: await its [`GenOutcome`] or
+/// cancel it.
+pub struct SubmitHandle {
+    id: u64,
+    rx: mpsc::Receiver<GenOutcome>,
+    ctl: mpsc::Sender<Msg>,
+}
+
+impl SubmitHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request's outcome arrives.
+    pub fn recv(&self) -> Result<GenOutcome, ServerClosed> {
+        self.rx.recv().map_err(|_| ServerClosed)
+    }
+
+    /// [`SubmitHandle::recv`] with a timeout (None = not yet done).
+    pub fn recv_timeout(&self, d: Duration)
+                        -> Result<Option<GenOutcome>, ServerClosed> {
+        match self.rx.recv_timeout(d) {
+            Ok(o) => Ok(Some(o)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServerClosed),
+        }
+    }
+
+    /// Ask the engine to drop this request.  Best-effort and
+    /// non-blocking: if the request already finished, the original
+    /// outcome stands; otherwise the caller's `recv` yields
+    /// [`GenOutcome::Cancelled`] and the slot's KV blocks are released
+    /// immediately.
+    pub fn cancel(&self) {
+        let _ = self.ctl.send(Msg::Cancel(self.id));
+    }
 }
 
 /// Handle to the engine thread.
 pub struct Server {
     tx: mpsc::Sender<Msg>,
     join: Option<thread::JoinHandle<Result<()>>>,
+    /// First fatal engine-thread incident (serve-loop error or panic),
+    /// stashed so `metrics()`/`shutdown()`/`Drop` can surface it even
+    /// after the thread is gone.
+    fatal: Arc<Mutex<Option<String>>>,
 }
 
 impl Server {
@@ -66,50 +159,116 @@ impl Server {
     /// thread (PJRT handles never cross threads); `RuntimeSpec` is the
     /// `Send` description of what to open.
     pub fn start(spec: RuntimeSpec, cfg: EngineConfig) -> Result<Self> {
+        Server::start_inner(spec, cfg, None)
+    }
+
+    /// [`Server::start`] with an armed [`FaultPlan`]: the serve loop
+    /// draws one fault set per decode iteration that steps an
+    /// already-live batch and injects it into the engine
+    /// (DESIGN.md §10).
+    pub fn start_with_faults(spec: RuntimeSpec, cfg: EngineConfig,
+                             fault: FaultPlan) -> Result<Self> {
+        Server::start_inner(spec, cfg, Some(fault))
+    }
+
+    fn start_inner(spec: RuntimeSpec, cfg: EngineConfig,
+                   fault: Option<FaultPlan>) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Msg>();
+        let fatal = Arc::new(Mutex::new(None));
+        let stash = fatal.clone();
         let join = thread::Builder::new()
             .name("pard-engine".into())
             .spawn(move || -> Result<()> {
-                let rt = spec.open()?;
-                let mut engine = build_engine(&rt, &cfg)?;
-                engine.warmup()?;
-                serve_loop(engine.as_mut(), &rx)
+                // Catch panics from engine construction/admission too:
+                // a bare unwind would leave join() with an opaque Any
+                // and Drop would swallow it entirely.
+                let res = catch_unwind(AssertUnwindSafe(
+                    || -> Result<()> {
+                        let rt = spec.open()?;
+                        let mut engine = build_engine(&rt, &cfg)?;
+                        engine.warmup()?;
+                        serve_loop(engine.as_mut(), &rx, fault)
+                    }));
+                let res = match res {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow::anyhow!(
+                        "engine thread panicked: {}", panic_msg(&p))),
+                };
+                if let Err(e) = &res {
+                    *stash.lock().unwrap() = Some(format!("{e:?}"));
+                }
+                res
             })?;
-        Ok(Server { tx, join: Some(join) })
+        Ok(Server { tx, join: Some(join), fatal })
     }
 
-    /// Enqueue a request without waiting: the response arrives on the
-    /// returned channel once the batched loop completes it.  Multiple
-    /// outstanding submissions share batch slots and decode
-    /// iterations.
+    /// Enqueue a request without waiting: its typed [`GenOutcome`]
+    /// arrives on the returned handle once the batched loop resolves
+    /// it.  Multiple outstanding submissions share batch slots and
+    /// decode iterations.
     pub fn submit(&self, req: GenRequest)
-                  -> Result<mpsc::Receiver<GenResponse>> {
+                  -> Result<SubmitHandle, ServerClosed> {
+        let id = req.id;
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Msg::Generate(req, tx))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx)
+            .map_err(|_| ServerClosed)?;
+        Ok(SubmitHandle { id, rx, ctl: self.tx.clone() })
     }
 
-    /// Submit and block until the response arrives.
+    /// Submit and block until the outcome arrives; non-`Completed`
+    /// outcomes surface as errors (use [`Server::submit`] to match on
+    /// them).
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
-        Ok(self.submit(req)?.recv()?)
+        match self.submit(req)?.recv()? {
+            GenOutcome::Completed(resp) => Ok(resp),
+            GenOutcome::Rejected { id, reason } => {
+                Err(anyhow::anyhow!("request {id} rejected: {reason}"))
+            }
+            GenOutcome::Cancelled { id } => {
+                Err(anyhow::anyhow!("request {id} cancelled"))
+            }
+            GenOutcome::DeadlineExceeded { id } => {
+                Err(anyhow::anyhow!("request {id} exceeded its deadline"))
+            }
+            GenOutcome::Failed { id, reason } => {
+                Err(anyhow::anyhow!("request {id} failed: {reason}"))
+            }
+        }
     }
 
     pub fn metrics(&self) -> Result<Metrics> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Metrics(tx))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
+        if self.tx.send(Msg::Metrics(tx)).is_err() {
+            return Err(self.dead_error());
+        }
+        rx.recv().map_err(|_| self.dead_error())
     }
 
-    pub fn shutdown(mut self) -> Result<()> {
+    /// First fatal engine-thread incident, if any (None = healthy).
+    pub fn fatal_error(&self) -> Option<String> {
+        self.fatal.lock().unwrap().clone()
+    }
+
+    /// Stop intake, drain in-flight work, and join the engine thread.
+    /// Idempotent: later calls (and `Drop`) are no-ops.  After
+    /// shutdown, [`Server::submit`] returns [`ServerClosed`].
+    pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
-            j.join().map_err(|_| anyhow::anyhow!("engine panicked"))??;
+            match j.join() {
+                Ok(r) => r?,
+                Err(_) => return Err(self.dead_error()),
+            }
         }
         Ok(())
+    }
+
+    fn dead_error(&self) -> anyhow::Error {
+        match self.fatal.lock().unwrap().as_ref() {
+            Some(m) => anyhow::anyhow!("engine thread died: {m}"),
+            None => anyhow::anyhow!("engine thread gone"),
+        }
     }
 }
 
@@ -117,111 +276,283 @@ impl Drop for Server {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
-            let _ = j.join();
+            let joined = j.join();
+            // Don't swallow a dying engine: surface the stashed
+            // incident (or the bare panic) on stderr, since Drop has
+            // no Result to return it through.
+            if joined.is_err() || matches!(joined, Ok(Err(_))) {
+                let msg = self
+                    .fatal
+                    .lock()
+                    .unwrap()
+                    .clone()
+                    .unwrap_or_else(|| "engine thread panicked".into());
+                eprintln!("pard-engine: died: {msg}");
+            }
         }
     }
 }
 
+/// Best-effort panic payload → string (panics carry `&str`/`String`
+/// payloads in this codebase).
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// A queued or in-flight request with its reply channel and the
+/// instant it reached the engine thread (latency + deadline origin).
+struct Pending {
+    req: GenRequest,
+    reply: mpsc::Sender<GenOutcome>,
+    t0: Instant,
+}
+
+impl Pending {
+    fn expired(&self) -> bool {
+        self.req.deadline.is_some_and(|d| self.t0.elapsed() > d)
+    }
+}
+
+struct LoopState {
+    queue: VecDeque<Pending>,
+    slots: Vec<Option<Pending>>,
+    open: bool,
+}
+
 /// The engine thread's batched serving loop: drain the channel (block
 /// only when idle), admit queued requests into free slots while the KV
-/// pool has room, step every live sequence once, harvest and reply.
-/// `Shutdown` stops intake and exits once in-flight work drains.
-fn serve_loop(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>)
-              -> Result<()> {
+/// pool has room, step every live sequence once, harvest and reply
+/// with typed outcomes.  `Shutdown` stops intake and exits once
+/// in-flight work drains.  On a fatal error every in-flight caller is
+/// told `Failed` before the error propagates — reply channels never
+/// just vanish.
+fn serve_loop(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>,
+              mut fault: Option<FaultPlan>) -> Result<()> {
     let b = engine.batch();
-    let mut queue: VecDeque<Pending> = VecDeque::new();
-    let mut slots: Vec<Option<Pending>> = (0..b).map(|_| None).collect();
-    let mut open = true;
+    let mut st = LoopState {
+        queue: VecDeque::new(),
+        slots: (0..b).map(|_| None).collect(),
+        open: true,
+    };
     loop {
-        let live = slots.iter().filter(|s| s.is_some()).count();
-        let idle = live == 0 && queue.is_empty();
-        if idle && !open {
-            return Ok(());
-        }
-        if idle {
-            // Nothing to do: park on the channel instead of spinning.
-            match rx.recv() {
-                Ok(msg) => {
-                    if !handle(msg, engine, &mut queue) {
-                        open = false;
-                    }
+        match serve_pass(engine, rx, &mut st, fault.as_mut()) {
+            Ok(true) => return Ok(()),
+            Ok(false) => {}
+            Err(e) => {
+                // Satellite of DESIGN.md §10: in-flight callers get a
+                // typed Failed, not a dropped sender.
+                let reason = format!("engine error: {e}");
+                for p in st.queue.drain(..) {
+                    let _ = p.reply.send(GenOutcome::Failed {
+                        id: p.req.id,
+                        reason: reason.clone(),
+                    });
                 }
-                Err(_) => return Ok(()), // every Server handle dropped
+                for p in st.slots.iter_mut().filter_map(Option::take) {
+                    let _ = p.reply.send(GenOutcome::Failed {
+                        id: p.req.id,
+                        reason: reason.clone(),
+                    });
+                }
+                return Err(e);
             }
         }
-        while let Ok(msg) = rx.try_recv() {
-            if !handle(msg, engine, &mut queue) {
-                open = false;
-            }
-        }
+    }
+}
 
-        // FCFS admission, gated on free slots AND free KV blocks.
+/// One pass of the serving loop; returns Ok(true) when the loop should
+/// exit cleanly.
+fn serve_pass(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>,
+              st: &mut LoopState, fault: Option<&mut FaultPlan>)
+              -> Result<bool> {
+    let b = engine.batch();
+    let live = st.slots.iter().filter(|s| s.is_some()).count();
+    let idle = live == 0 && st.queue.is_empty();
+    if idle && !st.open {
+        return Ok(true);
+    }
+    if idle {
+        // Nothing to do: park on the channel instead of spinning.
+        match rx.recv() {
+            Ok(msg) => handle(msg, engine, st),
+            Err(_) => return Ok(true), // every Server handle dropped
+        }
+    }
+    while let Ok(msg) = rx.try_recv() {
+        handle(msg, engine, st);
+    }
+
+    // Deadline sweep (wall clock, origin = intake instant).  Queued
+    // requests just leave the queue; live ones are abandoned
+    // mid-decode and release their KV blocks immediately.
+    let mut expired_q = Vec::new();
+    st.queue.retain(|p| {
+        if p.expired() {
+            expired_q.push((p.req.id, p.reply.clone()));
+            false
+        } else {
+            true
+        }
+    });
+    for (id, reply) in expired_q {
+        engine.metrics_mut().deadline_exceeded += 1;
+        let _ = reply.send(GenOutcome::DeadlineExceeded { id });
+    }
+    for slot in 0..b {
+        let hit = st.slots[slot]
+            .as_ref()
+            .is_some_and(|p| p.expired() && !engine.seqs()[slot].done);
+        if hit {
+            let p = st.slots[slot].take().unwrap();
+            drop_slot(engine, slot);
+            engine.metrics_mut().deadline_exceeded += 1;
+            let _ = p
+                .reply
+                .send(GenOutcome::DeadlineExceeded { id: p.req.id });
+        }
+    }
+
+    // Fault draw: one FaultSet per iteration that steps an
+    // already-live batch (mirrors the batcher's rule so a plan's
+    // schedule predicts every counter).
+    let live_before = st.slots.iter().filter(|s| s.is_some()).count();
+    let fs = match (fault, live_before > 0) {
+        (Some(plan), true) => {
+            let fs = plan.begin_iteration();
+            engine.metrics_mut().faults_injected += fs.injected;
+            fs
+        }
+        _ => FaultSet::default(),
+    };
+
+    // FCFS admission, gated on free slots AND free KV blocks.  A
+    // transient pool-exhaustion fault pauses admission this iteration.
+    if !fs.pool {
         for slot in 0..b {
-            if slots[slot].is_some() {
+            if st.slots[slot].is_some() {
                 continue;
             }
-            let Some(head) = queue.front() else { break };
+            let Some(head) = st.queue.front() else { break };
             if !engine.can_admit(&head.req.prompt, head.req.max_new) {
-                if slots.iter().all(|s| s.is_none()) {
+                if st.slots.iter().all(|s| s.is_none()) {
                     // Even an empty engine can't fit it: reject THIS
-                    // request — dropping its reply sender surfaces a
-                    // channel error to its caller — and keep serving
+                    // request with a typed outcome and keep serving
                     // everyone else.
-                    let p = queue.pop_front().unwrap();
-                    eprintln!(
-                        "pard-engine: rejecting request {}: needs \
-                         more KV blocks than the whole pool holds — \
-                         raise --kv-blocks",
-                        p.req.id
-                    );
+                    let p = st.queue.pop_front().unwrap();
+                    let _ = p.reply.send(GenOutcome::Rejected {
+                        id: p.req.id,
+                        reason: "needs more KV blocks than the whole \
+                                 pool holds — raise --kv-blocks"
+                            .into(),
+                    });
                     continue; // next head, same pass
                 }
                 engine.metrics_mut().admission_stalls += 1;
                 break; // backpressure: wait for a release
             }
-            let p = queue.pop_front().unwrap();
+            let p = st.queue.pop_front().unwrap();
             engine.admit(slot, &p.req.prompt, p.req.max_new)?;
-            slots[slot] = Some(p);
+            st.slots[slot] = Some(p);
         }
+    }
 
-        if engine.any_active() {
-            engine.step()?;
-            engine.metrics_mut().iterations += 1;
+    if engine.any_active() {
+        engine.inject_faults(fs);
+        // Worker-pool incident: the prologue panics before any state
+        // mutation and the pool re-arms itself, so one retry is safe;
+        // a second panic is a real bug and becomes the fatal error.
+        match catch_unwind(AssertUnwindSafe(|| engine.step())) {
+            Ok(r) => r?,
+            Err(p) => {
+                engine.metrics_mut().pool_rebuilds += 1;
+                catch_unwind(AssertUnwindSafe(|| engine.step()))
+                    .map_err(|p2| {
+                        anyhow::anyhow!(
+                            "engine step panicked twice: {} then {}",
+                            panic_msg(&p), panic_msg(&p2))
+                    })??;
+            }
         }
+        engine.metrics_mut().iterations += 1;
+    }
 
-        // Harvest: reply and release finished slots.
-        for slot in 0..b {
-            let done = slots[slot]
-                .as_ref()
-                .map(|_| engine.seqs()[slot].done)
-                .unwrap_or(false);
-            if done {
-                let p = slots[slot].take().unwrap();
-                let tokens = engine.seqs()[slot].gen_tokens().to_vec();
-                engine.release(slot);
-                let _ = p.reply.send(GenResponse {
+    // Harvest: reply and release finished slots.
+    for slot in 0..b {
+        let done = st.slots[slot]
+            .as_ref()
+            .map(|_| engine.seqs()[slot].done)
+            .unwrap_or(false);
+        if done {
+            let p = st.slots[slot].take().unwrap();
+            let failed = engine.seqs()[slot].failed;
+            let tokens = engine.seqs()[slot].gen_tokens().to_vec();
+            engine.release(slot);
+            let _ = p.reply.send(if failed {
+                GenOutcome::Failed {
+                    id: p.req.id,
+                    reason: "target pass failed after retries".into(),
+                }
+            } else {
+                GenOutcome::Completed(GenResponse {
                     id: p.req.id,
                     tokens,
                     latency_s: p.t0.elapsed().as_secs_f64(),
-                });
-            }
+                })
+            });
         }
     }
+    Ok(false)
 }
 
-/// Apply one control message; returns false when intake must close
-/// (`Shutdown`).
-fn handle(msg: Msg, engine: &mut dyn Engine,
-          queue: &mut VecDeque<Pending>) -> bool {
+/// Abandon a live slot mid-decode: park its sequence and return its KV
+/// blocks to the pool.
+fn drop_slot(engine: &mut dyn Engine, slot: usize) {
+    let seq = &mut engine.seqs_mut()[slot];
+    seq.done = true;
+    seq.active = false;
+    engine.release(slot);
+}
+
+/// Apply one control message (may flip `st.open` on `Shutdown`).
+fn handle(msg: Msg, engine: &mut dyn Engine, st: &mut LoopState) {
     match msg {
         Msg::Generate(req, reply) => {
-            queue.push_back(Pending { req, reply, t0: Instant::now() });
-            true
+            st.queue
+                .push_back(Pending { req, reply, t0: Instant::now() });
+        }
+        Msg::Cancel(id) => {
+            // Queued: drop from the queue.  Live: abandon the slot and
+            // release its blocks.  Already finished: the original
+            // outcome stands; the cancel is a no-op.
+            if let Some(i) =
+                st.queue.iter().position(|p| p.req.id == id)
+            {
+                let p = st.queue.remove(i).unwrap();
+                engine.metrics_mut().cancelled += 1;
+                let _ =
+                    p.reply.send(GenOutcome::Cancelled { id: p.req.id });
+            } else if let Some(slot) = st.slots.iter().position(|s| {
+                s.as_ref().is_some_and(|p| p.req.id == id)
+            }) {
+                if !engine.seqs()[slot].done {
+                    let p = st.slots[slot].take().unwrap();
+                    drop_slot(engine, slot);
+                    engine.metrics_mut().cancelled += 1;
+                    let _ = p
+                        .reply
+                        .send(GenOutcome::Cancelled { id: p.req.id });
+                }
+            }
         }
         Msg::Metrics(reply) => {
             let _ = reply.send(engine.metrics().clone());
-            true
         }
-        Msg::Shutdown => false,
+        Msg::Shutdown => st.open = false,
     }
 }

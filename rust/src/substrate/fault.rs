@@ -1,0 +1,341 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md
+//! §10).
+//!
+//! A [`FaultPlan`] is a seeded, replayable schedule of injected
+//! failures: draft-pass errors, target-pass errors, transient KV-pool
+//! exhaustion, and host-pool worker panics.  Each configured
+//! [`FaultSpec`] owns its own decorrelated rng stream
+//! (`Rng::new_stream(seed, kind_id)`), and `begin_iteration` draws
+//! exactly one Bernoulli sample per spec per serving iteration — so
+//! the schedule is a pure function of (specs, iteration index),
+//! independent of batch occupancy, timing, or which requests are in
+//! flight.  Cloning the plan and replaying it is how tests compute
+//! the exact expected fault schedule (`tests/fault_injection.rs`,
+//! mirrored in python/refsim/hostsim.py).
+//!
+//! The plan lives on the serving layer's virtual clock: one
+//! `begin_iteration` call per engine step, drawn *before* any engine
+//! state mutates, so recovery paths (retry, degrade, skip) can be
+//! bit-safe for every non-faulted row.
+
+use anyhow::{bail, Result};
+
+use crate::substrate::rng::Rng;
+
+/// Transient target faults retry up to this many times before the
+/// incident is declared persistent and the victim row is failed.
+pub const MAX_TARGET_RETRIES: u64 = 2;
+
+/// Which layer a fault strikes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Draft forward pass fails — the iteration degrades losslessly
+    /// (greedy: K=0 AR+ commit; sampled: hold, see DESIGN.md §10).
+    Draft,
+    /// Target forward pass fails — bounded retries, then only the
+    /// victim row is failed.
+    Target,
+    /// Transient KV-pool exhaustion — admission pauses one iteration.
+    Pool,
+    /// Host worker-pool task panic — caught, pool rebuilt once.
+    Worker,
+}
+
+impl FaultKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "draft" => FaultKind::Draft,
+            "target" => FaultKind::Target,
+            "pool" => FaultKind::Pool,
+            "worker" => FaultKind::Worker,
+            _ => bail!(
+                "unknown fault kind `{s}` (want draft|target|pool|\
+                 worker)"
+            ),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::Draft => "draft",
+            FaultKind::Target => "target",
+            FaultKind::Pool => "pool",
+            FaultKind::Worker => "worker",
+        }
+    }
+
+    /// Stable per-kind stream id — keeps multi-spec plans
+    /// decorrelated even when every spec shares one seed.
+    fn stream(self) -> u64 {
+        match self {
+            FaultKind::Draft => 1,
+            FaultKind::Target => 2,
+            FaultKind::Pool => 3,
+            FaultKind::Worker => 4,
+        }
+    }
+}
+
+/// One `kind:rate:seed` clause of `--fault-spec`.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse a single `kind:rate:seed` clause.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            bail!(
+                "bad fault spec `{s}` (want kind:rate:seed, e.g. \
+                 draft:0.25:11)"
+            );
+        }
+        let kind = FaultKind::parse(parts[0])?;
+        let rate: f64 = match parts[1].parse() {
+            Ok(r) => r,
+            Err(_) => bail!("bad fault rate `{}` in `{s}`", parts[1]),
+        };
+        if !(0.0..=1.0).contains(&rate) {
+            bail!("fault rate {rate} out of [0, 1] in `{s}`");
+        }
+        let seed: u64 = match parts[2].parse() {
+            Ok(r) => r,
+            Err(_) => bail!("bad fault seed `{}` in `{s}`", parts[2]),
+        };
+        Ok(FaultSpec { kind, rate, seed })
+    }
+}
+
+/// A fired target fault: how many consecutive attempts fail this
+/// iteration, and which live row is the victim if the incident turns
+/// persistent (`fails > MAX_TARGET_RETRIES`).  `victim` indexes the
+/// live rows modulo their count — admission order, so the choice is
+/// batch-layout independent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TargetFault {
+    pub fails: u64,
+    pub victim: u64,
+}
+
+/// Everything the plan injects into one serving iteration.  Drawn
+/// before the iteration touches any engine state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSet {
+    /// Number of faults fired this iteration (feeds
+    /// `Metrics::faults_injected`).
+    pub injected: u64,
+    pub draft: bool,
+    pub target: Option<TargetFault>,
+    pub pool: bool,
+    pub worker: bool,
+}
+
+impl FaultSet {
+    pub fn any(&self) -> bool {
+        self.injected > 0
+    }
+}
+
+/// Seeded, replayable fault schedule.  `Clone` is load-bearing:
+/// tests clone the plan before handing it to the serving loop, then
+/// replay the clone to compute the exact expected schedule.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    specs: Vec<(FaultSpec, Rng)>,
+    /// One-shot scripted faults: (kind, iteration index).
+    scripted: Vec<(FaultKind, u64)>,
+    iteration: u64,
+    injected: u64,
+}
+
+impl FaultPlan {
+    pub fn new(specs: Vec<FaultSpec>) -> Self {
+        let specs = specs
+            .into_iter()
+            .map(|s| {
+                let rng = Rng::new_stream(s.seed, s.kind.stream());
+                (s, rng)
+            })
+            .collect();
+        FaultPlan { specs, scripted: Vec::new(), iteration: 0,
+                    injected: 0 }
+    }
+
+    /// Parse a comma-separated `kind:rate:seed[,kind:rate:seed...]`
+    /// list (the `--fault-spec` argument).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut specs = Vec::new();
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            specs.push(FaultSpec::parse(clause)?);
+        }
+        if specs.is_empty() {
+            bail!("empty --fault-spec `{s}`");
+        }
+        Ok(FaultPlan::new(specs))
+    }
+
+    /// Script a one-shot fault at an exact iteration index (0-based).
+    /// Scripted target faults are persistent (`MAX_TARGET_RETRIES +
+    /// 1` failed attempts) with `victim = iteration`.
+    pub fn script(&mut self, kind: FaultKind, iteration: u64) {
+        self.scripted.push((kind, iteration));
+    }
+
+    /// Draw the fault set for the next iteration.  Exactly one
+    /// Bernoulli draw per spec regardless of outcome (plus the
+    /// fails/victim draws when a target spec fires), so the schedule
+    /// replays bit-for-bit.
+    pub fn begin_iteration(&mut self) -> FaultSet {
+        let mut set = FaultSet::default();
+        for (spec, rng) in &mut self.specs {
+            if !rng.chance(spec.rate) {
+                continue;
+            }
+            set.injected += 1;
+            match spec.kind {
+                FaultKind::Draft => set.draft = true,
+                FaultKind::Target => {
+                    let fails = 1 + rng.below(3) as u64;
+                    let victim = rng.next_u64();
+                    // First firing wins if two target specs collide.
+                    set.target.get_or_insert(TargetFault {
+                        fails,
+                        victim,
+                    });
+                }
+                FaultKind::Pool => set.pool = true,
+                FaultKind::Worker => set.worker = true,
+            }
+        }
+        let it = self.iteration;
+        for (kind, when) in &self.scripted {
+            if *when != it {
+                continue;
+            }
+            set.injected += 1;
+            match kind {
+                FaultKind::Draft => set.draft = true,
+                FaultKind::Target => {
+                    set.target = Some(TargetFault {
+                        fails: MAX_TARGET_RETRIES + 1,
+                        victim: it,
+                    });
+                }
+                FaultKind::Pool => set.pool = true,
+                FaultKind::Worker => set.worker = true,
+            }
+        }
+        self.iteration += 1;
+        self.injected += set.injected;
+        set
+    }
+
+    /// Total faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Iterations drawn so far.
+    pub fn iteration(&self) -> u64 {
+        self.iteration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_single_and_list() {
+        let p = FaultPlan::parse("draft:0.25:11").unwrap();
+        assert_eq!(p.specs.len(), 1);
+        let p =
+            FaultPlan::parse("draft:0.25:11,target:0.1:13,pool:0.2:17")
+                .unwrap();
+        assert_eq!(p.specs.len(), 3);
+        assert_eq!(p.specs[1].0.kind, FaultKind::Target);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("draft:0.25").is_err());
+        assert!(FaultPlan::parse("gamma:0.25:1").is_err());
+        assert!(FaultPlan::parse("draft:1.5:1").is_err());
+        assert!(FaultPlan::parse("draft:x:1").is_err());
+        assert!(FaultPlan::parse("draft:0.1:y").is_err());
+    }
+
+    #[test]
+    fn schedule_replays_bit_for_bit() {
+        let mut a = FaultPlan::parse(
+            "draft:0.3:7,target:0.2:9,pool:0.1:5,worker:0.05:3",
+        )
+        .unwrap();
+        let mut b = a.clone();
+        for _ in 0..256 {
+            let fa = a.begin_iteration();
+            let fb = b.begin_iteration();
+            assert_eq!(fa.draft, fb.draft);
+            assert_eq!(fa.target, fb.target);
+            assert_eq!(fa.pool, fb.pool);
+            assert_eq!(fa.worker, fb.worker);
+            assert_eq!(fa.injected, fb.injected);
+        }
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "a 256-iteration storm must fire");
+    }
+
+    #[test]
+    fn rate_zero_never_fires_rate_one_always_fires() {
+        let mut p =
+            FaultPlan::parse("draft:0:1,pool:1:2").unwrap();
+        for _ in 0..64 {
+            let f = p.begin_iteration();
+            assert!(!f.draft);
+            assert!(f.pool);
+            assert_eq!(f.injected, 1);
+        }
+        assert_eq!(p.injected(), 64);
+    }
+
+    #[test]
+    fn scripted_one_shots_fire_exactly_once() {
+        let mut p = FaultPlan::new(vec![]);
+        p.script(FaultKind::Worker, 3);
+        p.script(FaultKind::Target, 5);
+        for it in 0..8u64 {
+            let f = p.begin_iteration();
+            assert_eq!(f.worker, it == 3, "iteration {it}");
+            if it == 5 {
+                let t = f.target.unwrap();
+                assert_eq!(t.fails, MAX_TARGET_RETRIES + 1,
+                           "scripted target faults are persistent");
+                assert_eq!(t.victim, 5);
+            } else {
+                assert!(f.target.is_none());
+            }
+        }
+        assert_eq!(p.injected(), 2);
+        assert_eq!(p.iteration(), 8);
+    }
+
+    #[test]
+    fn target_draws_fails_and_victim_only_when_fired() {
+        // A rate-1 target spec fires every iteration with bounded
+        // fails; transient vs persistent is decided by the draw.
+        let mut p = FaultPlan::parse("target:1:42").unwrap();
+        for _ in 0..64 {
+            let t = p.begin_iteration().target.unwrap();
+            assert!((1..=3).contains(&t.fails));
+        }
+    }
+}

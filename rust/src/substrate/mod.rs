@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod devices;
+pub mod fault;
 pub mod json;
 pub mod prompts;
 pub mod prop;

@@ -17,6 +17,22 @@ pub struct Request {
     pub reference: Vec<i32>,
     pub task: String,
     pub max_new: usize,
+    /// Optional completion deadline, ABSOLUTE seconds on the serving
+    /// clock (same scale as `arrival_s`).  Once the clock passes it the
+    /// batcher drops the request — queued or in flight — releases its
+    /// KV blocks, and reports a typed `DeadlineExceeded` outcome
+    /// (DESIGN.md §10).  `None` = no deadline.
+    pub deadline_s: Option<f64>,
+}
+
+impl Trace {
+    /// Stamp every request with `arrival + budget` as its deadline.
+    pub fn with_deadline_budget(mut self, budget_s: f64) -> Trace {
+        for r in &mut self.requests {
+            r.deadline_s = Some(r.arrival_s + budget_s);
+        }
+        self
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -50,6 +66,7 @@ pub fn build_trace(prompts: &[Prompt], n: usize, arrival: Arrival,
             reference: p.reference.clone(),
             task: p.task.clone(),
             max_new,
+            deadline_s: None,
         });
     }
     Trace { requests }
@@ -101,6 +118,7 @@ pub fn build_shared_prefix_trace(prompts: &[Prompt], n: usize,
             reference: p.reference.clone(),
             task: p.task.clone(),
             max_new,
+            deadline_s: None,
         });
     }
     Trace { requests }
@@ -160,6 +178,7 @@ pub fn build_mixed_trace(prompts: &[Prompt], n: usize, arrival: Arrival,
             reference: Vec::new(),
             task: task.to_string(),
             max_new,
+            deadline_s: None,
         });
     }
     Trace { requests }

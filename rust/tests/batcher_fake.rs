@@ -152,6 +152,7 @@ fn closed_trace(n: usize, max_new: usize) -> Trace {
                 reference: Vec::new(),
                 task: "t".into(),
                 max_new,
+                deadline_s: None,
             })
             .collect(),
     }
@@ -293,6 +294,7 @@ fn stall_before_same_pass_release_is_not_fatal() {
             reference: Vec::new(),
             task: "t".into(),
             max_new,
+            deadline_s: None,
         }
     };
     let trace = Trace {

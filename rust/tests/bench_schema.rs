@@ -34,7 +34,8 @@ fn schema_v1_fields_are_stable() {
     assert_eq!(report.get("backend").unwrap().as_str(), Some("host"));
     for key in ["threads", "seed", "task", "target", "n_prompts",
                 "max_new", "sweep", "runs", "serving_prefix",
-                "policy_mixed", "oracle", "host_vs_reference"] {
+                "policy_mixed", "robustness", "oracle",
+                "host_vs_reference"] {
         assert!(report.get(key).is_some(), "missing top-level `{key}`");
     }
     assert!(report.get("threads").unwrap().as_f64().unwrap() >= 1.0,
@@ -174,6 +175,52 @@ fn policy_mixed_section_reports_all_three_policies() {
                 "costed-clock throughput must be measured");
         assert_eq!(f(r, "completed"), completed,
                    "every policy must serve the whole mixed trace");
+    }
+}
+
+#[test]
+fn serving_chaos_section_degrades_gracefully_with_rate() {
+    let report = smoke_report();
+    let chaos = report
+        .get("robustness")
+        .unwrap()
+        .get("serving_chaos")
+        .unwrap();
+    for key in ["engine", "k", "batch", "n_requests", "max_new",
+                "pass_s", "col_s", "rows"] {
+        assert!(chaos.get(key).is_some(),
+                "serving_chaos missing field `{key}`");
+    }
+    let rows = chaos.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 3, "one row per fault rate");
+    let f = |r: &Json, k: &str| r.get(k).unwrap().as_f64().unwrap();
+    let n_req = f(chaos, "n_requests");
+    for r in rows {
+        for key in ["rate", "completed", "failed", "generated",
+                    "tokens_per_s", "virtual_s", "faults_injected",
+                    "draft_fallbacks", "row_retries", "rows_failed",
+                    "pool_rebuilds", "kv_blocks_at_drain"] {
+            assert!(r.get(key).is_some(),
+                    "serving_chaos row missing field `{key}`");
+        }
+        assert_eq!(f(r, "completed") + f(r, "failed"), n_req,
+                   "every request must end typed: completed or failed");
+        assert_eq!(f(r, "kv_blocks_at_drain"), 0.0,
+                   "fault storms must not leak KV blocks");
+    }
+    let calm = &rows[0];
+    assert_eq!(f(calm, "rate"), 0.0);
+    assert_eq!(f(calm, "faults_injected"), 0.0,
+               "a rate-0 plan must be pass-through");
+    assert_eq!(f(calm, "failed"), 0.0);
+    // the storm rows actually fired, and every row's costed clock
+    // terminated (held/retried iterations charge wasted pass units,
+    // so fault storms cost time instead of deadlocking it)
+    assert!(f(&rows[2], "faults_injected") > 0.0,
+            "a 30% storm over a full serve must fire");
+    for r in rows {
+        let v = f(r, "virtual_s");
+        assert!(v > 0.0 && v.is_finite(), "virtual_s {v}");
     }
 }
 

@@ -1,0 +1,251 @@
+//! Chaos determinism gate (DESIGN.md §10): a seeded `FaultPlan`
+//! injecting draft faults, target faults, transient pool exhaustion,
+//! and one scripted worker panic over a 16-request trace on the
+//! work-costed virtual clock must leave the serving loop standing,
+//! with
+//!
+//! * (a) the engine surviving every incident (no `Err`, no unwound
+//!   serve),
+//! * (b) every NON-faulted request's token stream bit-identical to
+//!   the fault-free run — greedy AND sampled,
+//! * (c) faulted rows ending in typed outcomes with their KV blocks
+//!   back in the pool (`kv_blocks_in_use == 0` at drain), and
+//! * (d) the robustness counters matching the plan's schedule
+//!   EXACTLY, computed by replaying a clone of the plan.
+//!
+//! The replay works because the batcher draws exactly one `FaultSet`
+//! per iteration that steps an already-live batch — the schedule is a
+//! pure function of (specs, draw index), so cloning the plan and
+//! re-drawing `plan.iteration()` sets predicts every counter.
+//! Mirrored in python/refsim/hostsim.py and gated by ci.sh.
+
+use pard::coordinator::batcher::{serve_trace_virtual_costed,
+                                 serve_trace_virtual_costed_with_faults,
+                                 RequestOutcome};
+use pard::coordinator::engines::{build_engine, EngineConfig, EngineKind,
+                                 SamplingCfg};
+use pard::coordinator::policy::PolicyCfg;
+use pard::coordinator::router::default_draft;
+use pard::substrate::fault::{FaultKind, FaultPlan, FaultSpec,
+                             MAX_TARGET_RETRIES};
+use pard::substrate::workload::{build_trace, Arrival};
+use pard::Runtime;
+
+const N_REQ: usize = 16;
+const MAX_NEW: usize = 16;
+const PASS_S: f64 = 1.0;
+const COL_S: f64 = 0.05;
+
+fn cfg(rt: &Runtime, sampling: Option<SamplingCfg>) -> EngineConfig {
+    EngineConfig {
+        kind: EngineKind::Pard,
+        target: "target-m".to_string(),
+        draft: default_draft(&rt.manifest, EngineKind::Pard, "target-m")
+            .unwrap(),
+        batch: 4,
+        k: 4,
+        max_new: MAX_NEW,
+        shared_mask: true,
+        kv_blocks: None,
+        prefix_cache: false,
+        sampling,
+        policy: PolicyCfg::default(),
+    }
+}
+
+/// The storm: every fault kind rate-driven, plus one scripted worker
+/// panic early enough that a 16-request serve is guaranteed to reach
+/// it.  Built twice per test — once to serve, once to replay.
+fn storm_plan() -> FaultPlan {
+    let mut plan = FaultPlan::new(vec![
+        FaultSpec { kind: FaultKind::Draft, rate: 0.25, seed: 11 },
+        FaultSpec { kind: FaultKind::Target, rate: 0.15, seed: 13 },
+        FaultSpec { kind: FaultKind::Pool, rate: 0.10, seed: 17 },
+    ]);
+    plan.script(FaultKind::Worker, 5);
+    plan
+}
+
+/// Counters the serve must report, derived purely from the plan by
+/// replaying `draws` fault sets through the engine's documented
+/// recovery semantics (`fault_prologue`, DESIGN.md §10).
+#[derive(Debug, Default, PartialEq, Eq)]
+struct Expected {
+    faults_injected: u64,
+    draft_fallbacks: u64,
+    row_retries: u64,
+    rows_failed: u64,
+    pool_rebuilds: u64,
+}
+
+fn replay(mut plan: FaultPlan, draws: u64) -> Expected {
+    let mut e = Expected::default();
+    for _ in 0..draws {
+        let fs = plan.begin_iteration();
+        e.faults_injected += fs.injected;
+        if fs.worker {
+            // The prologue panics before any other fault in the set
+            // takes effect; the armed set is already consumed, so the
+            // serving loop's one retry runs clean.
+            e.pool_rebuilds += 1;
+            continue;
+        }
+        if let Some(t) = fs.target {
+            if t.fails > MAX_TARGET_RETRIES {
+                // Persistent: budget exhausted, victim row failed,
+                // iteration skipped (so a co-fired draft fault never
+                // reaches the draft branch).
+                e.row_retries += MAX_TARGET_RETRIES;
+                e.rows_failed += 1;
+                continue;
+            }
+            e.row_retries += t.fails;
+        }
+        if fs.draft {
+            // PARD drafts, so every surviving draft fault becomes a
+            // fallback (greedy: K=0 commit; sampled: held iteration).
+            e.draft_fallbacks += 1;
+        }
+    }
+    e
+}
+
+fn run_chaos(sampling: Option<SamplingCfg>) {
+    let rt = Runtime::reference(7);
+    let prompts = rt.prompts("code").unwrap().prompts;
+    let trace =
+        build_trace(&prompts, N_REQ, Arrival::Closed, MAX_NEW, 7);
+
+    // Fault-free ground truth on the identical costed clock.
+    let mut calm_eng = build_engine(&rt, &cfg(&rt, sampling)).unwrap();
+    calm_eng.warmup().unwrap();
+    let calm = serve_trace_virtual_costed(calm_eng.as_mut(), &trace,
+                                          PASS_S, COL_S)
+        .unwrap();
+    assert_eq!(calm.completed, N_REQ, "baseline must serve everything");
+
+    // The storm.  (a): no Err, no unwound serve — `unwrap` IS the
+    // survival gate.
+    let mut plan = storm_plan();
+    let mut eng = build_engine(&rt, &cfg(&rt, sampling)).unwrap();
+    eng.warmup().unwrap();
+    let storm = serve_trace_virtual_costed_with_faults(
+        eng.as_mut(), &trace, PASS_S, COL_S, &mut plan)
+        .unwrap();
+
+    // (c) every request ends in exactly one typed outcome.
+    assert_eq!(storm.outcomes.len(), N_REQ);
+    assert_eq!(storm.completed + storm.failed, N_REQ,
+               "no request may vanish without a typed outcome");
+    assert_eq!(storm.expired, 0, "no deadlines in this trace");
+
+    // (b) + (c): request-by-request against the fault-free run.
+    let mut n_failed = 0u64;
+    for (i, pair) in
+        storm.outcomes.iter().zip(&calm.outcomes).enumerate()
+    {
+        match pair {
+            (RequestOutcome::Completed { tokens, .. },
+             RequestOutcome::Completed { tokens: want, .. }) => {
+                assert_eq!(tokens, want,
+                           "request {i}: a non-faulted row must be \
+                            bit-identical to the fault-free run");
+            }
+            (RequestOutcome::Failed { reason }, _) => {
+                n_failed += 1;
+                assert!(reason.contains("target pass failed"),
+                        "request {i}: failure must be typed with its \
+                         cause, got `{reason}`");
+            }
+            other => {
+                panic!("request {i}: unexpected outcome pair {other:?}")
+            }
+        }
+    }
+
+    // (c) the storm never leaks KV: pool fully drained.
+    let m = eng.metrics();
+    assert_eq!(m.kv_blocks_in_use, 0,
+               "fault storm must return every KV block");
+
+    // (d) counters match the plan's schedule EXACTLY: replay a fresh
+    // clone of the same plan for exactly as many draws as the serve
+    // consumed.
+    let draws = plan.iteration();
+    assert!(draws > 5, "the serve must reach the scripted panic");
+    let exp = replay(storm_plan(), draws);
+    assert_eq!(m.faults_injected, exp.faults_injected);
+    assert_eq!(m.faults_injected, plan.injected(),
+               "serving layer must count exactly the plan's faults");
+    assert_eq!(m.draft_fallbacks, exp.draft_fallbacks);
+    assert_eq!(m.row_retries, exp.row_retries);
+    assert_eq!(m.rows_failed, exp.rows_failed);
+    assert_eq!(m.pool_rebuilds, exp.pool_rebuilds);
+    assert_eq!(exp.pool_rebuilds, 1,
+               "exactly the one scripted worker panic");
+    assert_eq!(n_failed, exp.rows_failed,
+               "typed Failed outcomes must equal the schedule's \
+                persistent incidents");
+    assert!(m.draft_fallbacks > 0,
+            "a 25% draft rate over {draws} draws must fire");
+    // (No ordering claim on storm vs calm virtual time: a persistent
+    // target incident kills a row EARLY, saving its remaining decode
+    // work, so a storm can legitimately finish sooner than a calm
+    // serve.  What must hold is that both clocks terminate — held and
+    // retried iterations charge wasted pass units.)
+    assert!(storm.wall_s > 0.0 && storm.wall_s.is_finite());
+}
+
+#[test]
+fn chaos_storm_is_lossless_for_survivors_greedy() {
+    run_chaos(None);
+}
+
+#[test]
+fn chaos_storm_is_lossless_for_survivors_sampled() {
+    // Sampled draft faults HOLD the iteration instead of committing
+    // K=0 (a K=0 commit would consume different per-row rng draws),
+    // so bit-identity must hold under temperature sampling too.
+    run_chaos(Some(SamplingCfg { temperature: 0.9, top_p: 0.95,
+                                 seed: 5 }));
+}
+
+/// Deadlines on the batcher's virtual clock: a budget of zero expires
+/// every request — queued AND in-flight — with typed outcomes, no
+/// leaked KV blocks, and an engine healthy enough to serve the next
+/// trace.
+#[test]
+fn zero_deadline_budget_expires_everything_then_engine_recovers() {
+    let rt = Runtime::reference(7);
+    let prompts = rt.prompts("code").unwrap().prompts;
+    let trace = build_trace(&prompts, N_REQ, Arrival::Closed, MAX_NEW, 7)
+        .with_deadline_budget(0.0);
+
+    let mut eng = build_engine(&rt, &cfg(&rt, None)).unwrap();
+    eng.warmup().unwrap();
+    let stats = serve_trace_virtual_costed(eng.as_mut(), &trace,
+                                           PASS_S, COL_S)
+        .unwrap();
+    // The first wave is admitted at t == deadline (not yet expired,
+    // strict >), steps once, and is reaped the moment the costed
+    // clock advances; the queue expires with it.
+    assert_eq!(stats.expired, N_REQ, "budget 0 must expire the trace");
+    assert_eq!(stats.completed, 0);
+    assert!(stats
+        .outcomes
+        .iter()
+        .all(|o| matches!(o, RequestOutcome::DeadlineExceeded)));
+    assert_eq!(eng.metrics().deadline_exceeded, N_REQ as u64);
+    assert_eq!(eng.metrics().kv_blocks_in_use, 0,
+               "expired rows must release their blocks immediately");
+
+    // Same engine, no deadlines: everything completes — mass expiry
+    // left no wedged slots behind.
+    let calm = build_trace(&prompts, N_REQ, Arrival::Closed, MAX_NEW, 7);
+    let stats = serve_trace_virtual_costed(eng.as_mut(), &calm,
+                                           PASS_S, COL_S)
+        .unwrap();
+    assert_eq!(stats.completed, N_REQ);
+    assert_eq!(eng.metrics().deadline_exceeded, N_REQ as u64,
+               "per-event counting: the second serve adds none");
+}

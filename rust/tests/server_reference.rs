@@ -1,12 +1,18 @@
 //! The serve thread (DESIGN.md §3) runs unmodified on the reference
 //! backend: boot a `Server`, generate over channels, read metrics,
-//! shut down — no artifacts on disk.
+//! shut down — no artifacts on disk.  Request-lifecycle gates
+//! (DESIGN.md §10): every request ends in exactly one typed
+//! `GenOutcome` — oversized → `Rejected`, cancel → `Cancelled`,
+//! deadline → `DeadlineExceeded` — and intake errors are typed
+//! (`ServerClosed`), never silently dropped channels.
+
+use std::time::Duration;
 
 use pard::coordinator::engines::{build_engine, generate, EngineConfig,
                                  EngineKind};
 use pard::coordinator::policy::PolicyCfg;
 use pard::runtime::RuntimeSpec;
-use pard::server::{GenRequest, Server};
+use pard::server::{GenOutcome, GenRequest, Server, ServerClosed};
 use pard::Runtime;
 
 fn cfg() -> EngineConfig {
@@ -36,10 +42,10 @@ fn server_thread_serves_reference_backend() {
         .unwrap()
         .remove(0);
 
-    let server =
+    let mut server =
         Server::start(RuntimeSpec::Reference { seed: 7 }, cfg()).unwrap();
     let resp = server
-        .generate(GenRequest { id: 1, prompt: prompt.clone(), max_new: 12 })
+        .generate(GenRequest::new(1, prompt.clone(), 12))
         .unwrap();
     assert_eq!(resp.id, 1);
     assert_eq!(resp.tokens, direct,
@@ -50,11 +56,10 @@ fn server_thread_serves_reference_backend() {
     assert!(m.generated > 0);
 
     // a second request exercises slot reuse inside the server loop
-    let resp2 = server
-        .generate(GenRequest { id: 2, prompt, max_new: 12 })
-        .unwrap();
+    let resp2 = server.generate(GenRequest::new(2, prompt, 12)).unwrap();
     assert_eq!(resp2.tokens, direct);
 
+    assert!(server.fatal_error().is_none(), "healthy engine thread");
     server.shutdown().unwrap();
 }
 
@@ -79,28 +84,30 @@ fn server_batches_concurrent_requests() {
     let mut engine = build_engine(&rt, &c).unwrap();
     let direct = generate(engine.as_mut(), &prompts, c.max_new).unwrap();
 
-    let server =
+    let mut server =
         Server::start(RuntimeSpec::Reference { seed: 7 }, c).unwrap();
     // submit everything before reading any response: all four are
     // outstanding together, so they must flow through the batched path
-    let rxs: Vec<_> = prompts
+    let handles: Vec<_> = prompts
         .iter()
         .enumerate()
         .map(|(i, p)| {
             server
-                .submit(GenRequest {
-                    id: i as u64,
-                    prompt: p.clone(),
-                    max_new: 12,
-                })
+                .submit(GenRequest::new(i as u64, p.clone(), 12))
                 .unwrap()
         })
         .collect();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap();
-        assert_eq!(resp.id, i as u64);
-        assert_eq!(resp.tokens, direct[i],
-                   "request {i}: batched serving changed the stream");
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.recv().unwrap() {
+            GenOutcome::Completed(resp) => {
+                assert_eq!(resp.id, i as u64);
+                assert_eq!(resp.tokens, direct[i],
+                           "request {i}: batched serving changed the \
+                            stream");
+            }
+            other => panic!("request {i}: expected Completed, got \
+                             {other:?}"),
+        }
     }
     let m = server.metrics().unwrap();
     assert_eq!(m.requests, 4);
@@ -108,28 +115,124 @@ fn server_batches_concurrent_requests() {
 }
 
 /// An oversized request (reservation bigger than the whole KV pool)
-/// must fail ITS caller — the reply channel drops — without killing
-/// the engine thread: later, smaller requests still serve.
+/// must get a typed `Rejected` outcome — not a dropped channel —
+/// without killing the engine thread: later, smaller requests still
+/// serve.
 #[test]
 fn oversized_request_rejected_without_killing_server() {
     let mut c = cfg();
     c.kv_blocks = Some(2); // minimum pool: 1 live + 1 garbage block
-    let server =
+    let mut server =
         Server::start(RuntimeSpec::Reference { seed: 7 }, c).unwrap();
     // needs ceil((5 + 64 + 4 + 2)/16) + 1 = 6 blocks > 2: impossible
-    let rx = server
-        .submit(GenRequest { id: 1, prompt: vec![0, 13, 20, 21, 22],
-                             max_new: 64 })
+    let h = server
+        .submit(GenRequest::new(1, vec![0, 13, 20, 21, 22], 64))
         .unwrap();
-    assert!(rx.recv().is_err(),
-            "oversized request must surface an error to its caller");
+    match h.recv().unwrap() {
+        GenOutcome::Rejected { id, reason } => {
+            assert_eq!(id, 1);
+            assert!(reason.contains("--kv-blocks"),
+                    "rejection must say how to fix it: {reason}");
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
     // a small request still fits the pool and completes
     let resp = server
-        .generate(GenRequest { id: 2, prompt: vec![0, 13, 20],
-                               max_new: 4 })
+        .generate(GenRequest::new(2, vec![0, 13, 20], 4))
         .unwrap();
     assert_eq!(resp.id, 2);
     assert!(!resp.tokens.is_empty(), "server must keep serving");
+    server.shutdown().unwrap();
+}
+
+/// `shutdown` stops intake but drains what was already submitted:
+/// requests queued before the shutdown message still complete, and a
+/// submit AFTER shutdown gets the typed `ServerClosed` error.
+#[test]
+fn shutdown_drains_queued_then_closes_intake() {
+    let rt = Runtime::reference(7);
+    let prompt = rt.prompts("code").unwrap().prompts[0].prompt.clone();
+    let mut server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, cfg()).unwrap();
+    let handles: Vec<_> = (0..3)
+        .map(|i| {
+            server.submit(GenRequest::new(i, prompt.clone(), 8)).unwrap()
+        })
+        .collect();
+    // Shutdown queues BEHIND the three Generate messages (one mpsc
+    // channel), so intake closes only after they are all in.
+    server.shutdown().unwrap();
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.recv().unwrap() {
+            GenOutcome::Completed(resp) => {
+                assert_eq!(resp.id, i as u64);
+                assert!(!resp.tokens.is_empty());
+            }
+            other => panic!("queued request {i} must complete through \
+                             shutdown, got {other:?}"),
+        }
+    }
+    match server.submit(GenRequest::new(9, prompt, 8)) {
+        Err(ServerClosed) => {}
+        Ok(_) => panic!("submit after shutdown must fail typed"),
+    }
+    // shutdown is idempotent
+    server.shutdown().unwrap();
+}
+
+/// Cancelling a queued request yields a typed `Cancelled` outcome and
+/// counts in the metrics; the in-flight request ahead of it is
+/// untouched.
+#[test]
+fn cancel_queued_request_yields_typed_outcome() {
+    let rt = Runtime::reference(7);
+    let prompt = rt.prompts("code").unwrap().prompts[0].prompt.clone();
+    // batch 1: the second submission stays queued while the first
+    // decodes, so the cancel deterministically lands on a queued row.
+    let mut server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, cfg()).unwrap();
+    let h1 = server
+        .submit(GenRequest::new(1, prompt.clone(), 12))
+        .unwrap();
+    let h2 = server.submit(GenRequest::new(2, prompt, 12)).unwrap();
+    h2.cancel();
+    match h2.recv().unwrap() {
+        GenOutcome::Cancelled { id } => assert_eq!(id, 2),
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    match h1.recv().unwrap() {
+        GenOutcome::Completed(resp) => {
+            assert_eq!(resp.id, 1);
+            assert!(!resp.tokens.is_empty(),
+                    "the live request must be unaffected");
+        }
+        other => panic!("expected Completed, got {other:?}"),
+    }
+    let m = server.metrics().unwrap();
+    assert_eq!(m.cancelled, 1);
+    server.shutdown().unwrap();
+}
+
+/// A request whose deadline has already passed is dropped with a typed
+/// `DeadlineExceeded` outcome — and its KV blocks never stay pinned.
+#[test]
+fn expired_deadline_yields_typed_outcome() {
+    let rt = Runtime::reference(7);
+    let prompt = rt.prompts("code").unwrap().prompts[0].prompt.clone();
+    let mut server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, cfg()).unwrap();
+    let mut req = GenRequest::new(1, prompt.clone(), 12);
+    req.deadline = Some(Duration::ZERO); // expired on arrival
+    let h = server.submit(req).unwrap();
+    match h.recv().unwrap() {
+        GenOutcome::DeadlineExceeded { id } => assert_eq!(id, 1),
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let m = server.metrics().unwrap();
+    assert_eq!(m.deadline_exceeded, 1);
+    // the engine keeps serving afterwards
+    let resp = server.generate(GenRequest::new(2, prompt, 8)).unwrap();
+    assert!(!resp.tokens.is_empty());
     server.shutdown().unwrap();
 }
 

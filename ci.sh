@@ -16,10 +16,15 @@
 #
 # Perf gate (opt-in): point PARD_CI_BENCH_BASELINE at a committed
 # BENCH_hotpath.json and the script reruns `pard bench --compare` —
-# any >10% per-cell tokens/s regression fails CI.
+# any >10% per-cell tokens/s regression fails CI (q8 cells from the
+# report's `quant` section are gated too once the baseline carries
+# them; older baselines get a warning, not a failure).
 #
 # Python mirror gate: when python3 exists, the executable
 # layout-equality mirror (python/refsim/hostsim.py, which also replays
+# the int8 per-panel quantization of runtime/quant.rs — codes, scales,
+# half-away-from-zero rounding, the zero-accumulator panel sweep, and
+# the bounded-per-logit-error contract of the host-q8 forward — plus
 # the paged block table, prefix-sharing/COW layout, the stochastic
 # sampling accept/residual math of coordinator/sampling.rs, and the
 # adaptive speculation-policy gates of coordinator/policy.rs — the

@@ -141,7 +141,17 @@ impl Metrics {
     pub fn record_fwd(&mut self, out: &FwdOut) {
         self.fwd_s += out.elapsed_s;
         if let Some(ops) = &out.ops {
+            // Ledger invariant at every call site: the op phases are
+            // disjoint laps of the same call, so their sum can never
+            // exceed the call's own elapsed time — nor can the running
+            // totals diverge (epsilons absorb float summation noise).
+            debug_assert!(ops.total() <= out.elapsed_s + 1e-9,
+                          "fwd_ops {} exceeds elapsed {}",
+                          ops.total(), out.elapsed_s);
             self.fwd_ops.add(ops);
+            debug_assert!(self.fwd_ops.total() <= self.fwd_s + 1e-6,
+                          "cumulative fwd_ops {} exceeds fwd_s {}",
+                          self.fwd_ops.total(), self.fwd_s);
         }
     }
 

@@ -20,14 +20,16 @@
 //!   fig    --which 1a|1b|2|6a|6b
 //!   info
 //!
-//! Every subcommand accepts `--backend pjrt|reference|host` (default
-//! pjrt; `bench` is always artifact-free): `reference` runs the
-//! deterministic scalar oracle (DESIGN.md §6), `host` the fast host
-//! serving path over the same weights (DESIGN.md §8) — no artifacts,
-//! no Python — with `--seed N` selecting the synthetic weights.  The
-//! host backend also takes `--threads N` to pin its worker-pool size
-//! (default: `PARD_HOST_THREADS`, then available cores); outputs are
-//! bit-identical for every pool size.  `--kv-blocks N` sizes each KV
+//! Every subcommand accepts `--backend pjrt|reference|host|host-q8`
+//! (default pjrt; `bench` is always artifact-free): `reference` runs
+//! the deterministic scalar oracle (DESIGN.md §6), `host` the fast
+//! host serving path over the same weights (DESIGN.md §8) — no
+//! artifacts, no Python — with `--seed N` selecting the synthetic
+//! weights, and `host-q8` the int8 per-panel quantized twin (~4× less
+//! weight traffic, bounded-error rather than bit-identity contract).
+//! The host backends also take `--threads N` to pin their worker-pool
+//! size (default: `PARD_HOST_THREADS`, then available cores); outputs
+//! are bit-identical for every pool size.  `--kv-blocks N` sizes each KV
 //! cache's paged block pool (DESIGN.md §7) — admission then waits on
 //! free blocks instead of assuming worst-case dense rows — and
 //! `serve --virtual-tick S` runs the batcher on a deterministic
@@ -78,8 +80,9 @@ use pard::coordinator::batcher::{
     serve_trace_virtual_with_faults, serve_trace_with_faults,
 };
 use pard::substrate::fault::FaultPlan;
-use pard::report::bench::{compare_reports, hotpath_report, write_report,
-                          BenchOpts, BENCH_FILE, COMPARE_TOL};
+use pard::report::bench::{compare_quant, compare_reports,
+                          hotpath_report, write_report, BenchOpts,
+                          BENCH_FILE, COMPARE_TOL};
 use pard::report::{self, RunScale};
 use pard::substrate::json::Json;
 use pard::substrate::workload::{build_shared_prefix_trace, build_trace,
@@ -139,6 +142,7 @@ enum BackendSel {
     Pjrt,
     Reference,
     HostFast,
+    HostQ8,
 }
 
 /// `--backend` parse.  Unknown values are an error, not a silent
@@ -147,9 +151,10 @@ fn backend_sel(args: &Args) -> Result<BackendSel> {
     match args.get("backend", "pjrt").as_str() {
         "reference" | "ref" => Ok(BackendSel::Reference),
         "host" => Ok(BackendSel::HostFast),
+        "host-q8" => Ok(BackendSel::HostQ8),
         "pjrt" => Ok(BackendSel::Pjrt),
         other => anyhow::bail!("unknown backend `{other}` \
-                                (pjrt|reference|host)"),
+                                (pjrt|reference|host|host-q8)"),
     }
 }
 
@@ -174,12 +179,18 @@ fn open_runtime(args: &Args) -> Result<Runtime> {
     let seed = args.usize("seed", 7) as u64;
     let threads = threads_opt(args)?;
     let sel = backend_sel(args)?;
-    anyhow::ensure!(threads.is_none() || sel == BackendSel::HostFast,
-                    "--threads only applies to --backend host");
+    anyhow::ensure!(
+        threads.is_none()
+            || matches!(sel, BackendSel::HostFast | BackendSel::HostQ8),
+        "--threads only applies to --backend host|host-q8"
+    );
     match sel {
         BackendSel::Reference => Ok(Runtime::reference(seed)),
         BackendSel::HostFast => {
             Ok(Runtime::host_with_threads(seed, threads))
+        }
+        BackendSel::HostQ8 => {
+            Ok(Runtime::host_q8_with_threads(seed, threads))
         }
         BackendSel::Pjrt => Runtime::load(&artifacts_dir(args)),
     }
@@ -563,11 +574,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // non-host backends error instead of silently measuring host.
     match args.get("backend", "host").as_str() {
         "host" => {}
-        "pjrt" | "reference" | "ref" => anyhow::bail!(
+        "pjrt" | "reference" | "ref" | "host-q8" => anyhow::bail!(
             "pard bench always measures the host backend (the scalar \
-             oracle is included unless --no-oracle) — drop --backend"),
+             oracle is included unless --no-oracle, and the q8 twin is \
+             measured in the report's `quant` section) — drop --backend"),
         other => anyhow::bail!("unknown backend `{other}` \
-                                (pjrt|reference|host)"),
+                                (pjrt|reference|host|host-q8)"),
     }
     let opts = BenchOpts {
         seed: args.usize("seed", 7) as u64,
@@ -616,7 +628,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // (engine, K, batch) cell — the perf trajectory as a gate, not
     // advisory prose.
     if let Some((old_path, old)) = baseline {
-        let regressions = compare_reports(&old, &report, COMPARE_TOL);
+        let mut regressions = compare_reports(&old, &report, COMPARE_TOL);
+        // quant section: gate when the baseline has it, warn-not-fail
+        // when the baseline predates the host-q8 backend entirely.
+        let (has_quant, quant_lines) =
+            compare_quant(&old, &report, COMPARE_TOL);
+        if has_quant {
+            regressions.extend(quant_lines);
+        } else {
+            eprintln!("compare: baseline {old_path} predates the \
+                       `quant` section — q8 cells not gated this run \
+                       (refresh the baseline to arm them)");
+        }
         if regressions.is_empty() {
             println!("compare: no >{:.0}% tokens/s regression vs {}",
                      COMPARE_TOL * 100.0, old_path);

@@ -15,6 +15,11 @@
 //! [`compare_reports`] turns the trajectory into a gate: `pard bench
 //! --compare OLD.json` fails when any (engine, K, batch) cell loses
 //! more than [`COMPARE_TOL`] of its tokens/s against the older report.
+//! The additive `quant` section measures the int8 host twin
+//! (`--backend host-q8`) against the f32 host path — per-logit error
+//! probe, per-op weight-bytes ledger, tokens/s + accept deltas — and
+//! is gated by [`compare_quant`], which warns (not fails) when the
+//! baseline predates the section.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -25,6 +30,7 @@ use crate::coordinator::engines::{EngineConfig, EngineKind};
 use crate::coordinator::evaluate::{run_eval, EvalResult};
 use crate::coordinator::policy::PolicyCfg;
 use crate::coordinator::router::default_draft;
+use crate::runtime::OpWeightBytes;
 use crate::substrate::json::Json;
 use crate::Runtime;
 
@@ -426,6 +432,135 @@ fn serving_chaos_json(rt: &Runtime, o: &BenchOpts) -> Result<Json> {
     ]))
 }
 
+fn weight_bytes_json(w: &OpWeightBytes) -> Json {
+    obj(vec![
+        ("qkv", num(w.qkv as f64)),
+        ("wo", num(w.wo as f64)),
+        ("mlp", num(w.mlp as f64)),
+        ("logits", num(w.logits as f64)),
+        ("fuse", num(w.fuse as f64)),
+        ("total", num(w.total() as f64)),
+    ])
+}
+
+/// Quantized-backend rows (`quant` in the report, additive v1): the
+/// int8 per-panel host twin (`--backend host-q8`) measured against the
+/// f32 host path it derives from.  Three parts: a fwd probe recording
+/// the max per-logit |q8 − f32| error on the target model (the
+/// bounded-error contract, as a number in the trajectory), the per-op
+/// weight-bytes ledger for both representations (the Table 6 bytes
+/// argument: ~4× less traffic), and AR+/PARD eval rows on both
+/// backends with tokens/s and accept-rate deltas.  `--compare` gates
+/// the q8 rows through [`compare_quant`], which *warns* instead of
+/// failing when the baseline predates this section.
+fn quant_json(host_rt: &Runtime, o: &BenchOpts) -> Result<Json> {
+    let q8_rt = Runtime::host_q8_with_threads(o.seed, o.threads);
+
+    // -- fwd probe: max per-logit error on the target model --
+    let f32_m = host_rt.model(&o.target)?;
+    let q8_m = q8_rt.model(&o.target)?;
+    let toks = [0i32, 13, 20, 21, 33, 40];
+    let pos = [0i32, 1, 2, 3, 4, 5];
+    let t = toks.len();
+    let cf = f32_m.new_cache(1)?;
+    let cq = q8_m.new_cache(1)?;
+    let a = f32_m.fwd(1, t, &toks, &pos, None, &cf)?;
+    let b = q8_m.fwd(1, t, &toks, &pos, None, &cq)?;
+    let mut max_abs_err = 0f64;
+    let mut max_abs_logit = 0f64;
+    for (x, y) in a.logits.iter().zip(&b.logits) {
+        max_abs_err = max_abs_err.max((x - y).abs() as f64);
+        max_abs_logit = max_abs_logit.max(x.abs() as f64);
+    }
+
+    // -- weight-bytes ledger, both representations --
+    let (wf, wq) = (f32_m.op_weight_bytes(), q8_m.op_weight_bytes());
+    let ratio = if wq.total() > 0 {
+        wf.total() as f64 / wq.total() as f64
+    } else {
+        0.0
+    };
+
+    // -- eval rows: AR+ and PARD on f32 host vs host-q8 --
+    let k = o.ks.first().copied().unwrap_or(4);
+    let (n_prompts, max_new) = (o.n_prompts.min(4), o.max_new.min(16));
+    let mut rows = Vec::new();
+    let mut tps = BTreeMap::new();
+    let mut accept = BTreeMap::new();
+    for (rt, backend) in [(host_rt, "host"), (&q8_rt, "host-q8")] {
+        for kind in [EngineKind::ArPlus, EngineKind::Pard] {
+            let cfg = EngineConfig {
+                kind,
+                target: o.target.clone(),
+                draft: default_draft(&rt.manifest, kind, &o.target)?,
+                batch: 1,
+                k,
+                max_new,
+                shared_mask: true,
+                kv_blocks: None,
+                prefix_cache: false,
+                sampling: None,
+                policy: PolicyCfg::default(),
+            };
+            let prompts = rt.prompts(&o.task)?.take(n_prompts);
+            let r = run_eval(rt, &cfg, &prompts, max_new, &o.task)?;
+            let m = &r.metrics;
+            tps.insert((kind.label(), backend), m.tps());
+            accept.insert((kind.label(), backend), m.mean_accept_len());
+            rows.push(obj(vec![
+                ("engine", Json::Str(kind.label().to_string())),
+                ("backend", Json::Str(backend.to_string())),
+                ("k", if kind == EngineKind::ArPlus {
+                    Json::Null
+                } else {
+                    num(k as f64)
+                }),
+                ("batch", num(1.0)),
+                ("tokens_per_s", num(m.tps())),
+                ("mean_accept_len", num(m.mean_accept_len())),
+                ("generated", num(m.generated as f64)),
+            ]));
+        }
+    }
+    // q8-vs-f32 deltas per engine: the throughput win the smaller
+    // weight stream buys, and the accept-rate cost of drafting /
+    // verifying with perturbed logits.
+    let deltas = ["AR+", "PARD"]
+        .iter()
+        .map(|&e| {
+            let f = tps.get(&(e, "host")).copied().unwrap_or(0.0);
+            let q = tps.get(&(e, "host-q8")).copied().unwrap_or(0.0);
+            let af = accept.get(&(e, "host")).copied().unwrap_or(0.0);
+            let aq = accept.get(&(e, "host-q8")).copied().unwrap_or(0.0);
+            obj(vec![
+                ("engine", Json::Str(e.to_string())),
+                ("tps_ratio_q8_vs_f32",
+                 num(if f > 0.0 { q / f } else { 0.0 })),
+                ("accept_len_delta", num(aq - af)),
+            ])
+        })
+        .collect();
+    Ok(obj(vec![
+        ("backend", Json::Str(q8_rt.backend_label().to_string())),
+        ("probe", obj(vec![
+            ("model", Json::Str(o.target.clone())),
+            ("t", num(t as f64)),
+            ("max_abs_logit_err", num(max_abs_err)),
+            ("max_abs_logit", num(max_abs_logit)),
+        ])),
+        ("weight_bytes", obj(vec![
+            ("f32", weight_bytes_json(&wf)),
+            ("q8", weight_bytes_json(&wq)),
+            ("f32_over_q8", num(ratio)),
+        ])),
+        ("k", num(k as f64)),
+        ("n_prompts", num(n_prompts as f64)),
+        ("max_new", num(max_new as f64)),
+        ("runs", Json::Arr(rows)),
+        ("deltas", Json::Arr(deltas)),
+    ]))
+}
+
 /// Run the sweep and build the full report document.
 ///
 /// The host backend is always measured; with `opts.oracle` the scalar
@@ -464,6 +599,10 @@ pub fn hotpath_report(opts: &BenchOpts) -> Result<Json> {
         ("robustness", obj(vec![
             ("serving_chaos", serving_chaos_json(&host_rt, opts)?),
         ])),
+        // Additive v1 object: the int8 host twin vs the f32 host path
+        // ([`quant_json`]).  Baselines that predate it only *warn* in
+        // `--compare` ([`compare_quant`]).
+        ("quant", quant_json(&host_rt, opts)?),
     ];
 
     if opts.oracle {
@@ -574,6 +713,64 @@ pub fn compare_reports(old: &Json, new: &Json, tol: f64) -> Vec<String> {
     lines
 }
 
+/// Diff the `quant` sections of two reports.  Returns `(baseline_has
+/// _quant, regressions)`: when the old report predates the `quant`
+/// section entirely (reports written before the host-q8 backend
+/// existed), the first element is `false` and the caller should WARN,
+/// not fail — an old baseline must stay usable as a tokens/s gate.
+/// When both reports carry the section, q8 cells are gated exactly
+/// like the main sweep: a (engine, backend) row losing more than `tol`
+/// of its tokens/s, or disappearing, is a regression line.
+pub fn compare_quant(old: &Json, new: &Json, tol: f64)
+                     -> (bool, Vec<String>) {
+    let Some(old_q) = old.get("quant") else {
+        return (false, Vec::new());
+    };
+    let rows = |j: &Json| -> Vec<Json> {
+        j.get("runs")
+            .and_then(|r| r.as_arr())
+            .map(|a| a.to_vec())
+            .unwrap_or_default()
+    };
+    let key = |run: &Json| -> (String, String) {
+        let field = |k: &str| {
+            run.get(k).map(|v| v.to_string()).unwrap_or_default()
+        };
+        (field("engine"), field("backend"))
+    };
+    let new_rows = new.get("quant").map(rows).unwrap_or_default();
+    let new_tps: BTreeMap<_, f64> = new_rows
+        .iter()
+        .map(|r| (key(r), cell_tps(r)))
+        .collect();
+    let mut lines = Vec::new();
+    for run in rows(old_q) {
+        let k = key(&run);
+        let old_tps = cell_tps(&run);
+        if old_tps <= 0.0 {
+            continue;
+        }
+        match new_tps.get(&k) {
+            None => lines.push(format!(
+                "quant engine={} backend={}: cell missing from the new \
+                 report ({old_tps:.1} tok/s before)",
+                k.0, k.1
+            )),
+            Some(&tps) if tps < old_tps * (1.0 - tol) => {
+                lines.push(format!(
+                    "quant engine={} backend={}: {old_tps:.1} -> \
+                     {tps:.1} tok/s ({:+.1}%, tolerance -{:.0}%)",
+                    k.0, k.1,
+                    (tps / old_tps - 1.0) * 100.0,
+                    tol * 100.0
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    (true, lines)
+}
+
 /// Serialize `report` to `path` (single line + trailing newline — the
 /// in-repo JSON writer emits no insignificant whitespace).
 pub fn write_report(path: &Path, report: &Json) -> Result<()> {
@@ -649,5 +846,51 @@ mod tests {
                                 ("PARD", Some(16), 1, 500.0)]);
         assert!(compare_reports(&old, &new, COMPARE_TOL).is_empty(),
                 "zero baselines and sweep widening are not regressions");
+    }
+
+    /// Fake report with a `quant` section holding the given
+    /// (engine, backend, tps) rows.
+    fn fake_quant_report(cells: &[(&str, &str, f64)]) -> Json {
+        let runs = cells
+            .iter()
+            .map(|&(engine, backend, tps)| {
+                obj(vec![
+                    ("engine", Json::Str(engine.to_string())),
+                    ("backend", Json::Str(backend.to_string())),
+                    ("tokens_per_s", num(tps)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("runs", Json::Arr(Vec::new())),
+            ("quant", obj(vec![("runs", Json::Arr(runs))])),
+        ])
+    }
+
+    #[test]
+    fn compare_quant_warns_when_baseline_predates_section() {
+        // An old report with no `quant` key at all: signal warn, no
+        // regression lines — the f32 gate must stay usable.
+        let old = fake_report(&[("AR+", None, 1, 100.0)]);
+        let new = fake_quant_report(&[("PARD", "host-q8", 200.0)]);
+        let (has, lines) = compare_quant(&old, &new, COMPARE_TOL);
+        assert!(!has, "missing quant section must be flagged as absent");
+        assert!(lines.is_empty());
+    }
+
+    #[test]
+    fn compare_quant_gates_q8_cells_like_the_main_sweep() {
+        let old = fake_quant_report(&[("AR+", "host-q8", 100.0),
+                                      ("PARD", "host-q8", 300.0),
+                                      ("PARD", "host", 400.0)]);
+        let new = fake_quant_report(&[("AR+", "host-q8", 97.0),
+                                      ("PARD", "host-q8", 150.0)]);
+        let (has, lines) = compare_quant(&old, &new, COMPARE_TOL);
+        assert!(has);
+        assert_eq!(lines.len(), 2,
+                   "one halved q8 cell + one missing host cell: {lines:?}");
+        assert!(lines.iter().any(|l| l.contains("host-q8")
+                                 && l.contains("300.0")));
+        assert!(lines.iter().any(|l| l.contains("missing")));
     }
 }

@@ -74,6 +74,34 @@ impl FwdOps {
     }
 }
 
+/// Weight bytes one full forward pass streams, bucketed to match the
+/// [`FwdOps`] time ledger (gather and attention read activations and
+/// KV, not matmul weights, so they have no bucket here).  Together with
+/// the per-op times this is the measured side of the paper's Table 6
+/// bandwidth argument: bytes-per-token for a draft phase is
+/// `draft_passes · total() / tokens` — flat in K for PARD (one pass
+/// drafts K tokens), linear in K for sequential drafters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpWeightBytes {
+    /// Fused `[d, 3·H·D]` QKV projection panels.
+    pub qkv: usize,
+    /// `[H·D, d]` attention output projection.
+    pub wo: usize,
+    /// Fused `[d, 2·ff]` gate/up + `[ff, d]` down projections.
+    pub mlp: usize,
+    /// Packed `[d, vocab]` tied-embedding transpose (logit projection).
+    pub logits: usize,
+    /// `[2d, d]` EAGLE fuse projection (0 on standard LM models).
+    pub fuse: usize,
+}
+
+impl OpWeightBytes {
+    /// All matmul weight bytes one forward pass sweeps.
+    pub fn total(&self) -> usize {
+        self.qkv + self.wo + self.mlp + self.logits + self.fuse
+    }
+}
+
 /// Host-side result of one `fwd` call.
 pub struct FwdOut {
     /// `[b, t, vocab]` row-major.
@@ -104,6 +132,14 @@ pub trait Backend {
     fn pick_t(&self, b: usize, t_needed: usize) -> Result<usize>;
 
     fn new_cache(&self, batch: usize) -> Result<KvCache>;
+
+    /// Weight bytes one forward pass streams, per [`FwdOps`] bucket, in
+    /// this backend's storage representation (f32 panels vs int8+scales
+    /// on `host-q8`).  Default: all zeros, for backends that don't
+    /// account weight traffic (oracle, PJRT, scripted test fakes).
+    fn op_weight_bytes(&self) -> OpWeightBytes {
+        OpWeightBytes::default()
+    }
 
     /// [`Backend::new_cache`] with the host block pool pinned to
     /// `kv_blocks` blocks (`--kv-blocks`, DESIGN.md §7).  `None` keeps

@@ -26,13 +26,26 @@
 //!   batch-row split on per-call scoped threads, this parallelizes
 //!   batch=1 decode and single-row prefill, and pays thread spawn cost
 //!   zero times per call instead of once.
-//! * **Packed, fused weights.**  All weight matrices are packed into
-//!   contiguous column panels (`PackedMat`) at build time; the Q/K/V
-//!   projections are fused into one `[d, 3·H·D]` sweep and the MLP
-//!   gate/up into one `[d, 2·ff]` sweep, cutting three (two) passes
-//!   over the normed activations to one while preserving each output
-//!   cell's k-ascending chain.  The logit projection runs over the
-//!   packed transpose of the tied embedding, as before.
+//! * **Packed, fused weights swept by 8-wide lane micro-kernels.**
+//!   All weight matrices are packed into contiguous column panels
+//!   (`PackedMat`) at build time; the Q/K/V projections are fused into
+//!   one `[d, 3·H·D]` sweep and the MLP gate/up into one `[d, 2·ff]`
+//!   sweep, cutting three (two) passes over the normed activations to
+//!   one while preserving each output cell's k-ascending chain.  The
+//!   logit projection runs over the packed transpose of the tied
+//!   embedding, as before.  Every panel sweep runs through an explicit
+//!   [`LANE`]-wide (`[f32; 8]`) register micro-kernel — two lanes per
+//!   [`PANEL`] — that keeps each column cell's chain in a register
+//!   across the whole k loop instead of a load/add/store per k.  The
+//!   lane split is across output columns `j` while every reduction
+//!   index is `k`, so no per-cell chain is reassociated and bit-
+//!   identity survives (DESIGN.md §8).
+//! * **An int8 per-panel quantized twin** ([`super::quant`],
+//!   `--backend host-q8`): [`HostMat`] lets every matmul site hold
+//!   either the f32 panels or their symmetric per-panel int8
+//!   quantization.  q8 trades the bit-identity contract for ~4×
+//!   less weight traffic under a bounded-error contract of its own
+//!   (see `quant.rs`); everything else in this file is shared.
 //! * **Dead work is skipped, not recomputed.**  Parked cells (queries
 //!   positioned at the garbage slot, DESIGN.md §7) are dropped before
 //!   the first matmul; their logits/hidden/staged-KV outputs are zeros.
@@ -68,15 +81,34 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::artifact::{ModelCfg, ModelEntry, ModelKind};
-use super::backend::{Backend, FwdOps, FwdOut, KvStage};
+use super::backend::{Backend, FwdOps, FwdOut, KvStage, OpWeightBytes};
 use super::cache::{CacheState, KvCache, KV_BLOCK};
 use super::pool::{chunk, default_threads, SharedSlice, WorkerPool};
+use super::quant::QuantizedMat;
 use super::reference::{rmsnorm, RefModel};
 
 /// Packed panel width (output columns per panel).  16 f32 = one 64-byte
 /// cache line, and every synthetic-family width (`h·dh`, `ff`, `vocab`,
 /// `d`) is a multiple of it; ragged tails are still handled.
 pub(crate) const PANEL: usize = 16;
+
+/// SIMD micro-kernel width: 8 f32 lanes (one AVX/NEON-pair register),
+/// two lanes per [`PANEL`].  The kernels below are written as portable
+/// `[f32; LANE]` chunk ops the autovectorizer cannot miss; the value
+/// is a layout choice only — lanes split output *columns*, never a
+/// reduction, so it can never change a bit (DESIGN.md §8).
+pub(crate) const LANE: usize = 8;
+
+/// The 8-wide micro-kernel: `acc[l] += av * wr[l]` for one k step.
+/// Each accumulator lane is one output cell's chain, so the k loop
+/// around this performs exactly the oracle's per-cell adds in order —
+/// just eight chains abreast, in registers.
+#[inline(always)]
+pub(crate) fn lane8_fma(acc: &mut [f32; LANE], av: f32, wr: &[f32]) {
+    for l in 0..LANE {
+        acc[l] += av * wr[l];
+    }
+}
 
 /// Minimum matmul MACs (`n · din · dout`) before a pool dispatch beats
 /// running the sweep on the caller lane.  Chosen so decode-shaped
@@ -122,12 +154,29 @@ impl PackedMat {
         self.dout.div_ceil(PANEL)
     }
 
+    /// Bytes of packed weight data one full sweep streams (f32 panels
+    /// including ragged-tail padding) — the bandwidth-model numerator
+    /// for `benches/table6_bandwidth.rs`.
+    pub(crate) fn weight_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
     /// `out[n, dout] += a[n, din] @ w` restricted to panels `p0..p1`.
     /// Bit-identical to `matmul_acc` over the matching column range for
     /// any panel partition (the §8 column-decomposition contract).
     ///
     /// `out` is a [`SharedSlice`] so concurrent lanes can each own a
     /// disjoint panel range of the same buffer.
+    ///
+    /// Each panel runs the [`lane8_fma`] micro-kernel on two
+    /// `[f32; LANE]` register accumulators loaded from the existing
+    /// output values, so every column cell's chain still starts where
+    /// the oracle's does and adds in the same k-ascending order — but
+    /// stays in a register across the whole k loop instead of paying a
+    /// load/add/store per k.  Ragged tails load/store only the live
+    /// `cols` cells; the dead lanes accumulate over the panel's zero
+    /// padding and are never written back, so widths below one SIMD
+    /// chunk (`cols < LANE`) take the same code path.
     pub(crate) fn matmul_acc_panels(&self, a: &[f32], out: &SharedSlice,
                                     n: usize, p0: usize, p1: usize) {
         let (din, dout) = (self.din, self.dout);
@@ -140,27 +189,90 @@ impl PackedMat {
                 // SAFETY: lanes own disjoint panel ranges, so these
                 // column cells belong to this lane alone.
                 let or = unsafe { out.range(i * dout + c0, cols) };
+                let mut acc0 = [0f32; LANE];
+                let mut acc1 = [0f32; LANE];
+                let lo = cols.min(LANE);
+                acc0[..lo].copy_from_slice(&or[..lo]);
+                if cols > LANE {
+                    acc1[..cols - LANE]
+                        .copy_from_slice(&or[LANE..cols]);
+                }
                 for (ki, &av) in ar.iter().enumerate() {
-                    let wr = &pan[ki * PANEL..ki * PANEL + cols];
-                    for j in 0..cols {
-                        or[j] += av * wr[j];
-                    }
+                    let wr = &pan[ki * PANEL..(ki + 1) * PANEL];
+                    lane8_fma(&mut acc0, av, &wr[..LANE]);
+                    lane8_fma(&mut acc1, av, &wr[LANE..]);
+                }
+                or[..lo].copy_from_slice(&acc0[..lo]);
+                if cols > LANE {
+                    or[LANE..cols]
+                        .copy_from_slice(&acc1[..cols - LANE]);
                 }
             }
         }
     }
 }
 
-/// One layer's build-time packed weights (see module docs).
+/// A matmul weight in either host representation: f32 panels (the
+/// bit-identical fast path) or their int8 per-panel quantization
+/// (`--backend host-q8`, bounded-error contract — see
+/// [`super::quant`]).  Both share the `[n_panels, din, PANEL]` layout,
+/// the panel-range sweep signature, and therefore the pool partition.
+pub(crate) enum HostMat {
+    F32(PackedMat),
+    Q8(QuantizedMat),
+}
+
+impl HostMat {
+    fn din(&self) -> usize {
+        match self {
+            HostMat::F32(m) => m.din,
+            HostMat::Q8(m) => m.din(),
+        }
+    }
+
+    fn dout(&self) -> usize {
+        match self {
+            HostMat::F32(m) => m.dout,
+            HostMat::Q8(m) => m.dout(),
+        }
+    }
+
+    fn n_panels(&self) -> usize {
+        match self {
+            HostMat::F32(m) => m.n_panels(),
+            HostMat::Q8(m) => m.n_panels(),
+        }
+    }
+
+    /// Weight bytes one full sweep streams in this representation
+    /// (q8: ~1/4 of f32, plus one scale per panel).
+    pub(crate) fn weight_bytes(&self) -> usize {
+        match self {
+            HostMat::F32(m) => m.weight_bytes(),
+            HostMat::Q8(m) => m.weight_bytes(),
+        }
+    }
+
+    fn matmul_acc_panels(&self, a: &[f32], out: &SharedSlice, n: usize,
+                         p0: usize, p1: usize) {
+        match self {
+            HostMat::F32(m) => m.matmul_acc_panels(a, out, n, p0, p1),
+            HostMat::Q8(m) => m.matmul_acc_panels(a, out, n, p0, p1),
+        }
+    }
+}
+
+/// One layer's build-time packed weights (see module docs), in either
+/// representation (f32 panels or int8 per-panel quantization).
 struct PackedLayer {
     /// Fused `[d, 3·H·D]`: columns `[wq | wk | wv]`.
-    wqkv: PackedMat,
+    wqkv: HostMat,
     /// `[H·D, d]` attention output projection.
-    wo: PackedMat,
+    wo: HostMat,
     /// Fused `[d, 2·ff]`: columns `[w1 | w3]` (gate | up).
-    w13: PackedMat,
+    w13: HostMat,
     /// `[ff, d]` MLP down projection.
-    w2: PackedMat,
+    w2: HostMat,
 }
 
 /// Read-only view of the host block pool plus a flattened block-base
@@ -234,10 +346,11 @@ pub struct HostModel {
     packed: Vec<PackedLayer>,
     /// Packed `[d, vocab]` transpose of the tied embedding: the logit
     /// projection runs the same k-outer panel sweep as every other
-    /// matmul.  Same per-cell add order as the oracle, same bits.
-    embed_t: PackedMat,
+    /// matmul.  Same per-cell add order as the oracle, same bits
+    /// (f32); bounded error (q8).
+    embed_t: HostMat,
     /// Packed `[2d, d]` EAGLE fuse projection, when present.
-    fuse_p: Option<PackedMat>,
+    fuse_p: Option<HostMat>,
     /// Persistent worker pool; shared across the runtime's models so
     /// target and draft dispatch onto the same parked threads.
     pool: Arc<WorkerPool>,
@@ -256,10 +369,45 @@ impl HostModel {
     /// (`Runtime::host` shares one pool across all its models).
     pub fn build_with_pool(seed: u64, entry: &ModelEntry,
                            pool: Arc<WorkerPool>) -> Result<HostModel> {
+        Self::build_impl(seed, entry, pool, false)
+    }
+
+    /// Build the int8 per-panel quantized twin (`--backend host-q8`):
+    /// same deterministic f32 weights, then every matmul operand is
+    /// quantized at load with symmetric per-panel scales
+    /// ([`QuantizedMat`]).  NOT bit-identical to the oracle — see
+    /// `quant.rs` for the bounded-error contract it carries instead.
+    pub fn build_q8(seed: u64, entry: &ModelEntry) -> Result<HostModel> {
+        Self::build_q8_with_pool(
+            seed, entry, Arc::new(WorkerPool::new(default_threads())))
+    }
+
+    /// [`HostModel::build_q8`] dispatching onto a caller-provided pool.
+    pub fn build_q8_with_pool(seed: u64, entry: &ModelEntry,
+                              pool: Arc<WorkerPool>)
+                              -> Result<HostModel> {
+        Self::build_impl(seed, entry, pool, true)
+    }
+
+    fn build_impl(seed: u64, entry: &ModelEntry, pool: Arc<WorkerPool>,
+                  quant: bool) -> Result<HostModel> {
         let m = RefModel::build(seed, entry)?;
         let cfg = &m.cfg;
         let (v, d, ff) = (cfg.vocab, cfg.d_model, cfg.d_ff);
         let hd = cfg.n_heads * cfg.d_head;
+        // One packing closure decides the representation: the fused
+        // row-major assembly above it is identical either way.  (The
+        // token-embedding *gather* stays f32 on both: per-token row
+        // reads are a negligible share of bytes, and the embedding is
+        // tied — only its packed transpose, the logit projection, is
+        // quantized.)
+        let mk = |w: &[f32], din: usize, dout: usize| -> HostMat {
+            if quant {
+                HostMat::Q8(QuantizedMat::quantize(w, din, dout))
+            } else {
+                HostMat::F32(PackedMat::pack(w, din, dout))
+            }
+        };
         let packed = m
             .layers
             .iter()
@@ -279,10 +427,10 @@ impl HostModel {
                         .copy_from_slice(&lyr.w3[k * ff..(k + 1) * ff]);
                 }
                 PackedLayer {
-                    wqkv: PackedMat::pack(&wqkv, d, 3 * hd),
-                    wo: PackedMat::pack(&lyr.wo, hd, d),
-                    w13: PackedMat::pack(&w13, d, 2 * ff),
-                    w2: PackedMat::pack(&lyr.w2, ff, d),
+                    wqkv: mk(&wqkv, d, 3 * hd),
+                    wo: mk(&lyr.wo, hd, d),
+                    w13: mk(&w13, d, 2 * ff),
+                    w2: mk(&lyr.w2, ff, d),
                 }
             })
             .collect();
@@ -292,9 +440,8 @@ impl HostModel {
                 embed_t[j * v + tok] = m.embed[tok * d + j];
             }
         }
-        let embed_t = PackedMat::pack(&embed_t, d, v);
-        let fuse_p =
-            m.fuse.as_ref().map(|f| PackedMat::pack(f, 2 * d, d));
+        let embed_t = mk(&embed_t, d, v);
+        let fuse_p = m.fuse.as_ref().map(|f| mk(f, 2 * d, d));
         Ok(HostModel { m, packed, embed_t, fuse_p, pool })
     }
 
@@ -303,16 +450,22 @@ impl HostModel {
         self.pool.lanes()
     }
 
+    /// True when this model's matmul weights are int8 per-panel
+    /// quantized (`--backend host-q8`).
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.embed_t, HostMat::Q8(_))
+    }
+
     /// `out[n, dout] += a @ w`, panel-partitioned across the pool when
     /// the shape is worth a dispatch.  The gate and the partition pick
     /// *who* computes each output cell, never the order within it —
     /// results are bit-identical for every lane count (DESIGN.md §8).
-    fn par_matmul(&self, a: &[f32], w: &PackedMat, out: &mut [f32],
+    fn par_matmul(&self, a: &[f32], w: &HostMat, out: &mut [f32],
                   n: usize) {
         let panels = w.n_panels();
         let lanes = self.pool.lanes().min(panels);
         let shared = SharedSlice::new(out);
-        if lanes <= 1 || n * w.din * w.dout < PAR_MIN_MACS {
+        if lanes <= 1 || n * w.din() * w.dout() < PAR_MIN_MACS {
             w.matmul_acc_panels(a, &shared, n, 0, panels);
             return;
         }
@@ -346,6 +499,22 @@ impl Backend for HostModel {
 
     fn new_cache(&self, batch: usize) -> Result<KvCache> {
         Ok(KvCache::host(&self.m.cfg, batch))
+    }
+
+    /// Weight bytes one full forward pass streams, per fwd_ops bucket,
+    /// in whatever representation this model holds (f32 panels or q8).
+    /// Gather and attention carry no matmul weight traffic by
+    /// construction, matching the ledger's bucket semantics.
+    fn op_weight_bytes(&self) -> OpWeightBytes {
+        let mut w = OpWeightBytes::default();
+        for pk in &self.packed {
+            w.qkv += pk.wqkv.weight_bytes();
+            w.wo += pk.wo.weight_bytes();
+            w.mlp += pk.w13.weight_bytes() + pk.w2.weight_bytes();
+        }
+        w.logits = self.embed_t.weight_bytes();
+        w.fuse = self.fuse_p.as_ref().map_or(0, |f| f.weight_bytes());
+        w
     }
 
     fn new_cache_sized(&self, batch: usize, kv_blocks: Option<usize>)
@@ -391,6 +560,12 @@ impl Backend for HostModel {
             }
         };
 
+        // Clock starts here so the slot-map/view construction below is
+        // attributed to `gather_s` (it is part of the gather phase, not
+        // untracked overhead — keeps `ops.total()` honest vs `fwd_s`).
+        let mut ops = FwdOps::default();
+        let mut clock = OpClock::start();
+
         // Same truncated-view bound as the oracle: the highest LIVE
         // position; cells at or past it are parked.
         let garbage = s_max - 1;
@@ -420,8 +595,6 @@ impl Backend for HostModel {
         // nothing can attend them, so the value is unobservable.
         let zeros = vec![0f32; hd];
 
-        let mut ops = FwdOps::default();
-        let mut clock = OpClock::start();
         let n_layers = self.m.layers.len();
 
         // Call-layout outputs (parked cells stay zero).
@@ -786,6 +959,55 @@ mod tests {
     }
 
     #[test]
+    fn ragged_last_panel_edges_are_bit_identical() {
+        // dout % PANEL ∈ {1, 8, 15}: one live lane0 cell, exactly one
+        // full SIMD chunk, and a chunk plus a 7-wide tail.  Each must
+        // reproduce the oracle bit for bit and leave the zero-padded
+        // dead lanes unwritten.
+        let mut rng = Rng::new(0xA11);
+        for &(n, din, dout) in
+            &[(2usize, 24usize, 17usize), (3, 32, 24), (1, 16, 31),
+              (4, 8, 33), (2, 40, 47)]
+        {
+            assert!(matches!(dout % PANEL, 1 | 8 | 15));
+            let a: Vec<f32> =
+                (0..n * din).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> =
+                (0..din * dout).map(|_| rng.normal() as f32).collect();
+            let mut want: Vec<f32> =
+                (0..n * dout).map(|i| (i % 7) as f32 * 0.25).collect();
+            let mut got = want.clone();
+            matmul_acc(&a, &w, &mut want, n, din, dout);
+            let pm = PackedMat::pack(&w, din, dout);
+            pm.matmul_acc_panels(&a, &SharedSlice::new(&mut got), n, 0,
+                                 pm.n_panels());
+            assert_eq!(want, got,
+                       "ragged tail diverged at {n}x{din}x{dout}");
+        }
+    }
+
+    #[test]
+    fn widths_below_one_simd_chunk_are_bit_identical() {
+        // dout < LANE: the whole matrix is a partial lane0; acc1 and
+        // the upper lane0 cells run over padding and never store.
+        let mut rng = Rng::new(0xC0FFEE);
+        for &dout in &[1usize, 2, 5, 7] {
+            let (n, din) = (3usize, 24usize);
+            let a: Vec<f32> =
+                (0..n * din).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> =
+                (0..din * dout).map(|_| rng.normal() as f32).collect();
+            let mut want = vec![0.5f32; n * dout];
+            let mut got = want.clone();
+            matmul_acc(&a, &w, &mut want, n, din, dout);
+            let pm = PackedMat::pack(&w, din, dout);
+            pm.matmul_acc_panels(&a, &SharedSlice::new(&mut got), n, 0,
+                                 pm.n_panels());
+            assert_eq!(want, got, "sub-chunk width {dout} diverged");
+        }
+    }
+
+    #[test]
     fn pool_partitioned_matmul_matches_serial() {
         let mut rng = Rng::new(0xF00D);
         let (n, din, dout) = (4usize, 32usize, 64usize);
@@ -944,6 +1166,91 @@ mod tests {
                 Some(want) => {
                     assert_eq!(want, &out.logits,
                                "{lanes}-lane fwd changed bits");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn op_weight_bytes_covers_every_matmul_site() {
+        // f32: the bucket totals must equal the packed panel bytes of
+        // every weight the forward pass sweeps (incl. fuse on EAGLE).
+        let (_, host) = pair("target-m");
+        let w = host.op_weight_bytes();
+        assert!(w.qkv > 0 && w.wo > 0 && w.mlp > 0 && w.logits > 0);
+        assert_eq!(w.fuse, 0, "LM models have no fuse projection");
+        assert_eq!(w.total(), w.qkv + w.wo + w.mlp + w.logits + w.fuse);
+        let man = reference_manifest();
+        let eagle = HostModel::build(
+            7, man.models.get("eagle-target-l").unwrap()).unwrap();
+        assert!(eagle.op_weight_bytes().fuse > 0,
+                "EAGLE fuse projection must be counted");
+    }
+
+    #[test]
+    fn q8_model_quantizes_every_matmul_weight() {
+        let man = reference_manifest();
+        let entry = man.models.get("target-m").unwrap();
+        let f32m = HostModel::build(7, entry).unwrap();
+        let q8m = HostModel::build_q8(7, entry).unwrap();
+        assert!(!f32m.is_quantized());
+        assert!(q8m.is_quantized());
+        // q8 streams ~4x fewer weight bytes: i8 panels + one f32 scale
+        // per panel vs f32 panels.
+        let (fb, qb) = (f32m.op_weight_bytes().total(),
+                        q8m.op_weight_bytes().total());
+        assert!(qb * 3 < fb && qb * 5 > fb,
+                "q8/f32 weight bytes {qb}/{fb} not ~1/4");
+    }
+
+    #[test]
+    fn q8_fwd_logits_stay_close_to_f32() {
+        // The q8 bounded-error contract at the fwd surface: per-logit
+        // absolute error stays small on every family model.  The bound
+        // is generous (~10x what the refsim mirror calibrates) so it
+        // fails on real kernel bugs, not quantization noise.
+        let man = reference_manifest();
+        for name in ["draft-s", "target-m", "target-l"] {
+            let entry = man.models.get(name).unwrap();
+            let f32m = HostModel::build(7, entry).unwrap();
+            let q8m = HostModel::build_q8(7, entry).unwrap();
+            let cf = f32m.new_cache(1).unwrap();
+            let cq = q8m.new_cache(1).unwrap();
+            let toks = [0i32, 13, 20, 21, 33];
+            let pos = [0i32, 1, 2, 3, 4];
+            let a = f32m.fwd(1, 5, &toks, &pos, None, &cf).unwrap();
+            let b = q8m.fwd(1, 5, &toks, &pos, None, &cq).unwrap();
+            let mut max_err = 0f32;
+            for (x, y) in a.logits.iter().zip(&b.logits) {
+                max_err = max_err.max((x - y).abs());
+            }
+            assert!(max_err > 0.0,
+                    "{name}: q8 bit-identical to f32 is suspicious");
+            assert!(max_err < 0.5,
+                    "{name}: q8 per-logit error {max_err} out of bounds");
+        }
+    }
+
+    #[test]
+    fn q8_fwd_is_deterministic_across_lane_counts() {
+        // q8 drops bit-identity to the *oracle*, not determinism: the
+        // same q8 fwd through 1/2/8 lanes must be bit-identical to
+        // itself (same column-decomposition argument as f32).
+        let man = reference_manifest();
+        let entry = man.models.get("target-m").unwrap();
+        let toks = [0i32, 13, 20, 21, 33, 40];
+        let pos = [0i32, 1, 2, 3, 4, 5];
+        let mut base: Option<Vec<f32>> = None;
+        for lanes in [1usize, 2, 8] {
+            let m = HostModel::build_q8_with_pool(
+                7, entry, Arc::new(WorkerPool::new(lanes))).unwrap();
+            let c = m.new_cache(1).unwrap();
+            let out = m.fwd(1, 6, &toks, &pos, None, &c).unwrap();
+            match &base {
+                None => base = Some(out.logits),
+                Some(want) => {
+                    assert_eq!(want, &out.logits,
+                               "{lanes}-lane q8 fwd changed bits");
                 }
             }
         }

@@ -12,7 +12,9 @@
 //! * **Host**: the same synthetic family through the fast host serving
 //!   path (DESIGN.md §8) — bit-identical live-cell outputs to the
 //!   reference oracle, built for artifact-free speed: the backend
-//!   `pard bench` measures against.
+//!   `pard bench` measures against.  Its int8 per-panel quantized twin
+//!   (`--backend host-q8`, [`quant`]) trades bit-identity for ~4× less
+//!   weight traffic under a bounded-error contract.
 
 pub mod artifact;
 pub mod backend;
@@ -21,6 +23,7 @@ pub mod host;
 #[cfg(feature = "pjrt")]
 pub mod model;
 pub mod pool;
+pub mod quant;
 pub mod reference;
 
 use std::path::{Path, PathBuf};
@@ -30,7 +33,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 pub use artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
-pub use backend::{Backend, FwdOps, FwdOut, KvStage};
+pub use backend::{Backend, FwdOps, FwdOut, KvStage, OpWeightBytes};
 pub use cache::{CacheState, KvCache, KV_BLOCK};
 pub use host::HostModel;
 #[cfg(feature = "pjrt")]
@@ -47,8 +50,10 @@ enum Host {
     Reference { seed: u64 },
     /// Fast host serving path over the same weights (DESIGN.md §8),
     /// with the persistent worker pool every model of this runtime
-    /// dispatches onto.
-    HostFast { seed: u64, pool: Arc<WorkerPool> },
+    /// dispatches onto.  `quant` selects the int8 per-panel quantized
+    /// twin (`--backend host-q8`, bounded-error contract — see
+    /// [`quant`]).
+    HostFast { seed: u64, pool: Arc<WorkerPool>, quant: bool },
 }
 
 /// Owns the manifest + backend host; hands out loaded models as
@@ -72,6 +77,11 @@ pub enum RuntimeSpec {
     /// `threads` pins the worker-pool size; `None` resolves
     /// `PARD_HOST_THREADS` / available cores at open time.
     Host { seed: u64, threads: Option<usize> },
+    /// Int8 per-panel quantized host backend (`--backend host-q8`):
+    /// same family and seed semantics as `Host`, weights quantized at
+    /// load ([`quant`]) under a bounded-error (not bit-identity)
+    /// contract.
+    HostQ8 { seed: u64, threads: Option<usize> },
 }
 
 impl RuntimeSpec {
@@ -85,6 +95,9 @@ impl RuntimeSpec {
             }
             RuntimeSpec::Host { seed, threads } => {
                 Ok(Runtime::host_with_threads(*seed, *threads))
+            }
+            RuntimeSpec::HostQ8 { seed, threads } => {
+                Ok(Runtime::host_q8_with_threads(*seed, *threads))
             }
         }
     }
@@ -134,6 +147,28 @@ impl Runtime {
         Self::synthetic(Host::HostFast {
             seed,
             pool: Arc::new(WorkerPool::new(lanes)),
+            quant: false,
+        })
+    }
+
+    /// [`Runtime::host`] with int8 per-panel quantized weights
+    /// (`--backend host-q8`): same family, same seed semantics, ~4×
+    /// less weight traffic, bounded-error (not bit-identity) contract
+    /// — see [`quant`].
+    pub fn host_q8(seed: u64) -> Self {
+        Self::host_q8_with_threads(seed, None)
+    }
+
+    /// [`Runtime::host_q8`] with the worker-pool size pinned.  q8
+    /// outputs are still bit-identical across pool sizes — the relaxed
+    /// contract is vs the f32 oracle, not vs itself.
+    pub fn host_q8_with_threads(seed: u64, threads: Option<usize>)
+                                -> Self {
+        let lanes = threads.unwrap_or_else(pool::default_threads);
+        Self::synthetic(Host::HostFast {
+            seed,
+            pool: Arc::new(WorkerPool::new(lanes)),
+            quant: true,
         })
     }
 
@@ -168,12 +203,14 @@ impl Runtime {
         }
     }
 
-    /// Stable name of the active backend (`pjrt`/`reference`/`host`) —
-    /// recorded into bench reports.
+    /// Stable name of the active backend
+    /// (`pjrt`/`reference`/`host`/`host-q8`) — recorded into bench
+    /// reports.
     pub fn backend_label(&self) -> &'static str {
         match &self.host {
             Host::Reference { .. } => "reference",
-            Host::HostFast { .. } => "host",
+            Host::HostFast { quant: false, .. } => "host",
+            Host::HostFast { quant: true, .. } => "host-q8",
             #[cfg(feature = "pjrt")]
             Host::Pjrt { .. } => "pjrt",
         }
@@ -188,10 +225,15 @@ impl Runtime {
                 let entry = self.manifest.model(name)?;
                 Ok(Rc::new(reference::RefModel::build(*seed, entry)?))
             }
-            Host::HostFast { seed, pool } => {
+            Host::HostFast { seed, pool, quant } => {
                 let entry = self.manifest.model(name)?;
-                Ok(Rc::new(host::HostModel::build_with_pool(
-                    *seed, entry, Arc::clone(pool))?))
+                let pool = Arc::clone(pool);
+                Ok(Rc::new(if *quant {
+                    host::HostModel::build_q8_with_pool(*seed, entry,
+                                                        pool)?
+                } else {
+                    host::HostModel::build_with_pool(*seed, entry, pool)?
+                }))
             }
         }
     }

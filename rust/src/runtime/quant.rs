@@ -1,0 +1,315 @@
+//! Int8 per-panel weight quantization for the host backend
+//! (`--backend host-q8`, DESIGN.md §8).
+//!
+//! [`QuantizedMat`] is the int8 twin of [`PackedMat`](super::host):
+//! same `[n_panels, din, PANEL]` column-panel layout, same panel-range
+//! sweep signature (so the worker-pool partition in `par_matmul` is
+//! shared verbatim), but each panel's weights are stored as `i8` codes
+//! under one symmetric f32 scale.  A full sweep therefore streams ~4×
+//! fewer weight bytes — the lever the paper's Table 6 bandwidth
+//! argument says decode is bound by.
+//!
+//! # Quantization scheme
+//!
+//! Per panel (16 output columns spanning all `din` rows):
+//!
+//! ```text
+//! scale = max(|w|) / 127        (0 when the panel is all zeros)
+//! q     = clamp(round(w / scale), -127, 127)    // round half away
+//! ```
+//!
+//! `f32::round` rounds half away from zero; the refsim mirror
+//! (`python/refsim/hostsim.py`) reproduces that explicitly because
+//! numpy's `round` is half-to-even.  Codes stay in `[-127, 127]`
+//! (never -128), keeping the scheme symmetric.
+//!
+//! # The relaxed contract
+//!
+//! q8 CANNOT be bit-identical to the `reference.rs` oracle — the
+//! weights themselves differ.  It carries a two-part contract instead:
+//!
+//! 1. **Deterministic.**  The dot kernel accumulates
+//!    `acc += a[k] · (q as f32)` in f32, k ascending from 0, then
+//!    applies the panel scale once: `out += scale · acc`.  Every
+//!    output cell is still one fixed-order chain owned by one lane, so
+//!    lane count and panel partition can never change a bit — the same
+//!    §8 column-decomposition argument as f32, just against q8's own
+//!    reference stream.
+//! 2. **Bounded error vs f32.**  Per-logit absolute error against the
+//!    f32 host path is asserted under an empirically calibrated bound
+//!    in `tests/host_backend.rs`, and the hostsim.py mirror replays
+//!    the quantization and the sweep bit-for-bit as an independent
+//!    gate.
+//!
+//! Hoisting the scale out of the k loop (rather than multiplying
+//! `scale · q` per element) both saves a multiply per MAC and keeps
+//! the integer codes exactly representable in f32 (|q| ≤ 127), so the
+//! mirror can reproduce the accumulation exactly.
+
+use super::host::{lane8_fma, LANE, PANEL};
+use super::pool::SharedSlice;
+
+/// Column-panel int8 weight matrix: `[n_panels, din, PANEL]` codes,
+/// one symmetric f32 scale per panel.  See module docs.
+pub struct QuantizedMat {
+    /// `[n_panels, din, PANEL]` int8 codes, ragged tail zero-padded.
+    data: Vec<i8>,
+    /// One `max(|w|)/127` scale per panel (0 for all-zero panels).
+    scales: Vec<f32>,
+    din: usize,
+    dout: usize,
+}
+
+impl QuantizedMat {
+    /// Quantize a row-major `[din, dout]` f32 matrix.
+    pub fn quantize(w: &[f32], din: usize, dout: usize) -> QuantizedMat {
+        assert_eq!(w.len(), din * dout, "quantize: weight shape mismatch");
+        let panels = dout.div_ceil(PANEL);
+        let mut data = vec![0i8; panels * din * PANEL];
+        let mut scales = vec![0f32; panels];
+        for p in 0..panels {
+            let cols = (dout - p * PANEL).min(PANEL);
+            let mut amax = 0f32;
+            for k in 0..din {
+                for c in 0..cols {
+                    amax = amax.max(w[k * dout + p * PANEL + c].abs());
+                }
+            }
+            if amax == 0.0 {
+                continue; // all-zero panel: scale 0, codes 0
+            }
+            let scale = amax / 127.0;
+            scales[p] = scale;
+            let inv = 1.0 / scale;
+            for k in 0..din {
+                for c in 0..cols {
+                    let q = (w[k * dout + p * PANEL + c] * inv)
+                        .round()
+                        .clamp(-127.0, 127.0);
+                    data[(p * din + k) * PANEL + c] = q as i8;
+                }
+            }
+        }
+        QuantizedMat { data, scales, din, dout }
+    }
+
+    pub fn din(&self) -> usize {
+        self.din
+    }
+
+    pub fn dout(&self) -> usize {
+        self.dout
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.dout.div_ceil(PANEL)
+    }
+
+    /// Bytes one full sweep streams: i8 panel codes (incl. ragged-tail
+    /// padding) plus one f32 scale per panel — the q8 numerator of the
+    /// `benches/table6_bandwidth.rs` bandwidth model.
+    pub(crate) fn weight_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// `out[n, dout] += a[n, din] @ dequant(w)` restricted to panels
+    /// `p0..p1` — the q8 twin of `PackedMat::matmul_acc_panels`, same
+    /// [`lane8_fma`] micro-kernel over two `[f32; LANE]` register
+    /// accumulators.  The accumulators start at zero (NOT the existing
+    /// output): the panel scale applies once to the finished integer
+    /// chain, then lands on the output in one add.  Deterministic for
+    /// any panel partition; see the module-level contract.
+    pub(crate) fn matmul_acc_panels(&self, a: &[f32], out: &SharedSlice,
+                                    n: usize, p0: usize, p1: usize) {
+        let (din, dout) = (self.din, self.dout);
+        let mut deq = vec![0f32; din * PANEL];
+        for p in p0..p1 {
+            let cols = (dout - p * PANEL).min(PANEL);
+            let c0 = p * PANEL;
+            let scale = self.scales[p];
+            // Widen the panel's codes to f32 once per panel (integer
+            // codes are exact in f32), so the k loop below is the same
+            // pure-f32 micro-kernel as the f32 path and the per-k work
+            // is one fma per lane, not a convert + fma.
+            let pan = &self.data[p * din * PANEL..(p + 1) * din * PANEL];
+            for (dq, &q) in deq.iter_mut().zip(pan.iter()) {
+                *dq = q as f32;
+            }
+            for i in 0..n {
+                let ar = &a[i * din..(i + 1) * din];
+                // SAFETY: lanes own disjoint panel ranges, so these
+                // column cells belong to this lane alone.
+                let or = unsafe { out.range(i * dout + c0, cols) };
+                let mut acc0 = [0f32; LANE];
+                let mut acc1 = [0f32; LANE];
+                for (ki, &av) in ar.iter().enumerate() {
+                    let wr = &deq[ki * PANEL..(ki + 1) * PANEL];
+                    lane8_fma(&mut acc0, av, &wr[..LANE]);
+                    lane8_fma(&mut acc1, av, &wr[LANE..]);
+                }
+                let lo = cols.min(LANE);
+                for c in 0..lo {
+                    or[c] += scale * acc0[c];
+                }
+                for c in LANE..cols {
+                    or[c] += scale * acc1[c - LANE];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    /// Scalar q8 reference: quantize, then the same chain order the
+    /// panel kernel commits to (k ascending from 0, scale applied once).
+    fn q8_scalar(a: &[f32], qm: &QuantizedMat, out: &mut [f32], n: usize) {
+        let (din, dout) = (qm.din, qm.dout);
+        for i in 0..n {
+            for p in 0..qm.n_panels() {
+                let cols = (dout - p * PANEL).min(PANEL);
+                for c in 0..cols {
+                    let mut acc = 0f32;
+                    for k in 0..din {
+                        acc += a[i * din + k]
+                            * (qm.data[(p * din + k) * PANEL + c] as f32);
+                    }
+                    out[i * dout + p * PANEL + c] +=
+                        qm.scales[p] * acc;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_is_bounded_by_half_scale() {
+        let mut rng = Rng::new(0x51);
+        let (din, dout) = (24usize, 40usize);
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        let qm = QuantizedMat::quantize(&w, din, dout);
+        for p in 0..qm.n_panels() {
+            let cols = (dout - p * PANEL).min(PANEL);
+            let scale = qm.scales[p];
+            assert!(scale > 0.0, "random panel must get a scale");
+            for k in 0..din {
+                for c in 0..cols {
+                    let orig = w[k * dout + p * PANEL + c];
+                    let deq = scale
+                        * (qm.data[(p * din + k) * PANEL + c] as f32);
+                    assert!((orig - deq).abs() <= scale * 0.5 + 1e-7,
+                            "code error exceeds half a step at p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_panel_gets_zero_scale_and_codes() {
+        // First PANEL columns all zero, rest random: panel 0 must be
+        // scale 0 / codes 0, and sweeping it adds exactly nothing.
+        let mut rng = Rng::new(0x52);
+        let (din, dout) = (8usize, 32usize);
+        let mut w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        for k in 0..din {
+            for c in 0..PANEL {
+                w[k * dout + c] = 0.0;
+            }
+        }
+        let qm = QuantizedMat::quantize(&w, din, dout);
+        assert_eq!(qm.scales[0], 0.0);
+        assert!(qm.data[..din * PANEL].iter().all(|&q| q == 0));
+        let a: Vec<f32> = (0..din).map(|i| i as f32 * 0.3).collect();
+        let mut out = vec![7.0f32; dout];
+        qm.matmul_acc_panels(&a, &SharedSlice::new(&mut out), 1, 0, 1);
+        assert!(out.iter().all(|&x| x == 7.0),
+                "zero panel must leave the output untouched");
+    }
+
+    #[test]
+    fn codes_stay_symmetric_in_range() {
+        let mut rng = Rng::new(0x53);
+        let (din, dout) = (16usize, 48usize);
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32 * 3.0).collect();
+        let qm = QuantizedMat::quantize(&w, din, dout);
+        assert!(qm.data.iter().all(|&q| (-127..=127).contains(&q)),
+                "codes must stay in [-127, 127]");
+        assert!(qm.data.iter().any(|&q| q == 127 || q == -127),
+                "the panel max must hit a full-scale code");
+    }
+
+    #[test]
+    fn panel_sweep_matches_scalar_reference_any_partition() {
+        // The kernel's chain order is its own spec: any panel
+        // partition (and ragged tails) must match the scalar replay
+        // bit for bit.
+        let mut rng = Rng::new(0x54);
+        for &(n, din, dout) in
+            &[(3usize, 32usize, 48usize), (1, 16, 21), (2, 24, 7),
+              (4, 8, 33)]
+        {
+            let a: Vec<f32> =
+                (0..n * din).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> =
+                (0..din * dout).map(|_| rng.normal() as f32).collect();
+            let qm = QuantizedMat::quantize(&w, din, dout);
+            let mut want: Vec<f32> =
+                (0..n * dout).map(|i| (i % 3) as f32 * 0.2).collect();
+            let mut got = want.clone();
+            q8_scalar(&a, &qm, &mut want, n);
+            let panels = qm.n_panels();
+            let shared = SharedSlice::new(&mut got);
+            let mid = panels / 2;
+            qm.matmul_acc_panels(&a, &shared, n, mid, panels);
+            qm.matmul_acc_panels(&a, &shared, n, 0, mid);
+            assert_eq!(want, got,
+                       "q8 panels diverged at {n}x{din}x{dout}");
+        }
+    }
+
+    #[test]
+    fn quantized_sweep_approximates_f32_matmul() {
+        // End-to-end sanity: dequantized matmul error per output cell
+        // is bounded by the accumulated step error (din · scale/2 ·
+        // max|a| is very loose; assert a comfortable practical bound).
+        let mut rng = Rng::new(0x55);
+        let (n, din, dout) = (2usize, 32usize, 32usize);
+        let a: Vec<f32> =
+            (0..n * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        let mut exact = vec![0f32; n * dout];
+        for i in 0..n {
+            for j in 0..dout {
+                for k in 0..din {
+                    exact[i * dout + j] += a[i * din + k] * w[k * dout + j];
+                }
+            }
+        }
+        let qm = QuantizedMat::quantize(&w, din, dout);
+        let mut got = vec![0f32; n * dout];
+        qm.matmul_acc_panels(&a, &SharedSlice::new(&mut got), n, 0,
+                             qm.n_panels());
+        let max_err = exact
+            .iter()
+            .zip(&got)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err > 0.0, "q8 exactly equal to f32 is suspicious");
+        assert!(max_err < 0.2,
+                "q8 matmul error {max_err} far beyond step noise");
+    }
+
+    #[test]
+    fn weight_bytes_counts_codes_plus_scales() {
+        let w = vec![1.0f32; 24 * 40];
+        let qm = QuantizedMat::quantize(&w, 24, 40);
+        let panels = 40usize.div_ceil(PANEL);
+        assert_eq!(qm.weight_bytes(), panels * 24 * PANEL + panels * 4);
+    }
+}

@@ -34,7 +34,7 @@ fn schema_v1_fields_are_stable() {
     assert_eq!(report.get("backend").unwrap().as_str(), Some("host"));
     for key in ["threads", "seed", "task", "target", "n_prompts",
                 "max_new", "sweep", "runs", "serving_prefix",
-                "policy_mixed", "robustness", "oracle",
+                "policy_mixed", "robustness", "quant", "oracle",
                 "host_vs_reference"] {
         assert!(report.get(key).is_some(), "missing top-level `{key}`");
     }
@@ -222,6 +222,67 @@ fn serving_chaos_section_degrades_gracefully_with_rate() {
         let v = f(r, "virtual_s");
         assert!(v > 0.0 && v.is_finite(), "virtual_s {v}");
     }
+}
+
+#[test]
+fn quant_section_reports_probe_bytes_and_deltas() {
+    let report = smoke_report();
+    let q = report.get("quant").unwrap();
+    assert_eq!(q.get("backend").unwrap().as_str(), Some("host-q8"));
+    for key in ["backend", "probe", "weight_bytes", "k", "n_prompts",
+                "max_new", "runs", "deltas"] {
+        assert!(q.get(key).is_some(), "quant missing field `{key}`");
+    }
+    let f = |j: &Json, k: &str| j.get(k).unwrap().as_f64().unwrap();
+
+    // The bounded-error contract as a number in the trajectory: q8
+    // logits differ from f32 (it is a lossy representation) but stay
+    // small next to the logit magnitudes themselves.
+    let probe = q.get("probe").unwrap();
+    let err = f(probe, "max_abs_logit_err");
+    assert!(err > 0.0, "q8 must actually differ from f32");
+    assert!(err < 0.5, "per-logit q8 error out of contract: {err}");
+    assert!(f(probe, "max_abs_logit") > err,
+            "error must be small relative to the logits");
+
+    // Weight-bytes ledger: int8 codes + f32 per-panel scales land the
+    // compression ratio strictly between 3x and 5x (exactly 4x minus
+    // scale overhead), matching the Table 6 bytes argument.
+    let wb = q.get("weight_bytes").unwrap();
+    let ratio = f(wb, "f32_over_q8");
+    assert!(ratio > 3.0 && ratio < 5.0,
+            "f32/q8 weight bytes ratio out of range: {ratio}");
+    assert!(f(wb.get("q8").unwrap(), "total")
+            < f(wb.get("f32").unwrap(), "total"));
+
+    // Eval rows: {AR+, PARD} x {host, host-q8}, every cell measured.
+    let runs = q.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 4, "2 engines x 2 backends");
+    for r in runs {
+        for key in ["engine", "backend", "k", "batch", "tokens_per_s",
+                    "mean_accept_len", "generated"] {
+            assert!(r.get(key).is_some(), "quant run missing `{key}`");
+        }
+        assert!(f(r, "tokens_per_s") > 0.0 && f(r, "generated") > 0.0,
+                "every quant cell must be measured");
+    }
+    let deltas = q.get("deltas").unwrap().as_arr().unwrap();
+    assert_eq!(deltas.len(), 2, "one delta row per engine");
+    for d in deltas {
+        assert!(f(d, "tps_ratio_q8_vs_f32") > 0.0);
+        assert!(d.get("accept_len_delta").is_some());
+    }
+}
+
+#[test]
+fn compare_quant_is_clean_against_itself() {
+    use pard::report::bench::{compare_quant, COMPARE_TOL};
+    let report = smoke_report();
+    let (has_quant, lines) =
+        compare_quant(&report, &report, COMPARE_TOL);
+    assert!(has_quant, "a fresh report carries the quant section");
+    assert!(lines.is_empty(),
+            "a report can never regress against itself");
 }
 
 #[test]

@@ -195,6 +195,94 @@ fn host_thread_count_invariance() {
     }
 }
 
+/// The q8 runtime opens through every front door — constructor,
+/// RuntimeSpec, CLI label — and serves quantized models.
+#[test]
+fn host_q8_runtime_opens() {
+    use pard::runtime::RuntimeSpec;
+    let rt = Runtime::host_q8(7);
+    assert!(rt.is_reference(), "q8 is artifact-free");
+    assert_eq!(rt.backend_label(), "host-q8");
+    let m = rt.model("target-m").unwrap();
+    assert_eq!(m.cfg().n_layers, 3);
+    assert!(m.op_weight_bytes().total() > 0,
+            "q8 models account their weight traffic");
+    let spec =
+        RuntimeSpec::HostQ8 { seed: 7, threads: Some(2) }.open().unwrap();
+    assert_eq!(spec.backend_label(), "host-q8");
+    assert_eq!(spec.host_threads(), Some(2));
+}
+
+/// Greedy speculative decoding is lossless *relative to its own
+/// target*: on the q8 backend, AR+ and every speculative engine must
+/// emit identical token streams (the accept rule compares q8 draft
+/// argmax against q8 target argmax — quantization shifts both the same
+/// way).  This is q8's engine-level correctness gate, needing no f32
+/// comparison at all.
+#[test]
+fn q8_engines_token_identical_to_q8_ar_plus() {
+    let q8 = Runtime::host_q8(7);
+    let prompts = some_prompts(&q8, 3);
+    let base = gen(&q8, &cfg(&q8, EngineKind::ArPlus, "target-l", 8, 1),
+                   &prompts);
+    assert!(base.iter().all(|o| !o.is_empty()),
+            "q8 AR+ generated nothing");
+    for kind in [EngineKind::Vsd, EngineKind::Pard, EngineKind::Eagle] {
+        let out = gen(&q8, &cfg(&q8, kind, "target-l", 8, 1), &prompts);
+        assert_eq!(base, out,
+                   "{kind:?} on host-q8 diverged from q8 AR+ (greedy \
+                    speculative decoding must stay lossless)");
+    }
+}
+
+/// q8 keeps the full §8 determinism contract against itself: pinned
+/// 1/2/8-lane pools produce identical PARD token streams.
+#[test]
+fn q8_thread_count_invariance() {
+    let prompts =
+        some_prompts(&Runtime::host_q8(7), 2);
+    let mut base: Option<Vec<Vec<i32>>> = None;
+    for threads in [1usize, 2, 8] {
+        let rt = Runtime::host_q8_with_threads(7, Some(threads));
+        let streams = gen(
+            &rt, &cfg(&rt, EngineKind::Pard, "target-l", 8, 1), &prompts);
+        match &base {
+            None => base = Some(streams),
+            Some(want) => assert_eq!(
+                want, &streams,
+                "{threads}-lane q8 PARD token stream diverged"),
+        }
+    }
+}
+
+/// Satellite acceptance (fwd_ops audit): after a full run of EVERY
+/// engine — including the prefill and EAGLE-chain call sites PR 7
+/// added — the per-op time ledger stays bounded by the recorded fwd
+/// time, with every matmul phase populated.
+#[test]
+fn fwd_ops_bounded_for_every_engine() {
+    for rt in [Runtime::host(7), Runtime::host_q8(7)] {
+        let prompts = some_prompts(&rt, 2);
+        for kind in [EngineKind::Ar, EngineKind::ArPlus, EngineKind::Vsd,
+                     EngineKind::Pard, EngineKind::Eagle] {
+            let c = cfg(&rt, kind, "target-l", 4, 1);
+            let mut e = build_engine(&rt, &c).unwrap();
+            e.warmup().unwrap();
+            generate(e.as_mut(), &prompts, c.max_new).unwrap();
+            let m = e.metrics();
+            assert!(m.fwd_ops.total() > 0.0,
+                    "{kind:?} on {}: fwd_ops must be populated",
+                    rt.backend_label());
+            assert!(m.fwd_ops.total() <= m.fwd_s + 1e-6,
+                    "{kind:?} on {}: fwd_ops {} exceeds fwd_s {}",
+                    rt.backend_label(), m.fwd_ops.total(), m.fwd_s);
+            assert!(m.fwd_ops.qkv_s > 0.0 && m.fwd_ops.mlp_s > 0.0
+                    && m.fwd_ops.logits_s > 0.0,
+                    "{kind:?}: matmul phases must all be attributed");
+        }
+    }
+}
+
 /// Satellite acceptance: the Metrics fwd/commit split is recorded and
 /// coherent after an engine run — both sides nonzero, their sum inside
 /// the end-to-end wall clock, and the host backend's per-op breakdown

@@ -37,9 +37,28 @@
 # mirroring rust/tests/fault_injection.rs) must pass — auto-skipped
 # only when python3 is not installed at all.
 #
+# Static-analysis gate: `pard audit` (DESIGN.md §11) runs over the
+# crate's own sources from the freshly built release binary and fails
+# CI on any unwaived violation; python/refsim/auditsim.py is the
+# executable mirror (same rules, same waiver syntax, same
+# pard-audit-v1 JSON schema) and is a hard gate wherever python3
+# exists — including toolchain-less containers where the cargo stages
+# cannot run.
+#
+# Concurrency gates (opt-in — each needs extra tooling the offline
+# image does not carry):
+#   PARD_CI_LOOM=1  — model-check the worker-pool publish/park
+#       handshake (runtime/pool.rs loom_tests).  Needs `cargo add
+#       loom --dev` first (local only — never commit the Cargo.toml
+#       change; the vendored offline build must stay dependency-free).
+#   PARD_CI_MIRI=1  — run the pool + cache test suites under miri
+#       (needs `rustup component add miri` on a nightly toolchain).
+#   PARD_CI_TSAN=1  — run the pool tests under ThreadSanitizer
+#       (needs a nightly toolchain with rust-src).
+#
 # Usage: ./ci.sh            # build + test + stub typecheck + doc gate
 #                           # + whole-crate fmt/clippy hard gates
-#                           # + refsim mirror gate (needs python3)
+#                           # + audit gate + refsim mirror gates
 set -euo pipefail
 ROOT="$(cd "$(dirname "$0")" && pwd)"
 cd "$ROOT/rust"
@@ -70,11 +89,36 @@ else
     echo "!! clippy not installed — skipping cargo clippy" >&2
 fi
 
+echo "== pard audit (static-analysis gate) =="
+./target/release/pard audit --root "$ROOT"
+
 if command -v python3 >/dev/null 2>&1; then
     echo "== python3 python/refsim/hostsim.py (layout-equality gate) =="
     (cd "$ROOT" && python3 python/refsim/hostsim.py)
+    echo "== python3 python/refsim/auditsim.py (audit mirror gate) =="
+    (cd "$ROOT" && python3 python/refsim/auditsim.py)
 else
-    echo "!! python3 not installed — skipping refsim hostsim mirror" >&2
+    echo "!! python3 not installed — skipping refsim mirrors" >&2
+fi
+
+# Opt-in concurrency gates (see header for the tooling each needs).
+if [ -n "${PARD_CI_LOOM:-}" ]; then
+    echo "== loom model checks (runtime/pool.rs) =="
+    cargo metadata --format-version 1 2>/dev/null \
+        | grep -q '"name":"loom"' \
+        || { echo "PARD_CI_LOOM=1 but loom is not available — run" \
+                  "'cargo add loom --dev' locally first (do NOT" \
+                  "commit it)" >&2; exit 1; }
+    RUSTFLAGS="--cfg loom" cargo test --release loom_
+fi
+if [ -n "${PARD_CI_MIRI:-}" ]; then
+    echo "== miri (pool + cache suites) =="
+    cargo +nightly miri test pool:: cache::
+fi
+if [ -n "${PARD_CI_TSAN:-}" ]; then
+    echo "== ThreadSanitizer (pool suite) =="
+    RUSTFLAGS="-Z sanitizer=thread" cargo +nightly test \
+        -Z build-std --target x86_64-unknown-linux-gnu pool::
 fi
 
 # Opt-in perf gate against a committed baseline report.

@@ -1,0 +1,86 @@
+//! `pard audit` — dependency-free static analysis over the crate's
+//! own sources (DESIGN.md §11).
+//!
+//! A lexer-lite scanner ([`scanner`]) plus a rule engine ([`rules`])
+//! enforce the project's determinism/safety/robustness invariants as
+//! checkable rules instead of conventions:
+//!
+//! * D1 det-hash-iter — no HashMap/HashSet in determinism paths
+//! * D2 wall-clock    — wall time only via `substrate::bench`
+//! * D3 rng-discipline — no ambient entropy; literal seed/stream
+//!   pairs must not collide across sites
+//! * D4 float-reassoc — no reassociating accumulators in backend
+//!   identity paths
+//! * S1 unsafe-hygiene — `unsafe` confined and SAFETY-commented
+//! * R1 no-panic-serving — no unwrap/expect/panic! on request paths
+//! * R2 lossy-cast    — no narrowing casts in cache index arithmetic
+//! * H1 doc-coverage  — public runtime/coordinator items documented
+//!
+//! Findings can be waived inline with the `audit:allow` comment
+//! (rule list in parentheses, then a mandatory reason — full syntax
+//! in DESIGN.md §11); waivers cover their own line and the next, are
+//! counted and reported, and are themselves audited: an unknown rule
+//! id, a missing reason, or an unused waiver is a violation.
+//!
+//! `python/refsim/auditsim.py` is the executable mirror (same rules,
+//! same scanner, same report schema) for hosts without a Rust
+//! toolchain; ci.sh gates on both.  Exit contract: zero unwaived
+//! violations = success.
+
+mod report;
+mod rules;
+mod scanner;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use report::{audit, AuditReport, Finding, WaiverError};
+pub use rules::{is_rule, RULES};
+pub use scanner::{has_token, rng_literal_sites, strip_code, FileScan,
+                  Waiver, WAIVER_MARK};
+
+/// Sorted (relpath, text) set under `<root>/rust/src/**/*.rs`.
+pub fn walk_sources(root: &Path) -> Result<Vec<(String, String)>> {
+    let src = root.join("rust").join("src");
+    let mut out = Vec::new();
+    collect(&src, &src, &mut out)?;
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+fn collect(src: &Path, dir: &Path,
+           out: &mut Vec<(String, String)>) -> Result<()> {
+    let mut entries: Vec<std::fs::DirEntry> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()
+        .with_context(|| format!("reading {}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            collect(src, &path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(src)
+                .context("source path outside rust/src")?
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            out.push((rel, text));
+        }
+    }
+    Ok(())
+}
+
+/// Walk `<root>/rust/src` and audit every source file.
+pub fn audit_tree(root: &Path) -> Result<AuditReport> {
+    let files = walk_sources(root)?;
+    anyhow::ensure!(!files.is_empty(),
+                    "no .rs files under {}/rust/src — wrong --root?",
+                    root.display());
+    Ok(audit(&files))
+}

@@ -1,0 +1,473 @@
+//! Whole-tree audit: waiver application, the cross-file D3 registry,
+//! and the stable machine-readable report (schema pard-audit-v1).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::rules::{collect_rng_registry, scan_rules, RULES};
+use super::scanner::{FileScan, WAIVER_MARK};
+use crate::substrate::json::Json;
+
+/// One finding: a rule hit at a file/line (waived iff `reason` set).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id (D1..H1).
+    pub rule: &'static str,
+    /// Path relative to rust/src.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Human-readable description of the hit.
+    pub msg: String,
+    /// The waiver reason when this finding is waived.
+    pub reason: Option<String>,
+}
+
+/// A malformed or unused waiver comment — counted as a violation, so
+/// stale waivers can never silently disarm a rule.
+#[derive(Debug, Clone)]
+pub struct WaiverError {
+    /// Path relative to rust/src.
+    pub file: String,
+    /// 1-based line of the waiver comment.
+    pub line: usize,
+    /// What is wrong with it.
+    pub msg: String,
+}
+
+/// The audit result both implementations produce.  Exit contract:
+/// success iff [`AuditReport::total_violations`] is zero (waived
+/// findings are counted and reported, never hidden).
+pub struct AuditReport {
+    /// Files scanned under rust/src.
+    pub files_scanned: usize,
+    /// Unwaived findings.
+    pub violations: Vec<Finding>,
+    /// Findings covered by a valid waiver (reason attached).
+    pub waived: Vec<Finding>,
+    /// Malformed/unused waiver comments.
+    pub waiver_errors: Vec<WaiverError>,
+    /// rule id -> (unwaived, waived) counts.
+    pub rule_counts: BTreeMap<&'static str, (usize, usize)>,
+}
+
+/// Audit an ordered (relpath, text) file set.
+pub fn audit(files: &[(String, String)]) -> AuditReport {
+    let scans: Vec<FileScan> = files
+        .iter()
+        .map(|(rel, text)| FileScan::new(rel, text))
+        .collect();
+
+    // D3 registry: literal seed/stream pairs must be globally unique
+    // across non-test sites (duplicate pairs = colliding rng streams).
+    let mut registry: BTreeMap<(String, String), Vec<(String, usize)>> =
+        BTreeMap::new();
+    for fs in &scans {
+        for (pair, lineno) in collect_rng_registry(fs) {
+            registry
+                .entry(pair)
+                .or_default()
+                .push((fs.relpath.clone(), lineno));
+        }
+    }
+    let mut collisions: BTreeMap<String, Vec<(usize, String)>> =
+        BTreeMap::new();
+    for (pair, sites) in &registry {
+        if sites.len() < 2 {
+            continue;
+        }
+        let (ffile, fline) = &sites[0];
+        for (rel, lineno) in &sites[1..] {
+            collisions.entry(rel.clone()).or_default().push((
+                *lineno,
+                format!("literal rng seed/stream ({}, {}) collides \
+                         with {}:{}", pair.0, pair.1, ffile, fline),
+            ));
+        }
+    }
+
+    let mut violations = Vec::new();
+    let mut waived = Vec::new();
+    let mut waiver_errors = Vec::new();
+    let mut rule_counts: BTreeMap<&'static str, (usize, usize)> =
+        RULES.iter().map(|(id, _)| (*id, (0, 0))).collect();
+    let mut used: BTreeSet<(String, usize)> = BTreeSet::new();
+
+    for fs in &scans {
+        let mut findings = scan_rules(fs);
+        if let Some(cols) = collisions.get(&fs.relpath) {
+            for (lineno, msg) in cols {
+                findings.push(("D3", *lineno, msg.clone()));
+            }
+        }
+        findings.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+        for (rule, lineno, msg) in findings {
+            let waiver = fs.waivers.get(&lineno).and_then(|ws| {
+                ws.iter().find(|w| w.rules.iter().any(|r| r == rule))
+            });
+            let entry = Finding {
+                rule,
+                file: fs.relpath.clone(),
+                line: lineno,
+                msg,
+                reason: waiver.map(|w| w.reason.clone()),
+            };
+            match waiver {
+                Some(w) => {
+                    waived.push(entry);
+                    if let Some(c) = rule_counts.get_mut(rule) {
+                        c.1 += 1;
+                    }
+                    used.insert((fs.relpath.clone(), w.line));
+                }
+                None => {
+                    violations.push(entry);
+                    if let Some(c) = rule_counts.get_mut(rule) {
+                        c.0 += 1;
+                    }
+                }
+            }
+        }
+        for (lineno, msg) in &fs.waiver_errors {
+            waiver_errors.push(WaiverError {
+                file: fs.relpath.clone(),
+                line: *lineno,
+                msg: msg.clone(),
+            });
+        }
+        for w in &fs.waiver_sites {
+            if !used.contains(&(fs.relpath.clone(), w.line)) {
+                waiver_errors.push(WaiverError {
+                    file: fs.relpath.clone(),
+                    line: w.line,
+                    msg: format!("unused {WAIVER_MARK}{}) waiver",
+                                 w.rules.join(",")),
+                });
+            }
+        }
+    }
+
+    AuditReport {
+        files_scanned: scans.len(),
+        violations,
+        waived,
+        waiver_errors,
+        rule_counts,
+    }
+}
+
+impl AuditReport {
+    /// Unwaived findings plus waiver errors — the exit-code driver.
+    pub fn total_violations(&self) -> usize {
+        self.violations.len() + self.waiver_errors.len()
+    }
+
+    /// Findings covered by a valid waiver.
+    pub fn total_waived(&self) -> usize {
+        self.waived.len()
+    }
+
+    /// Does the tree pass (zero unwaived violations)?
+    pub fn passed(&self) -> bool {
+        self.total_violations() == 0
+    }
+
+    /// The stable machine-readable report (schema pard-audit-v1).
+    pub fn to_json(&self) -> Json {
+        let finding = |f: &Finding| {
+            let mut o = BTreeMap::new();
+            o.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+            o.insert("file".to_string(), Json::Str(f.file.clone()));
+            o.insert("line".to_string(), Json::Num(f.line as f64));
+            o.insert("msg".to_string(), Json::Str(f.msg.clone()));
+            if let Some(r) = &f.reason {
+                o.insert("reason".to_string(), Json::Str(r.clone()));
+            }
+            Json::Obj(o)
+        };
+        let mut rules = BTreeMap::new();
+        for (id, desc) in RULES {
+            let (v, w) = self.rule_counts[id];
+            let mut o = BTreeMap::new();
+            o.insert("description".to_string(),
+                     Json::Str(desc.to_string()));
+            o.insert("violations".to_string(), Json::Num(v as f64));
+            o.insert("waived".to_string(), Json::Num(w as f64));
+            rules.insert(id.to_string(), Json::Obj(o));
+        }
+        let errs = self
+            .waiver_errors
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("file".to_string(), Json::Str(e.file.clone()));
+                o.insert("line".to_string(), Json::Num(e.line as f64));
+                o.insert("msg".to_string(), Json::Str(e.msg.clone()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(),
+                   Json::Str("pard-audit-v1".to_string()));
+        top.insert("files_scanned".to_string(),
+                   Json::Num(self.files_scanned as f64));
+        top.insert("rules".to_string(), Json::Obj(rules));
+        top.insert("violations".to_string(),
+                   Json::Arr(self.violations.iter().map(finding)
+                                 .collect()));
+        top.insert("waived".to_string(),
+                   Json::Arr(self.waived.iter().map(finding)
+                                 .collect()));
+        top.insert("waiver_errors".to_string(), Json::Arr(errs));
+        top.insert("total_violations".to_string(),
+                   Json::Num(self.total_violations() as f64));
+        top.insert("total_waived".to_string(),
+                   Json::Num(self.total_waived() as f64));
+        Json::Obj(top)
+    }
+
+    /// The human-readable report `pard audit` prints.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "pard audit — scanned {} files under rust/src\n",
+            self.files_scanned
+        );
+        for (id, _) in RULES {
+            let (v, w) = self.rule_counts[id];
+            out += &format!("  {id}  {v} violations, {w} waived\n");
+        }
+        for f in &self.violations {
+            out += &format!("  {}:{}: {} {}\n", f.file, f.line, f.rule,
+                            f.msg);
+        }
+        for e in &self.waiver_errors {
+            out += &format!("  {}:{}: waiver error: {}\n", e.file,
+                            e.line, e.msg);
+        }
+        for f in &self.waived {
+            out += &format!("  waived {} at {}:{} — {}\n", f.rule,
+                            f.file, f.line,
+                            f.reason.as_deref().unwrap_or(""));
+        }
+        if self.passed() {
+            out += &format!("AUDIT OK — 0 violations, {} waived\n",
+                            self.total_waived());
+        } else {
+            out += &format!("AUDIT FAIL — {} unwaived violation(s)\n",
+                            self.total_violations());
+        }
+        out
+    }
+}
+
+// Fixture tests mirror python/refsim/auditsim.py selftest() — one
+// violation + one clean snippet per rule.  Fixtures are single-line
+// string literals ("…\n…") on purpose: the lexer-lite scanner blanks
+// one-line strings, so fixture contents never leak into this file's
+// own audit (a multi-line raw string WOULD leak — documented
+// limitation).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vio(files: &[(&str, &str)]) -> Vec<(String, String, usize)> {
+        rep(files)
+            .violations
+            .iter()
+            .map(|f| (f.rule.to_string(), f.file.clone(), f.line))
+            .collect()
+    }
+
+    fn rep(files: &[(&str, &str)]) -> AuditReport {
+        let owned: Vec<(String, String)> = files
+            .iter()
+            .map(|(a, b)| (a.to_string(), b.to_string()))
+            .collect();
+        audit(&owned)
+    }
+
+    fn hit(rule: &str, file: &str, line: usize)
+           -> Vec<(String, String, usize)> {
+        vec![(rule.to_string(), file.to_string(), line)]
+    }
+
+    // Build waiver fixtures without embedding the contiguous marker in
+    // this file's own raw lines (the audit scans raw lines for it).
+    fn allow(tail: &str) -> String {
+        format!("// {WAIVER_MARK}{tail}")
+    }
+
+    #[test]
+    fn d1_hash_in_determinism_path() {
+        let dirty = "use std::collections::HashMap;\n";
+        assert_eq!(vio(&[("runtime/fx.rs", dirty)]),
+                   hit("D1", "runtime/fx.rs", 1));
+        assert!(vio(&[("runtime/fx.rs",
+                       "use std::collections::BTreeMap;\n")])
+            .is_empty());
+        assert!(vio(&[("main.rs", dirty)]).is_empty());
+        let in_test = format!("#[cfg(test)]\n{dirty}");
+        assert!(vio(&[("runtime/fx.rs", in_test.as_str())]).is_empty());
+    }
+
+    #[test]
+    fn d2_wall_clock_whitelist() {
+        let dirty = "let t0 = Instant::now();\n";
+        assert_eq!(vio(&[("coordinator/fx.rs", dirty)]),
+                   hit("D2", "coordinator/fx.rs", 1));
+        assert!(vio(&[("substrate/bench.rs", dirty)]).is_empty());
+        assert_eq!(vio(&[("coordinator/fx.rs",
+                          "let t = SystemTime::now();\n")]),
+                   hit("D2", "coordinator/fx.rs", 1));
+    }
+
+    #[test]
+    fn d3_ambient_entropy() {
+        assert_eq!(vio(&[("runtime/fx.rs",
+                          "let r = rand::random::<u64>();\n")]),
+                   hit("D3", "runtime/fx.rs", 1));
+        assert!(vio(&[("runtime/fx.rs",
+                       "let r = Rng::new_stream(seed, i);\n")])
+            .is_empty());
+    }
+
+    #[test]
+    fn d3_literal_pair_collisions() {
+        let a = "let r = Rng::new_stream(7, 1);\n";
+        assert_eq!(vio(&[("runtime/a.rs", a), ("runtime/b.rs", a)]),
+                   hit("D3", "runtime/b.rs", 1));
+        assert!(vio(&[("runtime/a.rs", a),
+                      ("runtime/b.rs",
+                       "let r = Rng::new_stream(7, 2);\n")])
+            .is_empty());
+        assert!(vio(&[("runtime/a.rs", "let r = Rng::new(7);\n"),
+                      ("runtime/b.rs",
+                       "#[cfg(test)]\nlet r = Rng::new(7);\n")])
+            .is_empty());
+    }
+
+    #[test]
+    fn d4_reassociating_accumulators() {
+        let dirty = "let s: f32 = xs.iter().sum();\n";
+        assert_eq!(vio(&[("runtime/host.rs", dirty)]),
+                   hit("D4", "runtime/host.rs", 1));
+        let explicit =
+            "let mut s = 0f32; for k in 0..n { s += xs[k]; }\n";
+        assert!(vio(&[("runtime/host.rs", explicit)]).is_empty());
+        assert!(vio(&[("coordinator/fx.rs", dirty)]).is_empty());
+    }
+
+    #[test]
+    fn s1_unsafe_confinement_and_hygiene() {
+        assert_eq!(vio(&[("coordinator/fx.rs", "unsafe { run() }\n")]),
+                   hit("S1", "coordinator/fx.rs", 1));
+        assert_eq!(vio(&[("runtime/pool.rs", "unsafe { run() }\n")]),
+                   hit("S1", "runtime/pool.rs", 1));
+        // (single-line fixture strings on purpose: a string continued
+        // across source lines would leak its tail into this file's own
+        // line-local audit scan)
+        let ok = "// SAFETY: fixture invariant.\nunsafe { run() }\n";
+        assert!(vio(&[("runtime/pool.rs", ok)]).is_empty());
+        // unsafe is checked inside test regions too
+        let t = "#[cfg(test)]\nmod t {\nunsafe { run() }\n}\n";
+        assert_eq!(vio(&[("runtime/pool.rs", t)]),
+                   hit("S1", "runtime/pool.rs", 3));
+    }
+
+    #[test]
+    fn r1_panics_on_serving_paths() {
+        let dirty = "let g = m.lock().unwrap();\n";
+        assert_eq!(vio(&[("server/mod.rs", dirty)]),
+                   hit("R1", "server/mod.rs", 1));
+        let ok = "let g = l.unwrap_or_else(PoisonError::into_inner);\n";
+        assert!(vio(&[("server/mod.rs", ok)]).is_empty());
+        assert!(vio(&[("runtime/fx.rs", dirty)]).is_empty());
+        assert_eq!(vio(&[("coordinator/batcher.rs",
+                          "panic!(\"boom\");\n")]),
+                   hit("R1", "coordinator/batcher.rs", 1));
+    }
+
+    #[test]
+    fn r2_narrowing_casts_in_cache() {
+        assert_eq!(vio(&[("runtime/cache.rs", "let b = t as u32;\n")]),
+                   hit("R2", "runtime/cache.rs", 1));
+        assert!(vio(&[("runtime/cache.rs", "let b = t as usize;\n")])
+            .is_empty());
+    }
+
+    #[test]
+    fn h1_doc_coverage() {
+        assert_eq!(vio(&[("runtime/fx.rs", "pub fn f() {}\n")]),
+                   hit("H1", "runtime/fx.rs", 1));
+        assert!(vio(&[("runtime/fx.rs", "/// Doc.\npub fn f() {}\n")])
+            .is_empty());
+        assert!(vio(&[("runtime/fx.rs",
+                       "/// Doc.\n#[inline]\n#[cold]\npub fn f() {}\n")])
+            .is_empty());
+        assert!(vio(&[("runtime/fx.rs", "pub(crate) fn f() {}\n")])
+            .is_empty());
+        assert!(vio(&[("runtime/fx.rs", "pub mod fx;\n")]).is_empty());
+    }
+
+    #[test]
+    fn waivers_cover_own_and_next_line() {
+        let own = allow("D2) fixture timing\nlet t = Instant::now();\n");
+        let r = rep(&[("coordinator/fx.rs", own.as_str())]);
+        assert!(r.passed(), "{}", r.render());
+        assert_eq!(r.total_waived(), 1);
+        let same = format!("let t = Instant::now(); {}",
+                           allow("D2) same-line\n"));
+        let r = rep(&[("coordinator/fx.rs", same.as_str())]);
+        assert!(r.passed(), "{}", r.render());
+        assert_eq!(r.total_waived(), 1);
+    }
+
+    #[test]
+    fn waiver_errors_are_violations() {
+        let unknown = allow("Z9) what\n");
+        assert_eq!(rep(&[("coordinator/fx.rs", unknown.as_str())])
+                       .total_violations(), 1);
+        let no_reason = allow("D2)\n");
+        assert_eq!(rep(&[("coordinator/fx.rs", no_reason.as_str())])
+                       .total_violations(), 1);
+        let unused = allow("D2) nothing here\n");
+        assert_eq!(rep(&[("coordinator/fx.rs", unused.as_str())])
+                       .total_violations(), 1);
+    }
+
+    #[test]
+    fn strings_and_comments_never_match() {
+        let src = "// HashMap in a comment\n\
+                   let s = \"HashMap Instant::now unsafe\";\n\
+                   let r = r#\"HashSet .unwrap()\"#;\n\
+                   let c = '\"'; let l: &'static str = \"x\";\n";
+        assert!(vio(&[("runtime/fx.rs", src)]).is_empty());
+        assert!(vio(&[("server/mod.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn json_report_schema() {
+        let r = rep(&[("runtime/fx.rs", "pub fn f() {}\n")]);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").and_then(|v| v.as_str()),
+                   Some("pard-audit-v1"));
+        assert_eq!(j.usize_req("total_violations").unwrap(), 1);
+        let h1 = j.req("rules").unwrap().req("H1").unwrap();
+        assert_eq!(h1.usize_req("violations").unwrap(), 1);
+        let v = &j.req("violations").unwrap().as_arr().unwrap()[0];
+        assert_eq!(v.str_req("file").unwrap(), "runtime/fx.rs");
+        assert_eq!(v.usize_req("line").unwrap(), 1);
+    }
+
+    /// The committed tree itself must be violation-free — the same
+    /// gate ci.sh enforces through the python mirror in-container.
+    #[test]
+    fn committed_tree_is_violation_free() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate dir has a parent")
+            .to_path_buf();
+        let r = super::super::audit_tree(&root).unwrap();
+        assert!(r.passed(), "{}", r.render());
+        assert!(r.files_scanned > 20);
+    }
+}

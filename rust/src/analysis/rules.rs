@@ -1,0 +1,214 @@
+//! Rule catalog and per-file checks (DESIGN.md §11).
+//!
+//! Scope tables, token lists, and messages are kept in lockstep with
+//! `python/refsim/auditsim.py` — same rule ids, same file scopes, same
+//! match semantics.  Rule patterns below live in string literals, so
+//! the audit's own stripped-line scan never matches this file.
+
+use super::scanner::{has_token, rng_literal_sites, FileScan};
+
+/// Rule ids and one-line descriptions (the report `rules` section).
+pub const RULES: [(&str, &str); 8] = [
+    ("D1",
+     "det-hash-iter: HashMap/HashSet in a determinism path (iteration \
+      order is a bit-identity hazard) — use BTreeMap/BTreeSet, or \
+      waive a pure-lookup use"),
+    ("D2",
+     "wall-clock: Instant::now()/SystemTime outside the timing \
+      whitelist — route through substrate::bench::stopwatch()"),
+    ("D3",
+     "rng-discipline: ambient entropy, or a literal Rng seed/stream \
+      pair colliding with another site"),
+    ("D4",
+     "float-reassoc: .sum()/.product()/.fold() in a backend identity \
+      path — write the explicit k-ascending loop"),
+    ("S1",
+     "unsafe-hygiene: `unsafe` outside pool/host/quant, or without a \
+      SAFETY comment within 8 lines"),
+    ("R1",
+     "no-panic-serving: unwrap/expect/panic! on a serving request \
+      path — surface a typed outcome instead"),
+    ("R2",
+     "lossy-cast: narrowing `as` cast in cache/block-table index \
+      arithmetic — use try_from or widen"),
+    ("H1",
+     "doc-coverage: public runtime/coordinator item without a doc \
+      comment"),
+];
+
+/// Is `id` a known rule id?
+pub fn is_rule(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id)
+}
+
+const D1_PREFIXES: [&str; 4] =
+    ["coordinator/", "runtime/", "substrate/", "server/"];
+const D2_WHITELIST: [&str; 2] =
+    ["coordinator/metrics.rs", "substrate/bench.rs"];
+const D4_FILES: [&str; 3] =
+    ["runtime/reference.rs", "runtime/host.rs", "runtime/quant.rs"];
+const S1_ALLOWED: [&str; 3] =
+    ["runtime/pool.rs", "runtime/host.rs", "runtime/quant.rs"];
+const S1_LOOKBACK: usize = 8;
+const R1_FILES: [&str; 2] = ["server/mod.rs", "coordinator/batcher.rs"];
+const R2_FILES: [&str; 1] = ["runtime/cache.rs"];
+const R2_NARROW: [&str; 6] = ["u32", "i32", "u16", "i16", "u8", "i8"];
+const H1_PREFIXES: [&str; 2] = ["runtime/", "coordinator/"];
+const H1_ITEMS: [&str; 6] = ["pub fn ", "pub struct ", "pub enum ",
+                             "pub trait ", "pub const ", "pub type "];
+
+const R1_PATTERNS: [&str; 6] = [".unwrap()", ".expect(", "panic!",
+                                "unreachable!", "todo!",
+                                "unimplemented!"];
+const D3_ENTROPY: [&str; 5] = ["rand::", "thread_rng", "from_entropy",
+                               "RandomState", "DefaultHasher"];
+
+/// All single-file rule findings: (rule, 1-based line, message).
+pub fn scan_rules(fs: &FileScan) -> Vec<(&'static str, usize, String)> {
+    let rel = fs.relpath.as_str();
+    let mut findings = Vec::new();
+
+    let d1 = D1_PREFIXES.iter().any(|p| rel.starts_with(p));
+    let d2 = !D2_WHITELIST.contains(&rel);
+    let d4 = D4_FILES.contains(&rel);
+    let s1_ok_file = S1_ALLOWED.contains(&rel);
+    let r1 = R1_FILES.contains(&rel);
+    let r2 = R2_FILES.contains(&rel);
+    let h1 = H1_PREFIXES.iter().any(|p| rel.starts_with(p));
+
+    for (idx, line) in fs.stripped.iter().enumerate() {
+        let lineno = idx + 1;
+        let in_test = fs.in_test(lineno);
+
+        if d1 && !in_test {
+            for tok in ["HashMap", "HashSet"] {
+                if has_token(line, tok) {
+                    findings.push((
+                        "D1", lineno,
+                        format!("{tok} in determinism path — iteration \
+                                 order is a bit-identity hazard"),
+                    ));
+                }
+            }
+        }
+        if d2 && !in_test
+            && (line.contains("Instant::now")
+                || has_token(line, "SystemTime"))
+        {
+            findings.push((
+                "D2", lineno,
+                "wall-clock read outside the timing whitelist — use \
+                 substrate::bench::stopwatch()".to_string(),
+            ));
+        }
+        if !in_test {
+            for tok in D3_ENTROPY {
+                if has_token(line, tok) {
+                    findings.push((
+                        "D3", lineno,
+                        format!("ambient entropy `{tok}` — all \
+                                 randomness flows through \
+                                 substrate::rng"),
+                    ));
+                }
+            }
+        }
+        if d4 && !in_test {
+            for pat in [".sum(", ".sum::<", ".product(", ".fold("] {
+                if line.contains(pat) {
+                    findings.push((
+                        "D4", lineno,
+                        format!("reassociating accumulator `{pat}…` \
+                                 in a backend identity path"),
+                    ));
+                    break;
+                }
+            }
+        }
+        // S1 applies in test regions too: unsafe is unsafe everywhere.
+        if has_token(line, "unsafe") {
+            if !s1_ok_file {
+                findings.push((
+                    "S1", lineno,
+                    "`unsafe` outside runtime/{pool,host,quant}.rs"
+                        .to_string(),
+                ));
+            } else {
+                let lo = idx.saturating_sub(S1_LOOKBACK);
+                let commented = fs.raw[lo..=idx].iter().any(|w| {
+                    w.contains("SAFETY:") || w.contains("# Safety")
+                });
+                if !commented {
+                    findings.push((
+                        "S1", lineno,
+                        format!("`unsafe` without a SAFETY comment \
+                                 within {S1_LOOKBACK} lines"),
+                    ));
+                }
+            }
+        }
+        if r1 && !in_test {
+            for pat in R1_PATTERNS {
+                if line.contains(pat) {
+                    findings.push((
+                        "R1", lineno,
+                        format!("`{pat}…` on a serving request path — \
+                                 surface a typed outcome"),
+                    ));
+                }
+            }
+        }
+        if r2 && !in_test {
+            for ty in R2_NARROW {
+                if has_token(line, &format!("as {ty}")) {
+                    findings.push((
+                        "R2", lineno,
+                        format!("narrowing `as {ty}` in cache index \
+                                 arithmetic — use try_from or widen"),
+                    ));
+                }
+            }
+        }
+        if h1 && !in_test {
+            let body = line.trim_start();
+            if H1_ITEMS.iter().any(|it| body.starts_with(it)) {
+                // walk back over attribute lines, then look for a doc
+                let mut j = idx;
+                while j > 0
+                    && fs.raw[j - 1].trim_start().starts_with("#[")
+                {
+                    j -= 1;
+                }
+                let doc = j > 0 && {
+                    let p = fs.raw[j - 1].trim_start();
+                    p.starts_with("///") || p.starts_with("//!")
+                        || p.starts_with("#[doc")
+                };
+                if !doc {
+                    findings.push((
+                        "H1", lineno,
+                        "public item without a doc comment".to_string(),
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// Non-test literal (seed, stream) sites of one file, for the
+/// cross-file D3 collision registry.
+pub fn collect_rng_registry(fs: &FileScan)
+                            -> Vec<((String, String), usize)> {
+    let mut sites = Vec::new();
+    for (idx, line) in fs.stripped.iter().enumerate() {
+        let lineno = idx + 1;
+        if fs.in_test(lineno) {
+            continue;
+        }
+        for pair in rng_literal_sites(line) {
+            sites.push((pair, lineno));
+        }
+    }
+    sites
+}

@@ -1,0 +1,359 @@
+//! Lexer-lite line scanner (DESIGN.md §11): line-local comment and
+//! string stripping, column-0 `#[cfg(test)]`-to-EOF test regions, and
+//! the waiver table.
+//!
+//! Deliberately NOT a Rust parser: rules match token patterns on
+//! stripped lines, which is exact for this codebase's style and keeps
+//! the subsystem dependency-free.  The documented limitation is that
+//! strings and block comments spanning lines leak their continuation
+//! lines into the scan (multi-line raw strings in particular); the
+//! committed tree avoids scan-relevant tokens in such positions, and
+//! fixture tests use single-line string literals for the same reason.
+//!
+//! Kept in lockstep with `python/refsim/auditsim.py` — the
+//! toolchain-free mirror ci.sh gates on.  Any divergence between the
+//! two implementations is itself a bug.
+
+use std::collections::BTreeMap;
+
+use super::rules::is_rule;
+
+/// The waiver comment marker.  Assembled from two halves so this
+/// file's own raw lines never contain the contiguous marker (the
+/// waiver scan below runs on raw lines, comments and strings
+/// included — the marker IS a comment).
+pub const WAIVER_MARK: &str = concat!("audit:", "allow(");
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Find the char-index of `pat` in `ch` at or after `from`.
+fn find_seq(ch: &[char], pat: &str, from: usize) -> Option<usize> {
+    let p: Vec<char> = pat.chars().collect();
+    if p.is_empty() || ch.len() < p.len() {
+        return None;
+    }
+    (from..=ch.len() - p.len()).find(|&i| ch[i..i + p.len()] == p[..])
+}
+
+fn push_blank(out: &mut String, k: usize) {
+    for _ in 0..k {
+        out.push(' ');
+    }
+}
+
+/// Blank string/char-literal contents and drop comment tails.
+///
+/// Line-local by design (the documented lexer-lite limitation).
+/// Handles `//` tails, `/* .. */` on one line, `"…"` with escapes,
+/// raw/byte strings with hash counting, and the
+/// char-literal-vs-lifetime ambiguity of `'`.
+pub fn strip_code(line: &str) -> String {
+    let ch: Vec<char> = line.chars().collect();
+    let n = ch.len();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < n {
+        let c = ch[i];
+        if c == '/' && i + 1 < n && ch[i + 1] == '/' {
+            break; // comment tail (///, //!, // alike)
+        }
+        if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+            let Some(end) = find_seq(&ch, "*/", i + 2) else {
+                break;
+            };
+            push_blank(&mut out, end - i + 2);
+            i = end + 2;
+            continue;
+        }
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident(ch[i - 1])) {
+            // raw/byte string starts: r"…", r#"…"#, b"…", br"…"
+            let mut j = i + 1;
+            if j < n && c == 'b' && ch[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0;
+            while j < n && ch[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && ch[j] == '"' {
+                let close: String = std::iter::once('"')
+                    .chain(std::iter::repeat('#').take(hashes))
+                    .collect();
+                let stop = match find_seq(&ch, &close, j + 1) {
+                    None => n,
+                    Some(end) => end + close.len(),
+                };
+                push_blank(&mut out, stop - i);
+                i = stop;
+                continue;
+            }
+        }
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if ch[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if ch[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            let j = j.min(n);
+            push_blank(&mut out, j - i);
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // char literal vs lifetime: '\x' escapes and 'x' forms
+            // are literals; anything else is a lifetime tick.
+            if i + 1 < n && ch[i + 1] == '\\' {
+                let stop = match find_seq(&ch, "'", i + 3) {
+                    None => n,
+                    Some(end) => end + 1,
+                };
+                push_blank(&mut out, stop - i);
+                i = stop;
+                continue;
+            }
+            if i + 2 < n && ch[i + 2] == '\'' {
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            out.push(' ');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Substring match with non-identifier boundaries, enforced only on
+/// edges where the token itself ends in an identifier char (so
+/// `rand::` needs no right boundary but `u32` does).
+pub fn has_token(line: &str, tok: &str) -> bool {
+    let (Some(first), Some(last)) = (tok.chars().next(), tok.chars().last())
+    else {
+        return false;
+    };
+    let mut start = 0;
+    while let Some(off) = line[start..].find(tok) {
+        let i = start + off;
+        let before = !is_ident(first)
+            || line[..i].chars().next_back().map_or(true, |c| !is_ident(c));
+        let j = i + tok.len();
+        let after = !is_ident(last)
+            || line[j..].chars().next().map_or(true, |c| !is_ident(c));
+        if before && after {
+            return true;
+        }
+        start = i + first.len_utf8();
+    }
+    false
+}
+
+/// Literal-argument Rng constructor calls on one stripped line.
+///
+/// Returns (seed, stream) string pairs; a one-argument constructor
+/// registers as stream "-".  Non-literal arguments (idents,
+/// expressions) are not registry entries — only repeated literal
+/// pairs are collisions.
+pub fn rng_literal_sites(stripped: &str) -> Vec<(String, String)> {
+    let mut sites = Vec::new();
+    for (call, nargs) in [("Rng::new_stream(", 2usize), ("Rng::new(", 1)] {
+        let mut start = 0;
+        while let Some(off) = stripped[start..].find(call) {
+            let args_at = start + off + call.len();
+            start = args_at;
+            let Some(close_off) = stripped[args_at..].find(')') else {
+                continue;
+            };
+            let close = args_at + close_off;
+            let args: Vec<String> = stripped[args_at..close]
+                .split(',')
+                .map(|a| a.trim().replace('_', ""))
+                .collect();
+            let all_lit = args.len() == nargs
+                && args
+                    .iter()
+                    .all(|a| !a.is_empty()
+                        && a.chars().all(|c| c.is_ascii_digit()));
+            if all_lit {
+                let stream = if nargs == 2 {
+                    args[1].clone()
+                } else {
+                    "-".to_string()
+                };
+                sites.push((args[0].clone(), stream));
+            }
+        }
+    }
+    sites
+}
+
+/// One waiver comment: the rules it covers, its reason, and its own
+/// 1-based line.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// Rule ids this waiver covers.
+    pub rules: Vec<String>,
+    /// The mandatory free-text justification.
+    pub reason: String,
+    /// 1-based line of the waiver comment itself.
+    pub line: usize,
+}
+
+/// One file's raw/stripped lines, test region, and waiver table.
+pub struct FileScan {
+    /// Path relative to rust/src, '/'-separated.
+    pub relpath: String,
+    /// Raw source lines (waiver/SAFETY/doc detection scans these).
+    pub raw: Vec<String>,
+    /// [`strip_code`] of each raw line (rule patterns scan these).
+    pub stripped: Vec<String>,
+    /// 1-based line where the column-0 `#[cfg(test)]` region starts
+    /// (past EOF when the file has none).
+    pub test_start: usize,
+    /// Covered line (the waiver's own + the next) -> waivers.
+    pub waivers: BTreeMap<usize, Vec<Waiver>>,
+    /// Every syntactically valid waiver, for unused-waiver reporting.
+    pub waiver_sites: Vec<Waiver>,
+    /// Malformed waiver comments: (line, message).
+    pub waiver_errors: Vec<(usize, String)>,
+}
+
+impl FileScan {
+    /// Scan `text` (the contents of `relpath`) into lines, the test
+    /// region, and the waiver table.
+    pub fn new(relpath: &str, text: &str) -> Self {
+        let raw: Vec<String> =
+            text.split('\n').map(str::to_string).collect();
+        let stripped: Vec<String> =
+            raw.iter().map(|l| strip_code(l)).collect();
+        let mut test_start = raw.len() + 1;
+        for (idx, line) in raw.iter().enumerate() {
+            if line.starts_with("#[cfg(test)]") {
+                test_start = idx + 1;
+                break;
+            }
+        }
+        let mut waivers: BTreeMap<usize, Vec<Waiver>> = BTreeMap::new();
+        let mut waiver_sites = Vec::new();
+        let mut waiver_errors = Vec::new();
+        for (idx, line) in raw.iter().enumerate() {
+            let Some(m) = line.find(WAIVER_MARK) else {
+                continue;
+            };
+            let lineno = idx + 1;
+            let Some(close_rel) = line[m..].find(')') else {
+                waiver_errors.push((
+                    lineno,
+                    format!("unterminated {WAIVER_MARK}...)"),
+                ));
+                continue;
+            };
+            let close = m + close_rel;
+            let rules: Vec<String> = line[m + WAIVER_MARK.len()..close]
+                .split(',')
+                .map(|r| r.trim().to_string())
+                .collect();
+            let bad: Vec<&str> = rules
+                .iter()
+                .filter(|r| !is_rule(r))
+                .map(|r| r.as_str())
+                .collect();
+            if !bad.is_empty() {
+                waiver_errors.push((
+                    lineno,
+                    format!("unknown rule id(s) in waiver: {}",
+                            bad.join(",")),
+                ));
+                continue;
+            }
+            let reason = line[close + 1..].trim().to_string();
+            if reason.is_empty() {
+                waiver_errors.push((
+                    lineno,
+                    "audit:allow waiver needs a reason".to_string(),
+                ));
+                continue;
+            }
+            let w = Waiver { rules, reason, line: lineno };
+            waiver_sites.push(w.clone());
+            for covered in [lineno, lineno + 1] {
+                waivers.entry(covered).or_default().push(w.clone());
+            }
+        }
+        FileScan {
+            relpath: relpath.to_string(),
+            raw,
+            stripped,
+            test_start,
+            waivers,
+            waiver_sites,
+            waiver_errors,
+        }
+    }
+
+    /// Is this 1-based line inside the `#[cfg(test)]` region?
+    pub fn in_test(&self, lineno: usize) -> bool {
+        lineno >= self.test_start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        assert_eq!(strip_code("let x = 1; // HashMap"), "let x = 1; ");
+        assert_eq!(strip_code("a /* unsafe */ b"), "a            b");
+        let s = strip_code("let s = \"Instant::now\";");
+        assert!(!s.contains("Instant"));
+        assert!(s.starts_with("let s = "));
+        let r = strip_code("let r = r#\"HashSet .unwrap()\"#;");
+        assert!(!r.contains("HashSet"));
+        // char literal vs lifetime: the quote literal is blanked, the
+        // lifetime tick survives as a space without eating the line.
+        let c = strip_code("let c = '\"'; let l: &'static str = \"x\";");
+        assert!(c.contains("static"));
+        assert!(!c.contains('"'));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_token("let HashMapLike = 1;", "HashMap"));
+        assert!(has_token("let r = rand::random();", "rand::"));
+        assert!(has_token("x as u32", "as u32"));
+        assert!(!has_token("x as u32x", "as u32"));
+    }
+
+    #[test]
+    fn rng_sites_literal_only() {
+        assert_eq!(rng_literal_sites("Rng::new_stream(7, 1)"),
+                   vec![("7".to_string(), "1".to_string())]);
+        assert_eq!(rng_literal_sites("Rng::new(42)"),
+                   vec![("42".to_string(), "-".to_string())]);
+        assert!(rng_literal_sites("Rng::new_stream(seed, i)").is_empty());
+        assert!(rng_literal_sites("Rng::new(seed ^ 3)").is_empty());
+    }
+
+    #[test]
+    fn test_region_starts_at_cfg_test() {
+        let fs = FileScan::new("runtime/fx.rs",
+                               "fn a() {}\n#[cfg(test)]\nmod t {}\n");
+        assert!(!fs.in_test(1));
+        assert!(fs.in_test(2));
+        assert!(fs.in_test(3));
+    }
+}

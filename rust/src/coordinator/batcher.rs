@@ -33,6 +33,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::engines::Engine;
+use crate::substrate::bench::stopwatch;
 use crate::substrate::fault::{FaultPlan, FaultSet, MAX_TARGET_RETRIES};
 use crate::substrate::workload::Trace;
 
@@ -50,6 +51,7 @@ pub enum RequestOutcome {
     DeadlineExceeded,
 }
 
+/// Aggregate outcome counters for one serving-trace replay (DESIGN.md §10).
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub completed: usize,
@@ -138,7 +140,7 @@ struct InFlight {
 /// refill between iterations, gated on free KV blocks.
 pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
                    -> Result<ServeStats> {
-    serve_trace_impl(engine, trace, ServeClock::Wall(Instant::now()),
+    serve_trace_impl(engine, trace, ServeClock::Wall(stopwatch()),
                      None)
 }
 
@@ -149,7 +151,7 @@ pub fn serve_trace(engine: &mut dyn Engine, trace: &Trace)
 pub fn serve_trace_with_faults(engine: &mut dyn Engine, trace: &Trace,
                                fault: &mut FaultPlan)
                                -> Result<ServeStats> {
-    serve_trace_impl(engine, trace, ServeClock::Wall(Instant::now()),
+    serve_trace_impl(engine, trace, ServeClock::Wall(stopwatch()),
                      Some(fault))
 }
 
@@ -269,17 +271,18 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
                     .is_some_and(|d| now > d)
                     && !engine.seqs()[slot].done
             });
-            if hit {
-                let f = slots[slot].take().unwrap();
-                let seq = &mut engine.seqs_mut()[slot];
-                seq.done = true;
-                seq.active = false;
-                engine.release(slot);
-                outcomes[f.request_idx] =
-                    Some(RequestOutcome::DeadlineExceeded);
-                expired += 1;
-                engine.metrics_mut().deadline_exceeded += 1;
+            if !hit {
+                continue;
             }
+            let Some(f) = slots[slot].take() else { continue };
+            let seq = &mut engine.seqs_mut()[slot];
+            seq.done = true;
+            seq.active = false;
+            engine.release(slot);
+            outcomes[f.request_idx] =
+                Some(RequestOutcome::DeadlineExceeded);
+            expired += 1;
+            engine.metrics_mut().deadline_exceeded += 1;
         }
 
         // Harvest finished slots (returning their KV blocks to the
@@ -289,29 +292,30 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
                 .as_ref()
                 .map(|_| engine.seqs()[slot].done)
                 .unwrap_or(false);
-            if finished {
-                let f = slots[slot].take().unwrap();
-                let row_failed = engine.seqs()[slot].failed;
-                let tokens = engine.seqs()[slot].gen_tokens().to_vec();
-                engine.release(slot);
-                if row_failed {
-                    failed += 1;
-                    outcomes[f.request_idx] =
-                        Some(RequestOutcome::Failed {
-                            reason: format!(
-                                "target pass failed after \
-                                 {MAX_TARGET_RETRIES} retries"),
-                        });
-                } else {
-                    // latency = completion - arrival (queueing incl.)
-                    let lat = (clock.now()
-                        - trace.requests[f.request_idx].arrival_s)
-                        .max(0.0);
-                    latencies.push(lat);
-                    outcomes[f.request_idx] =
-                        Some(RequestOutcome::Completed { tokens,
-                                                         latency_s: lat });
-                }
+            if !finished {
+                continue;
+            }
+            let Some(f) = slots[slot].take() else { continue };
+            let row_failed = engine.seqs()[slot].failed;
+            let tokens = engine.seqs()[slot].gen_tokens().to_vec();
+            engine.release(slot);
+            if row_failed {
+                failed += 1;
+                outcomes[f.request_idx] =
+                    Some(RequestOutcome::Failed {
+                        reason: format!(
+                            "target pass failed after \
+                             {MAX_TARGET_RETRIES} retries"),
+                    });
+            } else {
+                // latency = completion - arrival (queueing incl.)
+                let lat = (clock.now()
+                    - trace.requests[f.request_idx].arrival_s)
+                    .max(0.0);
+                latencies.push(lat);
+                outcomes[f.request_idx] =
+                    Some(RequestOutcome::Completed { tokens,
+                                                     latency_s: lat });
             }
         }
 
@@ -369,7 +373,11 @@ fn serve_trace_impl(engine: &mut dyn Engine, trace: &Trace,
                 // gate before a higher slot freed its blocks).  With
                 // the engine now empty, re-consult the gate: only a
                 // head that cannot fit an empty pool is hopeless.
-                let ri = *queue.front().expect("stalled implies a head");
+                let Some(&ri) = queue.front() else {
+                    anyhow::bail!(
+                        "admission stalled with an empty queue — \
+                         batcher bookkeeping bug");
+                };
                 let req = &trace.requests[ri];
                 anyhow::ensure!(
                     engine.can_admit(&req.prompt, req.max_new),

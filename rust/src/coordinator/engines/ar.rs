@@ -9,7 +9,6 @@
 //!   speedup in the paper is measured against.
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -19,8 +18,11 @@ use super::{fault_prologue, next_token, prefill_slot, reserve_len,
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::bench::stopwatch;
 use crate::substrate::fault::FaultSet;
 
+/// AR / AR+: plain autoregression — full recompute (AR) or KV-cached
+/// (AR+), the paper's Transformers / Transformers+ baselines.
 pub struct ArEngine {
     target: Rc<dyn Backend>,
     cache: KvCache,
@@ -37,6 +39,7 @@ pub struct ArEngine {
 }
 
 impl ArEngine {
+    /// Build against `cfg.target`; `cached` selects AR+ over AR.
     pub fn new(rt: &Runtime, cfg: &EngineConfig, cached: bool)
                -> Result<Self> {
         let target = rt.model(&cfg.target)?;
@@ -78,7 +81,7 @@ impl ArEngine {
                 buf.set(row, 0, seq.pending(), seq.target_len as i32, true);
             }
         }
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let out =
             self.target.fwd(b, 1, &buf.tokens, &buf.pos, None, &self.cache)?;
         self.metrics.record_fwd(&out);
@@ -136,7 +139,7 @@ impl ArEngine {
                 buf.set(row, i, tok, i as i32, false);
             }
         }
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let out =
             self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.cache)?;
         self.metrics.record_fwd(&out);

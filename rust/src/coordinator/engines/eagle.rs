@@ -15,7 +15,6 @@
 //! also yields the hidden rows the next iteration's catch-up needs.
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -26,8 +25,11 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::SpecPolicy;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::bench::stopwatch;
 use crate::substrate::fault::FaultSet;
 
+/// EAGLE-style engine: a target-feature-chained draft head speculates,
+/// the target verifies (DESIGN.md §5).
 pub struct EagleEngine {
     /// `_h` variant: exports hidden rows at verify/prefill.
     target: Rc<dyn Backend>,
@@ -50,6 +52,7 @@ pub struct EagleEngine {
 }
 
 impl EagleEngine {
+    /// Build the hidden-exporting target variant plus its draft head.
     pub fn new(rt: &Runtime, cfg: &EngineConfig, policy: SpecPolicy)
                -> Result<Self> {
         // the hidden-exporting variant of the target
@@ -150,7 +153,7 @@ impl EagleEngine {
                     .copy_from_slice(h);
             }
         }
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let out = self.head.fwd(b, t, &buf.tokens, &buf.pos,
                                 Some(&hidden_in), &self.ecache)?;
         self.metrics.record_fwd(&out);
@@ -258,7 +261,7 @@ impl Engine for EagleEngine {
             // EAGLE's prefix hits share memory, not prefill compute.
             buf.set(slot, i, tok, i as i32, i >= t_hit);
         }
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let out =
             self.target.fwd(b, t, &buf.tokens, &buf.pos, None, &self.tcache)?;
         self.metrics.record_fwd(&out);

@@ -26,8 +26,6 @@ pub mod eagle;
 pub mod pard;
 pub mod vsd;
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::coordinator::metrics::Metrics;
@@ -35,6 +33,7 @@ use crate::coordinator::policy::PolicyCfg;
 use crate::coordinator::sampling::{argmax, dist, sample, spec_accept};
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::bench::stopwatch;
 use crate::substrate::fault::{FaultSet, MAX_TARGET_RETRIES};
 use crate::substrate::rng::Rng;
 
@@ -96,6 +95,7 @@ pub struct SamplingCfg {
     pub seed: u64,
 }
 
+/// Which of the five decode strategies an engine runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     Ar,
@@ -106,6 +106,7 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Parse a CLI engine name (`ar|ar+|vsd|pard|eagle`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "ar" => EngineKind::Ar,
@@ -118,6 +119,7 @@ impl EngineKind {
         })
     }
 
+    /// Stable display name used in reports and logs.
     pub fn label(&self) -> &'static str {
         match self {
             EngineKind::Ar => "AR",
@@ -224,6 +226,8 @@ pub trait Engine {
     fn observe_kv(&mut self) {}
 }
 
+/// Construct the engine `cfg` names, its speculation policy bound
+/// and validated (DESIGN.md §9).
 pub fn build_engine(rt: &Runtime, cfg: &EngineConfig)
                     -> Result<Box<dyn Engine>> {
     anyhow::ensure!(cfg.k >= 1 && cfg.k <= 16, "k must be in 1..=16");
@@ -370,6 +374,9 @@ pub fn reserve_len(prompt_len: usize, max_new: usize, k: usize)
 /// tuner must account for `prefix_len + tail` shapes.
 pub const PREFILL_T: usize = 32;
 
+/// Prefill one slot per the narrative above ([`PREFILL_T`]): feed
+/// `prompt[start..]`, commit its KV, and return the last position's
+/// logits row (+ hidden when the model exports it).
 pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
                     prompt: &[i32], start: usize, pad: i32,
                     metrics: &mut Metrics)
@@ -384,7 +391,7 @@ pub fn prefill_slot(model: &dyn Backend, cache: &mut KvCache, slot: usize,
     for (i, &tok) in suffix.iter().enumerate() {
         buf.set(slot, i, tok, (start + i) as i32, true);
     }
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     let out = model.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
     metrics.record_fwd(&out);
     metrics.record_work(model.n_params(), suffix.len());
@@ -530,7 +537,7 @@ pub fn verify_and_commit(target: &dyn Backend, cache: &mut KvCache,
             buf.set(row, 1 + j, c, base + 1 + j as i32, false);
         }
     }
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     let out = target.fwd(b, t, &buf.tokens, &buf.pos, None, cache)?;
     metrics.record_fwd(&out);
     metrics.record_work(target.n_params(), cols);
@@ -643,7 +650,7 @@ pub fn generate(engine: &mut dyn Engine, prompts: &[Vec<i32>],
     let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
     let mut next = 0usize;
     let mut slot_owner: Vec<Option<usize>> = vec![None; b];
-    let t0 = Instant::now();
+    let t0 = stopwatch();
     loop {
         // refill idle slots (releasing finished rows' KV blocks first
         // so their memory is admittable in the same pass)

@@ -15,7 +15,6 @@
 //! ids (ablation) offsets past K_train reuse the last trained id.
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -27,8 +26,11 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::SpecPolicy;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::bench::stopwatch;
 use crate::substrate::fault::FaultSet;
 
+/// PARD: one parallel draft pass over shared MASK tokens drafts all
+/// K candidates in a single call (paper §4, DESIGN.md §5).
 pub struct PardEngine {
     target: Rc<dyn Backend>,
     draft: Rc<dyn Backend>,
@@ -51,6 +53,7 @@ pub struct PardEngine {
 }
 
 impl PardEngine {
+    /// Build the target plus its PARD-adapted parallel draft.
     pub fn new(rt: &Runtime, cfg: &EngineConfig, policy: SpecPolicy)
                -> Result<Self> {
         let target = rt.model(&cfg.target)?;
@@ -159,7 +162,7 @@ impl PardEngine {
                         base + j as i32, false);
             }
         }
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
         self.metrics.record_fwd(&out);

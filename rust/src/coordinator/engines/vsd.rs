@@ -8,7 +8,6 @@
 //! (3) one shared verify pass on the target.
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -20,8 +19,11 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::SpecPolicy;
 use crate::coordinator::sequence::Sequence;
 use crate::runtime::{Backend, KvCache, Runtime};
+use crate::substrate::bench::stopwatch;
 use crate::substrate::fault::FaultSet;
 
+/// Vanilla speculative decoding: K sequential draft passes, then one
+/// target verify (DESIGN.md §5).
 pub struct VsdEngine {
     target: Rc<dyn Backend>,
     draft: Rc<dyn Backend>,
@@ -42,6 +44,7 @@ pub struct VsdEngine {
 }
 
 impl VsdEngine {
+    /// Build the target plus its autoregressive draft.
     pub fn new(rt: &Runtime, cfg: &EngineConfig, policy: SpecPolicy)
                -> Result<Self> {
         let target = rt.model(&cfg.target)?;
@@ -126,7 +129,7 @@ impl VsdEngine {
                 buf.set(row, i, tok, (seq.draft_len + i) as i32, true);
             }
         }
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let out =
             self.draft.fwd(b, t, &buf.tokens, &buf.pos, None, &self.dcache)?;
         self.metrics.record_fwd(&out);

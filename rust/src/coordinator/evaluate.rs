@@ -10,6 +10,7 @@ use super::metrics::Metrics;
 use crate::substrate::prompts::Prompt;
 use crate::Runtime;
 
+/// One engine × task closed-batch evaluation record.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
     pub engine: String,
@@ -24,6 +25,7 @@ pub struct EvalResult {
 }
 
 impl EvalResult {
+    /// Decode throughput (tokens/s) over the measured wall time.
     pub fn tps(&self) -> f64 {
         self.metrics.tps()
     }

@@ -15,6 +15,8 @@ use crate::runtime::{FwdOps, FwdOut};
 /// far larger than any policy window.
 pub const ACCEPT_RECENT_CAP: usize = 256;
 
+/// Per-run counters and timers every engine and serving loop feeds;
+/// the report layer and benches read them (DESIGN.md §3).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     /// Wall clock inside draft fwd+commit calls.
@@ -172,6 +174,7 @@ impl Metrics {
         self.cow_copies = cow;
     }
 
+    /// Record one verify verdict: `accepted` of `offered` candidates.
     pub fn record_acceptance(&mut self, offered: usize, accepted: usize) {
         // A zero-candidate verify is an AR+-mode step, not an
         // acceptance observation: recording it would add a phantom
@@ -298,6 +301,8 @@ impl Metrics {
         }
     }
 
+    /// Reference-agreement rate over cross-checked positions (0 when
+    /// none ran).
     pub fn ref_agreement(&self) -> f64 {
         if self.ref_total == 0 {
             0.0
@@ -306,6 +311,7 @@ impl Metrics {
         }
     }
 
+    /// Fold another run's counters into this one (bench aggregation).
     pub fn merge(&mut self, o: &Metrics) {
         self.draft_s += o.draft_s;
         self.verify_s += o.verify_s;

@@ -110,6 +110,8 @@ pub struct SpecPolicy {
 }
 
 impl SpecPolicy {
+    /// Validate the knobs and build per-slot windows; `k_init` seeds
+    /// every row's K.
     pub fn new(cfg: &PolicyCfg, k_init: usize, batch: usize)
                -> Result<Self> {
         ensure!(cfg.k_min >= 1, "policy k_min must be >= 1");
@@ -130,10 +132,12 @@ impl SpecPolicy {
         })
     }
 
+    /// The validated policy knobs.
     pub fn cfg(&self) -> &PolicyCfg {
         &self.cfg
     }
 
+    /// True while the batch is degraded to AR+ commits (DESIGN.md §9).
     pub fn in_dual_mode(&self) -> bool {
         self.dual_mode
     }

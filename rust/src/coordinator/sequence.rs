@@ -10,6 +10,8 @@
 
 use crate::substrate::rng::Rng;
 
+/// One batch row's decode state: prompt + committed stream plus the
+/// slot-protocol flags (DESIGN.md §5).
 #[derive(Debug, Clone, Default)]
 pub struct Sequence {
     pub prompt_len: usize,
@@ -41,6 +43,7 @@ pub struct Sequence {
 }
 
 impl Sequence {
+    /// Fresh sequence over `prompt`, budgeted to `max_new` tokens.
     pub fn start(prompt: &[i32], max_new: usize) -> Self {
         Sequence {
             prompt_len: prompt.len(),
@@ -58,6 +61,7 @@ impl Sequence {
         }
     }
 
+    /// Tokens generated so far (excludes the prompt).
     pub fn generated(&self) -> usize {
         self.stream.len() - self.prompt_len
     }
@@ -86,6 +90,7 @@ impl Sequence {
         taken
     }
 
+    /// The generated suffix of the stream.
     pub fn gen_tokens(&self) -> &[i32] {
         &self.stream[self.prompt_len..]
     }

@@ -10,6 +10,7 @@
 //!   serving path (DESIGN.md §8) — with python fully off the request
 //!   path.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod report;
 pub mod runtime;

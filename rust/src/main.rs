@@ -19,6 +19,7 @@
 //!   tables [--which 1,2,...] [--full]
 //!   fig    --which 1a|1b|2|6a|6b
 //!   info
+//!   audit  [--root DIR] [--json PATH]
 //!
 //! Every subcommand accepts `--backend pjrt|reference|host|host-q8`
 //! (default pjrt; `bench` is always artifact-free): `reference` runs
@@ -707,12 +708,39 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pard audit [--root DIR] [--json PATH]`: the static-analysis pass
+/// over the crate's own sources (DESIGN.md §11).  Prints the report,
+/// optionally writes the pard-audit-v1 JSON, and fails on any
+/// unwaived violation.  Default root: the repository checkout this
+/// binary was built from (the crate dir's parent).
+fn cmd_audit(args: &Args) -> Result<()> {
+    let root = match args.opts.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap_or_else(|| Path::new("."))
+            .to_path_buf(),
+    };
+    let rep = pard::analysis::audit_tree(&root)?;
+    print!("{}", rep.render());
+    if let Some(path) = args.opts.get("json") {
+        std::fs::write(path, rep.to_json().to_string() + "\n")
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(rep.passed(), "{} unwaived audit violation(s)",
+                    rep.total_violations());
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
-    // `bench` is artifact-free by construction; everything else needs
-    // artifacts only on the PJRT backend.
+    // `bench` is artifact-free by construction, `audit` reads only
+    // the source tree; everything else needs artifacts only on the
+    // PJRT backend.
     if args.cmd != "help"
         && args.cmd != "bench"
+        && args.cmd != "audit"
         && backend_sel(&args)? == BackendSel::Pjrt
         && !Path::new(&artifacts_dir(&args)).exists()
     {
@@ -726,10 +754,11 @@ fn main() -> Result<()> {
         "tables" => cmd_tables(&args),
         "fig" => cmd_fig(&args),
         "info" => cmd_info(&args),
+        "audit" => cmd_audit(&args),
         _ => {
             println!(
                 "pard — PARD speculative-decoding coordinator\n\
-                 usage: pard <eval|serve|bench|tables|fig|info> \
+                 usage: pard <eval|serve|bench|tables|fig|info|audit> \
                  [--opt val]…\n\
                  see README.md"
             );

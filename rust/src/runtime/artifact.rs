@@ -76,6 +76,7 @@ fn buckets(v: &Json) -> Result<Vec<Bucket>> {
         .collect()
 }
 
+/// What call shape a model's fwd executable expects.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelKind {
     /// Standard LM: fwd(params…, tokens, pos, cache).
@@ -84,6 +85,8 @@ pub enum ModelKind {
     Eagle,
 }
 
+/// One model in the manifest: weights, call shape, and exported
+/// buckets.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
     pub name: String,
@@ -97,6 +100,7 @@ pub struct ModelEntry {
     pub entries: Vec<Bucket>,
 }
 
+/// PARD training metadata of an adapted draft variant (paper §4).
 #[derive(Debug, Clone)]
 pub struct PardVariantInfo {
     pub k_train: usize,
@@ -105,6 +109,8 @@ pub struct PardVariantInfo {
     pub shared_mask: bool,
 }
 
+/// Parsed `manifest.json`: every model, commit executable, and
+/// prompt set the artifact dir exports.
 #[derive(Debug)]
 pub struct Manifest {
     pub root: PathBuf,
@@ -122,6 +128,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Parse `<root>/manifest.json`.
     pub fn load(root: &Path) -> Result<Self> {
         let path = root.join("manifest.json");
         let text = std::fs::read_to_string(&path).with_context(|| {
@@ -205,6 +212,7 @@ impl Manifest {
         })
     }
 
+    /// Look up a model by manifest name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models.get(name).ok_or_else(|| {
             anyhow::anyhow!(
@@ -234,6 +242,7 @@ impl Manifest {
             })
     }
 
+    /// The exported HLO file serving exactly bucket `(b, t)`.
     pub fn bucket_file(entries: &[Bucket], b: usize, t: usize)
                        -> Result<&str> {
         entries

@@ -85,7 +85,10 @@ const PREFIX_CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
 fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
     let mut h = parent ^ 0x9e37_79b9_7f4a_7c15;
     for &t in tokens {
-        for b in (t as u32).to_le_bytes() {
+        // i32::to_le_bytes is bit-identical to the old `as u32`
+        // round-trip (two's complement), so chain hashes — and every
+        // prefix-cache key — are unchanged.
+        for b in t.to_le_bytes() {
             h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
         }
     }
@@ -199,6 +202,9 @@ impl KvCache {
                          got {n_blocks}");
         let hd = cfg.n_heads * cfg.d_head;
         let block_elems = 2 * cfg.n_layers * KV_BLOCK * hd;
+        let top = u32::try_from(n_blocks).map_err(|_| {
+            anyhow::anyhow!("--kv-blocks {n_blocks} exceeds u32")
+        })?;
         Ok(KvCache {
             state: CacheState::Host(vec![0f32; n_blocks * block_elems]),
             batch,
@@ -210,7 +216,7 @@ impl KvCache {
             paged: true,
             n_blocks,
             // LIFO from the low end so block 0 is handed out first.
-            free: (0..n_blocks as u32).rev().collect(),
+            free: (0..top).rev().collect(),
             reserved_total: 0,
             tables: vec![BlockTable::default(); batch],
             peak_in_use: 0,
@@ -262,14 +268,15 @@ impl KvCache {
     /// The reserved write-only position rejected speculative columns
     /// are redirected to (resolves to the row's garbage block).
     pub fn garbage_slot(&self) -> i32 {
-        (self.s_max - 1) as i32
+        i32::try_from(self.s_max - 1).expect("s_max fits i32")
     }
 
     /// Highest position a live token may occupy.
     pub fn max_live_pos(&self) -> u32 {
-        (self.s_max - 2) as u32
+        u32::try_from(self.s_max - 2).expect("s_max fits u32")
     }
 
+    /// Positions `row` can still commit before hitting the window.
     pub fn headroom(&self, row: usize) -> u32 {
         self.max_live_pos().saturating_sub(self.cur_len[row])
     }
@@ -462,7 +469,8 @@ impl KvCache {
         self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
         self.tables[row].reserved = need;
         self.reserved_total += need;
-        self.cur_len[row] = matched as u32;
+        self.cur_len[row] =
+            u32::try_from(matched).expect("prefix hit fits u32");
         self.prefix_hits += matched as u64;
         Ok(matched)
     }
@@ -614,7 +622,7 @@ impl KvCache {
     /// other rows keep the original bytes untouched.
     fn cow_copy(&mut self, row: usize, lb: usize) -> Result<()> {
         let old = self.tables[row].blocks[lb] as usize;
-        let fresh = self.take_block(row)? as usize;
+        let fresh = self.take_block(row)?;
         let be = self.block_elems();
         let data = match &mut self.state {
             CacheState::Host(d) => d,
@@ -623,10 +631,11 @@ impl KvCache {
                 anyhow::bail!("copy-on-write on a device cache")
             }
         };
-        data.copy_within(old * be..(old + 1) * be, fresh * be);
+        data.copy_within(old * be..(old + 1) * be,
+                         fresh as usize * be);
         self.ref_count[old] -= 1;
-        self.ref_count[fresh] = 1;
-        self.tables[row].blocks[lb] = fresh as u32;
+        self.ref_count[fresh as usize] = 1;
+        self.tables[row].blocks[lb] = fresh;
         self.cow += 1;
         Ok(())
     }
@@ -677,6 +686,9 @@ impl KvCache {
         );
         let s_max = self.s_max;
         let garbage = s_max - 1;
+        let max_slot = i32::try_from(garbage).map_err(|_| {
+            anyhow::anyhow!("s_max {s_max} exceeds i32")
+        })?;
         // Pass 1 — resolve every column to (block, in-block offset),
         // allocating on demand.  Garbage writes to a row with no
         // storage (never admitted / already released) are dropped:
@@ -686,8 +698,8 @@ impl KvCache {
             Vec::with_capacity(b * t);
         for row in 0..b {
             for col in 0..t {
-                let slot = pos[row * t + col]
-                    .clamp(0, s_max as i32 - 1) as usize;
+                let slot =
+                    pos[row * t + col].clamp(0, max_slot) as usize;
                 let blk = if slot == garbage {
                     let tab = &self.tables[row];
                     let live = !tab.blocks.is_empty()

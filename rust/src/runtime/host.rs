@@ -80,6 +80,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::substrate::bench::stopwatch;
 use super::artifact::{ModelCfg, ModelEntry, ModelKind};
 use super::backend::{Backend, FwdOps, FwdOut, KvStage, OpWeightBytes};
 use super::cache::{CacheState, KvCache, KV_BLOCK};
@@ -327,11 +328,11 @@ struct OpClock {
 
 impl OpClock {
     fn start() -> OpClock {
-        OpClock { last: Instant::now() }
+        OpClock { last: stopwatch() }
     }
 
     fn lap(&mut self) -> f64 {
-        let now = Instant::now();
+        let now = stopwatch();
         let dt = now.duration_since(self.last).as_secs_f64();
         self.last = now;
         dt
@@ -527,7 +528,7 @@ impl Backend for HostModel {
 
     fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
            hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let cfg = &self.m.cfg;
         let (d, h, dh, ff, vocab) =
             (cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff, cfg.vocab);
@@ -903,7 +904,7 @@ impl Backend for HostModel {
 
     fn commit(&self, b: usize, t: usize, out: &FwdOut, commit_pos: &[i32],
               cache: &mut KvCache) -> Result<f64> {
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         match &out.kv {
             KvStage::Host { k, v } => {
                 cache.host_scatter(b, t, k, v, commit_pos)?;

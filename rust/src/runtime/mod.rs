@@ -104,6 +104,7 @@ impl RuntimeSpec {
 }
 
 impl Runtime {
+    /// Open the PJRT runtime over an artifact dir (feature `pjrt`).
     #[cfg(feature = "pjrt")]
     pub fn load(artifacts: &Path) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
@@ -112,6 +113,7 @@ impl Runtime {
         Ok(Runtime { manifest, tokenizer, host: Host::Pjrt { client } })
     }
 
+    /// Artifact-free builds: loading PJRT artifacts is a typed error.
     #[cfg(not(feature = "pjrt"))]
     pub fn load(_artifacts: &Path) -> Result<Self> {
         anyhow::bail!(
@@ -216,6 +218,7 @@ impl Runtime {
         }
     }
 
+    /// Open model `name` on this runtime's backend.
     pub fn model(&self, name: &str) -> Result<Rc<dyn Backend>> {
         match &self.host {
             #[cfg(feature = "pjrt")]
@@ -238,6 +241,7 @@ impl Runtime {
         }
     }
 
+    /// The task's prompt set (synthetic on artifact-free backends).
     pub fn prompts(&self, task: &str) -> Result<PromptSet> {
         match &self.host {
             Host::Reference { seed }

@@ -11,15 +11,15 @@
 //! module only moves bytes and tracks per-phase timing.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient,
           PjRtLoadedExecutable, XlaComputation};
 
+use crate::substrate::bench::stopwatch;
 use super::artifact::{Bucket, Manifest, ModelCfg, ModelEntry, ModelKind};
 use super::backend::{Backend, FwdOut, KvStage};
 use super::cache::{CacheState, KvCache};
@@ -35,20 +35,23 @@ pub fn upload_f32_literal(client: &PjRtClient, l: &Literal)
     Ok(client.buffer_from_host_buffer(&data, &dims, None)?)
 }
 
+/// One PJRT model: device weights plus lazily compiled per-bucket
+/// fwd/commit executables.
 pub struct ModelRt {
     pub entry: ModelEntry,
     client: PjRtClient,
     root: PathBuf,
     weights: Vec<PjRtBuffer>,
     commit_buckets: Vec<Bucket>,
-    fwd_exes: RefCell<HashMap<(usize, usize), Rc<PjRtLoadedExecutable>>>,
-    commit_exes: RefCell<HashMap<(usize, usize), Rc<PjRtLoadedExecutable>>>,
+    fwd_exes: RefCell<BTreeMap<(usize, usize), Rc<PjRtLoadedExecutable>>>,
+    commit_exes: RefCell<BTreeMap<(usize, usize), Rc<PjRtLoadedExecutable>>>,
     /// Cumulative time compiling executables (reported, not counted
     /// against serving benchmarks — compilation is a load-time cost).
     pub compile_s: RefCell<f64>,
 }
 
 impl ModelRt {
+    /// Upload `name`'s weights and commit buckets from the manifest.
     pub fn load(client: &PjRtClient, manifest: &Manifest, name: &str)
                 -> Result<Self> {
         let entry = manifest.model(name)?.clone();
@@ -83,14 +86,14 @@ impl ModelRt {
             root: manifest.root.clone(),
             weights,
             commit_buckets,
-            fwd_exes: RefCell::new(HashMap::new()),
-            commit_exes: RefCell::new(HashMap::new()),
+            fwd_exes: RefCell::new(BTreeMap::new()),
+            commit_exes: RefCell::new(BTreeMap::new()),
             compile_s: RefCell::new(0.0),
         })
     }
 
     fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let path = self.root.join(file);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing HLO {}", path.display()))?;
@@ -167,7 +170,7 @@ impl Backend for ModelRt {
 
     /// Warm every bucket a dynamic T in `lo..=hi` could resolve to.
     fn warmup_range(&self, b: usize, lo: usize, hi: usize) -> Result<()> {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for need in lo..=hi {
             let t = self.pick_t(b, need)?;
             if seen.insert(t) {
@@ -186,7 +189,7 @@ impl Backend for ModelRt {
         let CacheState::Device(cache_buf) = &cache.state else {
             anyhow::bail!("PJRT fwd needs a device cache")
         };
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let exe = self.fwd_exe(b, t)?;
         let tok_buf = self.upload_i32(tokens, b, t)?;
         let pos_buf = self.upload_i32(pos, b, t)?;
@@ -244,7 +247,7 @@ impl Backend for ModelRt {
         let KvStage::Pjrt { k, v } = &out.kv else {
             anyhow::bail!("host-staged FwdOut fed to the PJRT commit")
         };
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let exe = self.commit_exe(b, t)?;
         let k_buf = upload_f32_literal(&self.client, k)?;
         let v_buf = upload_f32_literal(&self.client, v)?;

@@ -26,8 +26,23 @@
 //! caller after the dispatch drains, so a bug fails the call instead of
 //! deadlocking the pool.
 
+// Under `--cfg loom` the pool is built against loom's permutation-
+// exploring twins of the std sync primitives, so the publish/park
+// handshake can be model-checked exhaustively (see `loom_tests`
+// below).  loom is NOT a committed dependency — the offline vendored
+// build stays dependency-free; toolchain hosts add it as a local
+// dev-dependency when running the opt-in ci.sh step (PARD_CI_LOOM).
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+use loom::thread::JoinHandle;
+#[cfg(not(loom))]
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(not(loom))]
 use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(loom))]
 use std::thread::JoinHandle;
 
 /// Sanity cap on pool lanes (`PARD_HOST_THREADS=9999` should not fork
@@ -38,7 +53,33 @@ pub const MAX_THREADS: usize = 64;
 /// Roughly a few microseconds: long enough to catch the back-to-back
 /// dispatches of a decode loop, short enough that an idle pool costs
 /// nothing measurable.
+#[cfg(not(loom))]
 const SPIN_ROUNDS: u32 = 1 << 14;
+/// Loom models every spin iteration as a scheduling point; one round
+/// keeps the state space tractable while still covering both the
+/// spin-hit and the park path.
+#[cfg(loom)]
+const SPIN_ROUNDS: u32 = 1;
+
+/// One bounded-spin pause.  Under loom this must be a model-visible
+/// yield (not a CPU hint) or the scheduler would never interleave
+/// inside the spin window.
+#[inline]
+fn spin_pause() {
+    #[cfg(loom)]
+    loom::thread::yield_now();
+    #[cfg(not(loom))]
+    std::hint::spin_loop();
+}
+
+#[cfg(loom)]
+fn thread_builder() -> loom::thread::Builder {
+    loom::thread::Builder::new()
+}
+#[cfg(not(loom))]
+fn thread_builder() -> std::thread::Builder {
+    std::thread::Builder::new()
+}
 
 /// A published task: called once per lane with the lane index.  The
 /// `'static` is a lie told only inside this module — `run` blocks until
@@ -117,7 +158,7 @@ fn worker_loop(sh: &Shared, lane: usize) {
         while sh.epoch.load(Ordering::Acquire) == seen
             && rounds < SPIN_ROUNDS
         {
-            std::hint::spin_loop();
+            spin_pause();
             rounds += 1;
         }
         let task = {
@@ -170,7 +211,7 @@ impl WorkerPool {
         let workers = (1..lanes)
             .map(|lane| {
                 let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
+                thread_builder()
                     .name(format!("pard-host-{lane}"))
                     .spawn(move || worker_loop(&sh, lane))
                     .expect("spawn host worker thread")
@@ -231,7 +272,7 @@ impl WorkerPool {
         while sh.remaining.load(Ordering::Acquire) != 0
             && rounds < SPIN_ROUNDS
         {
-            std::hint::spin_loop();
+            spin_pause();
             rounds += 1;
         }
         if sh.remaining.load(Ordering::Acquire) != 0 {
@@ -404,5 +445,83 @@ mod tests {
     fn default_threads_is_positive_and_capped() {
         let n = default_threads();
         assert!((1..=MAX_THREADS).contains(&n));
+    }
+}
+
+/// Loom model checks for the publish/park handshake (DESIGN.md §11).
+///
+/// Not part of the default test run: loom is not a committed
+/// dependency (the offline vendored build must stay dependency-free).
+/// On a toolchain host with network access:
+///
+/// ```text
+/// cargo add loom --dev        # local only — do NOT commit
+/// RUSTFLAGS="--cfg loom" cargo test --release loom_
+/// ```
+///
+/// or let ci.sh drive it via `PARD_CI_LOOM=1 ./ci.sh`.  Each test body
+/// runs under `loom::model`, which exhaustively permutes every
+/// scheduling decision the shims expose (SPIN_ROUNDS = 1 under loom
+/// keeps the state space tractable while still covering both the
+/// spin-hit and the park path).
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use loom::sync::atomic::AtomicUsize as LoomUsize;
+
+    /// Every dispatch runs every lane exactly once, and a second
+    /// dispatch on the same pool cannot lose its wakeup: if the
+    /// publish→notify could race a worker's spin→park transition, some
+    /// interleaving would deadlock (loom reports it) or drop a lane
+    /// (the counter check fails).
+    #[test]
+    fn loom_no_lost_wakeups() {
+        loom::model(|| {
+            let pool = WorkerPool::new(2);
+            let hits = LoomUsize::new(0);
+            pool.run(&|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 2);
+            pool.run(&|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 4);
+        });
+    }
+
+    /// Disjoint lane writes through `SharedSlice` are all visible to
+    /// the caller after `run` returns, under every interleaving: the
+    /// join's release/acquire edge is what publishes them.
+    #[test]
+    fn loom_disjoint_writes_are_published() {
+        loom::model(|| {
+            let pool = WorkerPool::new(2);
+            let n = 4usize;
+            let mut buf = vec![0f32; n];
+            let out = SharedSlice::new(&mut buf);
+            pool.run(&|lane| {
+                let (s, e) = chunk(n, 2, lane);
+                // SAFETY: chunks are disjoint.
+                let dst = unsafe { out.range(s, e - s) };
+                for (i, d) in dst.iter_mut().enumerate() {
+                    *d = (s + i) as f32 + 1.0;
+                }
+            });
+            for (i, &v) in buf.iter().enumerate() {
+                assert_eq!(v, i as f32 + 1.0, "lane write lost at {i}");
+            }
+        });
+    }
+
+    /// Drop must terminate parked AND spinning workers in every
+    /// interleaving — a missed shutdown wakeup would deadlock the
+    /// `join` in `Drop` and loom would report the stuck branch.
+    #[test]
+    fn loom_shutdown_terminates_workers() {
+        loom::model(|| {
+            let pool = WorkerPool::new(2);
+            drop(pool);
+        });
     }
 }

@@ -93,14 +93,17 @@ impl QuantizedMat {
         QuantizedMat { data, scales, din, dout }
     }
 
+    /// Input width (columns) of the quantized matrix.
     pub fn din(&self) -> usize {
         self.din
     }
 
+    /// Output width (rows) of the quantized matrix.
     pub fn dout(&self) -> usize {
         self.dout
     }
 
+    /// Number of PANEL-wide output panels (ragged tail included).
     pub fn n_panels(&self) -> usize {
         self.dout.div_ceil(PANEL)
     }

@@ -30,7 +30,6 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -38,10 +37,13 @@ use super::artifact::{Manifest, ModelCfg, ModelEntry, ModelKind,
                       PardVariantInfo};
 use super::backend::{Backend, FwdOut, KvStage};
 use super::cache::{CacheState, KvCache};
+use crate::substrate::bench::stopwatch;
 use crate::substrate::prompts::{Prompt, PromptSet};
 use crate::substrate::rng::Rng;
 
+/// Synthetic-family vocabulary size.
 pub const REF_VOCAB: usize = 64;
+/// Synthetic-family logical window (sequence slots per row).
 pub const REF_S_MAX: usize = 96;
 const REF_D_HEAD: usize = 16;
 /// Token ids below this are special (bos/eos/pad/mask/distinct masks).
@@ -168,6 +170,8 @@ pub(crate) struct RefLayer {
     pub(crate) ln_mlp: Vec<f32>,  // [d]
 }
 
+/// The deterministic scalar reference model — the bit-identity
+/// oracle every backend is checked against (DESIGN.md §6).
 pub struct RefModel {
     pub(crate) cfg: ModelCfg,
     pub(crate) kind: ModelKind,
@@ -340,7 +344,7 @@ impl Backend for RefModel {
 
     fn fwd(&self, b: usize, t: usize, tokens: &[i32], pos: &[i32],
            hidden_in: Option<&[f32]>, cache: &KvCache) -> Result<FwdOut> {
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let (d, h, dh, ff, vocab) = (self.cfg.d_model, self.cfg.n_heads,
                                      self.cfg.d_head, self.cfg.d_ff,
                                      self.cfg.vocab);
@@ -554,7 +558,7 @@ impl Backend for RefModel {
 
     fn commit(&self, b: usize, t: usize, out: &FwdOut, commit_pos: &[i32],
               cache: &mut KvCache) -> Result<f64> {
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         match &out.kv {
             KvStage::Host { k, v } => {
                 cache.host_scatter(b, t, k, v, commit_pos)?;

@@ -40,6 +40,7 @@ use anyhow::Result;
 use crate::coordinator::engines::{build_engine, Engine, EngineConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::RuntimeSpec;
+use crate::substrate::bench::stopwatch;
 use crate::substrate::fault::{FaultPlan, FaultSet};
 
 #[derive(Debug)]
@@ -195,7 +196,7 @@ impl Server {
                         "engine thread panicked: {}", panic_msg(&p))),
                 };
                 if let Err(e) = &res {
-                    *stash.lock().unwrap() = Some(format!("{e:?}"));
+                    *lock_stash(&stash) = Some(format!("{e:?}"));
                 }
                 res
             })?;
@@ -247,7 +248,7 @@ impl Server {
 
     /// First fatal engine-thread incident, if any (None = healthy).
     pub fn fatal_error(&self) -> Option<String> {
-        self.fatal.lock().unwrap().clone()
+        lock_stash(&self.fatal).clone()
     }
 
     /// Stop intake, drain in-flight work, and join the engine thread.
@@ -265,7 +266,7 @@ impl Server {
     }
 
     fn dead_error(&self) -> anyhow::Error {
-        match self.fatal.lock().unwrap().as_ref() {
+        match lock_stash(&self.fatal).as_ref() {
             Some(m) => anyhow::anyhow!("engine thread died: {m}"),
             None => anyhow::anyhow!("engine thread gone"),
         }
@@ -281,16 +282,22 @@ impl Drop for Server {
             // incident (or the bare panic) on stderr, since Drop has
             // no Result to return it through.
             if joined.is_err() || matches!(joined, Ok(Err(_))) {
-                let msg = self
-                    .fatal
-                    .lock()
-                    .unwrap()
+                let msg = lock_stash(&self.fatal)
                     .clone()
                     .unwrap_or_else(|| "engine thread panicked".into());
                 eprintln!("pard-engine: died: {msg}");
             }
         }
     }
+}
+
+/// Poison-tolerant access to the fatal-incident stash (audit rule R1):
+/// the slot holds a plain `Option<String>`, so no invariant can be
+/// torn by a panic mid-write — taking the poisoned guard is strictly
+/// better than panicking the serving path.
+fn lock_stash(m: &Mutex<Option<String>>)
+              -> std::sync::MutexGuard<'_, Option<String>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Best-effort panic payload → string (panics carry `&str`/`String`
@@ -408,14 +415,15 @@ fn serve_pass(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>,
         let hit = st.slots[slot]
             .as_ref()
             .is_some_and(|p| p.expired() && !engine.seqs()[slot].done);
-        if hit {
-            let p = st.slots[slot].take().unwrap();
-            drop_slot(engine, slot);
-            engine.metrics_mut().deadline_exceeded += 1;
-            let _ = p
-                .reply
-                .send(GenOutcome::DeadlineExceeded { id: p.req.id });
+        if !hit {
+            continue;
         }
+        let Some(p) = st.slots[slot].take() else { continue };
+        drop_slot(engine, slot);
+        engine.metrics_mut().deadline_exceeded += 1;
+        let _ = p
+            .reply
+            .send(GenOutcome::DeadlineExceeded { id: p.req.id });
     }
 
     // Fault draw: one FaultSet per iteration that steps an
@@ -444,7 +452,7 @@ fn serve_pass(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>,
                     // Even an empty engine can't fit it: reject THIS
                     // request with a typed outcome and keep serving
                     // everyone else.
-                    let p = st.queue.pop_front().unwrap();
+                    let Some(p) = st.queue.pop_front() else { break };
                     let _ = p.reply.send(GenOutcome::Rejected {
                         id: p.req.id,
                         reason: "needs more KV blocks than the whole \
@@ -456,9 +464,33 @@ fn serve_pass(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>,
                 engine.metrics_mut().admission_stalls += 1;
                 break; // backpressure: wait for a release
             }
-            let p = st.queue.pop_front().unwrap();
-            engine.admit(slot, &p.req.prompt, p.req.max_new)?;
-            st.slots[slot] = Some(p);
+            let Some(p) = st.queue.pop_front() else { break };
+            // A request the engine cannot admit — malformed prompt,
+            // reservation failure, even a prefill panic — fails THAT
+            // request with a typed outcome; the daemon and every other
+            // caller keep serving (audit rule R1, DESIGN.md §10).
+            match catch_unwind(AssertUnwindSafe(|| {
+                engine.admit(slot, &p.req.prompt, p.req.max_new)
+            })) {
+                Ok(Ok(())) => st.slots[slot] = Some(p),
+                Ok(Err(e)) => {
+                    drop_slot(engine, slot);
+                    engine.metrics_mut().rows_failed += 1;
+                    let _ = p.reply.send(GenOutcome::Failed {
+                        id: p.req.id,
+                        reason: format!("admission failed: {e}"),
+                    });
+                }
+                Err(panic) => {
+                    drop_slot(engine, slot);
+                    engine.metrics_mut().rows_failed += 1;
+                    let _ = p.reply.send(GenOutcome::Failed {
+                        id: p.req.id,
+                        reason: format!("admission panicked: {}",
+                                        panic_msg(&panic)),
+                    });
+                }
+            }
         }
     }
 
@@ -488,24 +520,25 @@ fn serve_pass(engine: &mut dyn Engine, rx: &mpsc::Receiver<Msg>,
             .as_ref()
             .map(|_| engine.seqs()[slot].done)
             .unwrap_or(false);
-        if done {
-            let p = st.slots[slot].take().unwrap();
-            let failed = engine.seqs()[slot].failed;
-            let tokens = engine.seqs()[slot].gen_tokens().to_vec();
-            engine.release(slot);
-            let _ = p.reply.send(if failed {
-                GenOutcome::Failed {
-                    id: p.req.id,
-                    reason: "target pass failed after retries".into(),
-                }
-            } else {
-                GenOutcome::Completed(GenResponse {
-                    id: p.req.id,
-                    tokens,
-                    latency_s: p.t0.elapsed().as_secs_f64(),
-                })
-            });
+        if !done {
+            continue;
         }
+        let Some(p) = st.slots[slot].take() else { continue };
+        let failed = engine.seqs()[slot].failed;
+        let tokens = engine.seqs()[slot].gen_tokens().to_vec();
+        engine.release(slot);
+        let _ = p.reply.send(if failed {
+            GenOutcome::Failed {
+                id: p.req.id,
+                reason: "target pass failed after retries".into(),
+            }
+        } else {
+            GenOutcome::Completed(GenResponse {
+                id: p.req.id,
+                tokens,
+                latency_s: p.t0.elapsed().as_secs_f64(),
+            })
+        });
     }
     Ok(false)
 }
@@ -524,16 +557,15 @@ fn handle(msg: Msg, engine: &mut dyn Engine, st: &mut LoopState) {
     match msg {
         Msg::Generate(req, reply) => {
             st.queue
-                .push_back(Pending { req, reply, t0: Instant::now() });
+                .push_back(Pending { req, reply, t0: stopwatch() });
         }
         Msg::Cancel(id) => {
             // Queued: drop from the queue.  Live: abandon the slot and
             // release its blocks.  Already finished: the original
             // outcome stands; the cancel is a no-op.
-            if let Some(i) =
-                st.queue.iter().position(|p| p.req.id == id)
-            {
-                let p = st.queue.remove(i).unwrap();
+            let qpos = st.queue.iter().position(|p| p.req.id == id);
+            let queued = qpos.and_then(|i| st.queue.remove(i));
+            if let Some(p) = queued {
                 engine.metrics_mut().cancelled += 1;
                 let _ =
                     p.reply.send(GenOutcome::Cancelled { id: p.req.id });
@@ -541,12 +573,13 @@ fn handle(msg: Msg, engine: &mut dyn Engine, st: &mut LoopState) {
                 s.as_ref().is_some_and(|p| p.req.id == id)
             }) {
                 if !engine.seqs()[slot].done {
-                    let p = st.slots[slot].take().unwrap();
-                    drop_slot(engine, slot);
-                    engine.metrics_mut().cancelled += 1;
-                    let _ = p
-                        .reply
-                        .send(GenOutcome::Cancelled { id: p.req.id });
+                    if let Some(p) = st.slots[slot].take() {
+                        drop_slot(engine, slot);
+                        engine.metrics_mut().cancelled += 1;
+                        let _ = p
+                            .reply
+                            .send(GenOutcome::Cancelled { id: p.req.id });
+                    }
                 }
             }
         }

@@ -15,6 +15,17 @@ use std::time::{Duration, Instant};
 
 use super::json::Json;
 
+/// Crate-wide wall-clock chokepoint (audit rule D2, DESIGN.md §11):
+/// every `Instant::now()` outside the whitelisted timing modules
+/// (`coordinator/metrics.rs`, this file) routes through here, so the
+/// static audit can prove virtual-clock and determinism paths never
+/// read wall time except to *record* durations into metrics — never
+/// to decide a token.
+#[inline]
+pub fn stopwatch() -> Instant {
+    Instant::now()
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchStats {
     pub name: String,

@@ -6,7 +6,7 @@
 //! pre-tokenized in `prompts_{task}.json`, as in a real deployment where
 //! tokenization happens at the API edge).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -21,7 +21,7 @@ pub struct Tokenizer {
     pub pad: i32,
     pub mask: i32,
     pub distinct_masks: Vec<i32>,
-    tok_of: HashMap<i32, String>,
+    tok_of: BTreeMap<i32, String>,
 }
 
 impl Tokenizer {
@@ -29,7 +29,7 @@ impl Tokenizer {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         let v = Json::parse(&text).context("parsing vocab.json")?;
-        let mut tok_of = HashMap::new();
+        let mut tok_of = BTreeMap::new();
         if let Some(toks) = v.req("tokens")?.as_obj() {
             for (k, s) in toks {
                 if let (Ok(id), Some(s)) = (k.parse::<i32>(), s.as_str()) {
@@ -58,7 +58,7 @@ impl Tokenizer {
     /// specials get readable names, plain ids render as `<id>`.
     pub fn synthetic(vocab_size: usize, bos: i32, eos: i32, pad: i32,
                      mask: i32, distinct_masks: Vec<i32>) -> Self {
-        let mut tok_of = HashMap::new();
+        let mut tok_of = BTreeMap::new();
         tok_of.insert(bos, "<bos>".to_string());
         tok_of.insert(eos, "<eos>".to_string());
         tok_of.insert(pad, "<pad>".to_string());
@@ -115,6 +115,43 @@ mod tests {
         )
         .unwrap();
         p
+    }
+
+    /// Regression (audit rule D1): vocab round-trips must not depend
+    /// on source key order.  Two files carrying the same entries in
+    /// scrambled order must yield byte-identical detok output AND a
+    /// byte-identical Debug rendering — the latter iterates `tok_of`,
+    /// which is exactly where HashMap's seeded order used to leak.
+    #[test]
+    fn vocab_order_stable() {
+        let dir = std::env::temp_dir().join("pard_tok_order_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |name: &str, body: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, body).unwrap();
+            p
+        };
+        let head = r#"{"vocab_size": 16, "bos": 0, "eos": 1, "pad": 2,
+                       "mask": 3, "distinct_masks": [4, 5],"#;
+        let fwd = mk(
+            "fwd.json",
+            &format!(
+                r#"{head} "tokens": {{"0": "<bos>", "1": "<eos>",
+                   "12": "def", "7": "ret", "9": "add"}}}}"#
+            ),
+        );
+        let rev = mk(
+            "rev.json",
+            &format!(
+                r#"{head} "tokens": {{"9": "add", "7": "ret",
+                   "12": "def", "1": "<eos>", "0": "<bos>"}}}}"#
+            ),
+        );
+        let a = Tokenizer::load(&fwd).unwrap();
+        let b = Tokenizer::load(&rev).unwrap();
+        let ids = [9, 7, 12, 0, 1, 99];
+        assert_eq!(a.detok(&ids), b.detok(&ids));
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

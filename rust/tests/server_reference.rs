@@ -236,6 +236,37 @@ fn expired_deadline_yields_typed_outcome() {
     server.shutdown().unwrap();
 }
 
+/// A malformed request (empty prompt — prefill has no suffix to run)
+/// panics or errors inside `Engine::admit`; the serve loop must catch
+/// it and degrade exactly that request to a typed `Failed` outcome
+/// (audit rule R1, DESIGN.md §10).  The engine thread survives: a
+/// well-formed request submitted afterwards completes normally.
+#[test]
+fn malformed_request_fails_typed_without_killing_server() {
+    let rt = Runtime::reference(7);
+    let prompt = rt.prompts("code").unwrap().prompts[0].prompt.clone();
+    let mut server =
+        Server::start(RuntimeSpec::Reference { seed: 7 }, cfg()).unwrap();
+    let h = server.submit(GenRequest::new(1, Vec::new(), 8)).unwrap();
+    match h.recv().unwrap() {
+        GenOutcome::Failed { id, reason } => {
+            assert_eq!(id, 1);
+            assert!(reason.contains("admission"),
+                    "failure must name the phase: {reason}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    let m = server.metrics().unwrap();
+    assert_eq!(m.rows_failed, 1, "the failure must be counted");
+    // the slot was torn down cleanly: the engine keeps serving
+    let resp = server.generate(GenRequest::new(2, prompt, 8)).unwrap();
+    assert_eq!(resp.id, 2);
+    assert!(!resp.tokens.is_empty(), "server must keep serving");
+    assert!(server.fatal_error().is_none(),
+            "a per-request failure is not a fatal serve-loop error");
+    server.shutdown().unwrap();
+}
+
 #[test]
 fn runtime_spec_reference_opens_without_artifacts() {
     let rt = RuntimeSpec::Reference { seed: 3 }.open().unwrap();
